@@ -1,0 +1,148 @@
+//! End-to-end MHD simulation driver — the full-system proof (DESIGN.md §3).
+//!
+//! Decaying MHD turbulence on a 32^3 periodic box (the paper's §5.1
+//! verification configuration): random small-amplitude initial fields
+//! advanced with Williamson RK3, every substep executed as the *fused
+//! Pallas kernel* AOT-compiled to HLO and run from Rust through PJRT.
+//! Python never runs. The Rust grid engine fills ghost zones between
+//! substeps; the RK scratch register `w` round-trips through the artifact
+//! outputs. Diagnostics (kinetic/magnetic energy, mass, max |u|) are logged,
+//! and the state is cross-checked against the native Rust MHD engine.
+//!
+//! Run with: `cargo run --release --example mhd_sim -- [--steps N]
+//!            [--swc] [--f32] [--check-every K]`
+
+use anyhow::Result;
+
+use stencilax::runtime::{DType, Executor, HostValue, Manifest};
+use stencilax::stencil::mhd::{MhdState, MhdStepper, AX, NFIELDS, UX};
+use stencilax::util::cli::Args;
+use stencilax::util::rng::Rng;
+
+const N: usize = 32;
+const R: usize = 3;
+
+/// Volume-integrated magnetic energy 1/2 |B|^2 (B = curl A, native ops).
+fn magnetic_energy(state: &MhdState, dx: f64) -> f64 {
+    use stencilax::stencil::mhd::DiffOps;
+    let mut st = state.clone();
+    st.fill_ghosts();
+    let ops = DiffOps::new(R, dx);
+    let da: Vec<Vec<_>> =
+        (0..3).map(|i| (0..3).map(|j| ops.d1(&st.fields[AX + i], j)).collect()).collect();
+    let mut e = 0.0;
+    for k in 0..N {
+        for j in 0..N {
+            for i in 0..N {
+                let bx = da[2][1].get(i, j, k) - da[1][2].get(i, j, k);
+                let by = da[0][2].get(i, j, k) - da[2][0].get(i, j, k);
+                let bz = da[1][0].get(i, j, k) - da[0][1].get(i, j, k);
+                e += 0.5 * (bx * bx + by * by + bz * bz);
+            }
+        }
+    }
+    e * dx * dx * dx
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["swc", "f32"])?;
+    let steps = args.get_usize("steps", 50)?;
+    let check_every = args.get_usize("check-every", 10)?;
+    let caching = if args.has_flag("swc") { "swc" } else { "hwc" };
+    let fp32 = args.has_flag("f32");
+    let dtype = if fp32 { "f32" } else { "f64" };
+
+    let ex = Executor::new(Manifest::load(Manifest::default_dir())?)?;
+    let entry = ex.manifest.get(&format!("mhd32_{caching}_sub0_{dtype}"));
+    let entry = match entry {
+        Ok(e) => e.clone(),
+        Err(_) => {
+            anyhow::bail!("f32 MHD artifacts exist only for substep 2; run without --f32")
+        }
+    };
+    let par = entry.mhd_params().expect("manifest records MHD parameters");
+    println!(
+        "driver: MHD {N}^3, r={R}, {caching}, {dtype}, {steps} RK3 steps ({} substeps)",
+        3 * steps
+    );
+    println!("params: nu={} eta={} kappa={} dx={:.5}", par.nu, par.eta, par.kappa, par.dx);
+
+    // random small-amplitude initial state (the paper's verification regime)
+    let mut rng = Rng::new(2024);
+    let mut state = MhdState::from_fn(N, N, N, R, |f, _, _, _| {
+        if f == 0 {
+            1e-3 * rng.normal() // lnrho near uniform
+        } else {
+            1e-2 * rng.normal()
+        }
+    });
+    let mut native = state.clone();
+    let mut native_stepper = MhdStepper::new(par.clone(), R, N, N, N);
+    let dt = native_stepper.cfl_dt(&state);
+    println!("CFL dt = {dt:.5e}");
+
+    let mut w = vec![0.0f64; NFIELDS * N * N * N];
+    let p = N + 2 * R;
+    let e_kin0 = state.kinetic_energy(par.dx);
+    let e_mag0 = magnetic_energy(&state, par.dx);
+    let mass0 = state.total_mass(par.dx);
+    println!("t=0: E_kin={e_kin0:.6e} E_mag={e_mag0:.6e} mass={mass0:.6}");
+
+    let t0 = std::time::Instant::now();
+    let mut kernel_s = 0.0f64;
+    for step in 1..=steps {
+        for sub in 0..3 {
+            state.fill_ghosts();
+            let name = format!("mhd32_{caching}_sub{sub}_{dtype}");
+            let inputs = [
+                HostValue::f64(state.stacked_padded(), &[NFIELDS, p, p, p]),
+                HostValue::f64(w.clone(), &[NFIELDS, N, N, N]),
+                HostValue::scalar(dt, DType::F64),
+            ];
+            let (out, timing) = ex.run_timed(&name, &inputs)?;
+            kernel_s += timing.execute_s;
+            state.load_stacked_interior(&out[0].to_f64_vec());
+            w = out[1].to_f64_vec();
+        }
+
+        let e_kin = state.kinetic_energy(par.dx);
+        assert!(e_kin.is_finite(), "simulation blew up at step {step}");
+
+        if step % check_every == 0 {
+            // advance the native engine to the same time and compare
+            for _ in 0..check_every {
+                native_stepper.step(&mut native, dt);
+            }
+            let mut worst = 0.0f64;
+            for f in 0..NFIELDS {
+                worst = worst.max(state.fields[f].max_abs_diff(&native.fields[f]));
+            }
+            let e_mag = magnetic_energy(&state, par.dx);
+            let mass = state.total_mass(par.dx);
+            println!(
+                "step {step:>4}: E_kin={e_kin:.6e} E_mag={e_mag:.6e} \
+                 mass drift={:.2e} |pjrt-native|={worst:.2e}",
+                (mass - mass0).abs() / mass0
+            );
+            assert!(worst < 1e-9, "PJRT and native MHD paths diverged: {worst:.3e}");
+            assert!((mass - mass0).abs() / mass0 < 1e-5, "mass not conserved");
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    let updates = (N * N * N * 3 * steps) as f64; // one update = one substep point
+    println!("\ncompleted {steps} RK3 steps in {wall:.2} s (kernel {kernel_s:.2} s)");
+    println!(
+        "throughput: {:.3} Melem-updates/s (kernel-only {:.3})",
+        updates / wall / 1e6,
+        updates / kernel_s / 1e6
+    );
+    let e_kin1 = state.kinetic_energy(par.dx);
+    println!(
+        "energy decay: E_kin {e_kin0:.4e} -> {e_kin1:.4e} (decaying turbulence, \
+         viscous dissipation)"
+    );
+    let _ = UX;
+    println!("mhd_sim OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. Load the artifact manifest (built once by `make artifacts`).
+//! 2. Execute an AOT-compiled Pallas cross-correlation kernel from Rust via
+//!    PJRT — no Python anywhere on this path.
+//! 3. Check the numbers against the native Rust engine.
+//! 4. Ask the GPU performance model what the same kernel would do on the
+//!    paper's four devices.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use stencilax::model::specs::{spec, ALL_GPUS};
+use stencilax::runtime::{Executor, HostValue, Manifest};
+use stencilax::sim::kernel::{Caching, Unroll};
+use stencilax::sim::predict::predict;
+use stencilax::sim::workloads::{xcorr1d, TILE_1D};
+use stencilax::stencil::conv;
+use stencilax::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. runtime up -----------------------------------------------------
+    let ex = Executor::new(Manifest::load(Manifest::default_dir())?)?;
+    println!("PJRT platform: {}", ex.platform());
+    println!("artifacts in manifest: {}", ex.manifest.artifacts.len());
+
+    // ---- 2. run one AOT kernel --------------------------------------------
+    let (n, r) = (1usize << 20, 4usize);
+    let mut rng = Rng::new(7);
+    let fpad = rng.normal_vec(n + 2 * r);
+    let taps = rng.normal_vec(2 * r + 1);
+    let name = "xcorr1d_swc_pointwise_r4_f64";
+    let (out, timing) = ex.run_timed(
+        name,
+        &[
+            HostValue::f64(fpad.clone(), &[n + 2 * r]),
+            HostValue::f64(taps.clone(), &[2 * r + 1]),
+        ],
+    )?;
+    println!("\nran {name}: {n} outputs in {:.2} ms (execute call)", timing.execute_s * 1e3);
+
+    // ---- 3. verify against the native engine -------------------------------
+    let want = conv::xcorr1d(&fpad, &taps);
+    let err = out[0]
+        .to_f64_vec()
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |pallas - native| = {err:.3e}");
+    assert!(err < 1e-12, "verification failed");
+
+    // ---- 4. what would the paper's GPUs do? --------------------------------
+    println!("\nGPU model predictions for this kernel (SWC, pointwise, FP64):");
+    for gpu in ALL_GPUS {
+        let dev = spec(gpu);
+        let prof = xcorr1d(n, r, true, Caching::Swc, Unroll::Pointwise, TILE_1D);
+        let p = predict(dev, &prof);
+        println!(
+            "  {:<16} {:>8.3} ms  bound: {} (occupancy {:.0}%)",
+            dev.name,
+            p.total * 1e3,
+            p.bound,
+            p.occupancy.fraction * 100.0
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

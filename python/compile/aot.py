@@ -1,0 +1,317 @@
+"""AOT compile path: lower every artifact in the manifest to HLO text.
+
+Python runs ONCE, here. Each (kernel, shape, dtype, variant) pair in the
+manifest is traced with jax.jit, lowered to StableHLO, converted to an
+XlaComputation and dumped as HLO **text** — xla_extension 0.5.1 (the version
+the published ``xla`` 0.1.6 crate links) rejects jax>=0.5 serialized protos
+(64-bit instruction ids), while the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+``artifacts/manifest.json`` records, per artifact: the HLO file, the
+workload parameters (kind/dtype/radius/shape/caching/unroll/substep), the
+experiment figures it serves, and the exact input/output shapes — the Rust
+runtime (rust/src/runtime/artifact.rs) drives buffer preparation from this.
+
+Incremental: an artifact whose .hlo.txt already exists is skipped unless
+--force is given; the manifest is always rewritten in full.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .mhd_eqs import RADIUS as MHD_RADIUS
+from .mhd_eqs import MhdParams
+
+NF = 8
+
+
+def _np_dtype(name: str):
+    return {"f32": jnp.float32, "f64": jnp.float64}[name]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    kind: str  # copy | xcorr1d | xcorr1d_lib | diffusion | diffusion_lib |
+    #            diffusion_oracle | mhd | mhd_oracle
+    params: Dict[str, Any]
+    figures: List[str]
+    build: Callable[[], Tuple[Callable, List[jax.ShapeDtypeStruct]]]
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+
+def _sds(shape: Sequence[int], dtype: str) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), _np_dtype(dtype))
+
+
+# --------------------------------------------------------------------------
+# Manifest definition — the benchmark matrix of the paper, scaled per
+# DESIGN.md §9 (measured set runs at CPU-feasible sizes; the simulator
+# extrapolates to the paper's 64/128 MiB and 256^3/128^3 sizes).
+# --------------------------------------------------------------------------
+COPY_SIZES = [2**14, 2**16, 2**18, 2**20, 2**22]
+XCORR_N = 2**20
+XCORR_RADII = [1, 4, 16, 64]
+DIFF_SHAPES = {1: (262144,), 2: (512, 512), 3: (64, 64, 64)}
+DIFF_RADII = [1, 2, 3, 4]
+MHD_SHAPE = (32, 32, 32)
+MHD_PAR = MhdParams(dx=2.0 * 3.141592653589793 / 32.0)
+
+
+def build_manifest() -> List[Artifact]:
+    arts: List[Artifact] = []
+
+    # Fig 6: effective bandwidth, r=0 copy kernel
+    for n in COPY_SIZES:
+        for dt in ("f32", "f64"):
+            arts.append(
+                Artifact(
+                    name=f"copy_n{n}_{dt}",
+                    kind="copy",
+                    params={"n": n, "dtype": dt, "radius": 0},
+                    figures=["fig6"],
+                    build=(lambda n=n, dt=dt: (model.make_copy(n, dt), [_sds((n,), dt)])),
+                )
+            )
+
+    # Figs 8-9: handcrafted 1-D cross-correlation variant matrix
+    for r in XCORR_RADII:
+        for dt in ("f32", "f64"):
+            for caching in ("hwc", "swc"):
+                for unroll in ("baseline", "elementwise", "pointwise"):
+                    arts.append(
+                        Artifact(
+                            name=f"xcorr1d_{caching}_{unroll}_r{r}_{dt}",
+                            kind="xcorr1d",
+                            params={
+                                "n": XCORR_N,
+                                "dtype": dt,
+                                "radius": r,
+                                "caching": caching,
+                                "unroll": unroll,
+                            },
+                            figures=["fig8", "fig9"],
+                            build=(
+                                lambda r=r, dt=dt, c=caching, u=unroll: (
+                                    model.make_xcorr1d(XCORR_N, r, dt, c, u),
+                                    [_sds((XCORR_N + 2 * r,), dt), _sds((2 * r + 1,), dt)],
+                                )
+                            ),
+                        )
+                    )
+
+    # Fig 7 / Table C3: library-convolution analog
+    for r in XCORR_RADII:
+        for dt in ("f32", "f64"):
+            arts.append(
+                Artifact(
+                    name=f"xcorr1d_lib_r{r}_{dt}",
+                    kind="xcorr1d_lib",
+                    params={"n": XCORR_N, "dtype": dt, "radius": r},
+                    figures=["fig7", "tablec3"],
+                    build=(
+                        lambda r=r, dt=dt: (
+                            model.make_xcorr1d_library(XCORR_N, r, dt),
+                            [_sds((XCORR_N + 2 * r,), dt), _sds((2 * r + 1,), dt)],
+                        )
+                    ),
+                )
+            )
+
+    # Figs 11-12: Astaroth-analog diffusion (Pallas, HWC/SWC)
+    for dim, shape in DIFF_SHAPES.items():
+        for r in DIFF_RADII:
+            pad = tuple(n + 2 * r for n in shape)
+            for dt in ("f32", "f64"):
+                for caching in ("hwc", "swc"):
+                    arts.append(
+                        Artifact(
+                            name=f"diffusion{dim}d_{caching}_r{r}_{dt}",
+                            kind="diffusion",
+                            params={
+                                "shape": list(shape),
+                                "dtype": dt,
+                                "radius": r,
+                                "caching": caching,
+                            },
+                            figures=["fig11", "fig12"],
+                            build=(
+                                lambda shape=shape, r=r, dt=dt, c=caching: (
+                                    model.make_diffusion(shape, r, dt, c),
+                                    [_sds(tuple(n + 2 * r for n in shape), dt), _sds((1,), dt)],
+                                )
+                            ),
+                        )
+                    )
+
+    # Fig 10: PyTorch-analog diffusion via library conv (single precision,
+    # as in the paper's Fig. 10)
+    for dim, shape in DIFF_SHAPES.items():
+        for r in DIFF_RADII:
+            arts.append(
+                Artifact(
+                    name=f"diffusion{dim}d_lib_r{r}_f32",
+                    kind="diffusion_lib",
+                    params={"shape": list(shape), "dtype": "f32", "radius": r},
+                    figures=["fig10"],
+                    build=(
+                        lambda shape=shape, r=r: (
+                            model.make_diffusion_library(shape, r, "f32"),
+                            [_sds(tuple(n + 2 * r for n in shape), "f32"), _sds((1,), "f32")],
+                        )
+                    ),
+                )
+            )
+
+    # Oracle exports for Rust-side verification of the native engine
+    for r in DIFF_RADII:
+        shape = DIFF_SHAPES[3]
+        arts.append(
+            Artifact(
+                name=f"diffusion3d_oracle_r{r}_f64",
+                kind="diffusion_oracle",
+                params={"shape": list(shape), "dtype": "f64", "radius": r},
+                figures=["verify"],
+                build=(
+                    lambda shape=shape, r=r: (
+                        model.make_diffusion_oracle(shape, r, "f64"),
+                        [_sds(tuple(n + 2 * r for n in shape), "f64"), _sds((1,), "f64")],
+                    )
+                ),
+            )
+        )
+
+    # Fig 13-14 / Table 3: fused MHD RK3 substeps
+    mhd_par_dict = dataclasses.asdict(MHD_PAR)
+    nx, ny, nz = MHD_SHAPE
+    padded = (NF, nx + 2 * MHD_RADIUS, ny + 2 * MHD_RADIUS, nz + 2 * MHD_RADIUS)
+    unpadded = (NF, nx, ny, nz)
+    mhd_variants = [(s, "f64", c) for s in (0, 1, 2) for c in ("hwc", "swc")]
+    mhd_variants += [(2, "f32", c) for c in ("hwc", "swc")]
+    for substep, dt, caching in mhd_variants:
+        arts.append(
+            Artifact(
+                name=f"mhd32_{caching}_sub{substep}_{dt}",
+                kind="mhd",
+                params={
+                    "shape": list(MHD_SHAPE),
+                    "dtype": dt,
+                    "radius": MHD_RADIUS,
+                    "caching": caching,
+                    "substep": substep,
+                    "mhd_params": mhd_par_dict,
+                },
+                figures=["fig13", "fig14", "table3"],
+                build=(
+                    lambda s=substep, dt=dt, c=caching: (
+                        model.make_mhd_substep(MHD_SHAPE, s, dt, c, par=MHD_PAR),
+                        [_sds(padded, dt), _sds(unpadded, dt), _sds((1,), dt)],
+                    )
+                ),
+            )
+        )
+    for substep in (0, 1, 2):
+        arts.append(
+            Artifact(
+                name=f"mhd32_oracle_sub{substep}_f64",
+                kind="mhd_oracle",
+                params={
+                    "shape": list(MHD_SHAPE),
+                    "dtype": "f64",
+                    "radius": MHD_RADIUS,
+                    "substep": substep,
+                    "mhd_params": mhd_par_dict,
+                },
+                figures=["verify"],
+                build=(
+                    lambda s=substep: (
+                        model.make_mhd_substep_oracle(MHD_SHAPE, s, "f64", MHD_PAR),
+                        [_sds(unpadded, "f64"), _sds(unpadded, "f64"), _sds((1,), "f64")],
+                    )
+                ),
+            )
+        )
+
+    return arts
+
+
+def _shape_entry(s) -> Dict[str, Any]:
+    name = {jnp.float32.dtype: "f32", jnp.float64.dtype: "f64"}[jnp.dtype(s.dtype)]
+    return {"shape": list(s.shape), "dtype": name}
+
+
+def lower_artifact(art: Artifact, out_dir: str, force: bool) -> Dict[str, Any]:
+    path = os.path.join(out_dir, art.filename)
+    fn, args = art.build()
+    out_struct = jax.eval_shape(fn, *args)
+    outs = jax.tree_util.tree_leaves(out_struct)
+    entry = {
+        "name": art.name,
+        "file": art.filename,
+        "kind": art.kind,
+        "params": art.params,
+        "figures": art.figures,
+        "inputs": [_shape_entry(a) for a in args],
+        "outputs": [_shape_entry(o) for o in outs],
+    }
+    if os.path.exists(path) and not force:
+        return entry
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    print(f"  {art.name}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s", flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--force", action="store_true", help="re-lower existing artifacts")
+    ap.add_argument("--only", default="", help="comma-separated name substrings to build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = build_manifest()
+    filters = [f for f in args.only.split(",") if f]
+    entries = []
+    t0 = time.time()
+    for art in manifest:
+        if filters and not any(f in art.name for f in filters):
+            continue
+        entries.append(lower_artifact(art, args.out, args.force))
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": entries}, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

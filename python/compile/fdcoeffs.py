@@ -1,0 +1,93 @@
+"""Finite-difference coefficient generation (Fornberg's algorithm).
+
+The paper uses 6th-order central differences (stencil radius r = 3) for the
+MHD case and radius-1..4 central Laplacians for the diffusion case. Rather
+than hard-coding the classic coefficient tables, we generate weights for an
+arbitrary derivative order and stencil radius with Fornberg's recurrence
+[B. Fornberg, "Generation of finite difference formulas on arbitrarily
+spaced grids", Math. Comp. 51 (1988)]. The Rust substrate
+(rust/src/stencil/coeffs.rs) implements the identical algorithm; the pytest
+and proptest suites pin the two against each other via the classic tables.
+"""
+
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import List
+
+
+def fornberg_weights(z: Fraction, xs: List[Fraction], m: int) -> List[List[Fraction]]:
+    """Weights for derivatives 0..m at point ``z`` from nodes ``xs``.
+
+    Returns ``w`` with ``w[k][j]`` = weight of node ``xs[j]`` for the k-th
+    derivative. Exact rational arithmetic: these coefficients are baked into
+    kernels as compile-time constants, so we avoid accumulating float error
+    here and round once at the end.
+    """
+    n = len(xs)
+    if n == 0:
+        raise ValueError("need at least one node")
+    if m < 0:
+        raise ValueError("derivative order must be >= 0")
+    # delta[k][i][j]: weight of node j for k-th derivative using nodes 0..i
+    delta = [[[Fraction(0)] * n for _ in range(n)] for _ in range(m + 1)]
+    delta[0][0][0] = Fraction(1)
+    c1 = Fraction(1)
+    for i in range(1, n):
+        c2 = Fraction(1)
+        for j in range(i):
+            c3 = xs[i] - xs[j]
+            c2 *= c3
+            for k in range(min(i, m) + 1):
+                prev = delta[k - 1][i - 1][j] if k > 0 else Fraction(0)
+                delta[k][i][j] = ((xs[i] - z) * delta[k][i - 1][j] - k * prev) / c3
+        for k in range(min(i, m) + 1):
+            prev = delta[k - 1][i - 1][i - 1] if k > 0 else Fraction(0)
+            delta[k][i][i] = c1 / c2 * (k * prev - (xs[i - 1] - z) * delta[k][i - 1][i - 1])
+        c1 = c2
+    return [delta[k][n - 1] for k in range(m + 1)]
+
+
+def central_weights(deriv: int, radius: int) -> List[float]:
+    """Central-difference weights of maximal order for nodes ``-r..r``.
+
+    ``deriv=1, radius=3`` reproduces the paper's 6th-order first derivative
+    ``[-1/60, 3/20, -3/4, 0, 3/4, -3/20, 1/60]`` and ``deriv=2, radius=3``
+    the Laplacian row ``[1/90, -3/20, 3/2, -49/18, 3/2, -3/20, 1/90]``.
+    """
+    if radius < 1:
+        raise ValueError("radius must be >= 1")
+    if deriv > 2 * radius:
+        raise ValueError("derivative order exceeds stencil support")
+    xs = [Fraction(i) for i in range(-radius, radius + 1)]
+    w = fornberg_weights(Fraction(0), xs, deriv)[deriv]
+    return [float(c) for c in w]
+
+
+def central_weights_exact(deriv: int, radius: int) -> List[Fraction]:
+    """Exact rational variant of :func:`central_weights` (used by tests)."""
+    xs = [Fraction(i) for i in range(-radius, radius + 1)]
+    return fornberg_weights(Fraction(0), xs, deriv)[deriv]
+
+
+def laplacian_cross_kernel(dim: int, radius: int, dt_alpha: float) -> "list":
+    """Dense (2r+1)^dim kernel computing ``f + dt*alpha*laplacian(f)``.
+
+    This is Eq. (7) of the paper: the identity tap plus the sum of the
+    axis-aligned second-derivative kernels, combined into one dense
+    cross-shaped cross-correlation kernel. Used by the library-convolution
+    (cuDNN/MIOpen/PyTorch analog) path. Returns a nested list (row-major).
+    """
+    import numpy as np
+
+    n = 2 * radius + 1
+    d2 = np.array(central_weights(2, radius), dtype=np.float64)
+    k = np.zeros((n,) * dim, dtype=np.float64)
+    center = (radius,) * dim
+    k[center] = 1.0
+    for axis in range(dim):
+        idx = list(center)
+        for j in range(n):
+            idx[axis] = j
+            k[tuple(idx)] += dt_alpha * d2[j]
+    return k.tolist()

@@ -1,0 +1,196 @@
+"""L1 Pallas kernels: 1-D cross-correlation (paper §4.1, Figs. 8-9).
+
+The paper's handcrafted CUDA/HIP benchmark explores a 2x3 matrix of tuning
+strategies: {hardware-managed caching, software-managed caching} x
+{baseline, element-wise unrolling, stencil-point-wise unrolling}. This
+module reproduces that matrix as Pallas kernel variants under the TPU
+adaptation documented in DESIGN.md §2:
+
+  * HWC  -> every tap slices the input *ref* directly; the compiler/hardware
+            schedules the HBM<->VMEM traffic (analog of relying on L1/L2).
+  * SWC  -> the program's full working set (tile + 2r halo) is staged into
+            one local value first, then taps slice the staged value (analog
+            of an explicit shared-memory fill; on TPU this pins the working
+            set in VMEM).
+  * baseline    -> the multiply-accumulate loop over stencil points is a
+                   rolled ``lax.fori_loop`` (runtime loop, minimal code).
+  * pointwise   -> the tap loop is unrolled at trace time (paper: #pragma
+                   unroll over the stencil points).
+  * elementwise -> each program instance computes ``elems`` independent
+                   accumulation chains over sub-tiles (paper: four outputs
+                   per thread; raises ILP by making chains independent).
+
+All kernels are lowered with ``interpret=True``: on this CPU-PJRT testbed a
+real Mosaic lowering cannot execute (see /opt/xla-example/README.md); the
+structural differences between the variants are still real in the emitted
+HLO and are what the Rust-side simulator's per-variant instruction/traffic
+characteristics are derived from.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CACHING = ("hwc", "swc")
+UNROLL = ("baseline", "elementwise", "pointwise")
+
+
+def _dtype(name: str):
+    return {"f32": jnp.float32, "f64": jnp.float64}[name]
+
+
+# Per-program working-set budget. Real-TPU VMEM is ~16 MiB per core; we tile
+# so the staged working set stays well under half of it. Under interpret
+# mode this also minimizes grid-loop overhead (EXPERIMENTS.md §Perf/L1-1:
+# the interpret grid loop dominated kernel time at small tiles).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _vmem_tile_1d(n: int, radius: int, dtype: str) -> int:
+    w = 4 if dtype == "f32" else 8
+    budget = VMEM_BUDGET_BYTES // w - 2 * radius
+    tile = n
+    while tile > budget and tile % 2 == 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+def make_xcorr1d(
+    n: int,
+    radius: int,
+    dtype: str = "f32",
+    caching: str = "hwc",
+    unroll: str = "pointwise",
+    tile: int = 0,
+    elems: int = 4,
+) -> Callable:
+    """Build ``f(fpad, g) -> out`` for one variant of the paper's Fig. 9 grid.
+
+    ``fpad`` has shape (n + 2*radius,) (the augmented array of Eq. 2), ``g``
+    has the 2r+1 taps, and the output has shape (n,). ``tile`` outputs are
+    produced per program instance; with ``unroll='elementwise'`` the tile is
+    split into ``elems`` independent accumulation chains.
+    """
+    if caching not in CACHING:
+        raise ValueError(f"unknown caching strategy {caching!r}")
+    if unroll not in UNROLL:
+        raise ValueError(f"unknown unroll strategy {unroll!r}")
+    if tile <= 0:
+        tile = _vmem_tile_1d(n, radius, dtype)
+    tile = min(tile, n)
+    if n % tile != 0:
+        raise ValueError(f"tile {tile} must divide n {n}")
+    if unroll == "elementwise":
+        if tile % elems != 0:
+            raise ValueError(f"elems {elems} must divide tile {tile}")
+    taps = 2 * radius + 1
+    dt = _dtype(dtype)
+
+    def kernel(x_ref, g_ref, o_ref):
+        start = pl.program_id(0) * tile
+
+        def tap_slice(j: int, off: int, width: int):
+            """Working-set access for tap j over [off, off+width) of the tile."""
+            if caching == "hwc":
+                # tap -> direct ref load (cache-hierarchy analog)
+                return pl.load(x_ref, (pl.ds(start + off + j, width),))
+            return jax.lax.dynamic_slice(tap_slice.ws, (off + j,), (width,))
+
+        if caching == "swc":
+            # one staged fill of the full working set (shared-memory analog)
+            tap_slice.ws = pl.load(x_ref, (pl.ds(start, tile + 2 * radius),))
+
+        if unroll == "pointwise":
+            acc = jnp.zeros((tile,), dtype=dt)
+            for j in range(taps):  # trace-time unroll == #pragma unroll
+                acc = acc + g_ref[j] * tap_slice(j, 0, tile)
+            o_ref[...] = acc
+        elif unroll == "elementwise":
+            sub = tile // elems
+            accs = []
+            for e in range(elems):  # independent chains == outputs/thread
+                acc = jnp.zeros((sub,), dtype=dt)
+                for j in range(taps):
+                    acc = acc + g_ref[j] * tap_slice(j, e * sub, sub)
+                accs.append(acc)
+            o_ref[...] = jnp.concatenate(accs)
+        else:  # baseline: rolled runtime loop over stencil points
+            if caching == "hwc":
+
+                def body(j, acc):
+                    x = pl.load(x_ref, (pl.ds(start + j, tile),))
+                    return acc + g_ref[j] * x
+
+            else:
+                ws = tap_slice.ws
+
+                def body(j, acc):
+                    x = jax.lax.dynamic_slice(ws, (j,), (tile,))
+                    return acc + g_ref[j] * x
+
+            o_ref[...] = jax.lax.fori_loop(0, taps, body, jnp.zeros((tile,), dtype=dt))
+
+    grid = (n // tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n + 2 * radius,), lambda i: (0,)),
+            pl.BlockSpec((taps,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dt),
+        interpret=True,
+    )
+
+
+def make_copy(n: int, dtype: str = "f32", tile: int = 65536) -> Callable:
+    """The r = 0 effective-bandwidth kernel of paper Fig. 6: f'_i = f_i."""
+    tile = min(tile, n)
+    if n % tile != 0:
+        raise ValueError(f"tile {tile} must divide n {n}")
+    dt = _dtype(dtype)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dt),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def variant_characteristics(caching: str, unroll: str, radius: int, elems: int = 4) -> dict:
+    """Per-variant cost characteristics consumed by the Rust simulator.
+
+    Mirrors rust/src/sim/strategies.rs (pinned against each other by tests).
+    Counts are per output element, in abstract instruction units:
+      fma   - multiply-accumulate ops
+      ld    - working-set loads (L1 or shared/VMEM, per caching strategy)
+      idx   - integer index-arithmetic overhead (the paper measured a 2.3x
+              instruction-count increase for SWC index management, §5.4)
+      ilp   - independent instruction chains available to the scheduler
+    """
+    taps = 2 * radius + 1
+    fma = taps
+    ld = taps + (1 if caching == "swc" else 0)
+    # rolled loops pay loop/index arithmetic per tap; unrolled variants fold
+    # the addressing into immediates (the paper prunes these at codegen time)
+    # baseline pays rolled-loop overhead per tap (address mul, compare,
+    # branch, increment) — calibrated against paper Fig. 9 (see
+    # rust/src/sim/workloads.rs idx_per_mac, pinned by tests on both sides)
+    idx = {"baseline": 4.0, "elementwise": 0.35, "pointwise": 0.25}[unroll] * taps
+    if caching == "swc":
+        idx *= 2.3  # paper §5.4: SWC index-management instruction overhead
+    ilp = {"baseline": 1, "elementwise": elems, "pointwise": 2}[unroll]
+    return {"fma": float(fma), "ld": float(ld), "idx": float(idx), "ilp": float(ilp)}

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: 1/2/3-D diffusion-equation step (paper §3.2, Figs. 10-12).
+
+One forward-Euler step ``f' = f + dt*alpha*laplacian(f)`` on a ghost-zone
+padded input, with the Laplacian as the separable sum of per-axis central
+second differences (Eq. 6). Two caching variants mirror the paper's Astaroth
+comparison (Fig. 12):
+
+  * ``hwc`` - every stencil tap slices the padded input ref directly,
+  * ``swc`` - the program stages its padded working-set block into a local
+              value once, then slices the staged value (shared-memory/VMEM
+              analog; for 3-D this is the (tx+2r, ty+2r, tz) z-streamed block
+              of paper Fig. 5b expressed as a Pallas grid over z-tiles).
+
+The combined scalar ``dt*alpha/dx^2`` is a runtime input so one artifact
+serves any stable time step; the tap weights themselves are baked as
+trace-time constants exactly like Astaroth bakes **A** into constant memory.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fdcoeffs import central_weights
+
+
+def _dtype(name: str):
+    return {"f32": jnp.float32, "f64": jnp.float64}[name]
+
+
+def make_diffusion(
+    shape: Sequence[int],
+    radius: int,
+    dtype: str = "f32",
+    caching: str = "hwc",
+    tile_last: int = 0,
+) -> Callable:
+    """Build ``f(fpad, s) -> out`` for one diffusion step.
+
+    ``fpad``: padded input, shape ``tuple(n + 2r for n in shape)``.
+    ``s``: shape (1,) scalar array holding dt*alpha/dx^2.
+    Output: shape ``shape``. The grid tiles the *last* axis (the slowest-
+    moving spatial axis maps to the Pallas grid; x stays innermost/lane-
+    contiguous per DESIGN.md §2). ``tile_last=0`` picks a whole-axis tile
+    for 1-D and ``min(n_last, 8 if 3-D else 64)`` otherwise.
+    """
+    shape = tuple(int(n) for n in shape)
+    d = len(shape)
+    if d not in (1, 2, 3):
+        raise ValueError("1-3 dimensions supported")
+    if caching not in ("hwc", "swc"):
+        raise ValueError(f"unknown caching strategy {caching!r}")
+    dt = _dtype(dtype)
+    c2 = central_weights(2, radius)
+    taps = 2 * radius + 1
+    n_last = shape[-1]
+    if tile_last <= 0:
+        # largest last-axis tile whose padded working set fits the VMEM
+        # budget (EXPERIMENTS.md §Perf/L1-1: 9.4x on 64^3 r=3 vs tile 8)
+        w = 4 if dtype == "f32" else 8
+        budget = 8 * 1024 * 1024
+        other: int = 1
+        for m in shape[:-1]:
+            other *= m + 2 * radius
+        tile_last = n_last
+        while other * (tile_last + 2 * radius) * w > budget and tile_last % 2 == 0:
+            tile_last //= 2
+    if n_last % tile_last != 0:
+        raise ValueError(f"tile_last {tile_last} must divide last axis {n_last}")
+    pad_shape = tuple(n + 2 * radius for n in shape)
+    # output block: full extent in all axes but the last, a tile in the last
+    out_block = shape[:-1] + (tile_last,)
+
+    def kernel(x_ref, s_ref, o_ref):
+        last0 = pl.program_id(0) * tile_last
+        s = s_ref[0]
+
+        if caching == "swc":
+            # stage the padded working set for this tile (one fill)
+            ws_idx = tuple(pl.ds(0, n + 2 * radius) for n in shape[:-1]) + (
+                pl.ds(last0, tile_last + 2 * radius),
+            )
+            ws = pl.load(x_ref, ws_idx)
+
+            def tap(axis: int, j: int):
+                starts = [j if a == axis else radius for a in range(d)]
+                return jax.lax.dynamic_slice(ws, tuple(starts), out_block)
+
+            def center():
+                return jax.lax.dynamic_slice(ws, (radius,) * d, out_block)
+
+        else:
+
+            def tap(axis: int, j: int):
+                starts = [j if a == axis else radius for a in range(d)]
+                starts[d - 1] += last0  # tile offset along the gridded axis
+                idx = tuple(pl.ds(starts[a], out_block[a]) for a in range(d))
+                return pl.load(x_ref, idx)
+
+            def center():
+                starts = [radius] * d
+                starts[d - 1] += last0
+                idx = tuple(pl.ds(starts[a], out_block[a]) for a in range(d))
+                return pl.load(x_ref, idx)
+
+        lap = jnp.zeros(out_block, dtype=dt)
+        for axis in range(d):
+            for j in range(taps):  # trace-time unrolled, coefficients baked
+                lap = lap + jnp.asarray(c2[j], dtype=dt) * tap(axis, j)
+        o_ref[...] = center() + s * lap
+
+    grid = (n_last // tile_last,)
+    out_index = lambda i: (0,) * (d - 1) + (i,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(pad_shape, lambda i: (0,) * d),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(out_block, out_index),
+        out_shape=jax.ShapeDtypeStruct(shape, dt),
+        interpret=True,
+    )
+
+
+def diffusion_flops_per_elem(d: int, radius: int) -> int:
+    """FMA-equivalent ops per output element (simulator characterization)."""
+    taps = 2 * radius + 1
+    return d * taps + 2  # per-axis MACs + the Euler update fma

@@ -1,0 +1,234 @@
+"""L1 Pallas kernel: fused nonlinear MHD RK3 substep (paper §3.3/§4.4, Fig. 13).
+
+This is the paper's headline fused multiphysics kernel: one kernel invocation
+evaluates the full phi(AB) chain for all eight coupled fields — the linear
+stencil contraction gamma (~60 radius-3 derivative rows applied to the
+neighborhood of every point) feeding the nonlinear pointwise map phi (the
+Appendix-A right-hand sides), followed by the Williamson 2N-RK3 state update
+— with all intermediate results held on-chip, eliminating the per-derivative
+off-chip round trips an unfused implementation would pay.
+
+Variant mapping (DESIGN.md §2, Fig. 5 of the paper):
+
+  * ``hwc`` — each derivative tap slices the padded field *refs* directly
+    (Fig. 5a: hardware cache hierarchy provides the reuse).
+  * ``swc`` — each program stages its (nx+2r, ny+2r, tz+2r) working-set slab
+    per field into a local value first, then all taps slice the staged
+    values (Fig. 5b: the explicit shared-memory block, z-streamed by running
+    the Pallas grid over z-tiles; the circular buffer becomes the grid).
+
+The physics itself lives in ``compile.mhd_eqs.mhd_rhs`` and is shared with
+the roll-based oracle, so the kernel and the oracle cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fdcoeffs import central_weights
+from ..mhd_eqs import FIELDS, RADIUS, RK3_ALPHA, RK3_BETA, MhdParams, mhd_rhs
+
+NF = len(FIELDS)
+
+
+def _dtype(name: str):
+    return {"f32": jnp.float32, "f64": jnp.float64}[name]
+
+
+class _FieldBlock:
+    """A single field's padded working-set window for one program instance.
+
+    ``slab(starts, sizes)`` returns values in *window coordinates*: the
+    window covers (nx+2r, ny+2r, tz+2r) beginning at padded-z offset z0.
+    HWC slices the kernel ref lazily; SWC slices a staged local value.
+    """
+
+    def __init__(self, ref, field: int, z0, win_shape, staged: bool):
+        self.ref = ref
+        self.field = field
+        self.z0 = z0
+        self.win_shape = win_shape
+        self.staged = None
+        if staged:
+            self.staged = pl.load(
+                ref,
+                (field,) + tuple(pl.ds(0, w) for w in win_shape[:2]) + (pl.ds(z0, win_shape[2]),),
+            )
+
+    def slab(self, starts: Sequence[int], sizes: Sequence[int]):
+        if self.staged is not None:
+            return jax.lax.dynamic_slice(self.staged, tuple(starts), tuple(sizes))
+        idx = (self.field,) + tuple(
+            pl.ds(starts[a] + (self.z0 if a == 2 else 0), sizes[a]) for a in range(3)
+        )
+        return pl.load(self.ref, idx)
+
+
+class PallasBlockOps:
+    """Derivative operators over ``_FieldBlock`` windows (interface of
+    ``mhd_eqs.RollOps``; outputs are interior-block-shaped values)."""
+
+    def __init__(self, interior: Tuple[int, int, int], radius: int, inv_dx: float, dtype):
+        self.interior = interior
+        self.r = radius
+        self.inv_dx = inv_dx
+        self.dtype = dtype
+        self.c1 = central_weights(1, radius)
+        self.c2 = central_weights(2, radius)
+
+    def _c(self, v: float):
+        return jnp.asarray(v, dtype=self.dtype)
+
+    def value(self, fb: _FieldBlock):
+        return fb.slab((self.r,) * 3, self.interior)
+
+    def d1(self, fb: _FieldBlock, axis: int):
+        r, n = self.r, self.interior
+        acc = None
+        for j in range(2 * r + 1):
+            c = self.c1[j]
+            if c == 0.0:
+                continue  # pruned, as Astaroth's OPTIMIZE_MEM_ACCESSES does
+            starts = [j if a == axis else r for a in range(3)]
+            term = self._c(c) * fb.slab(starts, n)
+            acc = term if acc is None else acc + term
+        return acc * self._c(self.inv_dx)
+
+    def d2(self, fb: _FieldBlock, axis: int):
+        r, n = self.r, self.interior
+        acc = None
+        for j in range(2 * r + 1):
+            c = self.c2[j]
+            if c == 0.0:
+                continue
+            starts = [j if a == axis else r for a in range(3)]
+            term = self._c(c) * fb.slab(starts, n)
+            acc = term if acc is None else acc + term
+        return acc * self._c(self.inv_dx**2)
+
+    def d1d1(self, fb: _FieldBlock, ax1: int, ax2: int):
+        """Mixed second derivative: d1 along ax1 keeping the ax2 halo, then a
+        value-level d1 along ax2 (Pencil-style composed first differences)."""
+        r, n = self.r, self.interior
+        # intermediate keeps the ax2 halo
+        mid_sizes = [n[a] + (2 * r if a == ax2 else 0) for a in range(3)]
+        mid = None
+        for j in range(2 * r + 1):
+            c = self.c1[j]
+            if c == 0.0:
+                continue
+            starts = [0 if a == ax2 else (j if a == ax1 else r) for a in range(3)]
+            term = self._c(c) * fb.slab(starts, mid_sizes)
+            mid = term if mid is None else mid + term
+        acc = None
+        for j in range(2 * r + 1):
+            c = self.c1[j]
+            if c == 0.0:
+                continue
+            starts = [j if a == ax2 else 0 for a in range(3)]
+            term = self._c(c) * jax.lax.dynamic_slice(mid, tuple(starts), n)
+            acc = term if acc is None else acc + term
+        return acc * self._c(self.inv_dx**2)
+
+
+def make_mhd_substep(
+    shape: Tuple[int, int, int],
+    substep: int,
+    dtype: str = "f64",
+    caching: str = "hwc",
+    tile_z: int = 0,
+    par: MhdParams = MhdParams(),
+) -> Callable:
+    """Build ``f(fpad, w, dt) -> (f', w')`` for one RK3 substep.
+
+    ``fpad``: (8, nx+2r, ny+2r, nz+2r) padded field stack (lnrho, u, s, A).
+    ``w``:    (8, nx, ny, nz) RK 2N scratch register.
+    ``dt``:   shape (1,) time step.
+    Outputs the updated unpadded field stack and scratch register. The RK
+    coefficients for ``substep`` are baked at trace time (one artifact per
+    substep, mirroring Astaroth's per-substep generated kernels).
+    """
+    if caching not in ("hwc", "swc"):
+        raise ValueError(f"unknown caching strategy {caching!r}")
+    nx, ny, nz = shape
+    r = RADIUS
+    if tile_z <= 0:
+        # largest z-tile whose 8-field padded slab fits the VMEM budget
+        # (EXPERIMENTS.md §Perf/L1-1: 4.4x on 32^3 vs tile 8)
+        w = 4 if dtype == "f32" else 8
+        budget = 8 * 1024 * 1024
+        plane = NF * (nx + 2 * r) * (ny + 2 * r) * w
+        tile_z = nz
+        while plane * (tile_z + 2 * r) > budget and tile_z % 2 == 0:
+            tile_z //= 2
+    if nz % tile_z != 0:
+        raise ValueError(f"tile_z {tile_z} must divide nz {nz}")
+    dt_ = _dtype(dtype)
+    pad_shape = (NF, nx + 2 * r, ny + 2 * r, nz + 2 * r)
+    interior = (nx, ny, tile_z)
+    win_shape = (nx + 2 * r, ny + 2 * r, tile_z + 2 * r)
+    alpha = RK3_ALPHA[substep]
+    beta = RK3_BETA[substep]
+
+    def kernel(x_ref, w_ref, dt_ref, of_ref, ow_ref):
+        z0 = pl.program_id(0) * tile_z
+        dt = dt_ref[0]
+        ops = PallasBlockOps(interior, r, 1.0 / par.dx, dt_)
+        F = {
+            name: _FieldBlock(x_ref, i, z0, win_shape, staged=(caching == "swc"))
+            for i, name in enumerate(FIELDS)
+        }
+        rhs = mhd_rhs(F, ops, par)
+        for i, name in enumerate(FIELDS):
+            w_new = jnp.asarray(alpha, dt_) * w_ref[i] + dt * rhs[name]
+            f_new = ops.value(F[name]) + jnp.asarray(beta, dt_) * w_new
+            ow_ref[i] = w_new
+            of_ref[i] = f_new
+
+    grid = (nz // tile_z,)
+    out_shape = (NF, nx, ny, tile_z)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(pad_shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((NF, nx, ny, tile_z), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((NF, nx, ny, tile_z), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((NF, nx, ny, tile_z), lambda i: (0, 0, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NF, nx, ny, nz), dt_),
+            jax.ShapeDtypeStruct((NF, nx, ny, nz), dt_),
+        ],
+        interpret=True,
+    )
+
+
+def mhd_workload_characteristics() -> dict:
+    """Workload characterization for the Rust simulator (see
+    rust/src/sim/workloads.rs; the two are pinned against each other).
+
+    Derivative-op inventory per point from ``mhd_eqs.stencil_op_count``:
+    d1/d2 cost ~2r (pruned zero taps) resp. 2r+1 MACs; d1d1 costs two
+    composed d1 passes. phi adds ~O(100) pointwise flops for the RHS
+    assembly, exp/log closures and the RK update.
+    """
+    from ..mhd_eqs import stencil_op_count
+
+    ops = stencil_op_count()
+    r = RADIUS
+    mac = ops["d1"] * (2 * r) + ops["d2"] * (2 * r + 1) + ops["d1d1"] * 2 * (2 * r)
+    return {
+        "fields": NF,
+        "radius": r,
+        "stencil_macs_per_point": mac,
+        "pointwise_flops_per_point": 180.0,
+        "halo_ratio_fn": "((t+2r)^2 (tz+2r)) / (t^2 tz)",
+    }

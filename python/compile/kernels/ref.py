@@ -1,0 +1,108 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+These implementations are deliberately naive and allocation-heavy: their only
+job is to be *obviously correct* so the Pallas kernels (and, transitively,
+the Rust engine, which is tested against HLO executions of these functions)
+have a trusted reference. Tolerances for each comparison follow the paper's
+Table B2 (see python/tests/ and rust coordinator::verify).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ..fdcoeffs import central_weights
+from ..mhd_eqs import FIELDS, RADIUS, RK3_ALPHA, RK3_BETA, MhdParams, RollOps, mhd_rhs
+
+
+# --------------------------------------------------------------------------
+# Cross-correlation (paper Eq. 3): f'_i = sum_{j=-r..r} g_j fhat_{i+j}
+# --------------------------------------------------------------------------
+def xcorr1d(fpad, g):
+    """1-D cross-correlation of a padded input; output length n = len(fpad)-2r.
+
+    ``fpad`` is the augmented array (Eq. 2): n + 2r elements. ``g`` holds the
+    2r+1 taps. Accumulation runs tap-major in a fixed left-to-right order so
+    bit-exact comparison against the kernels is possible (the paper asserts
+    exact equality for its CUDA/HIP conv benchmarks, §5.1).
+    """
+    taps = g.shape[0]
+    n = fpad.shape[0] - (taps - 1)
+    acc = jnp.zeros((n,), dtype=fpad.dtype)
+    for j in range(taps):
+        acc = acc + g[j] * fpad[j : j + n]
+    return acc
+
+
+def xcorr_nd(fpad, g):
+    """d-dimensional dense cross-correlation of a padded input ('valid')."""
+    kshape = g.shape
+    out_shape = tuple(fpad.shape[i] - kshape[i] + 1 for i in range(fpad.ndim))
+    acc = jnp.zeros(out_shape, dtype=fpad.dtype)
+    for idx in itertools.product(*[range(k) for k in kshape]):
+        sl = tuple(slice(idx[i], idx[i] + out_shape[i]) for i in range(fpad.ndim))
+        acc = acc + g[idx] * fpad[sl]
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Diffusion equation (paper Eqs. 5/7): f' = f + dt * alpha * laplacian(f)
+# --------------------------------------------------------------------------
+def diffusion_step_padded(fpad, dt_alpha_inv_dx2, radius: int):
+    """One forward-Euler diffusion step on a padded d-dim input ('valid').
+
+    ``dt_alpha_inv_dx2`` is the combined scalar dt * alpha / dx^2 (cubic
+    grid). Matches the per-axis separable-sum form (Eq. 6) rather than the
+    dense combined kernel (Eq. 7); both are algebraically identical and the
+    dense form is exercised by the library-conv path.
+    """
+    c2 = central_weights(2, radius)
+    d = fpad.ndim
+    out_shape = tuple(s - 2 * radius for s in fpad.shape)
+    center = tuple(slice(radius, radius + out_shape[i]) for i in range(d))
+
+    lap = jnp.zeros(out_shape, dtype=fpad.dtype)
+    for axis in range(d):
+        for j in range(2 * radius + 1):
+            sl = list(center)
+            sl[axis] = slice(j, j + out_shape[axis])
+            lap = lap + c2[j] * fpad[tuple(sl)]
+    return fpad[center] + jnp.asarray(dt_alpha_inv_dx2, dtype=fpad.dtype) * lap
+
+
+def diffusion_step_periodic(f, dt_alpha, dx, radius: int):
+    """One periodic forward-Euler diffusion step on an unpadded input."""
+    ops = RollOps(dx, radius)
+    lap = sum(ops.d2(f, ax) for ax in range(f.ndim))
+    return f + jnp.asarray(dt_alpha, dtype=f.dtype) * lap
+
+
+# --------------------------------------------------------------------------
+# MHD (paper Eqs. A1-A4 + Williamson RK3): the oracle for the fused kernel
+# --------------------------------------------------------------------------
+def mhd_rhs_periodic(state: Dict[str, jnp.ndarray], par: MhdParams):
+    """RHS of all eight fields with periodic roll-based derivatives."""
+    ops = RollOps(par.dx, RADIUS)
+    return mhd_rhs(state, ops, par)
+
+
+def mhd_substep_periodic(state, w, dt, substep: int, par: MhdParams):
+    """One 2N-RK3 substep: w' = alpha_l w + dt RHS(f);  f' = f + beta_l w'."""
+    rhs = mhd_rhs_periodic(state, par)
+    alpha = RK3_ALPHA[substep]
+    beta = RK3_BETA[substep]
+    w_new = {k: alpha * w[k] + dt * rhs[k] for k in FIELDS}
+    f_new = {k: state[k] + beta * w_new[k] for k in FIELDS}
+    return f_new, w_new
+
+
+def mhd_step_periodic(state, dt, par: MhdParams):
+    """One full RK3 step (three substeps) from a zero scratch register."""
+    w = {k: jnp.zeros_like(state[k]) for k in FIELDS}
+    f = state
+    for sub in range(3):
+        f, w = mhd_substep_periodic(f, w, dt, sub, par)
+    return f

@@ -1,0 +1,223 @@
+"""Non-ideal compressible MHD right-hand sides (paper Appendix A).
+
+Implements Eqs. (A1)-(A4) in the non-conservative form used by
+Astaroth/Pencil-style codes:
+
+    D ln(rho) / Dt = -div u                                        (A1)
+    D u / Dt       = -cs^2 grad(s/cp + ln rho) + j x B / rho
+                     + nu [lap u + (1/3) grad div u + 2 S . grad ln rho]
+                     + zeta grad div u                             (A2)
+    rho T Ds / Dt  = div(K grad T) + eta mu0 j^2
+                     + 2 rho nu S:S + zeta rho (div u)^2           (A3)
+    dA / dt        = u x B + eta lap A                             (A4)
+
+with the ideal-gas closure cs^2 = cs0^2 exp(gamma s/cp + (gamma-1) ln(rho/rho0))
+and B = curl A, j = mu0^-1 curl B = mu0^-1 (grad div A - lap A).
+The explicit heating/cooling terms H and C of (A3) are zero in the paper's
+benchmark setup (decaying turbulence) and here as well (DESIGN.md §9).
+
+The RHS is written once against an abstract derivative-operator interface
+``Ops`` so the identical physics code serves three consumers:
+
+  * ``RollOps``   — periodic jnp.roll derivatives on unpadded arrays
+                    (the pure-jnp oracle, python/compile/kernels/ref.py);
+  * ``PaddedOps`` — shifted-slice derivatives on ghost-zone-padded arrays
+                    (the fused Pallas kernel, python/compile/kernels/mhd.py);
+  * the Rust engine mirrors the same operator set (rust/src/stencil/mhd/).
+
+Every spatial-derivative evaluation is one radius-3 stencil contraction, so
+the RHS is exactly the phi(AB) structure of paper §3.3: a linear map gamma
+(the ~60 stencil rows of A applied to the 8-field neighborhood B) followed
+by the nonlinear pointwise map phi assembled below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence
+
+import jax.numpy as jnp
+
+from .fdcoeffs import central_weights
+
+FIELDS = ("lnrho", "ux", "uy", "uz", "ss", "ax", "ay", "az")
+RADIUS = 3  # 6th-order central differences, as in the paper (Section 3.3)
+
+# Williamson low-storage 2N Runge-Kutta-3 (the integrator used by
+# Astaroth/Pencil, "explicit Runge-Kutta three-time integration" in §3.3):
+#   w_l = alpha_l w_{l-1} + dt * RHS(f_{l-1});  f_l = f_{l-1} + beta_l w_l
+RK3_ALPHA = (0.0, -5.0 / 9.0, -153.0 / 128.0)
+RK3_BETA = (1.0 / 3.0, 15.0 / 16.0, 8.0 / 15.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MhdParams:
+    """Physical parameters; defaults follow the paper's Pencil-style setup."""
+
+    cs0: float = 1.0  # adiabatic sound speed at the reference state
+    gamma: float = 5.0 / 3.0  # adiabatic index
+    cp: float = 1.0  # specific heat at constant pressure
+    rho0: float = 1.0  # reference density
+    nu: float = 5e-3  # kinematic viscosity
+    eta: float = 5e-3  # magnetic diffusivity
+    zeta: float = 0.0  # bulk viscosity
+    mu0: float = 1.0  # vacuum permeability
+    kappa: float = 1e-3  # radiative thermal conductivity K (constant)
+    dx: float = 1.0  # grid spacing (cubic grid)
+
+    @property
+    def cv(self) -> float:
+        return self.cp / self.gamma
+
+    @property
+    def temp0(self) -> float:
+        """Reference temperature from cs0^2 = gamma (gamma-1) cv T0."""
+        return self.cs0**2 / (self.cp * (self.gamma - 1.0))
+
+
+class RollOps:
+    """Periodic derivatives via jnp.roll; reference/oracle implementation."""
+
+    def __init__(self, dx: float, radius: int = RADIUS):
+        self.radius = radius
+        self.inv_dx = 1.0 / dx
+        self.c1 = central_weights(1, radius)
+        self.c2 = central_weights(2, radius)
+
+    def value(self, f):
+        return f
+
+    def d1(self, f, axis: int):
+        acc = jnp.zeros_like(f)
+        for j in range(1, self.radius + 1):
+            c = self.c1[self.radius + j]
+            # roll(-j) brings element i+j to position i
+            acc = acc + c * (jnp.roll(f, -j, axis) - jnp.roll(f, j, axis))
+        return acc * self.inv_dx
+
+    def d2(self, f, axis: int):
+        acc = self.c2[self.radius] * f
+        for j in range(1, self.radius + 1):
+            c = self.c2[self.radius + j]
+            acc = acc + c * (jnp.roll(f, -j, axis) + jnp.roll(f, j, axis))
+        return acc * self.inv_dx**2
+
+    def d1d1(self, f, ax1: int, ax2: int):
+        """Mixed derivative as composed first derivatives (Pencil derij)."""
+        return self.d1(self.d1(f, ax1), ax2)
+
+
+def mhd_rhs(F: Dict[str, Any], ops, par: MhdParams) -> Dict[str, Any]:
+    """Evaluate the RHS of Eqs. (A1)-(A4) for all eight fields.
+
+    ``F`` maps field name -> array (padded or not, per ``ops``); the result
+    arrays have the interior (output) shape defined by ``ops``.
+    """
+    r = par
+    lnrho, ss = F["lnrho"], F["ss"]
+    uu = [F["ux"], F["uy"], F["uz"]]
+    aa = [F["ax"], F["ay"], F["az"]]
+
+    # --- linear part gamma: every stencil contraction the update needs ----
+    glnrho = [ops.d1(lnrho, i) for i in range(3)]
+    gss = [ops.d1(ss, i) for i in range(3)]
+    lap_lnrho = sum(ops.d2(lnrho, i) for i in range(3))
+    lap_ss = sum(ops.d2(ss, i) for i in range(3))
+    # velocity gradient du[i][j] = d u_i / d x_j
+    du = [[ops.d1(uu[i], j) for j in range(3)] for i in range(3)]
+    lap_u = [sum(ops.d2(uu[i], j) for j in range(3)) for i in range(3)]
+    # grad(div u)_i = sum_j d^2 u_j / (dx_i dx_j)
+    gdivu = [
+        sum(ops.d2(uu[j], i) if i == j else ops.d1d1(uu[j], j, i) for j in range(3))
+        for i in range(3)
+    ]
+    da = [[ops.d1(aa[i], j) for j in range(3)] for i in range(3)]
+    lap_a = [sum(ops.d2(aa[i], j) for j in range(3)) for i in range(3)]
+    gdiva = [
+        sum(ops.d2(aa[j], i) if i == j else ops.d1d1(aa[j], j, i) for j in range(3))
+        for i in range(3)
+    ]
+
+    # --- nonlinear pointwise part phi ------------------------------------
+    lnrho_v = ops.value(lnrho)
+    ss_v = ops.value(ss)
+    u_v = [ops.value(uu[i]) for i in range(3)]
+
+    divu = du[0][0] + du[1][1] + du[2][2]
+    rho = jnp.exp(lnrho_v)
+    inv_rho = jnp.exp(-lnrho_v)
+    # ideal-gas closure
+    cs2 = r.cs0**2 * jnp.exp(r.gamma * ss_v / r.cp + (r.gamma - 1.0) * (lnrho_v - jnp.log(r.rho0)))
+    temp = r.temp0 * jnp.exp(r.gamma * ss_v / r.cp + (r.gamma - 1.0) * (lnrho_v - jnp.log(r.rho0)))
+
+    # B = curl A; j = mu0^-1 (grad div A - lap A)
+    bb = [
+        da[2][1] - da[1][2],
+        da[0][2] - da[2][0],
+        da[1][0] - da[0][1],
+    ]
+    jj = [(gdiva[i] - lap_a[i]) / r.mu0 for i in range(3)]
+    jxb = [
+        jj[1] * bb[2] - jj[2] * bb[1],
+        jj[2] * bb[0] - jj[0] * bb[2],
+        jj[0] * bb[1] - jj[1] * bb[0],
+    ]
+    uxb = [
+        u_v[1] * bb[2] - u_v[2] * bb[1],
+        u_v[2] * bb[0] - u_v[0] * bb[2],
+        u_v[0] * bb[1] - u_v[1] * bb[0],
+    ]
+
+    # traceless rate-of-shear S_ij = (du_i/dx_j + du_j/dx_i)/2 - delta_ij divu/3
+    S = [
+        [0.5 * (du[i][j] + du[j][i]) - (divu / 3.0 if i == j else 0.0) for j in range(3)]
+        for i in range(3)
+    ]
+    s_glnrho = [sum(S[i][j] * glnrho[j] for j in range(3)) for i in range(3)]
+    s2 = sum(S[i][j] * S[i][j] for i in range(3) for j in range(3))
+
+    # (A1) advective form: d lnrho/dt = -u.grad lnrho - div u
+    rhs_lnrho = -sum(u_v[i] * glnrho[i] for i in range(3)) - divu
+
+    # (A2)
+    rhs_u = []
+    for i in range(3):
+        adv = -sum(u_v[j] * du[i][j] for j in range(3))
+        press = -cs2 * (gss[i] / r.cp + glnrho[i])
+        lorentz = jxb[i] * inv_rho
+        visc = r.nu * (lap_u[i] + gdivu[i] / 3.0 + 2.0 * s_glnrho[i]) + r.zeta * gdivu[i]
+        rhs_u.append(adv + press + lorentz + visc)
+
+    # (A3) with constant K:  div(K grad T) = K T (lap lnT + |grad lnT|^2)
+    glnT = [r.gamma / r.cp * gss[i] + (r.gamma - 1.0) * glnrho[i] for i in range(3)]
+    lap_lnT = r.gamma / r.cp * lap_ss + (r.gamma - 1.0) * lap_lnrho
+    div_k_gradT = r.kappa * temp * (lap_lnT + sum(g * g for g in glnT))
+    j2 = sum(jj[i] * jj[i] for i in range(3))
+    heat = div_k_gradT + r.eta * r.mu0 * j2 + 2.0 * rho * r.nu * s2 + r.zeta * rho * divu * divu
+    rhs_ss = -sum(u_v[i] * gss[i] for i in range(3)) + heat * inv_rho / temp
+
+    # (A4)
+    rhs_a = [uxb[i] + r.eta * lap_a[i] for i in range(3)]
+
+    return {
+        "lnrho": rhs_lnrho,
+        "ux": rhs_u[0],
+        "uy": rhs_u[1],
+        "uz": rhs_u[2],
+        "ss": rhs_ss,
+        "ax": rhs_a[0],
+        "ay": rhs_a[1],
+        "az": rhs_a[2],
+    }
+
+
+def stencil_op_count() -> Dict[str, int]:
+    """Stencil-contraction inventory of one RHS evaluation.
+
+    Used by the Rust simulator's workload characterization (it must agree
+    with rust/src/stencil/mhd/ops.rs; pinned by tests on both sides).
+    """
+    d1 = 3 + 3 + 9 + 9  # glnrho, gss, du, da
+    d2 = 3 + 3 + 9 + 9  # lap lnrho, lap ss, lap u, lap a
+    d1d1 = 6 + 6  # mixed terms of grad div u and grad div A
+    return {"d1": d1, "d2": d2, "d1d1": d1d1}

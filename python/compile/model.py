@@ -1,0 +1,136 @@
+"""L2: JAX compute-graph assembly (build-time only; never on the hot path).
+
+Wires the L1 Pallas kernels (compile.kernels.*) and the library-convolution
+analog into the jitted functions that ``aot.py`` lowers to HLO text for the
+Rust runtime. Three families:
+
+  * Pallas paths  — the paper's handcrafted-kernel analogs (HWC/SWC etc.).
+  * Library paths — ``lax.conv_general_dilated``: this stack's equivalent of
+    cuDNN/MIOpen/PyTorch convolutions (paper §4.2-4.3). The diffusion
+    library path uses the dense combined cross-shaped kernel of Eq. (7),
+    exactly how the paper maps PDEs onto convolution primitives (Fig. 3).
+  * Oracle paths  — the pure-jnp references, exported too so the Rust
+    integration tests can check the native engine against the oracle
+    through PJRT without any Python at runtime.
+
+All functions take/return plain arrays; padding the computational domain is
+the caller's job (the paper does not benchmark padding; the Rust stencil
+engine owns ghost-zone fills at runtime).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import fdcoeffs
+from .kernels import conv1d, diffusion, mhd, ref
+from .mhd_eqs import FIELDS, MhdParams
+
+
+def _dtype(name: str):
+    return {"f32": jnp.float32, "f64": jnp.float64}[name]
+
+
+# --------------------------------------------------------------------------
+# Library-convolution analogs (cuDNN / MIOpen / PyTorch stand-ins)
+# --------------------------------------------------------------------------
+def make_xcorr1d_library(n: int, radius: int, dtype: str = "f32") -> Callable:
+    """1-D cross-correlation via lax.conv (paper §4.2, Fig. 7).
+
+    NCW layout with batch=1, channels=1 — the paper's NCHW choice for 1-D.
+    """
+
+    def fn(fpad, g):
+        lhs = fpad.reshape(1, 1, n + 2 * radius)
+        rhs = g.reshape(1, 1, 2 * radius + 1)
+        out = jax.lax.conv_general_dilated(
+            lhs,
+            rhs,
+            window_strides=(1,),
+            padding="VALID",
+            dimension_numbers=("NCH", "OIH", "NCH"),
+        )
+        return out.reshape(n)
+
+    return fn
+
+
+def make_diffusion_library(shape: Sequence[int], radius: int, dtype: str = "f32") -> Callable:
+    """Diffusion step as a single dense conv (paper Eq. 7 / Fig. 3).
+
+    The identity-plus-Laplacian cross kernel is built at trace time from the
+    same Fornberg weights the Pallas path uses; the runtime scalar
+    ``s = dt*alpha/dx^2`` is folded into the filter tensor, mirroring how
+    the paper's PyTorch implementation materializes filter tensors.
+    """
+    shape = tuple(shape)
+    d = len(shape)
+    dt = _dtype(dtype)
+    spatial = "DHW"[3 - d :]
+    dn = (f"NC{spatial}", f"OI{spatial}", f"NC{spatial}")
+
+    def fn(fpad, s):
+        n = 2 * radius + 1
+        base = jnp.zeros((n,) * d, dtype=dt)
+        center = (radius,) * d
+        base = base.at[center].set(1.0)
+        lapk = jnp.zeros((n,) * d, dtype=dt)
+        c2 = fdcoeffs.central_weights(2, radius)
+        for axis in range(d):
+            for j in range(n):
+                idx = list(center)
+                idx[axis] = j
+                lapk = lapk.at[tuple(idx)].add(jnp.asarray(c2[j], dt))
+        kern = base + s[0].astype(dt) * lapk
+        lhs = fpad.reshape((1, 1) + fpad.shape)
+        rhs = kern.reshape((1, 1) + kern.shape)
+        out = jax.lax.conv_general_dilated(
+            lhs, rhs, window_strides=(1,) * d, padding="VALID", dimension_numbers=dn
+        )
+        return out.reshape(shape)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Pallas paths (re-exported with uniform signatures for aot.py)
+# --------------------------------------------------------------------------
+make_copy = conv1d.make_copy
+make_xcorr1d = conv1d.make_xcorr1d
+make_diffusion = diffusion.make_diffusion
+make_mhd_substep = mhd.make_mhd_substep
+
+
+# --------------------------------------------------------------------------
+# Oracle paths (exported for Rust-side verification through PJRT)
+# --------------------------------------------------------------------------
+def make_diffusion_oracle(shape: Sequence[int], radius: int, dtype: str = "f64") -> Callable:
+    dt = _dtype(dtype)
+
+    def fn(fpad, s):
+        return ref.diffusion_step_padded(fpad.astype(dt), s[0], radius)
+
+    return fn
+
+
+def make_mhd_substep_oracle(
+    shape: Tuple[int, int, int],
+    substep: int,
+    dtype: str = "f64",
+    par: MhdParams = MhdParams(),
+) -> Callable:
+    """Roll-based periodic oracle over *unpadded* stacked state (8,nx,ny,nz)."""
+
+    def fn(fstack, wstack, dtv):
+        state = {k: fstack[i] for i, k in enumerate(FIELDS)}
+        w = {k: wstack[i] for i, k in enumerate(FIELDS)}
+        f2, w2 = ref.mhd_substep_periodic(state, w, dtv[0], substep, par)
+        return (
+            jnp.stack([f2[k] for k in FIELDS]),
+            jnp.stack([w2[k] for k in FIELDS]),
+        )
+
+    return fn

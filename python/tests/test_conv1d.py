@@ -1,0 +1,135 @@
+"""Pallas 1-D cross-correlation kernels vs the pure-jnp oracle.
+
+Covers the full {hwc,swc} x {baseline,elementwise,pointwise} tuning-strategy
+matrix of paper Fig. 9, across dtypes, radii and tile decompositions.
+Tolerances follow Table B2: the conv comparisons are held to a few ULP
+(the paper asserts exactness for its CUDA/HIP runs; our variants may fuse
+differently, so we allow a small relative error of 16 eps).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv1d, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _mk(n, r, dtype):
+    fpad = jnp.asarray(RNG.standard_normal(n + 2 * r), dtype=dtype)
+    g = jnp.asarray(RNG.standard_normal(2 * r + 1), dtype=dtype)
+    return fpad, g
+
+
+def _tol(dtype):
+    eps = np.finfo(dtype).eps
+    return dict(rtol=16 * eps, atol=16 * eps)
+
+
+class TestVariantMatrix:
+    @pytest.mark.parametrize("caching", conv1d.CACHING)
+    @pytest.mark.parametrize("unroll", conv1d.UNROLL)
+    @pytest.mark.parametrize("dtype", ["f32", "f64"])
+    def test_matches_oracle(self, caching, unroll, dtype):
+        n, r = 4096, 4
+        np_dt = np.float32 if dtype == "f32" else np.float64
+        fpad, g = _mk(n, r, np_dt)
+        fn = conv1d.make_xcorr1d(n, r, dtype, caching, unroll, tile=1024)
+        got = np.asarray(fn(fpad, g))
+        want = np.asarray(ref.xcorr1d(fpad, g))
+        np.testing.assert_allclose(got, want, **_tol(np_dt))
+
+    @pytest.mark.parametrize("radius", [1, 2, 3, 8, 33])
+    def test_radius_sweep(self, radius):
+        n = 2048
+        fpad, g = _mk(n, radius, np.float64)
+        fn = conv1d.make_xcorr1d(n, radius, "f64", "swc", "pointwise", tile=512)
+        np.testing.assert_allclose(
+            np.asarray(fn(fpad, g)), np.asarray(ref.xcorr1d(fpad, g)), **_tol(np.float64)
+        )
+
+    @pytest.mark.parametrize("tile", [64, 256, 2048])
+    def test_tile_decomposition_invariance(self, tile):
+        """Output must not depend on the domain decomposition (paper §5.1
+        automated tuning explores decompositions; they must be bit-identical
+        modulo accumulation order)."""
+        n, r = 2048, 3
+        fpad, g = _mk(n, r, np.float64)
+        fn = conv1d.make_xcorr1d(n, r, "f64", "hwc", "pointwise", tile=tile)
+        np.testing.assert_allclose(
+            np.asarray(fn(fpad, g)), np.asarray(ref.xcorr1d(fpad, g)), **_tol(np.float64)
+        )
+
+    def test_elementwise_chain_count(self):
+        n, r = 1024, 2
+        fpad, g = _mk(n, r, np.float64)
+        for elems in (2, 4, 8):
+            fn = conv1d.make_xcorr1d(n, r, "f64", "hwc", "elementwise", tile=256, elems=elems)
+            np.testing.assert_allclose(
+                np.asarray(fn(fpad, g)), np.asarray(ref.xcorr1d(fpad, g)), **_tol(np.float64)
+            )
+
+    def test_r0_copy_is_exact(self):
+        n = 8192
+        x = jnp.asarray(RNG.standard_normal(n))
+        fn = conv1d.make_copy(n, "f64", tile=1024)
+        assert np.array_equal(np.asarray(fn(x)), np.asarray(x))
+
+    def test_copy_f32(self):
+        n = 4096
+        x = jnp.asarray(RNG.standard_normal(n), dtype=np.float32)
+        fn = conv1d.make_copy(n, "f32", tile=512)
+        assert np.array_equal(np.asarray(fn(x)), np.asarray(x))
+
+    def test_invalid_strategy_rejected(self):
+        with pytest.raises(ValueError):
+            conv1d.make_xcorr1d(1024, 1, "f32", caching="magic")
+        with pytest.raises(ValueError):
+            conv1d.make_xcorr1d(1024, 1, "f32", unroll="none")
+        with pytest.raises(ValueError):
+            conv1d.make_xcorr1d(1000, 1, "f32", tile=512)  # tile must divide n
+
+
+class TestHypothesisSweep:
+    @given(
+        log_n=st.integers(6, 11),
+        radius=st.integers(1, 12),
+        caching=st.sampled_from(conv1d.CACHING),
+        unroll=st.sampled_from(conv1d.UNROLL),
+        f64=st.booleans(),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_random_shapes(self, log_n, radius, caching, unroll, f64):
+        n = 2**log_n
+        np_dt = np.float64 if f64 else np.float32
+        fpad, g = _mk(n, radius, np_dt)
+        fn = conv1d.make_xcorr1d(
+            n, radius, "f64" if f64 else "f32", caching, unroll, tile=min(n, 256)
+        )
+        np.testing.assert_allclose(
+            np.asarray(fn(fpad, g)), np.asarray(ref.xcorr1d(fpad, g)), **_tol(np_dt)
+        )
+
+
+class TestVariantCharacteristics:
+    """The cost model handed to the Rust simulator must stay sane."""
+
+    def test_swc_pays_index_overhead(self):
+        hw = conv1d.variant_characteristics("hwc", "baseline", 8)
+        sw = conv1d.variant_characteristics("swc", "baseline", 8)
+        assert sw["idx"] > hw["idx"]
+        assert sw["ld"] == hw["ld"] + 1  # the staged fill
+
+    def test_unrolling_reduces_index_work(self):
+        base = conv1d.variant_characteristics("hwc", "baseline", 8)
+        pw = conv1d.variant_characteristics("hwc", "pointwise", 8)
+        assert pw["idx"] < base["idx"]
+        assert pw["fma"] == base["fma"]
+
+    def test_elementwise_raises_ilp(self):
+        base = conv1d.variant_characteristics("hwc", "baseline", 8)
+        ew = conv1d.variant_characteristics("hwc", "elementwise", 8)
+        assert ew["ilp"] > base["ilp"]

@@ -1,0 +1,107 @@
+"""Finite-difference coefficient tests: classic tables + analytic invariants."""
+
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fdcoeffs import (
+    central_weights,
+    central_weights_exact,
+    fornberg_weights,
+    laplacian_cross_kernel,
+)
+
+
+class TestClassicTables:
+    """Pin against the textbook coefficients the paper quotes (Section 3.3)."""
+
+    def test_first_derivative_radius3(self):
+        want = [-1 / 60, 3 / 20, -3 / 4, 0, 3 / 4, -3 / 20, 1 / 60]
+        np.testing.assert_allclose(central_weights(1, 3), want, rtol=1e-15)
+
+    def test_second_derivative_radius3(self):
+        want = [1 / 90, -3 / 20, 3 / 2, -49 / 18, 3 / 2, -3 / 20, 1 / 90]
+        np.testing.assert_allclose(central_weights(2, 3), want, rtol=1e-15)
+
+    def test_first_derivative_radius1(self):
+        np.testing.assert_allclose(central_weights(1, 1), [-0.5, 0, 0.5], rtol=1e-15)
+
+    def test_second_derivative_radius1(self):
+        np.testing.assert_allclose(central_weights(2, 1), [1, -2, 1], rtol=1e-15)
+
+    def test_second_derivative_radius2(self):
+        want = [-1 / 12, 4 / 3, -5 / 2, 4 / 3, -1 / 12]
+        np.testing.assert_allclose(central_weights(2, 2), want, rtol=1e-15)
+
+    def test_identity_weights(self):
+        w = central_weights(0, 2)
+        np.testing.assert_allclose(w, [0, 0, 1, 0, 0], atol=0)
+
+
+class TestInvariants:
+    @pytest.mark.parametrize("radius", [1, 2, 3, 4, 5, 6])
+    @pytest.mark.parametrize("deriv", [1, 2, 3, 4])
+    def test_polynomial_exactness(self, deriv, radius):
+        """Weights must differentiate x^k exactly for k <= 2r (order condition)."""
+        if deriv > 2 * radius:
+            pytest.skip("unsupported order")
+        w = central_weights_exact(deriv, radius)
+        for k in range(2 * radius + 1):
+            got = sum(c * Fraction(x) ** k for c, x in zip(w, range(-radius, radius + 1)))
+            # d-th derivative of x^k at x=0: nonzero (= d!) only when k == d
+            want = Fraction(math.factorial(deriv)) if k == deriv else Fraction(0)
+            assert got == want, (deriv, radius, k)
+
+    @pytest.mark.parametrize("radius", [1, 2, 3, 4, 5])
+    def test_symmetry(self, radius):
+        c1 = central_weights_exact(1, radius)
+        c2 = central_weights_exact(2, radius)
+        for j in range(radius):
+            assert c1[j] == -c1[2 * radius - j], "odd derivative antisymmetric"
+            assert c2[j] == c2[2 * radius - j], "even derivative symmetric"
+        assert c1[radius] == 0
+
+    @given(radius=st.integers(1, 6), deriv=st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_sum_rule(self, radius, deriv):
+        """Derivative weights of any order >= 1 annihilate constants."""
+        if deriv > 2 * radius:
+            return
+        w = central_weights_exact(deriv, radius)
+        assert sum(w) == 0
+
+    @given(radius=st.integers(1, 5))
+    @settings(max_examples=20, deadline=None)
+    def test_fornberg_full_row_consistency(self, radius):
+        """The m=0 row of the Fornberg table is the interpolation identity."""
+        xs = [Fraction(i) for i in range(-radius, radius + 1)]
+        rows = fornberg_weights(Fraction(0), xs, 0)
+        assert rows[0][radius] == 1
+        assert sum(rows[0]) == 1
+
+
+class TestCrossKernel:
+    @pytest.mark.parametrize("dim", [1, 2, 3])
+    @pytest.mark.parametrize("radius", [1, 2, 3])
+    def test_cross_kernel_row_sums(self, dim, radius):
+        """Identity tap contributes 1; Laplacian taps sum to 0 -> kernel sums to 1."""
+        k = np.array(laplacian_cross_kernel(dim, radius, dt_alpha=0.37))
+        assert k.shape == (2 * radius + 1,) * dim
+        np.testing.assert_allclose(k.sum(), 1.0, atol=1e-12)
+
+    def test_cross_kernel_sparsity(self):
+        """Off-axis entries must be zero (the kernel is a cross, not dense)."""
+        k = np.array(laplacian_cross_kernel(2, 2, 0.1))
+        assert k[0, 0] == 0 and k[0, 1] == 0 and k[4, 3] == 0
+
+    def test_cross_kernel_matches_axis_weights(self):
+        r, dta = 3, 0.25
+        k = np.array(laplacian_cross_kernel(1, r, dta))
+        c2 = np.array(central_weights(2, r))
+        want = dta * c2
+        want[r] += 1.0
+        np.testing.assert_allclose(k, want, rtol=1e-14)

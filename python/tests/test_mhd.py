@@ -1,0 +1,187 @@
+"""Fused MHD kernel vs roll-based oracle + physics invariants (paper §3.3).
+
+The MHD comparisons use the paper's Table B2 tolerance style: relative error
+below a small ULP multiple or absolute error below eps * min-scale. The
+fused Pallas kernel and the oracle share the RHS code (mhd_eqs.mhd_rhs), so
+these tests primarily validate the *derivative-operator* implementations
+(shifted-slice windows vs jnp.roll) and the RK wiring.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import mhd, ref
+from compile.mhd_eqs import (
+    FIELDS,
+    RADIUS,
+    RK3_ALPHA,
+    RK3_BETA,
+    MhdParams,
+    RollOps,
+    mhd_rhs,
+    stencil_op_count,
+)
+
+RNG = np.random.default_rng(99)
+
+
+def _random_state(shape, amp=1e-2):
+    return {k: jnp.asarray(amp * RNG.standard_normal(shape)) for k in FIELDS}
+
+
+def _pad_state(state):
+    return jnp.stack([jnp.pad(state[k], RADIUS, mode="wrap") for k in FIELDS])
+
+
+def _stack(state):
+    return jnp.stack([state[k] for k in FIELDS])
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("caching", ["hwc", "swc"])
+    @pytest.mark.parametrize("substep", [0, 1, 2])
+    def test_substep_matches_oracle(self, caching, substep):
+        shape = (16, 16, 16)
+        par = MhdParams(dx=2 * np.pi / 16)
+        state = _random_state(shape)
+        w = {k: jnp.asarray(1e-3 * RNG.standard_normal(shape)) for k in FIELDS}
+        dt = 1e-4
+        f1, w1 = ref.mhd_substep_periodic(state, w, dt, substep, par)
+        fn = mhd.make_mhd_substep(shape, substep, "f64", caching, tile_z=8, par=par)
+        fo, wo = fn(_pad_state(state), _stack(w), jnp.asarray([dt]))
+        for i, k in enumerate(FIELDS):
+            np.testing.assert_allclose(np.asarray(fo[i]), np.asarray(f1[k]), rtol=1e-12, atol=1e-14)
+            np.testing.assert_allclose(np.asarray(wo[i]), np.asarray(w1[k]), rtol=1e-12, atol=1e-14)
+
+    @pytest.mark.parametrize("tile_z", [2, 4, 16])
+    def test_tile_invariance(self, tile_z):
+        shape = (8, 8, 16)
+        par = MhdParams(dx=0.3)
+        state = _random_state(shape)
+        w = {k: jnp.zeros(shape, dtype=jnp.float64) for k in FIELDS}
+        f1, w1 = ref.mhd_substep_periodic(state, w, 1e-4, 0, par)
+        fn = mhd.make_mhd_substep(shape, 0, "f64", "swc", tile_z=tile_z, par=par)
+        fo, wo = fn(_pad_state(state), _stack(w), jnp.asarray([1e-4]))
+        for i, k in enumerate(FIELDS):
+            np.testing.assert_allclose(np.asarray(fo[i]), np.asarray(f1[k]), rtol=1e-12, atol=1e-14)
+
+    def test_f32_variant(self):
+        shape = (8, 8, 8)
+        par = MhdParams(dx=0.5)
+        state = _random_state(shape)
+        w = {k: jnp.zeros(shape, dtype=jnp.float64) for k in FIELDS}
+        f64, _ = ref.mhd_substep_periodic(state, w, 1e-4, 2, par)
+        fn = mhd.make_mhd_substep(shape, 2, "f32", "hwc", tile_z=4, par=par)
+        fpad32 = _pad_state(state).astype(jnp.float32)
+        w32 = _stack(w).astype(jnp.float32)
+        fo, _ = fn(fpad32, w32, jnp.asarray([1e-4], dtype=jnp.float32))
+        # paper Table B2 MHD library tolerance: 100 eps relative
+        eps = np.finfo(np.float32).eps
+        for i, k in enumerate(FIELDS):
+            a, b = np.asarray(fo[i], dtype=np.float64), np.asarray(f64[k])
+            assert np.all(np.abs(a - b) <= 100 * eps + 100 * eps * np.abs(b)), k
+
+
+class TestPhysics:
+    def test_uniform_state_at_rest_is_steady(self):
+        """u = A = 0, uniform lnrho/ss: every RHS term must vanish."""
+        shape = (12, 12, 12)
+        par = MhdParams(dx=0.4)
+        state = {k: jnp.zeros(shape, dtype=jnp.float64) for k in FIELDS}
+        state["lnrho"] = jnp.full(shape, 0.3, dtype=jnp.float64)
+        state["ss"] = jnp.full(shape, -0.2, dtype=jnp.float64)
+        rhs = ref.mhd_rhs_periodic(state, par)
+        for k in FIELDS:
+            np.testing.assert_allclose(np.asarray(rhs[k]), 0.0, atol=1e-12)
+
+    def test_mass_conservation_rate(self):
+        """d/dt integral(rho) = -integral(rho div u) + advection surface
+        terms = integral form of (A1); on a periodic box the discrete rates
+        must agree to high order."""
+        shape = (16, 16, 16)
+        par = MhdParams(dx=2 * np.pi / 16)
+        state = _random_state(shape, amp=5e-2)
+        rhs = ref.mhd_rhs_periodic(state, par)
+        rho = np.exp(np.asarray(state["lnrho"]))
+        drho_dt = rho * np.asarray(rhs["lnrho"])  # d rho/dt = rho d lnrho/dt
+        # mass change rate must equal -div(rho u) integrated = 0 on periodic box
+        assert abs(drho_dt.mean()) < 5e-4 * np.abs(drho_dt).max()
+
+    def test_induction_pure_diffusion(self):
+        """With u = 0: dA/dt = eta lap A exactly."""
+        shape = (16, 16, 16)
+        par = MhdParams(dx=0.37, eta=1e-2)
+        state = {k: jnp.zeros(shape, dtype=jnp.float64) for k in FIELDS}
+        ax = 1e-2 * RNG.standard_normal(shape)
+        state["ax"] = jnp.asarray(ax)
+        rhs = ref.mhd_rhs_periodic(state, par)
+        ops = RollOps(par.dx, RADIUS)
+        want = par.eta * sum(np.asarray(ops.d2(state["ax"], i)) for i in range(3))
+        np.testing.assert_allclose(np.asarray(rhs["ax"]), want, rtol=1e-12, atol=1e-15)
+        np.testing.assert_allclose(np.asarray(rhs["ay"]), 0.0, atol=1e-15)
+
+    def test_rk3_convergence_order(self):
+        """Halving dt must cut the full-step error by ~2^3 (3rd-order RK)."""
+        shape = (12, 12, 12)
+        par = MhdParams(dx=2 * np.pi / 12)
+        state = _random_state(shape, amp=2e-2)
+
+        def advance(dt, steps):
+            f = state
+            for _ in range(steps):
+                f = ref.mhd_step_periodic(f, dt, par)
+            return f
+
+        tiny = advance(2.5e-4, 8)  # reference
+        e1 = advance(2e-3, 1)
+        e2 = advance(1e-3, 2)
+        err1 = max(np.abs(np.asarray(e1[k] - tiny[k])).max() for k in FIELDS)
+        err2 = max(np.abs(np.asarray(e2[k] - tiny[k])).max() for k in FIELDS)
+        order = np.log2(err1 / err2)
+        assert order > 2.4, f"observed order {order:.2f}"
+
+    def test_rk3_coefficients(self):
+        """The 2N coefficients must satisfy the 3rd-order conditions for the
+        Williamson scheme (b = effective weights reconstructed from alpha,
+        beta)."""
+        a, b = RK3_ALPHA, RK3_BETA
+        # effective quadrature weights for dt * RHS_l contributions
+        w3 = b[2]
+        w2 = b[1] + b[2] * a[2]
+        w1 = b[0] + b[1] * a[1] + b[2] * a[2] * a[1]
+        np.testing.assert_allclose(w1 + w2 + w3, 1.0, rtol=1e-12)
+
+    def test_stencil_op_count_consistency(self):
+        counts = stencil_op_count()
+        assert counts == {"d1": 24, "d2": 24, "d1d1": 12}
+        wc = mhd.mhd_workload_characteristics()
+        assert wc["fields"] == 8 and wc["radius"] == 3
+        assert wc["stencil_macs_per_point"] == 24 * 6 + 24 * 7 + 12 * 2 * 6
+
+
+class TestHypothesisSweep:
+    @given(
+        nz=st.sampled_from([8, 16]),
+        substep=st.integers(0, 2),
+        caching=st.sampled_from(["hwc", "swc"]),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_random_states(self, nz, substep, caching, seed):
+        rng = np.random.default_rng(seed)
+        shape = (8, 8, nz)
+        par = MhdParams(dx=0.7)
+        state = {k: jnp.asarray(1e-2 * rng.standard_normal(shape)) for k in FIELDS}
+        w = {k: jnp.asarray(1e-3 * rng.standard_normal(shape)) for k in FIELDS}
+        dt = 5e-5
+        f1, w1 = ref.mhd_substep_periodic(state, w, dt, substep, par)
+        fn = mhd.make_mhd_substep(shape, substep, "f64", caching, tile_z=4, par=par)
+        fpad = jnp.stack([jnp.pad(state[k], RADIUS, mode="wrap") for k in FIELDS])
+        fo, wo = fn(fpad, jnp.stack([w[k] for k in FIELDS]), jnp.asarray([dt]))
+        for i, k in enumerate(FIELDS):
+            np.testing.assert_allclose(np.asarray(fo[i]), np.asarray(f1[k]), rtol=1e-11, atol=1e-13)

@@ -1,0 +1,109 @@
+"""L2 model assembly tests: library-conv analogs vs oracles, and the
+RollOps derivative operators' analytic properties (the foundation under
+both the oracle and — transitively — the fused kernel)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import conv1d, ref
+from compile.mhd_eqs import RollOps
+
+RNG = np.random.default_rng(42)
+
+
+class TestLibraryPaths:
+    @pytest.mark.parametrize("radius", [1, 2, 4, 16])
+    def test_xcorr1d_library_matches_oracle(self, radius):
+        n = 4096
+        fpad = jnp.asarray(RNG.standard_normal(n + 2 * radius), dtype=jnp.float32)
+        g = jnp.asarray(RNG.standard_normal(2 * radius + 1), dtype=jnp.float32)
+        got = np.asarray(model.make_xcorr1d_library(n, radius, "f32")(fpad, g))
+        want = np.asarray(ref.xcorr1d(fpad, g))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_xcorr1d_library_matches_pallas_path(self):
+        """The cuDNN-analog and the handcrafted-analog must agree (the paper
+        verifies both against the same model solution)."""
+        n, r = 8192, 4
+        fpad = jnp.asarray(RNG.standard_normal(n + 2 * r), dtype=jnp.float32)
+        g = jnp.asarray(RNG.standard_normal(2 * r + 1), dtype=jnp.float32)
+        lib = np.asarray(model.make_xcorr1d_library(n, r, "f32")(fpad, g))
+        hand = np.asarray(conv1d.make_xcorr1d(n, r, "f32", "swc", "pointwise")(fpad, g))
+        np.testing.assert_allclose(lib, hand, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dim", [1, 2, 3])
+    def test_diffusion_library_matches_oracle(self, dim):
+        shape = {1: (512,), 2: (48, 48), 3: (16, 16, 16)}[dim]
+        r, s = 2, 0.04
+        pad = tuple(n + 2 * r for n in shape)
+        fpad = jnp.asarray(RNG.standard_normal(pad), dtype=jnp.float32)
+        fn = model.make_diffusion_library(shape, r, "f32")
+        got = np.asarray(fn(fpad, jnp.asarray([s], dtype=jnp.float32)))
+        want = np.asarray(ref.diffusion_step_padded(fpad, s, r))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_oracle_exports_match_ref(self):
+        """make_diffusion_oracle / make_mhd_substep_oracle wrap ref.*."""
+        shape, r = (12, 12, 12), 2
+        pad = tuple(n + 2 * r for n in shape)
+        fpad = jnp.asarray(RNG.standard_normal(pad))
+        s = jnp.asarray([0.03])
+        got = np.asarray(model.make_diffusion_oracle(shape, r)(fpad, s))
+        want = np.asarray(ref.diffusion_step_padded(fpad, 0.03, r))
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+class TestRollOps:
+    """Analytic properties of the derivative operators under the oracle."""
+
+    def _sine(self, n, axis, dims=3):
+        dx = 2 * np.pi / n
+        shape = (n,) * dims
+        idx = np.indices(shape)[axis]
+        return jnp.asarray(np.sin(idx * dx)), dx
+
+    @pytest.mark.parametrize("axis", [0, 1, 2])
+    def test_d1_sine(self, axis):
+        f, dx = self._sine(32, axis)
+        ops = RollOps(dx, 3)
+        got = np.asarray(ops.d1(f, axis))
+        idx = np.indices(f.shape)[axis]
+        np.testing.assert_allclose(got, np.cos(idx * dx), atol=1e-5)
+
+    def test_d2_is_d1_of_d1_on_periodic_fields(self):
+        """6th-order d2 and composed d1(d1) differ only by truncation order."""
+        n = 64
+        f, dx = self._sine(n, 0)
+        ops = RollOps(dx, 3)
+        a = np.asarray(ops.d2(f, 0))
+        b = np.asarray(ops.d1d1(f, 0, 0))
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_mixed_derivative_commutes(self):
+        f = jnp.asarray(RNG.standard_normal((16, 16, 16)))
+        ops = RollOps(0.37, 3)
+        a = np.asarray(ops.d1d1(f, 0, 2))
+        b = np.asarray(ops.d1d1(f, 2, 0))
+        np.testing.assert_allclose(a, b, rtol=1e-10, atol=1e-10)
+
+    @given(axis=st.integers(0, 2), seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_derivatives_annihilate_constants(self, axis, seed):
+        rng = np.random.default_rng(seed)
+        c = float(rng.standard_normal())
+        f = jnp.full((8, 8, 8), c)
+        ops = RollOps(0.5, 3)
+        assert np.abs(np.asarray(ops.d1(f, axis))).max() < 1e-12
+        assert np.abs(np.asarray(ops.d2(f, axis))).max() < 1e-11
+
+    def test_d1_is_linear(self):
+        f = jnp.asarray(RNG.standard_normal((12, 12, 12)))
+        g = jnp.asarray(RNG.standard_normal((12, 12, 12)))
+        ops = RollOps(0.25, 2)
+        lhs = np.asarray(ops.d1(2.0 * f - 3.0 * g, 1))
+        rhs = 2.0 * np.asarray(ops.d1(f, 1)) - 3.0 * np.asarray(ops.d1(g, 1))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-12, atol=1e-12)

@@ -1,0 +1,22 @@
+//! Shared bench scaffolding (criterion is unavailable offline; the
+//! in-crate harness implements the paper's §5.1 methodology: warm-up, then
+//! median of the timed iterations).
+
+use stencilax::runtime::{Executor, Manifest};
+use stencilax::util::bench::Bencher;
+
+/// Executor over the default artifacts dir, or None (benches then print a
+/// skip notice instead of failing — artifacts are a build product).
+pub fn executor() -> Option<Executor> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Executor::new(Manifest::load(dir).ok()?).ok()?)
+}
+
+/// The measurement harness used by every bench binary.
+pub fn bencher() -> Bencher {
+    Bencher { warmup: 2, min_iters: 5, max_iters: 30, budget: std::time::Duration::from_secs(3) }
+}

@@ -1,0 +1,48 @@
+//! Bench: paper Fig. 6 — effective bandwidth of the r=0 copy kernel,
+//! measured through PJRT on this host for every copy artifact, plus the
+//! model's GPU predictions for the same sweep.
+
+mod common;
+
+use stencilax::coordinator::timing::random_inputs;
+use stencilax::model::specs::{spec, ALL_GPUS};
+use stencilax::sim::predict::predict;
+use stencilax::sim::workloads;
+
+fn main() {
+    println!("=== fig06_bandwidth ===");
+    // measured side
+    if let Some(ex) = common::executor() {
+        let b = common::bencher();
+        let mut names: Vec<String> =
+            ex.manifest.for_figure("fig6").iter().map(|e| e.name.clone()).collect();
+        names.sort();
+        for name in names {
+            let entry = ex.manifest.get(&name).unwrap().clone();
+            let inputs = random_inputs(&ex, &name, 1, 0.0).unwrap();
+            ex.executable(&name).unwrap();
+            let stats = b.run(|| {
+                let _ = ex.run(&name, &inputs).unwrap();
+            });
+            let bytes = 2 * entry.inputs[0].byte_count();
+            println!(
+                "measured {name:<24} {:>10.2} GiB/s (median {:.3} ms)",
+                bytes as f64 / stats.median_s / (1u64 << 30) as f64,
+                stats.median_s * 1e3
+            );
+        }
+    }
+    // model side
+    for gpu in ALL_GPUS {
+        let dev = spec(gpu);
+        for mib in [1.0f64, 16.0, 64.0, 128.0] {
+            let prof = workloads::copy(mib * 1024.0 * 1024.0, true);
+            let p = predict(dev, &prof);
+            println!(
+                "model    {:<16} {mib:>6.0} MiB {:>10.1} GiB/s",
+                dev.name,
+                prof.hbm_bytes / p.total / (1u64 << 30) as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench: paper Figs. 8-9 — the handcrafted 1-D cross-correlation variant
+//! matrix, measured through PJRT for every xcorr artifact.
+
+mod common;
+
+use stencilax::coordinator::timing::random_inputs;
+
+fn main() {
+    println!("=== fig08_xcorr ===");
+    let Some(ex) = common::executor() else { return };
+    let b = common::bencher();
+    let mut names: Vec<String> =
+        ex.manifest.for_figure("fig8").iter().map(|e| e.name.clone()).collect();
+    names.sort();
+    for name in names {
+        let entry = ex.manifest.get(&name).unwrap().clone();
+        let inputs = random_inputs(&ex, &name, 2, 0.0).unwrap();
+        ex.executable(&name).unwrap();
+        let stats = b.run(|| {
+            let _ = ex.run(&name, &inputs).unwrap();
+        });
+        let elems = entry.outputs[0].element_count() as f64;
+        println!(
+            "measured {name:<40} median {:>9.3} ms  {:>8.1} Melem/s",
+            stats.median_s * 1e3,
+            elems / stats.median_s / 1e6
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench: paper fig13 artifacts measured through PJRT (see the harness
+//! module for the model-driven GPU regeneration of the same figure).
+
+mod common;
+
+use stencilax::coordinator::timing::random_inputs;
+
+fn main() {
+    println!("=== fig13_mhd ===");
+    let Some(ex) = common::executor() else { return };
+    let b = common::bencher();
+    let mut names: Vec<String> =
+        ex.manifest.for_figure("fig13").iter().map(|e| e.name.clone()).collect();
+    names.sort();
+    for name in names {
+        let entry = ex.manifest.get(&name).unwrap().clone();
+        let inputs = random_inputs(&ex, &name, 3, 1e-3).unwrap();
+        ex.executable(&name).unwrap();
+        let stats = b.run(|| {
+            let _ = ex.run(&name, &inputs).unwrap();
+        });
+        let elems = entry.outputs[0].element_count() as f64;
+        println!(
+            "measured {name:<40} median {:>9.3} ms  {:>8.1} Melem/s",
+            stats.median_s * 1e3,
+            elems / stats.median_s / 1e6
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: the GPU performance model itself (prediction and autotuning must
+//! be cheap enough to sweep thousands of cases in the figure harness).
+
+use stencilax::config::Config;
+use stencilax::coordinator::autotune::autotune;
+use stencilax::harness;
+use stencilax::model::specs::A100;
+use stencilax::sim::kernel::{Caching, Unroll};
+use stencilax::sim::predict::predict;
+use stencilax::sim::workloads;
+use stencilax::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("=== simulator ===");
+    let b = Bencher { warmup: 3, min_iters: 10, max_iters: 100, budget: std::time::Duration::from_secs(2) };
+
+    b.report("predict(xcorr1d r=1024)", || {
+        let prof = workloads::xcorr1d(
+            1 << 24,
+            1024,
+            true,
+            Caching::Swc,
+            Unroll::Pointwise,
+            workloads::TILE_1D,
+        );
+        black_box(predict(&A100, &prof));
+    });
+
+    b.report("autotune(mhd 128^3)", || {
+        black_box(autotune(&A100, 3, |tile| {
+            Some(workloads::mhd(&A100, &[128, 128, 128], true, Caching::Hwc, tile, 0))
+        }));
+    });
+
+    let cfg = Config::default();
+    b.report("harness fig8 (full figure)", || {
+        black_box(harness::run_figure(&cfg, "fig8").unwrap());
+    });
+    b.report("harness fig13 (autotuned figure)", || {
+        black_box(harness::run_figure(&cfg, "fig13").unwrap());
+    });
+    b.report("harness table3", || {
+        black_box(harness::run_table(&cfg, "table3").unwrap());
+    });
+}

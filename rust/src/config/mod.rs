@@ -1,0 +1,179 @@
+//! Run configuration: JSON config files + environment overrides.
+//!
+//! The launcher reads an optional config file (`--config path.json`, or
+//! `stencilax.json` in the working directory) controlling artifact
+//! locations, output directories, device selection and measurement
+//! parameters. All fields have sensible defaults so the CLI works with no
+//! config at all. (TOML is unavailable offline — DESIGN.md §9 — so the
+//! config format is JSON via the in-crate parser.)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::specs::{Gpu, ALL_GPUS};
+use crate::util::json::Json;
+
+/// Global run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Directory holding `manifest.json` + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Output directory for CSVs and reports.
+    pub output_dir: PathBuf,
+    /// Devices to include in simulator-driven tables/figures.
+    pub devices: Vec<Gpu>,
+    /// Measurement iterations (paper: median of 100).
+    pub bench_iters: usize,
+    /// Warm-up calls before timing (paper: "several").
+    pub bench_warmup: usize,
+    /// Per-benchmark wall-clock budget in seconds (interpret-mode kernels
+    /// on CPU are far slower than the GPUs they stand in for).
+    pub bench_budget_s: f64,
+    /// Apply the documented vendor pitfalls (paper §5) in the simulator.
+    pub enable_pitfalls: bool,
+    /// Conditional-write workaround (paper §5.4) enabled.
+    pub conditional_write_workaround: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: crate::runtime::Manifest::default_dir(),
+            output_dir: PathBuf::from("results"),
+            devices: ALL_GPUS.to_vec(),
+            bench_iters: 100,
+            bench_warmup: 3,
+            bench_budget_s: 5.0,
+            enable_pitfalls: true,
+            conditional_write_workaround: true,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Config> {
+        let v = Json::parse(text).context("parsing config JSON")?;
+        let mut cfg = Config::default();
+        if let Some(s) = v.get("artifacts_dir").and_then(|x| x.as_str()) {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = v.get("output_dir").and_then(|x| x.as_str()) {
+            cfg.output_dir = PathBuf::from(s);
+        }
+        if let Some(arr) = v.get("devices").and_then(|x| x.as_arr()) {
+            let mut devs = Vec::new();
+            for d in arr {
+                let name = d.as_str().context("device names must be strings")?;
+                devs.push(
+                    Gpu::parse(name).with_context(|| format!("unknown device {name:?}"))?,
+                );
+            }
+            cfg.devices = devs;
+        }
+        if let Some(n) = v.get("bench_iters").and_then(|x| x.as_u64()) {
+            cfg.bench_iters = n as usize;
+        }
+        if let Some(n) = v.get("bench_warmup").and_then(|x| x.as_u64()) {
+            cfg.bench_warmup = n as usize;
+        }
+        if let Some(n) = v.get("bench_budget_s").and_then(|x| x.as_f64()) {
+            cfg.bench_budget_s = n;
+        }
+        if let Some(b) = v.get("enable_pitfalls").and_then(|x| x.as_bool()) {
+            cfg.enable_pitfalls = b;
+        }
+        if let Some(b) = v.get("conditional_write_workaround").and_then(|x| x.as_bool()) {
+            cfg.conditional_write_workaround = b;
+        }
+        Ok(cfg)
+    }
+
+    /// Resolve the config for a CLI invocation: `--config` path, else
+    /// `stencilax.json` if present, else defaults; then CLI overrides.
+    pub fn resolve(args: &crate::util::cli::Args) -> Result<Config> {
+        let mut cfg = match args.get("config") {
+            Some(path) => Config::from_file(path)?,
+            None if Path::new("stencilax.json").exists() => {
+                Config::from_file("stencilax.json")?
+            }
+            None => Config::default(),
+        };
+        if let Some(dir) = args.get("artifacts") {
+            cfg.artifacts_dir = PathBuf::from(dir);
+        }
+        if let Some(dir) = args.get("out") {
+            cfg.output_dir = PathBuf::from(dir);
+        }
+        if let Some(devs) = args.get("devices") {
+            cfg.devices = devs
+                .split(',')
+                .map(|d| Gpu::parse(d).with_context(|| format!("unknown device {d:?}")))
+                .collect::<Result<_>>()?;
+        }
+        if args.has_flag("no-pitfalls") {
+            cfg.enable_pitfalls = false;
+        }
+        Ok(cfg)
+    }
+
+    /// The measurement harness configured per this config.
+    pub fn bencher(&self) -> crate::util::bench::Bencher {
+        crate::util::bench::Bencher {
+            warmup: self.bench_warmup,
+            min_iters: 5,
+            max_iters: self.bench_iters,
+            budget: std::time::Duration::from_secs_f64(self.bench_budget_s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.devices.len(), 4);
+        assert_eq!(c.bench_iters, 100);
+        assert!(c.enable_pitfalls);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = Config::from_json_text(
+            r#"{"devices": ["a100", "mi250x"], "bench_iters": 10,
+                "output_dir": "/tmp/out", "enable_pitfalls": false}"#,
+        )
+        .unwrap();
+        assert_eq!(c.devices, vec![Gpu::A100, Gpu::Mi250x]);
+        assert_eq!(c.bench_iters, 10);
+        assert_eq!(c.output_dir, PathBuf::from("/tmp/out"));
+        assert!(!c.enable_pitfalls);
+    }
+
+    #[test]
+    fn rejects_unknown_device() {
+        assert!(Config::from_json_text(r#"{"devices": ["h100"]}"#).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_config() {
+        let args = crate::util::cli::Args::parse(
+            ["x", "--devices", "v100", "--no-pitfalls"].iter().map(|s| s.to_string()),
+            &["no-pitfalls"],
+        )
+        .unwrap();
+        let c = Config::resolve(&args).unwrap();
+        assert_eq!(c.devices, vec![Gpu::V100]);
+        assert!(!c.enable_pitfalls);
+    }
+}

@@ -1,0 +1,138 @@
+//! Automated decomposition tuning — the paper's §5.1 heuristic search.
+//!
+//! "Automated tuning was performed ... via a heuristic search of the valid
+//! combinations for the thread block dimensions (tx, ty, tz). We pruned the
+//! search space by assuming that tx is a multiple of L2 cache line size
+//! divided by the size of double ... and the optimal thread count per block
+//! was a multiple of the device's warp size. Decompositions that resulted
+//! in a failed launch ... were discarded."
+//!
+//! The same pruning rules run here against the performance model (and,
+//! through the harness, against measured PJRT timings where tile shape is
+//! a runtime knob).
+
+use crate::model::specs::GpuSpec;
+use crate::sim::kernel::KernelProfile;
+use crate::sim::predict::predict;
+use crate::sim::workloads::Tile;
+
+/// One evaluated decomposition.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub tile: Tile,
+    pub time_s: f64,
+    pub occupancy: f64,
+}
+
+/// Enumerate valid decompositions per the paper's pruning rules.
+///
+/// * `tx` a multiple of (L2 line / sizeof(double)) = 8, up to 1024;
+/// * total threads a multiple of warp size, within [warp, 1024];
+/// * launch validity: shared memory demand must fit (checked by the caller
+///   through the profile builder returning `None` for invalid tiles).
+pub fn candidate_tiles(spec: &GpuSpec, dims: usize) -> Vec<Tile> {
+    let warp = spec.warp_size();
+    let mut out = Vec::new();
+    let txs = [8u32, 16, 32, 64, 128, 256, 512, 1024];
+    let tys: &[u32] = if dims >= 2 { &[1, 2, 4, 8, 16] } else { &[1] };
+    let tzs: &[u32] = if dims >= 3 { &[1, 2, 4, 8] } else { &[1] };
+    for &tx in &txs {
+        for &ty in tys {
+            for &tz in tzs {
+                let threads = tx * ty * tz;
+                if threads < warp || threads > 1024 {
+                    continue;
+                }
+                if threads % warp != 0 {
+                    continue;
+                }
+                out.push(Tile { tx, ty, tz });
+            }
+        }
+    }
+    out
+}
+
+/// Search the decomposition space against the performance model.
+///
+/// `build` maps a candidate tile to a kernel profile, or `None` when the
+/// tile cannot launch (e.g. SWC shared-memory demand exceeds capacity —
+/// the paper's "failed launch" discard rule). Returns results sorted by
+/// predicted time; `.first()` is the winner.
+pub fn autotune(
+    spec: &GpuSpec,
+    dims: usize,
+    build: impl Fn(Tile) -> Option<KernelProfile>,
+) -> Vec<TuneResult> {
+    let mut results: Vec<TuneResult> = candidate_tiles(spec, dims)
+        .into_iter()
+        .filter_map(|tile| {
+            let prof = build(tile)?;
+            // discard decompositions that over-allocate shared memory
+            if prof.smem_per_block > spec.smem_kib_per_cu * 1024.0 {
+                return None;
+            }
+            let p = predict(spec, &prof);
+            Some(TuneResult { tile, time_s: p.total, occupancy: p.occupancy.fraction })
+        })
+        .collect();
+    results.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs::{A100, MI100};
+    use crate::sim::kernel::Caching;
+    use crate::sim::workloads;
+
+    #[test]
+    fn candidates_obey_pruning_rules() {
+        for spec in [&A100, &MI100] {
+            let tiles = candidate_tiles(spec, 3);
+            assert!(!tiles.is_empty());
+            for t in &tiles {
+                assert_eq!(t.tx % 8, 0, "tx multiple of L2-line/8");
+                assert_eq!(t.threads() % spec.warp_size(), 0);
+                assert!(t.threads() <= 1024);
+            }
+        }
+    }
+
+    #[test]
+    fn warp64_prunes_small_blocks() {
+        let a = candidate_tiles(&A100, 1).len();
+        let m = candidate_tiles(&MI100, 1).len();
+        assert!(m <= a, "64-wide waves admit fewer 1-D tiles");
+    }
+
+    #[test]
+    fn autotune_finds_a_valid_optimum() {
+        let results = autotune(&A100, 3, |tile| {
+            Some(workloads::diffusion(&A100, &[256, 256, 256], 3, true, Caching::Hwc, tile))
+        });
+        assert!(!results.is_empty());
+        let best = &results[0];
+        assert!(best.time_s > 0.0);
+        // best must be no worse than the default Astaroth tile
+        let default = results
+            .iter()
+            .find(|r| r.tile == workloads::TILE_3D)
+            .expect("default tile evaluated");
+        assert!(best.time_s <= default.time_s);
+    }
+
+    #[test]
+    fn oversized_swc_tiles_are_discarded() {
+        // big SWC MHD tiles must be pruned on 64-KiB-LDS devices
+        let results = autotune(&MI100, 3, |tile| {
+            Some(workloads::mhd(&MI100, &[128, 128, 128], true, Caching::Swc, tile, 0))
+        });
+        for r in &results {
+            let smem = workloads::mhd(&MI100, &[128, 128, 128], true, Caching::Swc, r.tile, 0)
+                .smem_per_block;
+            assert!(smem <= 64.0 * 1024.0);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment coordinator (L3): sweeps, autotuning, timing, verification,
+//! and reporting — the machinery that turns artifacts + simulator into the
+//! paper's tables and figures.
+
+pub mod autotune;
+pub mod report;
+pub mod sweep;
+pub mod timing;
+pub mod verify;
+
+pub use autotune::{autotune, TuneResult};
+pub use report::{AsciiPlot, Table};
+pub use sweep::Sweep;
+pub use verify::{verify_slices, Tolerance, VerifyReport};

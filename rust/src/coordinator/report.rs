@@ -1,0 +1,217 @@
+//! Result reporting: aligned ASCII tables, CSV emission, and terminal line
+//! plots for regenerated figures (no plotting libraries offline; the CSV
+//! output is gnuplot/matplotlib-ready for anyone who wants pixels).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table with CSV export.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "# {}", self.title);
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// CSV serialization (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write the CSV next to other results.
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Terminal line plot on log-log or lin-log axes: one row per series.
+#[derive(Debug, Clone)]
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub logx: bool,
+    pub logy: bool,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: &str) -> AsciiPlot {
+        AsciiPlot {
+            title: title.to_string(),
+            width: 72,
+            height: 20,
+            logx: true,
+            logy: true,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) {
+        self.series.push((name.to_string(), points));
+    }
+
+    pub fn render(&self) -> String {
+        const MARKS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+        let tx = |v: f64| if self.logx { v.max(1e-300).log10() } else { v };
+        let ty = |v: f64| if self.logy { v.max(1e-300).log10() } else { v };
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, pts)| pts.iter().map(|&(x, y)| (tx(x), ty(y))))
+            .collect();
+        if all.is_empty() {
+            return format!("# {} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if x1 - x0 < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if y1 - y0 < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            let m = MARKS[si % MARKS.len()];
+            for &(x, y) in pts {
+                let gx = ((tx(x) - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let gy = ((ty(y) - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                let gy = self.height - 1 - gy;
+                grid[gy][gx.min(self.width - 1)] = m;
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        let yl = |v: f64| if self.logy { format!("{:.2e}", 10f64.powf(v)) } else { format!("{v:.3}") };
+        for (i, row) in grid.iter().enumerate() {
+            let label = if i == 0 {
+                yl(y1)
+            } else if i == self.height - 1 {
+                yl(y0)
+            } else {
+                String::new()
+            };
+            let _ = writeln!(out, "{label:>10} |{}", row.iter().collect::<String>());
+        }
+        let xl = |v: f64| if self.logx { format!("{:.1e}", 10f64.powf(v)) } else { format!("{v:.2}") };
+        let _ = writeln!(
+            out,
+            "{:>10}  {}{}{}",
+            "",
+            xl(x0),
+            " ".repeat(self.width.saturating_sub(xl(x0).len() + xl(x1).len())),
+            xl(x1)
+        );
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "{:>12} {}", MARKS[si % MARKS.len()], name);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_and_csv_quotes() {
+        let mut t = Table::new("demo", &["device", "time, ms"]);
+        t.row(vec!["A100".into(), "1.5".into()]);
+        t.row(vec!["MI250X".into(), "2.25".into()]);
+        let s = t.render();
+        assert!(s.contains("A100"));
+        assert!(s.contains("# demo"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("device,\"time, ms\""));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_renders_all_series() {
+        let mut p = AsciiPlot::new("fig");
+        p.series("a100", vec![(1.0, 1.0), (10.0, 0.5)]);
+        p.series("mi250x", vec![(1.0, 2.0), (10.0, 1.0)]);
+        let s = p.render();
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("a100") && s.contains("mi250x"));
+    }
+
+    #[test]
+    fn plot_handles_empty() {
+        let p = AsciiPlot::new("empty");
+        assert!(p.render().contains("no data"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Parameter-sweep runner: evaluates a list of cases (optionally in
+//! parallel for model-only sweeps; PJRT sweeps run serially to keep
+//! timings clean) and collects rows into a report table.
+
+use crate::coordinator::report::Table;
+use crate::util::par::par_map;
+
+/// One sweep case: a label plus a closure producing row cells.
+pub struct Sweep {
+    pub name: String,
+    parallel: bool,
+    cases: Vec<(String, Box<dyn Fn() -> Vec<String> + Sync + Send>)>,
+}
+
+impl Sweep {
+    /// A sweep over pure-model evaluations (parallel).
+    pub fn model(name: &str) -> Sweep {
+        Sweep { name: name.to_string(), parallel: true, cases: Vec::new() }
+    }
+
+    /// A sweep over measured executions (serial, undisturbed timings).
+    pub fn measured(name: &str) -> Sweep {
+        Sweep { name: name.to_string(), parallel: false, cases: Vec::new() }
+    }
+
+    pub fn case(
+        &mut self,
+        label: impl Into<String>,
+        f: impl Fn() -> Vec<String> + Sync + Send + 'static,
+    ) {
+        self.cases.push((label.into(), Box::new(f)));
+    }
+
+    pub fn len(&self) -> usize {
+        self.cases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    /// Run all cases and assemble the table (first column = case label).
+    pub fn run(&self, headers: &[&str]) -> Table {
+        let mut all_headers = vec!["case"];
+        all_headers.extend_from_slice(headers);
+        let mut table = Table::new(&self.name, &all_headers);
+        let rows: Vec<Vec<String>> = if self.parallel {
+            par_map(self.cases.len(), |i| self.cases[i].1())
+        } else {
+            self.cases.iter().map(|(_, f)| f()).collect()
+        };
+        for ((label, _), mut cells) in self.cases.iter().zip(rows) {
+            let mut row = vec![label.clone()];
+            row.append(&mut cells);
+            table.row(row);
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_cases_in_order() {
+        let mut s = Sweep::model("demo");
+        for i in 0..10 {
+            s.case(format!("case{i}"), move || vec![format!("{}", i * i)]);
+        }
+        let t = s.run(&["sq"]);
+        assert_eq!(t.rows.len(), 10);
+        assert_eq!(t.rows[3], vec!["case3".to_string(), "9".to_string()]);
+    }
+
+    #[test]
+    fn measured_sweep_is_serial_but_equivalent() {
+        let mut s = Sweep::measured("serial");
+        s.case("a", || vec!["1".into()]);
+        s.case("b", || vec!["2".into()]);
+        let t = s.run(&["v"]);
+        assert_eq!(t.rows[1][1], "2");
+    }
+}

@@ -1,0 +1,65 @@
+//! Measured timing of AOT artifacts through the PJRT runtime, following
+//! the paper's methodology (§5.1): randomized inputs, warm-up calls, then
+//! the median of the timed iterations. Padding time is excluded — inputs
+//! are prepared (and ghosts filled) before the clock starts.
+
+use anyhow::Result;
+
+use crate::runtime::{Executor, HostValue};
+use crate::util::bench::{Bencher, Stats};
+use crate::util::rng::Rng;
+
+/// Generate a randomized input set for an artifact from its manifest specs
+/// (the paper randomizes input tensors; scalar (1,) inputs get `scalar`).
+pub fn random_inputs(ex: &Executor, name: &str, seed: u64, scalar: f64) -> Result<Vec<HostValue>> {
+    let entry = ex.manifest.get(name)?.clone();
+    let mut rng = Rng::new(seed);
+    Ok(entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            if spec.shape == [1] {
+                HostValue::scalar(scalar, spec.dtype)
+            } else {
+                let data = rng.normal_vec(spec.element_count());
+                HostValue::cast_from_f64(&data, spec)
+            }
+        })
+        .collect())
+}
+
+/// Time one artifact with prepared inputs; returns execute-call statistics.
+pub fn time_artifact(
+    ex: &Executor,
+    name: &str,
+    inputs: &[HostValue],
+    bencher: &Bencher,
+) -> Result<Stats> {
+    // compile outside the timed region (the paper's warm-up also absorbs
+    // library algorithm selection)
+    ex.executable(name)?;
+    let mut err: Option<anyhow::Error> = None;
+    let stats = bencher.run(|| {
+        if err.is_none() {
+            if let Err(e) = ex.run(name, inputs) {
+                err = Some(e);
+            }
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+/// Convenience: random inputs + timing in one call.
+pub fn bench_artifact(ex: &Executor, name: &str, bencher: &Bencher, scalar: f64) -> Result<Stats> {
+    let inputs = random_inputs(ex, name, 0xBEEF ^ name.len() as u64, scalar)?;
+    time_artifact(ex, name, &inputs, bencher)
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end in rust/tests/integration_coordinator.rs (needs
+    // built artifacts); unit coverage for the input generator lives there.
+}

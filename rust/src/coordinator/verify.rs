@@ -1,0 +1,161 @@
+//! Result verification with the paper's Table B2 tolerance rules.
+//!
+//! * CUDA/HIP/cuDNN/MIOpen conv benchmarks: *exact* comparison (§5.1).
+//! * Astaroth: relative error < 5 ULP, or absolute error below the machine
+//!   epsilon scaled by the domain minimum.
+//! * Python (numpy.allclose-style): |a - b| <= c + c|b| with c = 5*eps
+//!   (diffusion) or 100*eps (MHD).
+
+/// Tolerance policy for one comparison.
+#[derive(Debug, Clone, Copy)]
+pub enum Tolerance {
+    /// Bit-exact equality.
+    Exact,
+    /// Relative error below `ulps` units in the last place, or absolute
+    /// error below `eps * abs_floor` (the Astaroth rule).
+    Ulp { ulps: f64, abs_floor: f64 },
+    /// numpy.allclose with rtol = atol = `c` (the paper's PyTorch rule).
+    AllClose { c: f64 },
+}
+
+impl Tolerance {
+    /// Paper Table B2 rows.
+    pub fn astaroth(domain_min_abs: f64) -> Tolerance {
+        Tolerance::Ulp { ulps: 5.0, abs_floor: domain_min_abs }
+    }
+    pub fn pytorch_diffusion() -> Tolerance {
+        Tolerance::AllClose { c: 5.0 * f64::EPSILON }
+    }
+    pub fn pytorch_mhd() -> Tolerance {
+        Tolerance::AllClose { c: 100.0 * f64::EPSILON }
+    }
+    /// f32 variants use the f32 machine epsilon.
+    pub fn pytorch_mhd_f32() -> Tolerance {
+        Tolerance::AllClose { c: 100.0 * f32::EPSILON as f64 }
+    }
+}
+
+/// Units-in-the-last-place distance between two finite f64 values.
+pub fn ulp_diff(a: f64, b: f64) -> f64 {
+    if a == b {
+        return 0.0;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return f64::INFINITY;
+    }
+    // relative difference in units of b's ULP
+    let ulp = (b.abs() * f64::EPSILON).max(f64::MIN_POSITIVE);
+    (a - b).abs() / ulp
+}
+
+/// Outcome of a slice comparison.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub passed: bool,
+    pub checked: usize,
+    pub worst_abs: f64,
+    pub worst_rel: f64,
+    pub worst_index: usize,
+    pub failures: usize,
+}
+
+impl std::fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({} checked, {} failures, worst abs {:.3e}, worst rel {:.3e} at [{}])",
+            if self.passed { "PASS" } else { "FAIL" },
+            self.checked,
+            self.failures,
+            self.worst_abs,
+            self.worst_rel,
+            self.worst_index
+        )
+    }
+}
+
+/// Compare `got` against `want` under a tolerance policy.
+pub fn verify_slices(got: &[f64], want: &[f64], tol: Tolerance) -> VerifyReport {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    let mut worst_abs = 0.0f64;
+    let mut worst_rel = 0.0f64;
+    let mut worst_index = 0usize;
+    let mut failures = 0usize;
+    for (i, (&a, &b)) in got.iter().zip(want).enumerate() {
+        let abs = (a - b).abs();
+        let rel = if b != 0.0 { abs / b.abs() } else { abs };
+        if abs > worst_abs {
+            worst_abs = abs;
+            worst_index = i;
+        }
+        worst_rel = worst_rel.max(rel);
+        let ok = match tol {
+            Tolerance::Exact => a == b || (a.is_nan() && b.is_nan()),
+            Tolerance::Ulp { ulps, abs_floor } => {
+                ulp_diff(a, b) <= ulps || abs <= f64::EPSILON * abs_floor
+            }
+            Tolerance::AllClose { c } => abs <= c + c * b.abs(),
+        };
+        if !ok {
+            failures += 1;
+        }
+    }
+    VerifyReport { passed: failures == 0, checked: got.len(), worst_abs, worst_rel, worst_index, failures }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_passes_and_fails() {
+        let r = verify_slices(&[1.0, 2.0], &[1.0, 2.0], Tolerance::Exact);
+        assert!(r.passed);
+        let r = verify_slices(&[1.0, 2.0 + 1e-15], &[1.0, 2.0], Tolerance::Exact);
+        assert!(!r.passed);
+        assert_eq!(r.failures, 1);
+    }
+
+    #[test]
+    fn ulp_tolerance_accepts_roundoff() {
+        let b = 0.1f64;
+        let a = b + 2.0 * b * f64::EPSILON; // 2 ULP off
+        let r = verify_slices(&[a], &[b], Tolerance::astaroth(1.0));
+        assert!(r.passed, "{r}");
+        let far = b * (1.0 + 1e-12);
+        let r = verify_slices(&[far], &[b], Tolerance::astaroth(0.0));
+        assert!(!r.passed);
+    }
+
+    #[test]
+    fn abs_floor_rescues_tiny_values() {
+        // large relative error on a value far below the domain scale
+        let r = verify_slices(&[1e-20], &[3e-20], Tolerance::astaroth(1.0));
+        assert!(r.passed, "{r}");
+    }
+
+    #[test]
+    fn allclose_matches_numpy_semantics() {
+        let c = 5.0 * f64::EPSILON;
+        let b = 100.0f64;
+        let a = b + 4.0 * c * b; // within c + c|b|? 4c*b > c + c*b? 4cb vs c(1+b): no
+        let r = verify_slices(&[a], &[b], Tolerance::AllClose { c });
+        assert!(!r.passed || (a - b).abs() <= c + c * b);
+    }
+
+    #[test]
+    fn ulp_diff_basics() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0.0);
+        let next = f64::from_bits(1.0f64.to_bits() + 1);
+        let d = ulp_diff(next, 1.0);
+        assert!((d - 1.0).abs() < 0.5, "one step = ~1 ULP, got {d}");
+        assert_eq!(ulp_diff(f64::NAN, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn report_locates_worst_element() {
+        let r = verify_slices(&[1.0, 5.0, 1.0], &[1.0, 2.0, 1.0], Tolerance::Exact);
+        assert_eq!(r.worst_index, 1);
+        assert_eq!(r.worst_abs, 3.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Measured counterparts of the figures: every AOT artifact executed and
+//! timed through the PJRT runtime on this host.
+//!
+//! These timings validate that the full three-layer stack *runs* and give
+//! the CPU-testbed numbers recorded in EXPERIMENTS.md. They are explicitly
+//! NOT comparable to the paper's GPU absolute times (interpret-mode Pallas
+//! on a CPU backend); the GPU-shape reproduction lives in [`super::figures`].
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::report::Table;
+use crate::coordinator::timing::bench_artifact;
+use crate::runtime::{Executor, Manifest};
+use crate::util::bench::fmt_time;
+
+use super::Output;
+
+/// Run every artifact tagged with `figure`, timing each; one row per
+/// artifact: median/min time + derived throughput.
+pub fn measure_figure(cfg: &Config, figure: &str) -> Result<Output> {
+    let ex = Executor::new(Manifest::load(&cfg.artifacts_dir)?)?;
+    let bencher = cfg.bencher();
+    let entries: Vec<_> =
+        ex.manifest.for_figure(figure).into_iter().cloned().collect();
+    anyhow::ensure!(!entries.is_empty(), "no artifacts tagged {figure:?}");
+    let mut t = Table::new(
+        &format!("Measured (CPU PJRT) — artifacts for {figure}"),
+        &["artifact", "median", "min", "iters", "Melem/s"],
+    );
+    for entry in entries {
+        let stats = bench_artifact(&ex, &entry.name, &bencher, 1e-3)?;
+        let elems: f64 = entry.outputs[0].element_count() as f64;
+        t.row(vec![
+            entry.name.clone(),
+            fmt_time(stats.median_s),
+            fmt_time(stats.min_s),
+            stats.iters.to_string(),
+            format!("{:.1}", elems / stats.median_s / 1e6),
+        ]);
+    }
+    Ok(Output { tables: vec![t], plots: vec![] })
+}
+
+/// Measured effective bandwidth from the copy artifacts (Fig. 6 analog on
+/// this host).
+pub fn measured_bandwidth(cfg: &Config) -> Result<Output> {
+    let ex = Executor::new(Manifest::load(&cfg.artifacts_dir)?)?;
+    let bencher = cfg.bencher();
+    let mut t = Table::new(
+        "Measured (CPU PJRT) — effective bandwidth from copy artifacts",
+        &["artifact", "bytes", "median", "GiB/s"],
+    );
+    let entries: Vec<_> = ex.manifest.for_figure("fig6").into_iter().cloned().collect();
+    for entry in entries {
+        let bytes = 2 * entry.inputs[0].byte_count(); // read + write
+        let stats = bench_artifact(&ex, &entry.name, &bencher, 0.0)?;
+        t.row(vec![
+            entry.name.clone(),
+            bytes.to_string(),
+            fmt_time(stats.median_s),
+            format!("{:.2}", bytes as f64 / stats.median_s / (1u64 << 30) as f64),
+        ]);
+    }
+    Ok(Output { tables: vec![t], plots: vec![] })
+}

@@ -1,0 +1,126 @@
+//! Per-figure/table regeneration harness (DESIGN.md §6).
+//!
+//! Every table and figure of the paper's evaluation has a generator here:
+//! model-driven versions from the GPU simulator ([`figures`], [`tables`]),
+//! measured versions through the PJRT runtime on this host ([`measured`]),
+//! and the paper-vs-model claim checker ([`paper`]) whose output lands in
+//! EXPERIMENTS.md.
+
+pub mod figures;
+pub mod measured;
+pub mod paper;
+pub mod tables;
+pub mod whatif;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::report::Table;
+
+/// A regenerated experiment: tables plus optional terminal plots.
+#[derive(Debug, Default)]
+pub struct Output {
+    pub tables: Vec<Table>,
+    pub plots: Vec<crate::coordinator::report::AsciiPlot>,
+}
+
+impl Output {
+    pub fn print(&self) {
+        for t in &self.tables {
+            println!("{}", t.render());
+        }
+        for p in &self.plots {
+            println!("{}", p.render());
+        }
+    }
+
+    /// Save each table as CSV under `dir/<slug>.csv`.
+    pub fn save(&self, dir: &std::path::Path) -> Result<()> {
+        for t in &self.tables {
+            let slug: String = t
+                .title
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+                .collect();
+            t.save_csv(dir.join(format!("{slug}.csv")))?;
+        }
+        Ok(())
+    }
+}
+
+/// All known figure ids.
+pub const FIGURE_IDS: [&str; 10] =
+    ["fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "figc1"];
+/// All known table ids.
+pub const TABLE_IDS: [&str; 4] = ["table1", "table2", "table3", "tablec3"];
+
+/// Regenerate a figure by id (model-driven).
+pub fn run_figure(cfg: &Config, id: &str) -> Result<Output> {
+    Ok(match id {
+        "fig6" => figures::fig6(cfg),
+        "fig7" => figures::fig7(cfg),
+        "fig8" => figures::fig8(cfg),
+        "fig9" => figures::fig9(cfg),
+        "fig10" => figures::fig10(cfg),
+        "fig11" => figures::fig11(cfg),
+        "fig12" => figures::fig12(cfg),
+        "fig13" => figures::fig13(cfg),
+        "fig14" => figures::fig14(cfg),
+        "figc1" => figures::figc1(cfg),
+        other => bail!("unknown figure {other:?} (known: {FIGURE_IDS:?})"),
+    })
+}
+
+/// Regenerate a table by id (model-driven).
+pub fn run_table(cfg: &Config, id: &str) -> Result<Output> {
+    Ok(match id {
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "table3" => tables::table3(cfg),
+        "tablec3" => tables::tablec3(cfg),
+        other => bail!("unknown table {other:?} (known: {TABLE_IDS:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_id_runs() {
+        let cfg = Config::default();
+        for id in FIGURE_IDS {
+            let out = run_figure(&cfg, id).unwrap();
+            assert!(!out.tables.is_empty(), "{id} produced no tables");
+            for t in &out.tables {
+                assert!(!t.rows.is_empty(), "{id}/{} empty", t.title);
+            }
+        }
+    }
+
+    #[test]
+    fn every_table_id_runs() {
+        let cfg = Config::default();
+        for id in TABLE_IDS {
+            let out = run_table(&cfg, id).unwrap();
+            assert!(!out.tables.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_ids_error() {
+        let cfg = Config::default();
+        assert!(run_figure(&cfg, "fig99").is_err());
+        assert!(run_table(&cfg, "tableZ").is_err());
+    }
+
+    #[test]
+    fn outputs_save_csv() {
+        let cfg = Config::default();
+        let out = run_figure(&cfg, "fig6").unwrap();
+        let dir = std::env::temp_dir().join("stencilax_test_out");
+        out.save(&dir).unwrap();
+        assert!(std::fs::read_dir(&dir).unwrap().count() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,246 @@
+//! Paper-vs-model claim checker: every quantitative headline claim in the
+//! paper's evaluation, recomputed from the simulator and compared. The
+//! rendered table is pasted into EXPERIMENTS.md; integration tests assert
+//! the claims hold.
+
+use crate::config::Config;
+use crate::coordinator::report::Table;
+use crate::model::specs::{spec, Gpu, GpuSpec, ALL_GPUS, MIB};
+use crate::sim::kernel::Caching;
+use crate::sim::library::{mhd_library_time, xcorr1d_library_time, Library};
+use crate::sim::predict::{ideal_time, predict};
+use crate::sim::workloads;
+
+use super::figures::{best_xcorr, mhd_best_tuned, xcorr_n, MHD_SHAPE, XCORR_RADII};
+use super::Output;
+
+/// One checked claim.
+#[derive(Debug, Clone)]
+pub struct Claim {
+    pub id: String,
+    pub description: String,
+    pub paper: f64,
+    pub model: f64,
+    /// Acceptable model/paper ratio band.
+    pub band: (f64, f64),
+}
+
+impl Claim {
+    pub fn passed(&self) -> bool {
+        let ratio = self.model / self.paper;
+        ratio >= self.band.0 && ratio <= self.band.1
+    }
+}
+
+fn devs() -> Vec<&'static GpuSpec> {
+    ALL_GPUS.iter().map(|&g| spec(g)).collect()
+}
+
+/// Recompute every headline claim.
+pub fn claims(cfg: &Config) -> Vec<Claim> {
+    let mut out = Vec::new();
+    let mut claim = |id: &str, desc: &str, paper: f64, model: f64, lo: f64, hi: f64| {
+        out.push(Claim {
+            id: id.to_string(),
+            description: desc.to_string(),
+            paper,
+            model,
+            band: (lo, hi),
+        });
+    };
+
+    // ---- §5.2 Fig 6: bandwidth plateaus (FP64, % of peak) -----------------
+    for (dev, pct) in devs().iter().zip([90.0, 90.0, 84.0, 85.0]) {
+        let prof = workloads::copy(128.0 * MIB, true);
+        let eff = prof.hbm_bytes / predict(dev, &prof).total / dev.mem_bw_bytes() * 100.0;
+        claim(
+            &format!("fig6/{}", dev.name),
+            &format!("{} FP64 effective BW plateau (% of peak)", dev.name),
+            pct,
+            eff,
+            0.93,
+            1.07,
+        );
+    }
+
+    // ---- §5.2 Fig 7: A100-over-MI250X library speedup, median 2.8 ---------
+    {
+        let mut ratios: Vec<f64> = XCORR_RADII
+            .iter()
+            .map(|&r| {
+                let a = xcorr1d_library_time(spec(Gpu::A100), xcorr_n(false), r, false, Library::VendorDnn);
+                let m = xcorr1d_library_time(spec(Gpu::Mi250x), xcorr_n(false), r, false, Library::VendorDnn);
+                m / a
+            })
+            .collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        claim(
+            "fig7/median-speedup",
+            "median A100-over-MI250X speedup, library 1-D conv",
+            2.8,
+            ratios[ratios.len() / 2],
+            0.7,
+            1.3,
+        );
+    }
+
+    // ---- §5.2 Fig 8: HWC-over-SWC slowdown at r=1024 (FP64) ---------------
+    for (dev, ratio) in devs().iter().zip([1.03, 1.13, 1.88, 1.72]) {
+        let (hw, _) = best_xcorr(cfg, dev, 1024, true, Caching::Hwc);
+        let (sw, _) = best_xcorr(cfg, dev, 1024, true, Caching::Swc);
+        claim(
+            &format!("fig8/hw-sw-r1024/{}", dev.name),
+            &format!("{} best-HWC / best-SWC at r=1024 FP64", dev.name),
+            ratio,
+            hw / sw,
+            0.75,
+            1.35,
+        );
+    }
+
+    // ---- §5.2 Fig 8: A100-over-MI250X handcrafted HWC FP64 median 1.5 -----
+    {
+        let mut ratios: Vec<f64> = XCORR_RADII
+            .iter()
+            .map(|&r| {
+                let (a, _) = best_xcorr(cfg, spec(Gpu::A100), r, true, Caching::Hwc);
+                let (m, _) = best_xcorr(cfg, spec(Gpu::Mi250x), r, true, Caching::Hwc);
+                m / a
+            })
+            .collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        claim(
+            "fig8/hwc-median",
+            "median A100-over-MI250X speedup, handcrafted HWC FP64",
+            1.5,
+            ratios[ratios.len() / 2],
+            0.6,
+            1.5,
+        );
+    }
+
+    // ---- §5.2 Fig 9: tuning speedup over hw-baseline (FP64) ---------------
+    for (dev, sp) in devs().iter().zip([1.6, 1.8, 3.9, 3.9]) {
+        let base = {
+            let prof = workloads::xcorr1d(
+                xcorr_n(true),
+                1024,
+                true,
+                Caching::Hwc,
+                crate::sim::kernel::Unroll::Baseline,
+                workloads::TILE_1D,
+            );
+            predict(dev, &prof).total
+        };
+        let best = {
+            let (hw, _) = best_xcorr(cfg, dev, 1024, true, Caching::Hwc);
+            let (sw, _) = best_xcorr(cfg, dev, 1024, true, Caching::Swc);
+            hw.min(sw)
+        };
+        claim(
+            &format!("fig9/tuning-speedup-fp64/{}", dev.name),
+            &format!("{} best-tuned speedup over hw-baseline, r=1024 FP64", dev.name),
+            sp,
+            base / best,
+            0.5,
+            1.6,
+        );
+    }
+
+    // ---- §5.4: MHD fraction of ideal performance ---------------------------
+    for (dev, pct) in devs().iter().zip([19.6, 17.9, 10.5, 10.1]) {
+        let t = mhd_best_tuned(dev, true, Caching::Hwc);
+        let elems: f64 = MHD_SHAPE.iter().map(|&v| v as f64).product();
+        let ideal = ideal_time(dev, 2.0 * 8.0 * elems * 8.0); // 8 fields r+w once
+        claim(
+            &format!("mhd/ideal-frac/{}", dev.name),
+            &format!("{} MHD achieved % of ideal (FP64)", dev.name),
+            pct,
+            ideal / t * 100.0,
+            0.5,
+            2.0,
+        );
+    }
+
+    // ---- §5.4: PyTorch MHD substep times (ms) ------------------------------
+    for (gpu, ms_paper) in [(Gpu::A100, 41.9), (Gpu::V100, 53.4), (Gpu::Mi250x, 97.0)] {
+        let t = mhd_library_time(spec(gpu), &MHD_SHAPE, false) * 1e3;
+        claim(
+            &format!("mhd/pytorch/{}", spec(gpu).name),
+            &format!("{} PyTorch MHD substep (ms, FP32)", spec(gpu).name),
+            ms_paper,
+            t,
+            0.6,
+            1.6,
+        );
+    }
+
+    // ---- Fig 13: HWC-over-SWC MHD advantage --------------------------------
+    {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for dev in devs() {
+            for fp64 in [false, true] {
+                let hw = mhd_best_tuned(dev, fp64, Caching::Hwc);
+                let sw = mhd_best_tuned(dev, fp64, Caching::Swc);
+                lo = lo.min(sw / hw);
+                hi = hi.max(sw / hw);
+            }
+        }
+        // paper: 1.8-2.9x (FP32) and 2.4-8.1x (FP64); pooled band 1.8-8.1
+        claim("fig13/hwc-adv-min", "min SWC/HWC MHD slowdown across devices", 1.8, lo, 0.55, 1.7);
+        claim("fig13/hwc-adv-max", "max SWC/HWC MHD slowdown across devices", 8.1, hi, 0.3, 1.5);
+    }
+
+    out
+}
+
+/// Render the claim table.
+pub fn check(cfg: &Config) -> Output {
+    let mut t = Table::new(
+        "Paper-vs-model claim check",
+        &["claim", "paper", "model", "model/paper", "status"],
+    );
+    for c in claims(cfg) {
+        t.row(vec![
+            c.description.clone(),
+            format!("{:.2}", c.paper),
+            format!("{:.2}", c.model),
+            format!("{:.2}", c.model / c.paper),
+            if c.passed() { "OK".into() } else { "MISS".into() },
+        ]);
+    }
+    Output { tables: vec![t], plots: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn most_claims_pass() {
+        let cfg = Config::default();
+        let all = claims(&cfg);
+        let passed = all.iter().filter(|c| c.passed()).count();
+        let failed: Vec<_> = all
+            .iter()
+            .filter(|c| !c.passed())
+            .map(|c| format!("{}: paper {:.2} model {:.2}", c.id, c.paper, c.model))
+            .collect();
+        assert!(
+            passed as f64 >= 0.75 * all.len() as f64,
+            "{passed}/{} claims pass; failures: {failed:#?}",
+            all.len()
+        );
+    }
+
+    #[test]
+    fn pytorch_mhd_times_track_paper() {
+        // the three §5.4 measurements are the tightest absolute anchors
+        for (gpu, ms_paper) in [(Gpu::A100, 41.9), (Gpu::V100, 53.4), (Gpu::Mi250x, 97.0)] {
+            let t = mhd_library_time(spec(gpu), &MHD_SHAPE, false) * 1e3;
+            let ratio = t / ms_paper;
+            assert!((0.6..1.6).contains(&ratio), "{gpu:?}: model {t:.1} ms vs {ms_paper}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! `stencilax` — reproduction of *"Stencil Computations on AMD and Nvidia
+//! Graphics Processors: Performance and Tuning Strategies"* (Lappi et al.,
+//! 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — launcher/CLI, experiment coordinator, the native
+//!   stencil engine, the GPU performance-model substrate, the PJRT runtime
+//!   that executes AOT-compiled artifacts, and the per-figure/table
+//!   benchmark harness.
+//! * **L2/L1 (python/, build-time only)** — JAX models and Pallas kernels,
+//!   lowered once by `make artifacts` into `artifacts/*.hlo.txt`; Python is
+//!   never on the runtime path.
+
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod stencil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,272 @@
+//! `stencilax` launcher — the L3 entry point.
+//!
+//! Subcommands:
+//!   specs                       print Table 1 + Table 2 (hardware/systems)
+//!   figures <id|all>            regenerate paper figures from the GPU model
+//!   tables  <id|all>            regenerate paper tables from the GPU model
+//!   measure <figure|bandwidth>  time the AOT artifacts through PJRT
+//!   check                       paper-vs-model claim table (EXPERIMENTS.md)
+//!   tune    <workload>          run the §5.1 decomposition autotuner
+//!   verify                      cross-check artifacts vs the native engine
+//!   roofline                    operational-intensity summary
+//!
+//! Global options: --config FILE --artifacts DIR --out DIR
+//!                 --devices a100,v100,... --no-pitfalls
+
+use anyhow::{bail, Context, Result};
+
+use stencilax::config::Config;
+use stencilax::coordinator::autotune::autotune;
+use stencilax::coordinator::report::Table;
+use stencilax::coordinator::verify::{verify_slices, Tolerance};
+use stencilax::harness::{self, measured, paper};
+use stencilax::model::specs::spec;
+use stencilax::runtime::{DType, Executor, HostValue, Manifest};
+use stencilax::sim::kernel::Caching;
+use stencilax::sim::workloads;
+use stencilax::stencil::grid::{Boundary, Grid};
+use stencilax::stencil::{conv, diffusion::Diffusion};
+use stencilax::util::cli::Args;
+use stencilax::util::rng::Rng;
+
+const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help"];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(BOOL_FLAGS)?;
+    if args.has_flag("help") || args.subcommand.is_none() {
+        print_help();
+        return Ok(());
+    }
+    let cfg = Config::resolve(&args)?;
+    match args.subcommand.as_deref().unwrap() {
+        "specs" => {
+            harness::run_table(&cfg, "table1")?.print();
+            harness::run_table(&cfg, "table2")?.print();
+        }
+        "figures" => {
+            let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            let ids: Vec<&str> = if which == "all" {
+                harness::FIGURE_IDS.to_vec()
+            } else {
+                vec![which]
+            };
+            for id in ids {
+                let out = harness::run_figure(&cfg, id)?;
+                out.print();
+                if args.has_flag("save") {
+                    out.save(&cfg.output_dir)?;
+                }
+            }
+        }
+        "tables" => {
+            let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            let ids: Vec<&str> =
+                if which == "all" { harness::TABLE_IDS.to_vec() } else { vec![which] };
+            for id in ids {
+                let out = harness::run_table(&cfg, id)?;
+                out.print();
+                if args.has_flag("save") {
+                    out.save(&cfg.output_dir)?;
+                }
+            }
+        }
+        "measure" => {
+            let which = args.positional.first().map(|s| s.as_str()).unwrap_or("bandwidth");
+            let out = if which == "bandwidth" {
+                measured::measured_bandwidth(&cfg)?
+            } else {
+                measured::measure_figure(&cfg, which)?
+            };
+            out.print();
+            if args.has_flag("save") {
+                out.save(&cfg.output_dir)?;
+            }
+        }
+        "check" => {
+            let out = paper::check(&cfg);
+            out.print();
+            if args.has_flag("save") {
+                out.save(&cfg.output_dir)?;
+            }
+        }
+        "roofline" => harness::tables::roofline(&cfg).print(),
+        "whatif" => {
+            let axis = harness::whatif::Axis::parse(
+                args.positional.first().map(|s| s.as_str()).unwrap_or("smem"),
+            )
+            .context("axis must be smem|l1|hbm")?;
+            harness::whatif::explore(&cfg, axis).print();
+        }
+        "ablation" => harness::whatif::ablation(&cfg).print(),
+        "tune" => cmd_tune(&cfg, &args)?,
+        "verify" => cmd_verify(&cfg)?,
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+    Ok(())
+}
+
+/// Run the §5.1 decomposition search for a named workload on each device.
+fn cmd_tune(cfg: &Config, args: &Args) -> Result<()> {
+    let workload = args.positional.first().map(|s| s.as_str()).unwrap_or("mhd");
+    let fp64 = args.get_or("precision", "f64") == "f64";
+    let caching = Caching::parse(args.get_or("caching", "hwc"))
+        .context("--caching must be hwc or swc")?;
+    let mut t = Table::new(
+        &format!("Autotune — {workload} ({}, {caching})", if fp64 { "FP64" } else { "FP32" }),
+        &["device", "best tile", "time (ms)", "occupancy", "runner-up"],
+    );
+    for &gpu in &cfg.devices {
+        let dev = spec(gpu);
+        let results = match workload {
+            "mhd" => autotune(dev, 3, move |tile| {
+                Some(workloads::mhd(dev, &[128, 128, 128], fp64, caching, tile, 0))
+            }),
+            "diffusion" => autotune(dev, 3, move |tile| {
+                Some(workloads::diffusion(dev, &[256, 256, 256], 3, fp64, caching, tile))
+            }),
+            "xcorr" => autotune(dev, 1, move |tile| {
+                Some(workloads::xcorr1d(
+                    1 << 24,
+                    64,
+                    fp64,
+                    caching,
+                    stencilax::sim::kernel::Unroll::Pointwise,
+                    tile,
+                ))
+            }),
+            other => bail!("unknown workload {other:?} (mhd|diffusion|xcorr)"),
+        };
+        let best = results.first().context("no valid decomposition")?;
+        let second = results.get(1);
+        t.row(vec![
+            dev.name.to_string(),
+            format!("({}, {}, {})", best.tile.tx, best.tile.ty, best.tile.tz),
+            format!("{:.3}", best.time_s * 1e3),
+            format!("{:.0}%", best.occupancy * 100.0),
+            second
+                .map(|s| {
+                    format!("({},{},{}) {:.3} ms", s.tile.tx, s.tile.ty, s.tile.tz, s.time_s * 1e3)
+                })
+                .unwrap_or_default(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Cross-check a representative artifact of each kind against the native
+/// engine under the Table B2 tolerance rules.
+fn cmd_verify(cfg: &Config) -> Result<()> {
+    let ex = Executor::new(Manifest::load(&cfg.artifacts_dir)?)?;
+    let mut t = Table::new(
+        "Verification — PJRT artifacts vs native engine (Table B2 rules)",
+        &["artifact", "tolerance", "result"],
+    );
+    let mut rng = Rng::new(42);
+
+    // xcorr: Astaroth-style ULP rule
+    {
+        let (n, r) = (1usize << 20, 4usize);
+        let fpad = rng.normal_vec(n + 2 * r);
+        let taps = rng.normal_vec(2 * r + 1);
+        let want = conv::xcorr1d(&fpad, &taps);
+        let got = ex.run(
+            "xcorr1d_hwc_pointwise_r4_f64",
+            &[HostValue::f64(fpad, &[n + 2 * r]), HostValue::f64(taps, &[2 * r + 1])],
+        )?;
+        // cross-implementation comparison: allow the domain-scale ULP floor
+        // (XLA fuses/contracts FMAs differently from the native loop)
+        let scale = want.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let rep = verify_slices(&got[0].to_f64_vec(), &want, Tolerance::astaroth(64.0 * scale));
+        t.row(vec!["xcorr1d_hwc_pointwise_r4_f64".into(), "rel < 5 ULP".into(), rep.to_string()]);
+        anyhow::ensure!(rep.passed, "xcorr verification failed: {rep}");
+    }
+
+    // diffusion: native stepper comparison
+    {
+        let (n, r) = (64usize, 3usize);
+        let mut grid = Grid::new(n, n, n, r);
+        grid.interior_from_slice(&rng.normal_vec(n * n * n));
+        grid.fill_ghosts(Boundary::Periodic);
+        let d = Diffusion::new(r, 1.0, 1.0, Boundary::Periodic);
+        let dt = 1e-3;
+        let want = d.step_prefilled(&grid, 3, dt).interior_to_vec();
+        let scale = want.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let got = ex.run(
+            "diffusion3d_hwc_r3_f64",
+            &[
+                HostValue::f64(grid.padded_to_vec(), &[n + 2 * r, n + 2 * r, n + 2 * r]),
+                HostValue::scalar(d.kernel_scalar(dt), DType::F64),
+            ],
+        )?;
+        let rep = verify_slices(&got[0].to_f64_vec(), &want, Tolerance::astaroth(64.0 * scale));
+        t.row(vec!["diffusion3d_hwc_r3_f64".into(), "rel < 5 ULP".into(), rep.to_string()]);
+        anyhow::ensure!(rep.passed, "diffusion verification failed: {rep}");
+    }
+
+    // MHD: fused kernel vs oracle artifact (allclose 100 eps, Table B2)
+    {
+        use stencilax::stencil::mhd::{MhdState, NFIELDS};
+        let n = 32usize;
+        let mut state = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+        state.fill_ghosts();
+        let p = n + 6;
+        let w0 = vec![0.0; NFIELDS * n * n * n];
+        let dt = 1e-4;
+        let fused = ex.run(
+            "mhd32_hwc_sub2_f64",
+            &[
+                HostValue::f64(state.stacked_padded(), &[NFIELDS, p, p, p]),
+                HostValue::f64(w0.clone(), &[NFIELDS, n, n, n]),
+                HostValue::scalar(dt, DType::F64),
+            ],
+        )?;
+        let oracle = ex.run(
+            "mhd32_oracle_sub2_f64",
+            &[
+                HostValue::f64(state.stacked_interior(), &[NFIELDS, n, n, n]),
+                HostValue::f64(w0, &[NFIELDS, n, n, n]),
+                HostValue::scalar(dt, DType::F64),
+            ],
+        )?;
+        let rep = verify_slices(
+            &fused[0].to_f64_vec(),
+            &oracle[0].to_f64_vec(),
+            Tolerance::pytorch_mhd(),
+        );
+        t.row(vec!["mhd32_hwc_sub2_f64".into(), "allclose 100 eps".into(), rep.to_string()]);
+        anyhow::ensure!(rep.passed, "MHD verification failed: {rep}");
+    }
+
+    println!("{}", t.render());
+    println!("platform: {}", ex.platform());
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "stencilax — reproduction of 'Stencil Computations on AMD and Nvidia \
+Graphics Processors' (Lappi et al., 2024)
+
+USAGE: stencilax <SUBCOMMAND> [options]
+
+SUBCOMMANDS:
+  specs                      Table 1 + Table 2 (hardware & systems registry)
+  figures <fig6..fig14|figc1|all> [--save]   regenerate figures (GPU model)
+  tables  <table1|table2|table3|tablec3|all> [--save]
+  measure <bandwidth|fig7|fig8|fig11|fig13|...> [--save]   PJRT timings
+  check   [--save]           paper-vs-model claim table
+  tune    <mhd|diffusion|xcorr> [--precision f32|f64] [--caching hwc|swc]
+  verify                     artifacts vs native engine (Table B2 rules)
+  roofline                   operational intensity vs machine balance
+  whatif  <smem|l1|hbm>      §6.1 hypothetical-hardware exploration
+  ablation                   model-mechanism ablation table
+
+OPTIONS:
+  --config FILE        JSON config (default: stencilax.json if present)
+  --artifacts DIR      artifact directory (default: artifacts/)
+  --out DIR            output directory for --save (default: results/)
+  --devices LIST       e.g. a100,mi250x (default: all four)
+  --no-pitfalls        disable the documented vendor pitfall rules (§5)"
+    );
+}

@@ -1,0 +1,9 @@
+//! Hardware and system registry: the paper's Table 1 (GPU specifications)
+//! and Table 2 (benchmark systems) encoded as data, plus derived rates the
+//! simulator consumes. Every number carries its provenance in comments.
+
+pub mod specs;
+pub mod systems;
+
+pub use specs::{spec, Gpu, GpuSpec, Vendor, ALL_GPUS};
+pub use systems::{system_for, System, SYSTEMS};

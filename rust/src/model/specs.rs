@@ -1,0 +1,384 @@
+//! GPU hardware specifications — paper Table 1, plus microarchitectural
+//! constants the timing model needs (occupancy limits, on-chip bandwidths)
+//! sourced from the vendor documents the paper cites (A100/Volta
+//! whitepapers, CDNA/CDNA2 ISA guides, Citadel's Volta microbenchmarks).
+
+/// GPU vendor; drives cache-architecture branches in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Nvidia,
+    Amd,
+}
+
+/// Device identifiers used throughout the harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gpu {
+    A100,
+    V100,
+    Mi250x,
+    Mi100,
+}
+
+impl Gpu {
+    pub fn parse(s: &str) -> Option<Gpu> {
+        match s.to_ascii_lowercase().as_str() {
+            "a100" => Some(Gpu::A100),
+            "v100" => Some(Gpu::V100),
+            "mi250x" | "mi250" => Some(Gpu::Mi250x),
+            "mi100" => Some(Gpu::Mi100),
+            _ => None,
+        }
+    }
+}
+
+pub const ALL_GPUS: [Gpu; 4] = [Gpu::A100, Gpu::V100, Gpu::Mi250x, Gpu::Mi100];
+
+/// Static specification of one graphics compute die (GCD).
+///
+/// The paper benchmarks a *single GCD* of the MI250X (§5.1), so all values
+/// here are per GCD, exactly like Table 1's "per GCD" rows.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub gpu: Gpu,
+    pub name: &'static str,
+    pub vendor: Vendor,
+    pub release_year: u32,
+    // ---- Table 1 rows -----------------------------------------------------
+    pub simd_width: u32,
+    pub gcds: u32,
+    pub cus: u32,                  // compute units per GCD
+    pub fp32_cores: u32,           // per GCD
+    pub fp64_cores: u32,           // per GCD (0 = no dedicated FP64 cores)
+    pub clock_mhz: f64,            // compute clock
+    pub fp64_tflops: f64,          // peak vector FP64 per GCD
+    pub l1_kib_per_cu: f64,
+    pub l2_mib: f64,               // per GCD
+    pub smem_kib_per_cu: f64,      // max shared-memory allocation
+    pub mem_clock_mhz: f64,
+    pub mem_gib: f64,              // per GCD
+    pub mem_bw_gibs: f64,          // per GCD
+    pub tdp_w: f64,                // full package TDP
+    pub unified_l1: bool,          // L1 and shared memory on one unit
+    // ---- microarchitectural constants (cited sources) --------------------
+    /// L1 bytes/clock/CU. Nvidia unified L1: 128 B/clk (Volta+ whitepapers,
+    /// Citadel microbenchmarks). CDNA L1: 64 B/clk (16 KiB read-optimized
+    /// cache, MI200 ISA guide) — the architectural gap the paper's Fig. 8
+    /// discussion attributes AMD's HWC penalty to.
+    pub l1_bytes_per_clk_cu: f64,
+    /// Shared-memory/LDS bytes/clock/CU: 128 B/clk on all four devices
+    /// (32 banks x 4 B Nvidia; LDS 64 banks x 2 B effective on CDNA).
+    pub smem_bytes_per_clk_cu: f64,
+    /// Max resident warps/wavefronts per CU (occupancy ceiling).
+    pub max_warps_per_cu: u32,
+    /// Register file: registers per thread at full occupancy ceiling.
+    pub regs_per_cu: u32,
+    /// Warps needed in flight per CU to hide pipeline+memory latency
+    /// (issue-efficiency knee; Volkov-style latency-hiding model). CDNA
+    /// needs far more waves in flight than Volta/Ampere: its 16 KiB L1
+    /// pushes most accesses to L2/HBM latency, which is why the paper had
+    /// to trade registers for occupancy on MI parts (Fig. 14).
+    pub latency_hiding_warps: f64,
+    /// Achieved issue fraction of giant fused multiphysics kernels.
+    /// A100: 0.94 warp-IPC of a 4-scheduler peak *measured by the paper*
+    /// (§5.4). The other three are calibrated to the paper's Table 3 MHD
+    /// throughputs / achieved-of-ideal fractions (§5.4).
+    pub fused_kernel_ipc: f64,
+    // ---- measured calibration from the paper itself ----------------------
+    /// Effective-bandwidth plateau, fraction of peak (paper §5.2, FP64/FP32).
+    pub bw_plateau_f64: f64,
+    pub bw_plateau_f32: f64,
+    /// Problem size (bytes) at which effective bandwidth reaches half of the
+    /// plateau in Fig. 6's ramp (calibrated to "64 MiB reaches >= 85%").
+    pub bw_half_ramp_bytes: f64,
+}
+
+impl GpuSpec {
+    /// Peak FP32 TFLOPS per GCD (2 flops/FMA per core per clock).
+    pub fn fp32_tflops(&self) -> f64 {
+        2.0 * self.fp32_cores as f64 * self.clock_mhz * 1e6 / 1e12
+    }
+
+    /// Peak FLOPS for the given precision (FP64 from Table 1).
+    pub fn peak_flops(&self, fp64: bool) -> f64 {
+        if fp64 {
+            self.fp64_tflops * 1e12
+        } else {
+            self.fp32_tflops() * 1e12
+        }
+    }
+
+    /// Machine balance: FP64 FLOPS per 8-byte word (Table 1 row).
+    pub fn machine_balance(&self) -> f64 {
+        self.fp64_tflops * 1e12 / (self.mem_bw_gibs * GIB / 8.0)
+    }
+
+    /// Peak off-chip bandwidth in bytes/s.
+    pub fn mem_bw_bytes(&self) -> f64 {
+        self.mem_bw_gibs * GIB
+    }
+
+    /// Aggregate L1 bandwidth in bytes/s.
+    pub fn l1_bw_bytes(&self) -> f64 {
+        self.l1_bytes_per_clk_cu * self.cus as f64 * self.clock_mhz * 1e6
+    }
+
+    /// Aggregate shared-memory/LDS bandwidth in bytes/s.
+    pub fn smem_bw_bytes(&self) -> f64 {
+        self.smem_bytes_per_clk_cu * self.cus as f64 * self.clock_mhz * 1e6
+    }
+
+    /// Instruction issue rate in *thread*-instructions/s across the GCD:
+    /// every core lane retires at most one thread-instruction per clock
+    /// (A100 SM: 4 schedulers x 32 lanes = 128 lanes/clk; CDNA CU: 4 SIMDs
+    /// executing 64-wide waves over 4 clks on 16 lanes = 64 lanes/clk —
+    /// both equal their FP32 core count per CU).
+    pub fn issue_rate(&self) -> f64 {
+        self.fp32_cores as f64 * self.clock_mhz * 1e6
+    }
+
+    /// Threads per warp/wavefront.
+    pub fn warp_size(&self) -> u32 {
+        self.simd_width
+    }
+
+    /// TDP attributed to one GCD (the paper halves MI250X TDP, Table 3).
+    pub fn tdp_per_gcd(&self) -> f64 {
+        self.tdp_w / self.gcds as f64
+    }
+
+    /// Effective off-chip bandwidth at a given problem size (Fig. 6 ramp):
+    /// saturating curve toward the measured plateau.
+    pub fn effective_bw(&self, bytes: f64, fp64: bool) -> f64 {
+        let plateau = if fp64 { self.bw_plateau_f64 } else { self.bw_plateau_f32 };
+        let ramp = bytes / (bytes + self.bw_half_ramp_bytes);
+        self.mem_bw_bytes() * plateau * ramp
+    }
+}
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const KIB: f64 = 1024.0;
+
+/// Table 1, column A100 SXM4-40GB.
+pub const A100: GpuSpec = GpuSpec {
+    gpu: Gpu::A100,
+    name: "A100 SXM4-40GB",
+    vendor: Vendor::Nvidia,
+    release_year: 2020,
+    simd_width: 32,
+    gcds: 1,
+    cus: 108,
+    fp32_cores: 6912,
+    fp64_cores: 3456,
+    clock_mhz: 1410.0,
+    fp64_tflops: 9.7,
+    l1_kib_per_cu: 192.0,
+    l2_mib: 40.0,
+    smem_kib_per_cu: 164.0,
+    mem_clock_mhz: 1215.0,
+    mem_gib: 40.0,
+    mem_bw_gibs: 1448.0,
+    tdp_w: 400.0,
+    unified_l1: true,
+    l1_bytes_per_clk_cu: 128.0,
+    smem_bytes_per_clk_cu: 128.0,
+    max_warps_per_cu: 64,
+    regs_per_cu: 65536,
+    latency_hiding_warps: 8.0,
+    fused_kernel_ipc: 0.94 / 4.0, // measured by the paper (§5.4)
+    bw_plateau_f64: 0.90, // paper §5.2
+    bw_plateau_f32: 0.87,
+    bw_half_ramp_bytes: 3.0 * MIB,
+};
+
+/// Table 1, column V100 SXM2-32GB.
+pub const V100: GpuSpec = GpuSpec {
+    gpu: Gpu::V100,
+    name: "V100 SXM2-32GB",
+    vendor: Vendor::Nvidia,
+    release_year: 2018,
+    simd_width: 32,
+    gcds: 1,
+    cus: 80,
+    fp32_cores: 5120,
+    fp64_cores: 2560,
+    clock_mhz: 1530.0,
+    fp64_tflops: 7.8,
+    l1_kib_per_cu: 128.0,
+    l2_mib: 6.0,
+    smem_kib_per_cu: 96.0,
+    mem_clock_mhz: 877.0,
+    mem_gib: 32.0,
+    mem_bw_gibs: 835.0,
+    tdp_w: 300.0,
+    unified_l1: true,
+    l1_bytes_per_clk_cu: 128.0, // unified since Volta (paper §6.1, ref 29)
+    smem_bytes_per_clk_cu: 128.0,
+    max_warps_per_cu: 64,
+    regs_per_cu: 65536,
+    latency_hiding_warps: 8.0,
+    fused_kernel_ipc: 0.147, // calibrated: Table 3 MHD FP64 (4.2 Melem/s/W)
+    bw_plateau_f64: 0.90,
+    bw_plateau_f32: 0.88,
+    bw_half_ramp_bytes: 2.0 * MIB,
+};
+
+/// Table 1, column MI250X (one GCD of the two-die OAM package).
+pub const MI250X: GpuSpec = GpuSpec {
+    gpu: Gpu::Mi250x,
+    name: "MI250X (1 GCD)",
+    vendor: Vendor::Amd,
+    release_year: 2021,
+    simd_width: 64,
+    gcds: 2,
+    cus: 110,
+    fp32_cores: 7040,
+    fp64_cores: 7040,
+    clock_mhz: 1700.0,
+    fp64_tflops: 23.9,
+    l1_kib_per_cu: 16.0,
+    l2_mib: 8.0,
+    smem_kib_per_cu: 64.0,
+    mem_clock_mhz: 1600.0,
+    mem_gib: 64.0,
+    mem_bw_gibs: 1526.0,
+    tdp_w: 560.0,
+    unified_l1: false, // LDS separate from CU (paper §2.2 / §6.1)
+    l1_bytes_per_clk_cu: 64.0,  // 16 KiB read cache, half the Nvidia L1 rate
+    smem_bytes_per_clk_cu: 128.0, // LDS
+    max_warps_per_cu: 32, // CDNA2: 8 wavefronts/SIMD x 4 SIMDs
+    regs_per_cu: 2048 * 64, // 512 VGPRs x 4 SIMDs x 64 lanes
+    latency_hiding_warps: 24.0,
+    fused_kernel_ipc: 0.115, // calibrated: 10.5%-of-ideal MHD run (§5.4)
+    bw_plateau_f64: 0.84,
+    bw_plateau_f32: 0.78,
+    bw_half_ramp_bytes: 4.0 * MIB,
+};
+
+/// Table 1, column MI100 (HBM2 PCIe).
+pub const MI100: GpuSpec = GpuSpec {
+    gpu: Gpu::Mi100,
+    name: "MI100",
+    vendor: Vendor::Amd,
+    release_year: 2020,
+    simd_width: 64,
+    gcds: 1,
+    cus: 120,
+    fp32_cores: 7680,
+    fp64_cores: 0, // Table 1 lists '-'; FP64 runs at 11.5 TFLOPS vector rate
+    clock_mhz: 1502.0,
+    fp64_tflops: 11.5,
+    l1_kib_per_cu: 16.0,
+    l2_mib: 8.0,
+    smem_kib_per_cu: 64.0,
+    mem_clock_mhz: 1200.0,
+    mem_gib: 32.0,
+    mem_bw_gibs: 1144.0,
+    tdp_w: 300.0,
+    unified_l1: false,
+    l1_bytes_per_clk_cu: 64.0,
+    smem_bytes_per_clk_cu: 128.0,
+    max_warps_per_cu: 40, // CDNA1: 10 wavefronts/SIMD
+    regs_per_cu: 2048 * 64,
+    latency_hiding_warps: 24.0,
+    fused_kernel_ipc: 0.087, // calibrated: 10.1%-of-ideal MHD run (§5.4)
+    bw_plateau_f64: 0.85,
+    bw_plateau_f32: 0.79,
+    bw_half_ramp_bytes: 4.0 * MIB,
+};
+
+/// Look up a spec by device id.
+pub fn spec(gpu: Gpu) -> &'static GpuSpec {
+    match gpu {
+        Gpu::A100 => &A100,
+        Gpu::V100 => &V100,
+        Gpu::Mi250x => &MI250X,
+        Gpu::Mi100 => &MI100,
+    }
+}
+
+impl std::fmt::Display for Gpu {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Gpu::A100 => write!(f, "A100"),
+            Gpu::V100 => write!(f, "V100"),
+            Gpu::Mi250x => write!(f, "MI250X"),
+            Gpu::Mi100 => write!(f, "MI100"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn machine_balance_matches_table1() {
+        // Table 1: 50 (A100), 70 (V100), 117 (MI250X), 75 (MI100)
+        for (spec, want) in [(&A100, 50.0), (&V100, 70.0), (&MI250X, 117.0), (&MI100, 75.0)] {
+            let got = spec.machine_balance();
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "{}: balance {got:.1} vs Table 1 {want}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_rate_is_2x_cores_clock() {
+        // A100: 6912 cores * 1.41 GHz * 2 = 19.5 TFLOPS (whitepaper value)
+        assert!((A100.fp32_tflops() - 19.5).abs() < 0.1);
+        // V100: 15.7 TFLOPS
+        assert!((V100.fp32_tflops() - 15.7).abs() < 0.1);
+    }
+
+    #[test]
+    fn amd_fp64_equals_listed_tflops() {
+        assert!((MI250X.peak_flops(true) / 1e12 - 23.9).abs() < 1e-9);
+        assert!((MI100.peak_flops(true) / 1e12 - 11.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_bw_ramp_saturates_at_64mib() {
+        // paper: 64 MiB reaches >= 85% of the *effective* ceiling everywhere
+        for spec in [&A100, &V100, &MI250X, &MI100] {
+            let at64 = spec.effective_bw(64.0 * MIB, false);
+            let ceiling = spec.mem_bw_bytes() * spec.bw_plateau_f32;
+            assert!(at64 / ceiling > 0.85, "{}", spec.name);
+            // and is monotone in size
+            assert!(spec.effective_bw(1.0 * MIB, false) < at64);
+        }
+    }
+
+    #[test]
+    fn amd_l1_slower_than_lds_nvidia_unified() {
+        assert!(MI250X.l1_bw_bytes() < MI250X.smem_bw_bytes());
+        assert!(MI100.l1_bw_bytes() < MI100.smem_bw_bytes());
+        assert_eq!(A100.l1_bytes_per_clk_cu, A100.smem_bytes_per_clk_cu);
+    }
+
+    #[test]
+    fn shared_memory_ratio_matches_paper_claim() {
+        // paper §2.2: MI250X shared memory ~2.5x smaller than A100,
+        // FP64 per CU ~2.4x higher
+        let smem_ratio = A100.smem_kib_per_cu / MI250X.smem_kib_per_cu;
+        assert!((smem_ratio - 2.5625).abs() < 0.1);
+        let percu_a100 = A100.fp64_tflops / A100.cus as f64;
+        let percu_mi = MI250X.fp64_tflops / MI250X.cus as f64;
+        assert!((percu_mi / percu_a100 - 2.4).abs() < 0.15);
+    }
+
+    #[test]
+    fn tdp_per_gcd_halves_mi250x() {
+        assert_eq!(MI250X.tdp_per_gcd(), 280.0);
+        assert_eq!(A100.tdp_per_gcd(), 400.0);
+    }
+
+    #[test]
+    fn gpu_parse() {
+        assert_eq!(Gpu::parse("a100"), Some(Gpu::A100));
+        assert_eq!(Gpu::parse("MI250X"), Some(Gpu::Mi250x));
+        assert_eq!(Gpu::parse("h100"), None);
+    }
+}

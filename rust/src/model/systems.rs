@@ -1,0 +1,80 @@
+//! Benchmark systems — paper Table 2. Metadata only (the paper uses these
+//! to document software stacks; our harness reports them alongside results
+//! for provenance).
+
+use super::specs::Gpu;
+
+/// One benchmark system of Table 2.
+#[derive(Debug, Clone)]
+pub struct System {
+    pub name: &'static str,
+    pub cpu: &'static str,
+    pub gpu: Gpu,
+    pub gpus_per_node: u32,
+    pub cuda_rocm: &'static str,
+    pub dnn_library: &'static str,
+    pub pytorch: &'static str,
+}
+
+/// Table 2 verbatim.
+pub const SYSTEMS: [System; 4] = [
+    System {
+        name: "Mahti",
+        cpu: "2x AMD Rome 7H12",
+        gpu: Gpu::A100,
+        gpus_per_node: 4,
+        cuda_rocm: "CUDA 11.5.0",
+        dnn_library: "cuDNN 8.3.3.40",
+        pytorch: "2.2.1+cu121",
+    },
+    System {
+        name: "Puhti",
+        cpu: "2x Xeon Gold 6230",
+        gpu: Gpu::V100,
+        gpus_per_node: 4,
+        cuda_rocm: "CUDA 11.2.2",
+        dnn_library: "cuDNN 8.0.5.39",
+        pytorch: "2.2.1+cu121",
+    },
+    System {
+        name: "LUMI",
+        cpu: "AMD EPYC 7A53",
+        gpu: Gpu::Mi250x,
+        gpus_per_node: 4,
+        cuda_rocm: "ROCm 5.2.3",
+        dnn_library: "MIOpen 2.17.0",
+        pytorch: "2.2.1+rocm5.6",
+    },
+    System {
+        name: "Triton",
+        cpu: "2x AMD EPYC 7262",
+        gpu: Gpu::Mi100,
+        gpus_per_node: 3,
+        cuda_rocm: "ROCm 5.0.0",
+        dnn_library: "MIOpen 2.15.0",
+        pytorch: "1.1",
+    },
+];
+
+/// The system a device was benchmarked on (paper pairing).
+pub fn system_for(gpu: Gpu) -> &'static System {
+    SYSTEMS.iter().find(|s| s.gpu == gpu).expect("every GPU has a system")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_gpu_has_a_system() {
+        for gpu in super::super::specs::ALL_GPUS {
+            let s = system_for(gpu);
+            assert_eq!(s.gpu, gpu);
+        }
+    }
+
+    #[test]
+    fn lumi_runs_mi250x() {
+        assert_eq!(system_for(Gpu::Mi250x).name, "LUMI");
+    }
+}

@@ -1,0 +1,269 @@
+//! Typed executor over the PJRT CPU client.
+//!
+//! Loads HLO text (`HloModuleProto::from_text_file`), compiles once per
+//! artifact (cached), and runs computations with host-side `f32`/`f64`
+//! tensors. All artifacts are lowered with `return_tuple=True`, so every
+//! result comes back as a tuple literal that is decomposed here.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactEntry, DType, Manifest, TensorSpec};
+
+/// A host-side tensor: data + shape, f32 or f64.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    F64 { data: Vec<f64>, shape: Vec<usize> },
+}
+
+impl HostValue {
+    pub fn f64(data: Vec<f64>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostValue::F64 { data, shape: shape.to_vec() }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostValue::F32 { data, shape: shape.to_vec() }
+    }
+
+    /// Scalar-as-(1,) convenience (the AOT kernels take dt and friends so).
+    pub fn scalar(v: f64, dtype: DType) -> Self {
+        match dtype {
+            DType::F32 => HostValue::f32(vec![v as f32], &[1]),
+            DType::F64 => HostValue::f64(vec![v], &[1]),
+        }
+    }
+
+    /// Build from f64 data, casting to the artifact's expected dtype.
+    pub fn cast_from_f64(data: &[f64], spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            DType::F64 => HostValue::f64(data.to_vec(), &spec.shape),
+            DType::F32 => {
+                HostValue::f32(data.iter().map(|&v| v as f32).collect(), &spec.shape)
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32 { .. } => DType::F32,
+            HostValue::F64 { .. } => DType::F64,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::F64 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostValue::F32 { data, .. } => data.len(),
+            HostValue::F64 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f64 (casting if needed).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            HostValue::F64 { data, .. } => data.clone(),
+            HostValue::F32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    /// Max |a - b| against another value (shape-checked, dtype-promoted).
+    pub fn max_abs_diff(&self, other: &HostValue) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        let a = self.to_f64_vec();
+        let b = other.to_f64_vec();
+        a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostValue::F32 { data, shape } => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostValue::F64 { data, shape } => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostValue::F32 { data: lit.to_vec::<f32>()?, shape: dims }),
+            xla::ElementType::F64 => Ok(HostValue::F64 { data: lit.to_vec::<f64>()?, shape: dims }),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+/// Timing of one execution (upload/execute/readback are not separable with
+/// the literal API; `total` covers literal conversion + dispatch + fetch,
+/// `execute` covers the PJRT execute call alone).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    pub total_s: f64,
+    pub execute_s: f64,
+}
+
+/// Artifact executor with a compile cache.
+pub struct Executor {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile seconds (reported by the harness).
+    pub compile_seconds: Mutex<f64>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor over an artifacts directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    /// Load the default manifest and create the executor.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.get(name)?.clone();
+        let path = self.manifest.path_of(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {name}"))?,
+        );
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest entry.
+    fn check_inputs(entry: &ArtifactEntry, inputs: &[HostValue]) -> Result<()> {
+        if entry.inputs.len() != inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (spec, val)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if spec.dtype != val.dtype() || spec.shape != val.shape() {
+                bail!(
+                    "{}: input {i} mismatch: manifest {:?}{:?}, got {:?}{:?}",
+                    entry.name,
+                    spec.dtype,
+                    spec.shape,
+                    val.dtype(),
+                    val.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs; returns host outputs.
+    pub fn run(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        Ok(self.run_timed(name, inputs)?.0)
+    }
+
+    /// Execute and report timing.
+    pub fn run_timed(
+        &self,
+        name: &str,
+        inputs: &[HostValue],
+    ) -> Result<(Vec<HostValue>, ExecTiming)> {
+        let entry = self.manifest.get(name)?.clone();
+        Self::check_inputs(&entry, inputs)?;
+        let exe = self.executable(name)?;
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let te = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let execute_s = te.elapsed().as_secs_f64();
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", entry.outputs.len(), parts.len());
+        }
+        let outs: Vec<HostValue> =
+            parts.iter().map(HostValue::from_literal).collect::<Result<_>>()?;
+        let timing = ExecTiming { total_s: t0.elapsed().as_secs_f64(), execute_s };
+        Ok((outs, timing))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_value_roundtrip() {
+        let v = HostValue::f64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.len(), 6);
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn host_value_cast() {
+        let spec = TensorSpec { shape: vec![3], dtype: DType::F32 };
+        let v = HostValue::cast_from_f64(&[1.5, -2.0, 0.25], &spec);
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.to_f64_vec(), vec![1.5, -2.0, 0.25]);
+    }
+
+    #[test]
+    fn scalar_helper() {
+        let s = HostValue::scalar(0.125, DType::F64);
+        assert_eq!(s.shape(), &[1]);
+        assert_eq!(s.to_f64_vec(), vec![0.125]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = HostValue::f64(vec![1.0, 2.0], &[2]);
+        let b = HostValue::f32(vec![1.0, 2.5], &[2]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+    }
+}

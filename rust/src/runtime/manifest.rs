@@ -1,0 +1,249 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Deserialized from `artifacts/manifest.json` with the
+//! in-crate JSON parser (serde is unavailable offline; DESIGN.md §9).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::F64 => write!(f, "f64"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: v.req("shape")?.usize_vec()?,
+            dtype: DType::parse(v.req_str("dtype")?)?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_count(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// One AOT-lowered computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub params: Json,
+    pub figures: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let figures = v
+            .get("figures")
+            .and_then(|f| f.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req_arr(key)?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            file: v.req_str("file")?.to_string(),
+            kind: v.req_str("kind")?.to_string(),
+            params: v.get("params").cloned().unwrap_or(Json::Null),
+            figures,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+
+    /// Typed accessors into the params bag.
+    pub fn param_u64(&self, key: &str) -> Option<u64> {
+        self.params.get(key).and_then(|v| v.as_u64())
+    }
+
+    pub fn param_str(&self, key: &str) -> Option<&str> {
+        self.params.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn param_f64(&self, key: &str) -> Option<f64> {
+        self.params.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn param_shape(&self) -> Option<Vec<usize>> {
+        self.params.get("shape").and_then(|v| v.usize_vec().ok())
+    }
+
+    /// MHD parameter bag (kind == "mhd"/"mhd_oracle" artifacts).
+    pub fn mhd_params(&self) -> Option<crate::stencil::mhd::MhdParams> {
+        let p = self.params.get("mhd_params")?;
+        Some(crate::stencil::mhd::MhdParams {
+            cs0: p.get("cs0")?.as_f64()?,
+            gamma: p.get("gamma")?.as_f64()?,
+            cp: p.get("cp")?.as_f64()?,
+            rho0: p.get("rho0")?.as_f64()?,
+            nu: p.get("nu")?.as_f64()?,
+            eta: p.get("eta")?.as_f64()?,
+            zeta: p.get("zeta")?.as_f64()?,
+            mu0: p.get("mu0")?.as_f64()?,
+            kappa: p.get("kappa")?.as_f64()?,
+            dx: p.get("dx")?.as_f64()?,
+        })
+    }
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let version = root.req_u64("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let artifacts: Vec<ArtifactEntry> = root
+            .req_arr("artifacts")?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<_>>()?;
+        let by_name = artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
+        Ok(Self { dir, artifacts, by_name })
+    }
+
+    /// Default artifacts directory: `$STENCILAX_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("STENCILAX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.artifacts[i])
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// All artifacts tagged with a figure/table id (e.g. "fig8").
+    pub fn for_figure(&self, fig: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts.iter().filter(|a| a.figures.iter().any(|f| f == fig)).collect()
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [{
+        "name": "xcorr1d_hwc_pointwise_r4_f32",
+        "file": "xcorr1d_hwc_pointwise_r4_f32.hlo.txt",
+        "kind": "xcorr1d",
+        "params": {"n": 1048576, "dtype": "f32", "radius": 4,
+                    "caching": "hwc", "unroll": "pointwise"},
+        "figures": ["fig8", "fig9"],
+        "inputs": [{"shape": [1048584], "dtype": "f32"},
+                    {"shape": [9], "dtype": "f32"}],
+        "outputs": [{"shape": [1048576], "dtype": "f32"}]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_and_accessors_work() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let e = m.get("xcorr1d_hwc_pointwise_r4_f32").unwrap();
+        assert_eq!(e.param_u64("radius"), Some(4));
+        assert_eq!(e.param_str("caching"), Some("hwc"));
+        assert_eq!(e.inputs[0].element_count(), 1048584);
+        assert_eq!(e.inputs[0].byte_count(), 4 * 1048584);
+        assert_eq!(e.outputs[0].dtype, DType::F32);
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.for_figure("fig9").len(), 1);
+        assert_eq!(m.for_figure("fig13").len(), 0);
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/xcorr1d_hwc_pointwise_r4_f32.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn mhd_params_roundtrip() {
+        let text = r#"{"version": 1, "artifacts": [{
+            "name": "mhd", "file": "m.hlo.txt", "kind": "mhd",
+            "params": {"mhd_params": {"cs0": 1.0, "gamma": 1.6666666,
+              "cp": 1.0, "rho0": 1.0, "nu": 0.005, "eta": 0.005,
+              "zeta": 0.0, "mu0": 1.0, "kappa": 0.001, "dx": 0.19634954}},
+            "figures": [], "inputs": [], "outputs": []}]}"#;
+        let m = Manifest::parse(text, PathBuf::from(".")).unwrap();
+        let p = m.get("mhd").unwrap().mhd_params().unwrap();
+        assert!((p.nu - 0.005).abs() < 1e-12);
+        assert!((p.dx - 0.19634954).abs() < 1e-9);
+    }
+}

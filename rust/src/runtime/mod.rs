@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute AOT-compiled HLO artifacts.
+//!
+//! The Rust hot path never touches Python: `make artifacts` lowered every
+//! (kernel, shape, dtype, variant) to HLO *text* (the interchange format
+//! xla_extension 0.5.1 can parse — serialized jax>=0.5 protos are rejected,
+//! see DESIGN.md §3), and this module loads, compiles and runs them on the
+//! PJRT CPU client via the `xla` crate.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Executor, HostValue};
+pub use manifest::{ArtifactEntry, DType, Manifest, TensorSpec};

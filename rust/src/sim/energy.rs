@@ -1,0 +1,36 @@
+//! Energy-efficiency model — paper Table 3 methodology.
+//!
+//! The paper computes million element updates per second per watt from the
+//! manufacturer TDP ("the calculations are based on the thermal design
+//! power"), halving the MI250X TDP to account for the single GCD in use.
+//! We do exactly the same on predicted (or measured) times.
+
+use crate::model::specs::GpuSpec;
+
+/// Million element updates per second per watt (Table 3 unit).
+pub fn melem_per_s_per_w(spec: &GpuSpec, elems: f64, time_s: f64) -> f64 {
+    elems / time_s / 1e6 / spec.tdp_per_gcd()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs::{A100, MI250X};
+
+    #[test]
+    fn uses_per_gcd_tdp() {
+        // same throughput: MI250X (280 W per GCD) scores better than A100 (400 W)
+        let a = melem_per_s_per_w(&A100, 1e9, 1.0);
+        let m = melem_per_s_per_w(&MI250X, 1e9, 1.0);
+        assert!((a - 1000.0 / 400.0).abs() < 1e-9);
+        assert!((m - 1000.0 / 280.0).abs() < 1e-9);
+        assert!(m > a);
+    }
+
+    #[test]
+    fn scales_inverse_with_time() {
+        let fast = melem_per_s_per_w(&A100, 1e9, 0.5);
+        let slow = melem_per_s_per_w(&A100, 1e9, 1.0);
+        assert!((fast / slow - 2.0).abs() < 1e-12);
+    }
+}

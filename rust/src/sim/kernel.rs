@@ -1,0 +1,171 @@
+//! Kernel profiles: the abstract cost description the simulator consumes.
+//!
+//! A profile captures what a kernel *does* per output element — MACs,
+//! on-chip loads, index-arithmetic instructions — plus its per-thread
+//! resource footprint. Workload builders in [`super::workloads`] construct
+//! these for the paper's benchmarks; the Python layer exports the same
+//! characterization (`conv1d.variant_characteristics`,
+//! `mhd.mhd_workload_characteristics`), pinned by tests on both sides.
+
+/// Caching strategy (paper §4.1): hardware-managed vs software-managed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Caching {
+    Hwc,
+    Swc,
+}
+
+impl Caching {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hwc" => Some(Caching::Hwc),
+            "swc" => Some(Caching::Swc),
+            _ => None,
+        }
+    }
+}
+
+/// Unrolling strategy (paper Fig. 9): baseline, element-wise (4 outputs per
+/// thread), stencil-point-wise (unrolled MAC loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Unroll {
+    Baseline,
+    Elementwise,
+    Pointwise,
+}
+
+impl Unroll {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "baseline" => Some(Unroll::Baseline),
+            "elementwise" => Some(Unroll::Elementwise),
+            "pointwise" => Some(Unroll::Pointwise),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Unroll; 3] = [Unroll::Baseline, Unroll::Elementwise, Unroll::Pointwise];
+}
+
+impl std::fmt::Display for Caching {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Caching::Hwc => write!(f, "hw"),
+            Caching::Swc => write!(f, "sw"),
+        }
+    }
+}
+
+impl std::fmt::Display for Unroll {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Unroll::Baseline => write!(f, "baseline"),
+            Unroll::Elementwise => write!(f, "elementwise"),
+            Unroll::Pointwise => write!(f, "pointwise"),
+        }
+    }
+}
+
+/// Abstract cost description of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    /// Human-readable tag for reports.
+    pub name: String,
+    /// Output elements produced by the launch.
+    pub elems: f64,
+    /// Bytes per element (4 = FP32, 8 = FP64).
+    pub dtype_bytes: f64,
+    pub fp64: bool,
+    /// Off-chip traffic in bytes (compulsory + modeled overfetch).
+    pub hbm_bytes: f64,
+    /// Floating-point ops per output element (FMA = 2).
+    pub flops_per_elem: f64,
+    /// On-chip (L1 or shared/LDS) loads per output element, in elements.
+    pub onchip_loads_per_elem: f64,
+    /// Issued instructions per output element (MACs + loads + index
+    /// arithmetic; the paper's §5.4 observation that SWC pays a 2.3x
+    /// instruction overhead enters through the workload builders).
+    pub instr_per_elem: f64,
+    /// Independent instruction chains (ILP) available to the scheduler.
+    pub ilp: f64,
+    /// Achieved fraction of the peak issue rate for this kernel class.
+    /// 1.0 for simple streaming kernels; fused multiphysics kernels run far
+    /// below peak issue from scoreboard stalls — the paper measured 0.94
+    /// warp-IPC of a 4-scheduler peak on the A100 MHD kernel (§5.4), i.e.
+    /// ~0.235; the CDNA value is calibrated to the paper's achieved-of-ideal
+    /// fractions (Fig. 13 discussion).
+    pub ipc_fraction: f64,
+    /// Registers per thread demanded by the kernel body ("natural" usage,
+    /// before any __launch_bounds__ cap).
+    pub regs_per_thread: u32,
+    /// Shared-memory bytes per thread block (SWC staging; 0 for HWC).
+    pub smem_per_block: f64,
+    /// Threads per block of the launch decomposition.
+    pub block_threads: u32,
+    pub caching: Caching,
+    pub unroll: Unroll,
+}
+
+impl KernelProfile {
+    /// Total flops of the launch.
+    pub fn flops(&self) -> f64 {
+        self.elems * self.flops_per_elem
+    }
+
+    /// Total on-chip traffic in bytes.
+    pub fn onchip_bytes(&self) -> f64 {
+        self.elems * self.onchip_loads_per_elem * self.dtype_bytes
+    }
+
+    /// Total issued warp-instructions (per-thread instructions / warp size
+    /// is applied by the predictor, which knows the device's SIMD width).
+    pub fn thread_instrs(&self) -> f64 {
+        self.elems * self.instr_per_elem
+    }
+
+    /// Operational intensity (flops per off-chip byte) — the quantity the
+    /// paper's machine-balance discussion (§2.1) is about.
+    pub fn operational_intensity(&self) -> f64 {
+        self.flops() / self.hbm_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> KernelProfile {
+        KernelProfile {
+            name: "test".into(),
+            elems: 1e6,
+            dtype_bytes: 8.0,
+            fp64: true,
+            hbm_bytes: 16e6,
+            flops_per_elem: 6.0,
+            onchip_loads_per_elem: 3.0,
+            instr_per_elem: 7.0,
+            ilp: 2.0,
+            ipc_fraction: 1.0,
+            regs_per_thread: 64,
+            smem_per_block: 0.0,
+            block_threads: 256,
+            caching: Caching::Hwc,
+            unroll: Unroll::Pointwise,
+        }
+    }
+
+    #[test]
+    fn derived_totals() {
+        let p = profile();
+        assert_eq!(p.flops(), 6e6);
+        assert_eq!(p.onchip_bytes(), 24e6);
+        assert_eq!(p.thread_instrs(), 7e6);
+        assert!((p.operational_intensity() - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Caching::parse("hwc"), Some(Caching::Hwc));
+        assert_eq!(Unroll::parse("elementwise"), Some(Unroll::Elementwise));
+        assert_eq!(Unroll::parse("nope"), None);
+    }
+}

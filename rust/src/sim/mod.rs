@@ -1,0 +1,30 @@
+//! GPU performance-model substrate (DESIGN.md §5).
+//!
+//! An analytical, white-box simulator of the four Table-1 devices. Given a
+//! kernel profile — output elements, flops, on-chip loads, instruction
+//! counts, register/shared-memory footprint, ILP — it predicts the kernel
+//! time as the binding resource among:
+//!
+//!   * off-chip bandwidth  (effective-BW ramp of Fig. 6),
+//!   * on-chip bandwidth   (L1 for HWC, shared/LDS for SWC; the unified-vs-
+//!                          separate L1 architecture split of paper §6.1),
+//!   * instruction issue   (latency-hiding efficiency from the occupancy
+//!                          calculator, Volkov-style),
+//!   * floating-point throughput.
+//!
+//! Calibration constants come from the paper's own measurements (§5.2
+//! bandwidth plateaus, §5.4 instruction-count observations); vendor
+//! pitfalls the paper documents are explicit rules in [`pitfalls`].
+//! The regenerated figures reproduce the paper's *shapes* — who wins, by
+//! what factor, where crossovers fall — which tests assert programmatically.
+
+pub mod energy;
+pub mod kernel;
+pub mod library;
+pub mod occupancy;
+pub mod pitfalls;
+pub mod predict;
+pub mod workloads;
+
+pub use kernel::{Caching, KernelProfile, Unroll};
+pub use predict::{predict, Bound, Prediction};

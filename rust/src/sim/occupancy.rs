@@ -1,0 +1,157 @@
+//! Occupancy calculator and latency-hiding model.
+//!
+//! Computes resident warps per CU from the kernel's register and
+//! shared-memory footprint against device limits (the calculation CUDA's
+//! occupancy API performs; the CDNA side follows the MI100/MI200 ISA guide
+//! VGPR-allocation rules). `__launch_bounds__` (paper Figs. 14/C1) is
+//! modeled as a register cap that trades spill instructions for occupancy.
+
+use crate::model::specs::GpuSpec;
+
+/// Result of an occupancy calculation.
+#[derive(Debug, Clone, Copy)]
+pub struct Occupancy {
+    /// Resident warps per CU.
+    pub warps_per_cu: f64,
+    /// Fraction of the device's warp-slot ceiling.
+    pub fraction: f64,
+    /// Which resource limits residency.
+    pub limiter: Limiter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    WarpSlots,
+    Registers,
+    SharedMemory,
+}
+
+/// Register allocation granularity: registers are allocated in chunks
+/// (256 on recent hardware), rounding the per-thread demand up.
+fn granulate(regs: u32) -> u32 {
+    regs.div_ceil(8) * 8
+}
+
+/// Occupancy for a kernel with the given per-thread registers, per-block
+/// shared memory, and block size.
+pub fn occupancy(spec: &GpuSpec, regs_per_thread: u32, smem_per_block: f64, block_threads: u32) -> Occupancy {
+    let warp = spec.warp_size();
+    let warps_per_block = block_threads.div_ceil(warp) as f64;
+
+    // register limit: regs/CU / (regs/thread * warp size)
+    let regs = granulate(regs_per_thread.max(16));
+    let reg_warps = spec.regs_per_cu as f64 / (regs as f64 * warp as f64);
+
+    // shared-memory limit: blocks/CU * warps/block
+    let smem_warps = if smem_per_block > 0.0 {
+        let blocks = (spec.smem_kib_per_cu * 1024.0 / smem_per_block).floor().max(0.0);
+        blocks * warps_per_block
+    } else {
+        f64::INFINITY
+    };
+
+    let slot_warps = spec.max_warps_per_cu as f64;
+    let warps = slot_warps.min(reg_warps).min(smem_warps).max(0.0);
+    let limiter = if warps == slot_warps {
+        Limiter::WarpSlots
+    } else if reg_warps <= smem_warps {
+        Limiter::Registers
+    } else {
+        Limiter::SharedMemory
+    };
+    Occupancy { warps_per_cu: warps, fraction: warps / slot_warps, limiter }
+}
+
+/// Latency-hiding efficiency: how close instruction issue gets to peak.
+///
+/// Volkov's model: issue efficiency saturates once (resident warps x ILP)
+/// covers the device's latency-hiding requirement. Below the knee,
+/// efficiency is proportional.
+pub fn issue_efficiency(spec: &GpuSpec, occ: &Occupancy, ilp: f64) -> f64 {
+    let effective = occ.warps_per_cu * ilp.max(1.0);
+    (effective / spec.latency_hiding_warps).min(1.0)
+}
+
+/// `__launch_bounds__` model (paper Fig. 14/C1): capping registers below
+/// the kernel's natural demand forces spills; raising the cap lowers
+/// occupancy. Returns (effective regs/thread, spill instructions per
+/// element) for a cap of `max_regs` (0 = compiler default: no cap, no
+/// spills).
+pub fn launch_bounds_effect(natural_regs: u32, max_regs: u32) -> (u32, f64) {
+    if max_regs == 0 || max_regs >= natural_regs {
+        return (natural_regs, 0.0);
+    }
+    let spilled = natural_regs - max_regs;
+    // each spilled register costs roughly a store+load pair on the spill
+    // path; weight 0.5 accounts for spills hitting only parts of the body
+    (max_regs, spilled as f64 * 0.5 * 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs::{A100, MI100, MI250X, V100};
+
+    #[test]
+    fn small_kernel_hits_warp_slot_ceiling() {
+        let occ = occupancy(&A100, 32, 0.0, 256);
+        assert_eq!(occ.limiter, Limiter::WarpSlots);
+        assert_eq!(occ.warps_per_cu, 64.0);
+        assert_eq!(occ.fraction, 1.0);
+    }
+
+    #[test]
+    fn register_pressure_lowers_occupancy() {
+        // 255 regs/thread on A100: 65536/(256*32) = 8 warps
+        let occ = occupancy(&A100, 255, 0.0, 256);
+        assert_eq!(occ.limiter, Limiter::Registers);
+        assert!((occ.warps_per_cu - 8.0).abs() < 1e-9);
+        // CDNA register file is per-lane: 2048*64/(256*64) = 8 waves
+        let occ = occupancy(&MI250X, 255, 0.0, 256);
+        assert!((occ.warps_per_cu - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_memory_limits_swc_blocks() {
+        // 48 KiB blocks on V100 (96 KiB smem): 2 blocks/CU
+        let occ = occupancy(&V100, 32, 48.0 * 1024.0, 256);
+        assert_eq!(occ.limiter, Limiter::SharedMemory);
+        assert!((occ.warps_per_cu - 16.0).abs() < 1e-9);
+        // the same block on MI100 (64 KiB LDS): 1 block/CU
+        let occ = occupancy(&MI100, 32, 48.0 * 1024.0, 256);
+        assert!((occ.warps_per_cu - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_saturates_with_warps_and_ilp() {
+        // 160 KiB shared per block, 64-thread blocks: 1 block x 2 warps
+        let low = occupancy(&A100, 32, 160.0 * 1024.0, 64);
+        assert!(low.warps_per_cu <= 2.0);
+        let e1 = issue_efficiency(&A100, &low, 1.0);
+        let e4 = issue_efficiency(&A100, &low, 4.0);
+        assert!(e1 < 1.0 && e4 > e1, "ILP compensates low occupancy");
+        let full = occupancy(&A100, 32, 0.0, 256);
+        assert_eq!(issue_efficiency(&A100, &full, 1.0), 1.0);
+    }
+
+    #[test]
+    fn launch_bounds_tradeoff() {
+        let (regs, spill) = launch_bounds_effect(128, 0);
+        assert_eq!((regs, spill), (128, 0.0));
+        let (regs, spill) = launch_bounds_effect(128, 64);
+        assert_eq!(regs, 64);
+        assert!(spill > 0.0);
+        let (regs, spill) = launch_bounds_effect(128, 200);
+        assert_eq!((regs, spill), (128, 0.0));
+    }
+
+    #[test]
+    fn occupancy_monotone_in_registers() {
+        let mut last = f64::INFINITY;
+        for regs in [32, 64, 96, 128, 192, 255] {
+            let occ = occupancy(&MI100, regs, 0.0, 256);
+            assert!(occ.warps_per_cu <= last);
+            last = occ.warps_per_cu;
+        }
+    }
+}

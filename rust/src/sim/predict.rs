@@ -1,0 +1,177 @@
+//! The timing predictor: binding-resource (roofline-style) model.
+//!
+//! `t = max(t_hbm, t_onchip, t_issue, t_flop)` with a smooth transition,
+//! where each term is derived from the kernel profile and the device spec,
+//! and instruction issue is scaled by the occupancy/latency-hiding model.
+//! Vendor pitfalls (paper §5) are applied as explicit multiplicative rules
+//! by [`super::pitfalls`] before prediction.
+
+use crate::model::specs::GpuSpec;
+
+use super::kernel::{Caching, KernelProfile};
+use super::occupancy::{issue_efficiency, occupancy, Occupancy};
+
+/// Which resource bound the predicted time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    OffChipBandwidth,
+    OnChipBandwidth,
+    InstructionIssue,
+    FloatingPoint,
+}
+
+impl std::fmt::Display for Bound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Bound::OffChipBandwidth => write!(f, "HBM-bandwidth"),
+            Bound::OnChipBandwidth => write!(f, "L1/LDS-bandwidth"),
+            Bound::InstructionIssue => write!(f, "instruction-issue"),
+            Bound::FloatingPoint => write!(f, "FP-throughput"),
+        }
+    }
+}
+
+/// Full prediction with the per-resource breakdown (seconds).
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub t_hbm: f64,
+    pub t_onchip: f64,
+    pub t_issue: f64,
+    pub t_flop: f64,
+    pub total: f64,
+    pub bound: Bound,
+    pub occupancy: Occupancy,
+    pub issue_eff: f64,
+}
+
+impl Prediction {
+    /// Million element updates per second (the paper's Table 3 unit).
+    pub fn melem_per_s(&self, elems: f64) -> f64 {
+        elems / self.total / 1e6
+    }
+}
+
+/// Predict the kernel time on a device.
+pub fn predict(spec: &GpuSpec, prof: &KernelProfile) -> Prediction {
+    // ---- off-chip: effective-bandwidth ramp (Fig. 6) ----------------------
+    let t_hbm = prof.hbm_bytes / spec.effective_bw(prof.hbm_bytes, prof.fp64);
+
+    // ---- on-chip: L1 vs shared/LDS split (paper §6.1) ---------------------
+    // HWC working-set accesses hit the L1; SWC accesses hit shared memory /
+    // LDS after one staged fill (counted in the loads by the builders).
+    let onchip_bw = match prof.caching {
+        Caching::Hwc => spec.l1_bw_bytes(),
+        Caching::Swc => spec.smem_bw_bytes(),
+    };
+    let t_onchip = prof.onchip_bytes() / onchip_bw;
+
+    // ---- instruction issue -------------------------------------------------
+    let occ = occupancy(spec, prof.regs_per_thread, prof.smem_per_block, prof.block_threads);
+    let eff = issue_efficiency(spec, &occ, prof.ilp);
+    let t_issue =
+        prof.thread_instrs() / (spec.issue_rate() * prof.ipc_fraction * eff.max(1e-3));
+
+    // ---- floating point ----------------------------------------------------
+    let t_flop = prof.flops() / spec.peak_flops(prof.fp64);
+
+    let total = t_hbm.max(t_onchip).max(t_issue).max(t_flop);
+    let bound = if total == t_hbm {
+        Bound::OffChipBandwidth
+    } else if total == t_onchip {
+        Bound::OnChipBandwidth
+    } else if total == t_issue {
+        Bound::InstructionIssue
+    } else {
+        Bound::FloatingPoint
+    };
+    Prediction { t_hbm, t_onchip, t_issue, t_flop, total, bound, occupancy: occ, issue_eff: eff }
+}
+
+/// Ideal time: read + write the computational domain exactly once at peak
+/// theoretical bandwidth (the paper's §5.4 "ideal performance" yardstick).
+pub fn ideal_time(spec: &GpuSpec, bytes_read_write: f64) -> f64 {
+    bytes_read_write / spec.mem_bw_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs::{A100, MI250X};
+    use crate::sim::kernel::Unroll;
+
+    fn copy_profile(bytes: f64) -> KernelProfile {
+        KernelProfile {
+            name: "copy".into(),
+            elems: bytes / 2.0 / 8.0,
+            dtype_bytes: 8.0,
+            fp64: true,
+            hbm_bytes: bytes,
+            flops_per_elem: 0.0,
+            onchip_loads_per_elem: 1.0,
+            instr_per_elem: 2.0,
+            ilp: 4.0,
+            ipc_fraction: 1.0,
+            regs_per_thread: 32,
+            smem_per_block: 0.0,
+            block_threads: 256,
+            caching: Caching::Hwc,
+            unroll: Unroll::Baseline,
+        }
+    }
+
+    #[test]
+    fn large_copy_is_bandwidth_bound() {
+        let p = predict(&A100, &copy_profile(128e6));
+        assert_eq!(p.bound, Bound::OffChipBandwidth);
+        // effective bandwidth ~ 90% of 1448 GiB/s
+        let eff_bw = 128e6 / p.total;
+        assert!(eff_bw > 0.8 * A100.mem_bw_bytes() && eff_bw < 0.95 * A100.mem_bw_bytes());
+    }
+
+    #[test]
+    fn small_copy_undersaturates() {
+        let small = predict(&A100, &copy_profile(64e3));
+        let big = predict(&A100, &copy_profile(128e6));
+        let bw_small = 64e3 / small.total;
+        let bw_big = 128e6 / big.total;
+        assert!(bw_small < 0.2 * bw_big, "ramp must penalize small sizes");
+    }
+
+    #[test]
+    fn tap_heavy_kernel_becomes_onchip_bound() {
+        let mut p = copy_profile(16e6);
+        p.onchip_loads_per_elem = 2049.0; // r = 1024
+        p.flops_per_elem = 2.0 * 2049.0;
+        p.instr_per_elem = 2049.0 * 1.5;
+        let a = predict(&A100, &p);
+        assert_ne!(a.bound, Bound::OffChipBandwidth);
+    }
+
+    #[test]
+    fn amd_hwc_penalized_vs_swc_at_large_radius() {
+        // the Fig. 8 observation: at r=1024 HWC is ~1.9x slower than SWC on
+        // MI250X but ~equal on A100 (unified L1)
+        let mut hw = copy_profile(16e6);
+        hw.onchip_loads_per_elem = 2049.0;
+        hw.instr_per_elem = 2049.0 * 1.3;
+        hw.flops_per_elem = 2.0 * 2049.0;
+        let mut sw = hw.clone();
+        sw.caching = Caching::Swc;
+        sw.instr_per_elem *= 1.4; // SWC index overhead
+        sw.smem_per_block = 24.0 * 1024.0;
+
+        let mi_hw = predict(&MI250X, &hw).total;
+        let mi_sw = predict(&MI250X, &sw).total;
+        assert!(mi_hw / mi_sw > 1.3, "CDNA: HWC/SWC = {}", mi_hw / mi_sw);
+
+        let a_hw = predict(&A100, &hw).total;
+        let a_sw = predict(&A100, &sw).total;
+        assert!((a_hw / a_sw) < 1.15, "A100: HWC/SWC = {}", a_hw / a_sw);
+    }
+
+    #[test]
+    fn ideal_time_is_peak_bw_roundtrip() {
+        let t = ideal_time(&A100, A100.mem_bw_bytes());
+        assert!((t - 1.0).abs() < 1e-12);
+    }
+}

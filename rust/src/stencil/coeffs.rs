@@ -1,0 +1,160 @@
+//! Finite-difference weights via Fornberg's recurrence.
+//!
+//! Mirror of `python/compile/fdcoeffs.py` (the two are pinned against each
+//! other through the classic coefficient tables in the test suites). The
+//! paper's kernels use the 6th-order radius-3 rows for MHD (§3.3) and
+//! radius-1..4 Laplacian rows for diffusion (Figs. 10-12).
+
+/// Weights for derivatives `0..=m` at point `z` given `nodes`.
+///
+/// Returns `w` with `w[k][j]` = weight of `nodes[j]` for the k-th
+/// derivative. Classic Fornberg (Math. Comp. 51, 1988), f64 arithmetic.
+pub fn fornberg_weights(z: f64, nodes: &[f64], m: usize) -> Vec<Vec<f64>> {
+    let n = nodes.len();
+    assert!(n > 0, "need at least one node");
+    let mut delta = vec![vec![vec![0.0f64; n]; n]; m + 1];
+    delta[0][0][0] = 1.0;
+    let mut c1 = 1.0f64;
+    for i in 1..n {
+        let mut c2 = 1.0f64;
+        for j in 0..i {
+            let c3 = nodes[i] - nodes[j];
+            c2 *= c3;
+            for k in 0..=m.min(i) {
+                let prev = if k > 0 { delta[k - 1][i - 1][j] } else { 0.0 };
+                delta[k][i][j] = ((nodes[i] - z) * delta[k][i - 1][j] - k as f64 * prev) / c3;
+            }
+        }
+        for k in 0..=m.min(i) {
+            let prev = if k > 0 { delta[k - 1][i - 1][i - 1] } else { 0.0 };
+            delta[k][i][i] =
+                c1 / c2 * (k as f64 * prev - (nodes[i - 1] - z) * delta[k][i - 1][i - 1]);
+        }
+        c1 = c2;
+    }
+    (0..=m).map(|k| delta[k][n - 1].clone()).collect()
+}
+
+/// Central-difference weights of maximal order for nodes `-r..=r`.
+///
+/// `central_weights(2, 3)` is the paper's 6th-order Laplacian row
+/// `[1/90, -3/20, 3/2, -49/18, 3/2, -3/20, 1/90]`.
+pub fn central_weights(deriv: usize, radius: usize) -> Vec<f64> {
+    assert!(radius >= 1, "radius must be >= 1");
+    assert!(deriv <= 2 * radius, "derivative order exceeds stencil support");
+    let nodes: Vec<f64> = (-(radius as i64)..=radius as i64).map(|i| i as f64).collect();
+    let mut w = fornberg_weights(0.0, &nodes, deriv).swap_remove(deriv);
+    // Snap float-noise taps to exact zero (the Python mirror computes these
+    // rationally and gets exact zeros; zero taps are pruned in kernels).
+    let scale = w.iter().fold(0.0f64, |m, c| m.max(c.abs()));
+    for c in &mut w {
+        if c.abs() < 1e-13 * scale {
+            *c = 0.0;
+        }
+    }
+    w
+}
+
+/// First/second-derivative coefficient pair used by the MHD operators.
+#[derive(Debug, Clone)]
+pub struct CentralPair {
+    pub radius: usize,
+    pub c1: Vec<f64>,
+    pub c2: Vec<f64>,
+}
+
+impl CentralPair {
+    pub fn new(radius: usize) -> Self {
+        Self { radius, c1: central_weights(1, radius), c2: central_weights(2, radius) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(got: &[f64], want: &[f64]) {
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() <= 1e-14 * (1.0 + w.abs()), "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn first_derivative_radius3_matches_paper() {
+        assert_close(
+            &central_weights(1, 3),
+            &[-1.0 / 60.0, 3.0 / 20.0, -3.0 / 4.0, 0.0, 3.0 / 4.0, -3.0 / 20.0, 1.0 / 60.0],
+        );
+    }
+
+    #[test]
+    fn second_derivative_radius3_matches_paper() {
+        assert_close(
+            &central_weights(2, 3),
+            &[1.0 / 90.0, -3.0 / 20.0, 1.5, -49.0 / 18.0, 1.5, -3.0 / 20.0, 1.0 / 90.0],
+        );
+    }
+
+    #[test]
+    fn radius1_classics() {
+        assert_close(&central_weights(1, 1), &[-0.5, 0.0, 0.5]);
+        assert_close(&central_weights(2, 1), &[1.0, -2.0, 1.0]);
+    }
+
+    #[test]
+    fn radius2_second() {
+        assert_close(
+            &central_weights(2, 2),
+            &[-1.0 / 12.0, 4.0 / 3.0, -5.0 / 2.0, 4.0 / 3.0, -1.0 / 12.0],
+        );
+    }
+
+    #[test]
+    fn derivative_weights_annihilate_constants() {
+        for r in 1..=6 {
+            for d in 1..=2 {
+                let s: f64 = central_weights(d, r).iter().sum();
+                assert!(s.abs() < 1e-12, "r={r} d={d} sum={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn polynomial_exactness() {
+        // d-th derivative of x^k at 0 is d! iff k == d (k <= 2r)
+        for r in 1..=5usize {
+            for d in 1..=2usize {
+                let w = central_weights(d, r);
+                for k in 0..=(2 * r) {
+                    let got: f64 = w
+                        .iter()
+                        .zip(-(r as i64)..=r as i64)
+                        .map(|(c, x)| c * (x as f64).powi(k as i32))
+                        .sum();
+                    let want = if k == d { (1..=d).product::<usize>() as f64 } else { 0.0 };
+                    assert!((got - want).abs() < 1e-9, "r={r} d={d} k={k}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        for r in 1..=5 {
+            let c1 = central_weights(1, r);
+            let c2 = central_weights(2, r);
+            for j in 0..r {
+                assert!((c1[j] + c1[2 * r - j]).abs() < 1e-14);
+                assert!((c2[j] - c2[2 * r - j]).abs() < 1e-14);
+            }
+            assert_eq!(c1[r], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "derivative order exceeds")]
+    fn rejects_unsupported_order() {
+        central_weights(5, 1);
+    }
+}

@@ -1,0 +1,307 @@
+//! Padded structured grids (paper §2.4).
+//!
+//! A [`Grid`] stores a d-dimensional scalar field with ghost zones of width
+//! `r` (the stencil influence radius) around the interior, in the row-wise
+//! scan layout of paper §4.4: x fastest, `i + j*px + k*px*py` over the
+//! *padded* extents. Lower dimensions use `ny = nz = 1`. The boundary-value
+//! function β of Eq. (2) is applied by [`Grid::fill_ghosts`].
+
+/// Boundary-value function β(f, i) of paper Eq. (2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Boundary {
+    /// Wrap-around (the paper's MHD setup runs on a periodic box).
+    Periodic,
+    /// Constant value outside the domain (e.g. Dirichlet data).
+    Fixed(f64),
+}
+
+/// A scalar field on a structured grid with ghost padding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    /// Interior extents.
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    /// Ghost-zone width (stencil influence radius).
+    pub r: usize,
+    data: Vec<f64>,
+}
+
+impl Grid {
+    /// Zero-initialized grid with interior `(nx, ny, nz)` and ghost width `r`.
+    pub fn new(nx: usize, ny: usize, nz: usize, r: usize) -> Self {
+        assert!(nx > 0 && ny > 0 && nz > 0, "empty grid");
+        let (px, py, pz) = (nx + 2 * r, ny + 2 * r, nz + 2 * r);
+        Self { nx, ny, nz, r, data: vec![0.0; px * py * pz] }
+    }
+
+    /// 1-D convenience constructor.
+    pub fn new_1d(nx: usize, r: usize) -> Self {
+        Self::new_nd(&[nx], r)
+    }
+
+    /// Constructor from a 1-3 element interior shape.
+    pub fn new_nd(shape: &[usize], r: usize) -> Self {
+        match *shape {
+            [nx] => Self::new(nx, 1, 1, r),
+            [nx, ny] => Self::new(nx, ny, 1, r),
+            [nx, ny, nz] => Self::new(nx, ny, nz, r),
+            _ => panic!("1-3 dimensions supported, got {}", shape.len()),
+        }
+    }
+
+    /// Note: for a grid built via [`Grid::new_nd`] from a lower-dimensional
+    /// shape, padding is still applied in all three axes; the unused axes
+    /// have interior extent 1. `fill_ghosts` keeps them consistent.
+    pub fn from_fn(
+        shape: &[usize],
+        r: usize,
+        mut f: impl FnMut(usize, usize, usize) -> f64,
+    ) -> Self {
+        let mut g = Self::new_nd(shape, r);
+        for k in 0..g.nz {
+            for j in 0..g.ny {
+                for i in 0..g.nx {
+                    let v = f(i, j, k);
+                    g.set(i, j, k, v);
+                }
+            }
+        }
+        g
+    }
+
+    /// Padded extents.
+    #[inline]
+    pub fn padded(&self) -> (usize, usize, usize) {
+        (self.nx + 2 * self.r, self.ny + 2 * self.r, self.nz + 2 * self.r)
+    }
+
+    /// Number of interior elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Linear index into padded storage from *padded* coordinates.
+    #[inline(always)]
+    pub fn pidx(&self, pi: usize, pj: usize, pk: usize) -> usize {
+        let (px, py, _) = self.padded();
+        pi + px * (pj + py * pk)
+    }
+
+    /// Linear index into padded storage from *interior* coordinates.
+    #[inline(always)]
+    pub fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        self.pidx(i + self.r, j + self.r, k + self.r)
+    }
+
+    /// Interior element access.
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> f64 {
+        self.data[self.idx(i, j, k)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: f64) {
+        let ix = self.idx(i, j, k);
+        self.data[ix] = v;
+    }
+
+    /// Raw padded storage (x fastest).
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy the interior into a contiguous `Vec` (x fastest).
+    pub fn interior_to_vec(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.len());
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                let base = self.idx(0, j, k);
+                out.extend_from_slice(&self.data[base..base + self.nx]);
+            }
+        }
+        out
+    }
+
+    /// Fill the interior from a contiguous slice (x fastest).
+    pub fn interior_from_slice(&mut self, src: &[f64]) {
+        assert_eq!(src.len(), self.len(), "interior size mismatch");
+        let nx = self.nx;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                let base = self.idx(0, j, k);
+                let s = (k * self.ny + j) * nx;
+                self.data[base..base + nx].copy_from_slice(&src[s..s + nx]);
+            }
+        }
+    }
+
+    /// Copy the full padded storage into a `Vec` (for PJRT upload).
+    pub fn padded_to_vec(&self) -> Vec<f64> {
+        self.data.clone()
+    }
+
+    /// Apply the boundary-value function β to every ghost element (Eq. 2).
+    ///
+    /// Perf (EXPERIMENTS.md §Perf/L3-2): only ghost cells are visited. Rows
+    /// fully interior in (y, z) touch just their two x-ghost segments; the
+    /// per-cell interior test of the naive version scanned the whole padded
+    /// volume.
+    pub fn fill_ghosts(&mut self, b: Boundary) {
+        let (px, py, pz) = self.padded();
+        let r = self.r as i64;
+        let (nx, ny, nz) = (self.nx as i64, self.ny as i64, self.nz as i64);
+        macro_rules! fill_cell {
+            ($pi:expr, $pj:expr, $pk:expr) => {{
+                let v = match b {
+                    Boundary::Fixed(c) => c,
+                    Boundary::Periodic => {
+                        let wi = ($pi as i64 - r).rem_euclid(nx) as usize;
+                        let wj = ($pj as i64 - r).rem_euclid(ny) as usize;
+                        let wk = ($pk as i64 - r).rem_euclid(nz) as usize;
+                        self.data[self.idx(wi, wj, wk)]
+                    }
+                };
+                let ix = self.pidx($pi, $pj, $pk);
+                self.data[ix] = v;
+            }};
+        }
+        for pk in 0..pz {
+            let k_interior = (r..r + nz).contains(&(pk as i64));
+            for pj in 0..py {
+                let j_interior = (r..r + ny).contains(&(pj as i64));
+                if k_interior && j_interior {
+                    // interior row: only the two x-ghost segments
+                    for pi in (0..self.r).chain(px - self.r..px) {
+                        fill_cell!(pi, pj, pk);
+                    }
+                } else {
+                    for pi in 0..px {
+                        fill_cell!(pi, pj, pk);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Max-norm of the interior.
+    pub fn max_abs(&self) -> f64 {
+        let mut m = 0.0f64;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                for i in 0..self.nx {
+                    m = m.max(self.get(i, j, k).abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Mean of the interior.
+    pub fn mean(&self) -> f64 {
+        let mut s = 0.0f64;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                for i in 0..self.nx {
+                    s += self.get(i, j, k);
+                }
+            }
+        }
+        s / self.len() as f64
+    }
+
+    /// Max-norm difference of two interiors.
+    pub fn max_abs_diff(&self, other: &Grid) -> f64 {
+        assert_eq!((self.nx, self.ny, self.nz), (other.nx, other.ny, other.nz));
+        let mut m = 0.0f64;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                for i in 0..self.nx {
+                    m = m.max((self.get(i, j, k) - other.get(i, j, k)).abs());
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_row_wise_scan() {
+        // paper §4.4: linear index i + j*nx + k*nx*ny over padded extents
+        let g = Grid::new(4, 3, 2, 1);
+        let (px, py, _) = g.padded();
+        assert_eq!((px, py), (6, 5));
+        assert_eq!(g.pidx(1, 2, 3), 1 + 2 * 6 + 3 * 6 * 5);
+        assert_eq!(g.idx(0, 0, 0), g.pidx(1, 1, 1));
+    }
+
+    #[test]
+    fn interior_roundtrip() {
+        let src: Vec<f64> = (0..24).map(|v| v as f64).collect();
+        let mut g = Grid::new(4, 3, 2, 2);
+        g.interior_from_slice(&src);
+        assert_eq!(g.interior_to_vec(), src);
+        assert_eq!(g.get(1, 2, 1), src[1 + 2 * 4 + 1 * 12]);
+    }
+
+    #[test]
+    fn periodic_ghosts_wrap() {
+        let mut g = Grid::from_fn(&[4], 2, |i, _, _| i as f64);
+        g.fill_ghosts(Boundary::Periodic);
+        let d = g.data();
+        // padded x row at j=k=r=2... 1-D: ny=nz=1, ghosts on y/z wrap to the row
+        let row: Vec<f64> = (0..8).map(|pi| d[g.pidx(pi, 2, 2)]).collect();
+        assert_eq!(row, vec![2.0, 3.0, 0.0, 1.0, 2.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn fixed_ghosts() {
+        let mut g = Grid::from_fn(&[2, 2], 1, |i, j, _| (i + 10 * j) as f64);
+        g.fill_ghosts(Boundary::Fixed(-7.0));
+        let d = g.data();
+        assert_eq!(d[g.pidx(0, 0, 1)], -7.0);
+        assert_eq!(d[g.pidx(1, 1, 1)], 0.0);
+        assert_eq!(d[g.pidx(2, 2, 1)], 11.0);
+    }
+
+    #[test]
+    fn periodic_3d_corner() {
+        let mut g = Grid::from_fn(&[3, 3, 3], 1, |i, j, k| (i + 10 * j + 100 * k) as f64);
+        g.fill_ghosts(Boundary::Periodic);
+        let d = g.data();
+        // ghost at padded (0,0,0) == interior (2,2,2)
+        assert_eq!(d[g.pidx(0, 0, 0)], 222.0);
+        // ghost at padded (4,0,0) == interior (0,2,2)
+        assert_eq!(d[g.pidx(4, 0, 0)], 220.0);
+    }
+
+    #[test]
+    fn stats() {
+        let mut g = Grid::new_1d(4, 1);
+        g.interior_from_slice(&[1.0, -3.0, 2.0, 0.0]);
+        assert_eq!(g.max_abs(), 3.0);
+        assert_eq!(g.mean(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "1-3 dimensions")]
+    fn rejects_4d() {
+        Grid::new_nd(&[2, 2, 2, 2], 1);
+    }
+}

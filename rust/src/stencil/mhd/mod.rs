@@ -1,0 +1,209 @@
+//! Non-ideal compressible MHD (paper §3.3 and Appendix A), native engine.
+//!
+//! Eight coupled fields — logarithmic density, velocity, specific entropy,
+//! and magnetic vector potential — advanced with Williamson 2N-RK3 and
+//! 6th-order (radius-3 by default) central differences on a periodic box.
+//! This is the Rust mirror of `python/compile/mhd_eqs.py`; the two are
+//! pinned against each other through PJRT executions of the exported
+//! oracle artifacts (rust/tests/integration_runtime.rs).
+
+pub mod ops;
+pub mod rhs;
+pub mod rk3;
+
+pub use ops::DiffOps;
+pub use rhs::{MhdParams, MhdRhs};
+pub use rk3::{MhdStepper, RK3_ALPHA, RK3_BETA};
+
+use super::grid::Grid;
+
+/// Field indices in the canonical order shared with the Python layer.
+pub const LNRHO: usize = 0;
+pub const UX: usize = 1;
+pub const UY: usize = 2;
+pub const UZ: usize = 3;
+pub const SS: usize = 4;
+pub const AX: usize = 5;
+pub const AY: usize = 6;
+pub const AZ: usize = 7;
+pub const NFIELDS: usize = 8;
+pub const FIELD_NAMES: [&str; NFIELDS] = ["lnrho", "ux", "uy", "uz", "ss", "ax", "ay", "az"];
+
+/// The full simulation state: eight scalar grids with shared extents.
+#[derive(Debug, Clone)]
+pub struct MhdState {
+    pub fields: Vec<Grid>,
+}
+
+impl MhdState {
+    /// Zero state on an `(nx, ny, nz)` box with ghost width `r`.
+    pub fn zeros(nx: usize, ny: usize, nz: usize, r: usize) -> Self {
+        Self { fields: (0..NFIELDS).map(|_| Grid::new(nx, ny, nz, r)).collect() }
+    }
+
+    /// Build each field from a function of `(field, i, j, k)`.
+    pub fn from_fn(
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        r: usize,
+        mut f: impl FnMut(usize, usize, usize, usize) -> f64,
+    ) -> Self {
+        let fields = (0..NFIELDS)
+            .map(|fi| Grid::from_fn(&[nx, ny, nz], r, |i, j, k| f(fi, i, j, k)))
+            .collect();
+        Self { fields }
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        let g = &self.fields[0];
+        (g.nx, g.ny, g.nz)
+    }
+
+    /// Interior of all fields stacked in the AOT artifacts' layout.
+    ///
+    /// The Python arrays are `(8, nx, ny, nz)` in C order: the *first*
+    /// spatial axis is x and the contiguous axis is z, whereas [`Grid`]
+    /// stores x contiguously (paper §4.4 scan order). This exporter
+    /// transposes so that vector components pair with the same spatial
+    /// axes on both sides (see the layout note in DESIGN.md §3).
+    pub fn stacked_interior(&self) -> Vec<f64> {
+        let (nx, ny, nz) = self.shape();
+        // Perf (EXPERIMENTS.md §Perf/L3-4): strided walk with a running
+        // index instead of per-element idx() multiplications.
+        let mut out = vec![0.0f64; NFIELDS * nx * ny * nz];
+        let mut oi = 0;
+        for f in &self.fields {
+            let (px, py, _) = f.padded();
+            let d = f.data();
+            let zstride = px * py;
+            for i in 0..nx {
+                for j in 0..ny {
+                    let mut ix = f.idx(i, j, 0);
+                    for _ in 0..nz {
+                        out[oi] = d[ix];
+                        oi += 1;
+                        ix += zstride;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Padded storage of all fields stacked, C order `(8, px, py, pz)`
+    /// (the `fpad` artifact input). Ghosts must be filled by the caller.
+    pub fn stacked_padded(&self) -> Vec<f64> {
+        let (px, py, pz) = self.fields[0].padded();
+        let mut out = vec![0.0f64; NFIELDS * px * py * pz];
+        let zstride = px * py;
+        let mut oi = 0;
+        for f in &self.fields {
+            let data = f.data();
+            for pi in 0..px {
+                for pj in 0..py {
+                    let mut ix = pi + px * pj;
+                    for _ in 0..pz {
+                        out[oi] = data[ix];
+                        oi += 1;
+                        ix += zstride;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Rebuild interiors from a stacked C-order vector
+    /// (inverse of `stacked_interior`).
+    pub fn load_stacked_interior(&mut self, src: &[f64]) {
+        let (nx, ny, nz) = self.shape();
+        let n = nx * ny * nz;
+        assert_eq!(src.len(), NFIELDS * n, "stacked size mismatch");
+        for (fi, f) in self.fields.iter_mut().enumerate() {
+            let base = fi * n;
+            let (px, py, _) = f.padded();
+            let zstride = px * py;
+            for i in 0..nx {
+                for j in 0..ny {
+                    let mut ix = f.idx(i, j, 0);
+                    let row = &src[base + (i * ny + j) * nz..base + (i * ny + j) * nz + nz];
+                    let d = f.data_mut();
+                    for &v in row {
+                        d[ix] = v;
+                        ix += zstride;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fill ghost zones of every field (periodic box, as in the paper).
+    pub fn fill_ghosts(&mut self) {
+        for f in &mut self.fields {
+            f.fill_ghosts(super::grid::Boundary::Periodic);
+        }
+    }
+
+    /// Max-norm over all fields (stability monitoring).
+    pub fn max_abs(&self) -> f64 {
+        self.fields.iter().map(|f| f.max_abs()).fold(0.0, f64::max)
+    }
+
+    /// Total mass `integral(exp(lnrho))` (conservation monitoring).
+    pub fn total_mass(&self, dx: f64) -> f64 {
+        let g = &self.fields[LNRHO];
+        let mut s = 0.0;
+        for k in 0..g.nz {
+            for j in 0..g.ny {
+                for i in 0..g.nx {
+                    s += g.get(i, j, k).exp();
+                }
+            }
+        }
+        s * dx * dx * dx
+    }
+
+    /// Volume-integrated kinetic energy `1/2 rho u^2 dV`.
+    pub fn kinetic_energy(&self, dx: f64) -> f64 {
+        let lr = &self.fields[LNRHO];
+        let mut s = 0.0;
+        for k in 0..lr.nz {
+            for j in 0..lr.ny {
+                for i in 0..lr.nx {
+                    let rho = lr.get(i, j, k).exp();
+                    let u2 = self.fields[UX].get(i, j, k).powi(2)
+                        + self.fields[UY].get(i, j, k).powi(2)
+                        + self.fields[UZ].get(i, j, k).powi(2);
+                    s += 0.5 * rho * u2;
+                }
+            }
+        }
+        s * dx * dx * dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stacked_roundtrip() {
+        let mut st = MhdState::from_fn(4, 3, 2, 3, |f, i, j, k| (f * 1000 + i + 10 * j + 100 * k) as f64);
+        let v = st.stacked_interior();
+        assert_eq!(v.len(), 8 * 24);
+        let mut st2 = MhdState::zeros(4, 3, 2, 3);
+        st2.load_stacked_interior(&v);
+        assert_eq!(st2.stacked_interior(), v);
+        st.fill_ghosts();
+        assert_eq!(st.stacked_padded().len(), 8 * 10 * 9 * 8);
+    }
+
+    #[test]
+    fn energy_and_mass_of_rest_state() {
+        let st = MhdState::zeros(8, 8, 8, 3);
+        assert_eq!(st.kinetic_energy(1.0), 0.0);
+        let m = st.total_mass(1.0);
+        assert!((m - 512.0).abs() < 1e-9); // rho = exp(0) = 1
+    }
+}

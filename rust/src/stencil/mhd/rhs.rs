@@ -1,0 +1,303 @@
+//! Right-hand sides of the MHD system (paper Appendix A, Eqs. A1-A4).
+//!
+//! Structural mirror of `python/compile/mhd_eqs.mhd_rhs`: the linear part
+//! gamma (all ~60 stencil contractions) followed by the nonlinear pointwise
+//! map phi. Kept in the same order so the two implementations can be
+//! compared term by term.
+
+use super::ops::DiffOps;
+use super::{MhdState, AX, LNRHO, NFIELDS, SS, UX};
+use crate::stencil::grid::Grid;
+
+/// Physical parameters; defaults follow the paper's Pencil-style setup
+/// (identical to `python/compile/mhd_eqs.MhdParams`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MhdParams {
+    pub cs0: f64,
+    pub gamma: f64,
+    pub cp: f64,
+    pub rho0: f64,
+    pub nu: f64,
+    pub eta: f64,
+    pub zeta: f64,
+    pub mu0: f64,
+    pub kappa: f64,
+    pub dx: f64,
+}
+
+impl Default for MhdParams {
+    fn default() -> Self {
+        Self {
+            cs0: 1.0,
+            gamma: 5.0 / 3.0,
+            cp: 1.0,
+            rho0: 1.0,
+            nu: 5e-3,
+            eta: 5e-3,
+            zeta: 0.0,
+            mu0: 1.0,
+            kappa: 1e-3,
+            dx: 1.0,
+        }
+    }
+}
+
+impl MhdParams {
+    /// Reference temperature from the ideal-gas closure.
+    pub fn temp0(&self) -> f64 {
+        self.cs0 * self.cs0 / (self.cp * (self.gamma - 1.0))
+    }
+}
+
+/// RHS evaluator; owns the derivative operators.
+#[derive(Debug, Clone)]
+pub struct MhdRhs {
+    pub par: MhdParams,
+    pub ops: DiffOps,
+}
+
+impl MhdRhs {
+    pub fn new(par: MhdParams, radius: usize) -> Self {
+        let ops = DiffOps::new(radius, par.dx);
+        Self { par, ops }
+    }
+
+    /// Evaluate d(fields)/dt. Ghost zones of `state` must be filled.
+    ///
+    /// Returns the eight RHS grids in canonical field order.
+    pub fn eval(&self, state: &MhdState) -> Vec<Grid> {
+        let p = &self.par;
+        let ops = &self.ops;
+        let lnrho = &state.fields[LNRHO];
+        let ss = &state.fields[SS];
+        let uu = [&state.fields[UX], &state.fields[UX + 1], &state.fields[UX + 2]];
+        let aa = [&state.fields[AX], &state.fields[AX + 1], &state.fields[AX + 2]];
+        let (nx, ny, nz) = state.shape();
+        let r = lnrho.r;
+
+        // ---- linear part gamma: every stencil contraction ----------------
+        let glnrho: Vec<Grid> = (0..3).map(|i| ops.d1(lnrho, i)).collect();
+        let gss: Vec<Grid> = (0..3).map(|i| ops.d1(ss, i)).collect();
+        let lap_lnrho = ops.laplacian(lnrho, 3);
+        let lap_ss = ops.laplacian(ss, 3);
+        // du[i][j] = d u_i / d x_j
+        let du: Vec<Vec<Grid>> =
+            (0..3).map(|i| (0..3).map(|j| ops.d1(uu[i], j)).collect()).collect();
+        let lap_u: Vec<Grid> = (0..3).map(|i| ops.laplacian(uu[i], 3)).collect();
+        let gdivu: Vec<Grid> = (0..3)
+            .map(|i| {
+                let mut acc = Grid::new(nx, ny, nz, r);
+                for j in 0..3 {
+                    let t = if i == j { ops.d2(uu[j], i) } else { ops.d1d1(uu[j], j, i) };
+                    super::ops::add_assign(&mut acc, &t);
+                }
+                acc
+            })
+            .collect();
+        let da: Vec<Vec<Grid>> =
+            (0..3).map(|i| (0..3).map(|j| ops.d1(aa[i], j)).collect()).collect();
+        let lap_a: Vec<Grid> = (0..3).map(|i| ops.laplacian(aa[i], 3)).collect();
+        let gdiva: Vec<Grid> = (0..3)
+            .map(|i| {
+                let mut acc = Grid::new(nx, ny, nz, r);
+                for j in 0..3 {
+                    let t = if i == j { ops.d2(aa[j], i) } else { ops.d1d1(aa[j], j, i) };
+                    super::ops::add_assign(&mut acc, &t);
+                }
+                acc
+            })
+            .collect();
+
+        // ---- nonlinear pointwise part phi --------------------------------
+        // Perf (EXPERIMENTS.md §Perf/L3-3): the pointwise assembly is
+        // parallelized over z-planes; each plane writes a local buffer of
+        // 8 RHS values per point that is scattered into the output grids.
+        let mut rhs: Vec<Grid> = (0..NFIELDS).map(|_| Grid::new(nx, ny, nz, r)).collect();
+        let ln_rho0 = p.rho0.ln();
+        let temp0 = p.temp0();
+
+        let planes: Vec<Vec<[f64; NFIELDS]>> = crate::util::par::par_map(nz, |k| {
+            let mut plane = vec![[0.0f64; NFIELDS]; nx * ny];
+            for j in 0..ny {
+                for i in 0..nx {
+                    let at = |g: &Grid| g.get(i, j, k);
+                    let lnrho_v = at(lnrho);
+                    let ss_v = at(ss);
+                    let u = [at(uu[0]), at(uu[1]), at(uu[2])];
+                    let glr = [at(&glnrho[0]), at(&glnrho[1]), at(&glnrho[2])];
+                    let gs = [at(&gss[0]), at(&gss[1]), at(&gss[2])];
+                    let duv = [
+                        [at(&du[0][0]), at(&du[0][1]), at(&du[0][2])],
+                        [at(&du[1][0]), at(&du[1][1]), at(&du[1][2])],
+                        [at(&du[2][0]), at(&du[2][1]), at(&du[2][2])],
+                    ];
+                    let divu = duv[0][0] + duv[1][1] + duv[2][2];
+                    let rho = lnrho_v.exp();
+                    let inv_rho = (-lnrho_v).exp();
+                    let exparg = p.gamma * ss_v / p.cp + (p.gamma - 1.0) * (lnrho_v - ln_rho0);
+                    let cs2 = p.cs0 * p.cs0 * exparg.exp();
+                    let temp = temp0 * exparg.exp();
+
+                    // B = curl A, j = (grad div A - lap A)/mu0
+                    let dav = [
+                        [at(&da[0][0]), at(&da[0][1]), at(&da[0][2])],
+                        [at(&da[1][0]), at(&da[1][1]), at(&da[1][2])],
+                        [at(&da[2][0]), at(&da[2][1]), at(&da[2][2])],
+                    ];
+                    let bb = [
+                        dav[2][1] - dav[1][2],
+                        dav[0][2] - dav[2][0],
+                        dav[1][0] - dav[0][1],
+                    ];
+                    let jv = [
+                        (at(&gdiva[0]) - at(&lap_a[0])) / p.mu0,
+                        (at(&gdiva[1]) - at(&lap_a[1])) / p.mu0,
+                        (at(&gdiva[2]) - at(&lap_a[2])) / p.mu0,
+                    ];
+                    let jxb = [
+                        jv[1] * bb[2] - jv[2] * bb[1],
+                        jv[2] * bb[0] - jv[0] * bb[2],
+                        jv[0] * bb[1] - jv[1] * bb[0],
+                    ];
+                    let uxb = [
+                        u[1] * bb[2] - u[2] * bb[1],
+                        u[2] * bb[0] - u[0] * bb[2],
+                        u[0] * bb[1] - u[1] * bb[0],
+                    ];
+
+                    // traceless rate-of-shear
+                    let mut s_t = [[0.0f64; 3]; 3];
+                    for a in 0..3 {
+                        for b in 0..3 {
+                            s_t[a][b] = 0.5 * (duv[a][b] + duv[b][a]);
+                            if a == b {
+                                s_t[a][b] -= divu / 3.0;
+                            }
+                        }
+                    }
+                    let mut s2 = 0.0;
+                    let mut s_glnrho = [0.0f64; 3];
+                    for a in 0..3 {
+                        for b in 0..3 {
+                            s2 += s_t[a][b] * s_t[a][b];
+                            s_glnrho[a] += s_t[a][b] * glr[b];
+                        }
+                    }
+
+                    let cell = &mut plane[j * nx + i];
+                    // (A1)
+                    cell[LNRHO] = -(u[0] * glr[0] + u[1] * glr[1] + u[2] * glr[2]) - divu;
+
+                    // (A2)
+                    for a in 0..3 {
+                        let adv = -(u[0] * duv[a][0] + u[1] * duv[a][1] + u[2] * duv[a][2]);
+                        let press = -cs2 * (gs[a] / p.cp + glr[a]);
+                        let lorentz = jxb[a] * inv_rho;
+                        let visc = p.nu
+                            * (at(&lap_u[a]) + at(&gdivu[a]) / 3.0 + 2.0 * s_glnrho[a])
+                            + p.zeta * at(&gdivu[a]);
+                        cell[UX + a] = adv + press + lorentz + visc;
+                    }
+
+                    // (A3): div(K grad T) = K T (lap lnT + |grad lnT|^2)
+                    let glnt = [
+                        p.gamma / p.cp * gs[0] + (p.gamma - 1.0) * glr[0],
+                        p.gamma / p.cp * gs[1] + (p.gamma - 1.0) * glr[1],
+                        p.gamma / p.cp * gs[2] + (p.gamma - 1.0) * glr[2],
+                    ];
+                    let lap_lnt =
+                        p.gamma / p.cp * at(&lap_ss) + (p.gamma - 1.0) * at(&lap_lnrho);
+                    let div_k_gradt = p.kappa
+                        * temp
+                        * (lap_lnt + glnt[0] * glnt[0] + glnt[1] * glnt[1] + glnt[2] * glnt[2]);
+                    let j2 = jv[0] * jv[0] + jv[1] * jv[1] + jv[2] * jv[2];
+                    let heat = div_k_gradt
+                        + p.eta * p.mu0 * j2
+                        + 2.0 * rho * p.nu * s2
+                        + p.zeta * rho * divu * divu;
+                    cell[SS] =
+                        -(u[0] * gs[0] + u[1] * gs[1] + u[2] * gs[2]) + heat * inv_rho / temp;
+
+                    // (A4)
+                    for a in 0..3 {
+                        cell[AX + a] = uxb[a] + p.eta * at(&lap_a[a]);
+                    }
+                }
+            }
+            plane
+        });
+        for (k, plane) in planes.into_iter().enumerate() {
+            for j in 0..ny {
+                for i in 0..nx {
+                    let cell = plane[j * nx + i];
+                    for (f, g) in rhs.iter_mut().enumerate() {
+                        g.set(i, j, k, cell[f]);
+                    }
+                }
+            }
+        }
+        rhs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::mhd::MhdState;
+
+    #[test]
+    fn uniform_state_at_rest_is_steady() {
+        let mut st = MhdState::zeros(8, 8, 8, 3);
+        for g in &mut st.fields {
+            let _ = g;
+        }
+        // uniform lnrho/ss, zero u and A
+        st.fields[LNRHO] = Grid::from_fn(&[8, 8, 8], 3, |_, _, _| 0.3);
+        st.fields[SS] = Grid::from_fn(&[8, 8, 8], 3, |_, _, _| -0.2);
+        st.fill_ghosts();
+        let rhs = MhdRhs::new(MhdParams { dx: 0.4, ..Default::default() }, 3).eval(&st);
+        for (f, g) in rhs.iter().enumerate() {
+            assert!(g.max_abs() < 1e-12, "field {f} rhs nonzero: {}", g.max_abs());
+        }
+    }
+
+    #[test]
+    fn induction_is_pure_diffusion_at_rest() {
+        let mut st = MhdState::zeros(12, 12, 12, 3);
+        st.fields[AX] = Grid::from_fn(&[12, 12, 12], 3, |i, j, k| {
+            1e-2 * (((i * 5 + j * 3 + k * 7) % 11) as f64 - 5.0)
+        });
+        st.fill_ghosts();
+        let par = MhdParams { dx: 0.37, eta: 1e-2, ..Default::default() };
+        let rhs = MhdRhs::new(par.clone(), 3).eval(&st);
+        let ops = DiffOps::new(3, par.dx);
+        let want = ops.laplacian(&st.fields[AX], 3);
+        for k in 0..12 {
+            for j in 0..12 {
+                for i in 0..12 {
+                    let w = par.eta * want.get(i, j, k);
+                    assert!((rhs[AX].get(i, j, k) - w).abs() < 1e-12);
+                }
+            }
+        }
+        assert!(rhs[AX + 1].max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn advection_of_lnrho_by_uniform_flow() {
+        // uniform u, lnrho varying: rhs_lnrho = -u . grad lnrho (divu = 0)
+        let n = 16;
+        let dx = 2.0 * std::f64::consts::PI / n as f64;
+        let mut st = MhdState::zeros(n, n, n, 3);
+        st.fields[LNRHO] = Grid::from_fn(&[n, n, n], 3, |i, _, _| 0.01 * (i as f64 * dx).sin());
+        st.fields[UX] = Grid::from_fn(&[n, n, n], 3, |_, _, _| 0.5);
+        st.fill_ghosts();
+        let par = MhdParams { dx, nu: 0.0, kappa: 0.0, ..Default::default() };
+        let rhs = MhdRhs::new(par, 3).eval(&st);
+        for i in 0..n {
+            let want = -0.5 * 0.01 * (i as f64 * dx).cos();
+            let got = rhs[LNRHO].get(i, 4, 4);
+            assert!((got - want).abs() < 1e-6, "i={i} got={got} want={want}");
+        }
+    }
+}

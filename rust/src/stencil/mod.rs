@@ -1,0 +1,23 @@
+//! Native Rust stencil engine.
+//!
+//! The from-scratch substrate the paper's workloads run on (DESIGN.md §4):
+//! padded grids with boundary functions (paper Eq. 2), Fornberg
+//! finite-difference coefficients, 1/2/3-D discrete cross-correlation
+//! (Eq. 3), the forward-Euler diffusion stepper (Eqs. 5/7), and the full
+//! non-ideal compressible MHD system with 2N-RK3 time integration
+//! (Appendix A). It serves three roles at once:
+//!
+//! 1. CPU baseline comparator for the PJRT-executed artifacts,
+//! 2. independent verification oracle (tested against HLO executions of the
+//!    pure-jnp reference),
+//! 3. workload characterizer feeding the GPU performance model
+//!    ([`crate::sim`]).
+
+pub mod coeffs;
+pub mod conv;
+pub mod diffusion;
+pub mod grid;
+pub mod mhd;
+
+pub use coeffs::central_weights;
+pub use grid::{Boundary, Grid};

@@ -1,0 +1,138 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Implements the paper's measurement methodology (§5.1): warm-up
+//! iterations, then N timed iterations, reporting the *median* plus spread.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics, in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let median_s = if n % 2 == 1 {
+            samples[n / 2]
+        } else {
+            0.5 * (samples[n / 2 - 1] + samples[n / 2])
+        };
+        Stats {
+            median_s,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            min_s: samples[0],
+            max_s: samples[n - 1],
+            iters: n,
+        }
+    }
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bencher {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: 3, min_iters: 10, max_iters: 100, budget: Duration::from_secs(3) }
+    }
+}
+
+impl Bencher {
+    /// Paper methodology: "called the kernel several times as a warm-up ...
+    /// measured the median running time of 100 iterations". The budget cap
+    /// keeps slow interpret-mode kernels tractable.
+    pub fn paper() -> Self {
+        Self { warmup: 3, min_iters: 5, max_iters: 100, budget: Duration::from_secs(5) }
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(samples)
+    }
+
+    /// Run and print one line in a fixed format consumed by EXPERIMENTS.md.
+    pub fn report<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        let stats = self.run(&mut f);
+        println!(
+            "bench {name:<48} median {:>12} mean {:>12} min {:>12} (n={})",
+            fmt_time(stats.median_s),
+            fmt_time(stats.mean_s),
+            fmt_time(stats.min_s),
+            stats.iters
+        );
+        stats
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_odd_even() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median_s, 2.0);
+        let s = Stats::from_samples(vec![4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median_s, 2.5);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 4.0);
+    }
+
+    #[test]
+    fn runner_respects_min_iters() {
+        let b = Bencher { warmup: 1, min_iters: 7, max_iters: 50, budget: Duration::ZERO };
+        let mut count = 0usize;
+        let stats = b.run(|| count += 1);
+        assert!(stats.iters >= 7);
+        assert_eq!(count, stats.iters + 1); // warmup
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `program SUBCOMMAND [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    match iter.next() {
+                        Some(v) => {
+                            out.options.insert(name.to_string(), v);
+                        }
+                        None => bail!("option --{name} requires a value"),
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} must be a number")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose", "force"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["figures", "fig8", "--device", "a100", "--radius=16", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.positional, vec!["fig8"]);
+        assert_eq!(a.get("device"), Some("a100"));
+        assert_eq!(a.get("radius"), Some("16"));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("force"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "42", "--dt", "0.5"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("dt", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&["x", "--n", "nope"]).get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--key".to_string()], &[]).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Zero-dependency substrates for facilities this offline environment
+//! lacks as crates (DESIGN.md §9): JSON, CLI parsing, data-parallel maps,
+//! deterministic RNG, a criterion-style micro-benchmark harness, and a
+//! small property-testing helper. Everything here is exercised by its own
+//! unit tests plus the modules built on top.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,100 @@
+//! Data-parallel helpers on std scoped threads (rayon is unavailable
+//! offline). The stencil engine parallelizes over z-planes exactly like the
+//! paper's thread-block decomposition splits its grids.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads: `STENCILAX_THREADS` or the machine parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("STENCILAX_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `0..n` in parallel, preserving order of results.
+///
+/// Work-stealing via a shared atomic counter: threads grab indices until
+/// exhausted, so uneven per-item cost (e.g. pruned stencil rows) balances.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    // Workers collect (index, value) pairs, scattered into place afterwards.
+    let next = AtomicUsize::new(0);
+    let pairs: Vec<(usize, T)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in pairs {
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|v| v.expect("missing index")).collect()
+}
+
+/// Parallel for-each over `0..n` (no results).
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    par_map(n, |i| f(i));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v = par_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn heavy_items_balance() {
+        let v = par_map(64, |i| {
+            let mut acc = 0u64;
+            for j in 0..(if i % 7 == 0 { 100_000 } else { 10 }) {
+                acc = acc.wrapping_add(j);
+            }
+            (i, acc)
+        });
+        assert_eq!(v.len(), 64);
+        for (i, (idx, _)) in v.iter().enumerate() {
+            assert_eq!(i, *idx);
+        }
+    }
+
+    #[test]
+    fn par_for_side_effects() {
+        use std::sync::atomic::AtomicU64;
+        let sum = AtomicU64::new(0);
+        par_for(1000, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 499_500);
+    }
+}

@@ -1,0 +1,55 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` deterministic pseudo-random cases;
+//! on failure it reports the case index and seed so the exact input can be
+//! reproduced by re-running with that seed.
+
+use super::rng::Rng;
+
+/// Run `prop(rng)` for `cases` cases; panic with the failing seed on error.
+///
+/// The property receives a fresh deterministic RNG per case. Returning
+/// `Err(msg)` (or panicking) fails the test with reproduction info.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}",);
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("abs is nonnegative", 100, |rng| {
+            let x = rng.normal();
+            prop_assert!(x.abs() >= 0.0, "abs({x}) < 0");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn reports_failing_case() {
+        check("impossible", 10, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x > 2.0, "uniform {x} not > 2");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: coordinator machinery over the real artifact set — timing
+//! harness, random-input generation, measured-figure tables, and the CLI
+//! config plumbing. Skips cleanly when artifacts are absent.
+
+use stencilax::config::Config;
+use stencilax::coordinator::timing::{bench_artifact, random_inputs, time_artifact};
+use stencilax::harness::measured;
+use stencilax::runtime::{Executor, Manifest};
+use stencilax::util::bench::Bencher;
+
+fn executor() -> Option<Executor> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Executor::new(Manifest::load(dir).unwrap()).unwrap())
+}
+
+fn quick_bencher() -> Bencher {
+    Bencher {
+        warmup: 1,
+        min_iters: 3,
+        max_iters: 5,
+        budget: std::time::Duration::from_millis(500),
+    }
+}
+
+#[test]
+fn random_inputs_match_manifest_specs() {
+    let Some(ex) = executor() else { return };
+    for name in ["copy_n16384_f32", "xcorr1d_lib_r4_f64", "mhd32_hwc_sub0_f64"] {
+        let entry = ex.manifest.get(name).unwrap().clone();
+        let inputs = random_inputs(&ex, name, 9, 0.5).unwrap();
+        assert_eq!(inputs.len(), entry.inputs.len());
+        for (spec, val) in entry.inputs.iter().zip(&inputs) {
+            assert_eq!(spec.shape, val.shape(), "{name}");
+            assert_eq!(spec.dtype, val.dtype(), "{name}");
+        }
+        // scalar slots carry the requested value
+        if let Some(pos) = entry.inputs.iter().position(|s| s.shape == [1]) {
+            assert_eq!(inputs[pos].to_f64_vec()[0] as f32, 0.5f32);
+        }
+    }
+}
+
+#[test]
+fn timing_harness_returns_sane_stats() {
+    let Some(ex) = executor() else { return };
+    let b = quick_bencher();
+    let inputs = random_inputs(&ex, "copy_n16384_f64", 1, 0.0).unwrap();
+    let stats = time_artifact(&ex, "copy_n16384_f64", &inputs, &b).unwrap();
+    assert!(stats.iters >= 3);
+    assert!(stats.min_s > 0.0 && stats.min_s <= stats.median_s);
+    assert!(stats.median_s <= stats.max_s);
+    assert!(stats.median_s < 1.0, "tiny copy must be fast, got {}", stats.median_s);
+}
+
+#[test]
+fn bench_artifact_rejects_unknown_names() {
+    let Some(ex) = executor() else { return };
+    assert!(bench_artifact(&ex, "no_such_artifact", &quick_bencher(), 0.0).is_err());
+}
+
+#[test]
+fn measured_bandwidth_produces_a_row_per_copy_artifact() {
+    let Some(_) = executor() else { return };
+    let mut cfg = Config::default();
+    cfg.artifacts_dir =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.bench_iters = 3;
+    cfg.bench_warmup = 1;
+    cfg.bench_budget_s = 0.3;
+    let out = measured::measured_bandwidth(&cfg).unwrap();
+    let table = &out.tables[0];
+    assert_eq!(table.rows.len(), 10, "5 sizes x 2 dtypes");
+    for row in &table.rows {
+        let gibs: f64 = row[3].parse().unwrap();
+        assert!(gibs > 0.0);
+    }
+}
+
+#[test]
+fn executor_rejects_shape_mismatches() {
+    let Some(ex) = executor() else { return };
+    use stencilax::runtime::HostValue;
+    // wrong shape
+    let bad = ex.run("copy_n16384_f64", &[HostValue::f64(vec![0.0; 8], &[8])]);
+    assert!(bad.is_err());
+    // wrong dtype
+    let bad = ex.run("copy_n16384_f64", &[HostValue::f32(vec![0.0; 16384], &[16384])]);
+    assert!(bad.is_err());
+    // wrong arity
+    let bad = ex.run("copy_n16384_f64", &[]);
+    assert!(bad.is_err());
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(ex) = executor() else { return };
+    let inputs = random_inputs(&ex, "copy_n65536_f32", 3, 0.0).unwrap();
+    ex.run("copy_n65536_f32", &inputs).unwrap();
+    let after_first = *ex.compile_seconds.lock().unwrap();
+    ex.run("copy_n65536_f32", &inputs).unwrap();
+    let after_second = *ex.compile_seconds.lock().unwrap();
+    assert_eq!(after_first, after_second, "second run must not recompile");
+}

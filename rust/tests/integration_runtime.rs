@@ -1,0 +1,193 @@
+//! Integration: the PJRT runtime executes AOT artifacts and the results
+//! agree with the native Rust engine and the exported jnp oracles.
+//!
+//! Requires `make artifacts`; every test skips cleanly when the artifacts
+//! directory is absent (e.g. a fresh checkout before the first build).
+
+use stencilax::runtime::{DType, Executor, HostValue, Manifest};
+use stencilax::stencil::grid::{Boundary, Grid};
+use stencilax::stencil::mhd::{MhdParams, MhdState, MhdStepper, NFIELDS};
+use stencilax::stencil::{conv, diffusion::Diffusion};
+use stencilax::util::rng::Rng;
+
+fn executor() -> Option<Executor> {
+    let dir = manifest_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Executor::new(Manifest::load(dir).unwrap()).unwrap())
+}
+
+fn manifest_dir() -> std::path::PathBuf {
+    // tests run from the crate root
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn copy_artifact_is_identity() {
+    let Some(ex) = executor() else { return };
+    let n = 16384usize;
+    let mut rng = Rng::new(1);
+    let data = rng.normal_vec(n);
+    let out = ex
+        .run("copy_n16384_f64", &[HostValue::f64(data.clone(), &[n])])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].to_f64_vec(), data);
+}
+
+#[test]
+fn xcorr_artifact_matches_native_engine() {
+    let Some(ex) = executor() else { return };
+    let (n, r) = (1usize << 20, 4usize);
+    let mut rng = Rng::new(2);
+    let fpad = rng.normal_vec(n + 2 * r);
+    let taps = rng.normal_vec(2 * r + 1);
+    let native = conv::xcorr1d(&fpad, &taps);
+    for variant in ["hwc_baseline", "swc_pointwise", "hwc_elementwise"] {
+        let name = format!("xcorr1d_{variant}_r{r}_f64");
+        let out = ex
+            .run(
+                &name,
+                &[
+                    HostValue::f64(fpad.clone(), &[n + 2 * r]),
+                    HostValue::f64(taps.clone(), &[2 * r + 1]),
+                ],
+            )
+            .unwrap();
+        let got = out[0].to_f64_vec();
+        let err = got
+            .iter()
+            .zip(&native)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-12, "{name}: max err {err}");
+    }
+}
+
+#[test]
+fn diffusion_artifact_matches_native_engine() {
+    let Some(ex) = executor() else { return };
+    let (n, r) = (64usize, 3usize);
+    let mut rng = Rng::new(3);
+    let mut grid = Grid::new(n, n, n, r);
+    grid.interior_from_slice(&rng.normal_vec(n * n * n));
+    grid.fill_ghosts(Boundary::Periodic);
+
+    let d = Diffusion::new(r, 1.0, 1.0, Boundary::Periodic);
+    let dt = 1e-3;
+    let native = d.step_prefilled(&grid, 3, dt);
+
+    let s = d.kernel_scalar(dt);
+    let out = ex
+        .run(
+            "diffusion3d_hwc_r3_f64",
+            &[
+                HostValue::f64(grid.padded_to_vec(), &[n + 2 * r, n + 2 * r, n + 2 * r]),
+                HostValue::scalar(s, DType::F64),
+            ],
+        )
+        .unwrap();
+    let got = out[0].to_f64_vec();
+    let want = native.interior_to_vec();
+    let err = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    assert!(err < 1e-12, "max err {err}");
+}
+
+#[test]
+fn diffusion_swc_equals_hwc() {
+    let Some(ex) = executor() else { return };
+    let (n, r) = (64usize, 2usize);
+    let mut rng = Rng::new(4);
+    let shape = [n + 2 * r, n + 2 * r, n + 2 * r];
+    let fpad = rng.normal_vec(shape.iter().product());
+    let inputs = [HostValue::f64(fpad, &shape), HostValue::scalar(0.05, DType::F64)];
+    let a = ex.run("diffusion3d_hwc_r2_f64", &inputs).unwrap();
+    let b = ex.run("diffusion3d_swc_r2_f64", &inputs).unwrap();
+    let err = a[0].max_abs_diff(&b[0]);
+    assert!(err < 1e-13, "hwc vs swc differ by {err}");
+}
+
+#[test]
+fn mhd_artifact_matches_native_engine_and_oracle() {
+    let Some(ex) = executor() else { return };
+    let n = 32usize;
+    let entry = ex.manifest.get("mhd32_hwc_sub0_f64").unwrap().clone();
+    let par: MhdParams = entry.mhd_params().expect("mhd params recorded in manifest");
+
+    // random small-amplitude initial state
+    let mut rng = Rng::new(5);
+    let mut state = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+    let w0: Vec<f64> = vec![0.0; NFIELDS * n * n * n];
+    let dt = 1e-4;
+
+    // native substep
+    let mut native_state = state.clone();
+    let mut stepper = MhdStepper::new(par.clone(), 3, n, n, n);
+    stepper.substep(&mut native_state, dt, 0);
+
+    // artifact substep (padded input prepared by the Rust grid engine)
+    state.fill_ghosts();
+    let p = n + 6;
+    let inputs = [
+        HostValue::f64(state.stacked_padded(), &[NFIELDS, p, p, p]),
+        HostValue::f64(w0.clone(), &[NFIELDS, n, n, n]),
+        HostValue::scalar(dt, DType::F64),
+    ];
+    let out = ex.run("mhd32_hwc_sub0_f64", &inputs).unwrap();
+    let got_f = out[0].to_f64_vec();
+    let want_f = native_state.stacked_interior();
+    let err = got_f.iter().zip(&want_f).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    assert!(err < 1e-10, "pallas vs native mismatch: {err}");
+
+    // and against the exported jnp oracle (roll-based, unpadded input)
+    let inputs_oracle = [
+        HostValue::f64(state.stacked_interior(), &[NFIELDS, n, n, n]),
+        HostValue::f64(w0, &[NFIELDS, n, n, n]),
+        HostValue::scalar(dt, DType::F64),
+    ];
+    let oracle = ex.run("mhd32_oracle_sub0_f64", &inputs_oracle).unwrap();
+    let err2 = oracle[0].max_abs_diff(&out[0]);
+    assert!(err2 < 1e-10, "pallas vs oracle mismatch: {err2}");
+}
+
+#[test]
+fn mhd_swc_equals_hwc() {
+    let Some(ex) = executor() else { return };
+    let n = 32usize;
+    let p = n + 6;
+    let mut rng = Rng::new(6);
+    let mut state = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+    state.fill_ghosts();
+    let inputs = [
+        HostValue::f64(state.stacked_padded(), &[NFIELDS, p, p, p]),
+        HostValue::f64(vec![0.0; NFIELDS * n * n * n], &[NFIELDS, n, n, n]),
+        HostValue::scalar(5e-5, DType::F64),
+    ];
+    let a = ex.run("mhd32_hwc_sub2_f64", &inputs).unwrap();
+    let b = ex.run("mhd32_swc_sub2_f64", &inputs).unwrap();
+    assert!(a[0].max_abs_diff(&b[0]) < 1e-12);
+    assert!(a[1].max_abs_diff(&b[1]) < 1e-12);
+}
+
+#[test]
+fn library_conv_matches_handcrafted_path() {
+    let Some(ex) = executor() else { return };
+    let (n, r) = (1usize << 20, 4usize);
+    let mut rng = Rng::new(7);
+    let fpad: Vec<f32> = rng.normal_vec(n + 2 * r).iter().map(|&v| v as f32).collect();
+    let taps: Vec<f32> = rng.normal_vec(2 * r + 1).iter().map(|&v| v as f32).collect();
+    let inputs = [
+        HostValue::f32(fpad.clone(), &[n + 2 * r]),
+        HostValue::f32(taps.clone(), &[2 * r + 1]),
+    ];
+    let lib = ex.run("xcorr1d_lib_r4_f32", &inputs).unwrap();
+    let hand = ex.run("xcorr1d_hwc_pointwise_r4_f32", &inputs).unwrap();
+    // different algorithms, f32: allow a small relative tolerance
+    let a = lib[0].to_f64_vec();
+    let b = hand[0].to_f64_vec();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs(), "{x} vs {y}");
+    }
+}

@@ -1,0 +1,273 @@
+//! Property-based tests on coordinator and engine invariants (the offline
+//! substitute for proptest — see rust/src/util/prop.rs; every property runs
+//! over deterministic pseudo-random cases with reproducible seeds).
+
+use stencilax::coordinator::autotune::{autotune, candidate_tiles};
+use stencilax::coordinator::verify::{ulp_diff, verify_slices, Tolerance};
+use stencilax::model::specs::{spec, ALL_GPUS};
+use stencilax::prop_assert;
+use stencilax::sim::kernel::{Caching, Unroll};
+use stencilax::sim::predict::predict;
+use stencilax::sim::workloads::{self, Tile};
+use stencilax::stencil::coeffs::central_weights;
+use stencilax::stencil::conv;
+use stencilax::stencil::diffusion::Diffusion;
+use stencilax::stencil::grid::{Boundary, Grid};
+use stencilax::util::json::Json;
+use stencilax::util::prop::check;
+use stencilax::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// stencil engine invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_xcorr1d_is_linear() {
+    // xcorr(a*f + b*g, taps) == a*xcorr(f) + b*xcorr(g)
+    check("xcorr linearity", 50, |rng| {
+        let n = 32 + rng.below(256);
+        let r = 1 + rng.below(5);
+        let taps = rng.normal_vec(2 * r + 1);
+        let f = rng.normal_vec(n + 2 * r);
+        let g = rng.normal_vec(n + 2 * r);
+        let (a, b) = (rng.range(-2.0, 2.0), rng.range(-2.0, 2.0));
+        let combo: Vec<f64> = f.iter().zip(&g).map(|(x, y)| a * x + b * y).collect();
+        let lhs = conv::xcorr1d(&combo, &taps);
+        let fa = conv::xcorr1d(&f, &taps);
+        let gb = conv::xcorr1d(&g, &taps);
+        for i in 0..lhs.len() {
+            let want = a * fa[i] + b * gb[i];
+            prop_assert!(
+                (lhs[i] - want).abs() < 1e-10 * (1.0 + want.abs()),
+                "at {i}: {} vs {want}",
+                lhs[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xcorr_identity_taps() {
+    check("identity taps pass through", 30, |rng| {
+        let n = 16 + rng.below(128);
+        let r = 1 + rng.below(4);
+        let mut taps = vec![0.0; 2 * r + 1];
+        taps[r] = 1.0;
+        let f = rng.normal_vec(n + 2 * r);
+        let out = conv::xcorr1d(&f, &taps);
+        prop_assert!(out == f[r..r + n], "identity must be exact");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diffusion_conserves_mean_and_contracts() {
+    check("diffusion mean + contraction", 25, |rng| {
+        let n = 8 + 2 * rng.below(8);
+        let r = 1 + rng.below(3);
+        let g = Grid::from_fn(&[n, n, n.min(8)], r, |_, _, _| rng.normal());
+        let d = Diffusion::new(r, rng.range(0.1, 2.0), rng.range(0.2, 1.0), Boundary::Periodic);
+        let dt = d.stable_dt(3) * rng.range(0.2, 1.0);
+        let out = d.step(&g, 3, dt);
+        prop_assert!((out.mean() - g.mean()).abs() < 1e-10, "mean drifted");
+        prop_assert!(out.max_abs() <= g.max_abs() * (1.0 + 1e-12), "max grew");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_central_weights_annihilate_low_polynomials() {
+    check("FD order conditions", 40, |rng| {
+        let r = 1 + rng.below(5);
+        let d = 1 + rng.below(2);
+        let w = central_weights(d, r);
+        // random low-degree polynomial p(x): weights must produce p^(d)(0)
+        let degree = rng.below((2 * r).min(4)) + 1;
+        let coef = rng.normal_vec(degree + 1);
+        let eval = |x: f64| coef.iter().enumerate().map(|(k, c)| c * x.powi(k as i32)).sum::<f64>();
+        let got: f64 =
+            w.iter().zip(-(r as i64)..=r as i64).map(|(c, x)| c * eval(x as f64)).sum();
+        let want = match d {
+            1 => {
+                if degree >= 1 {
+                    coef[1]
+                } else {
+                    0.0
+                }
+            }
+            _ => {
+                if degree >= 2 {
+                    2.0 * coef[2]
+                } else {
+                    0.0
+                }
+            }
+        };
+        prop_assert!((got - want).abs() < 1e-7 * (1.0 + want.abs()), "{got} vs {want}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_roundtrip_any_shape() {
+    check("grid interior roundtrip", 40, |rng| {
+        let shape = [1 + rng.below(24), 1 + rng.below(12), 1 + rng.below(8)];
+        let r = 1 + rng.below(4);
+        let data = rng.normal_vec(shape.iter().product());
+        let mut g = Grid::new_nd(&shape, r);
+        g.interior_from_slice(&data);
+        prop_assert!(g.interior_to_vec() == data, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_periodic_ghosts_match_modular_indexing() {
+    check("periodic ghost fill", 20, |rng| {
+        let (nx, ny, nz) = (2 + rng.below(6), 2 + rng.below(6), 2 + rng.below(6));
+        let r = 1 + rng.below(3);
+        let mut g = Grid::from_fn(&[nx, ny, nz], r, |_, _, _| rng.normal());
+        g.fill_ghosts(Boundary::Periodic);
+        let (px, py, pz) = g.padded();
+        for _ in 0..50 {
+            let (pi, pj, pk) = (rng.below(px), rng.below(py), rng.below(pz));
+            let want = g.get(
+                (pi as i64 - r as i64).rem_euclid(nx as i64) as usize,
+                (pj as i64 - r as i64).rem_euclid(ny as i64) as usize,
+                (pk as i64 - r as i64).rem_euclid(nz as i64) as usize,
+            );
+            prop_assert!(g.data()[g.pidx(pi, pj, pk)] == want, "ghost mismatch");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_predictions_positive_and_bounded_by_components() {
+    check("prediction sanity", 60, |rng| {
+        let dev = spec(*rng.choice(&ALL_GPUS));
+        let r = 1 + rng.below(512);
+        let caching = *rng.choice(&[Caching::Hwc, Caching::Swc]);
+        let unroll = *rng.choice(&Unroll::ALL);
+        let prof =
+            workloads::xcorr1d(1 << 20, r, rng.uniform() < 0.5, caching, unroll, workloads::TILE_1D);
+        let p = predict(dev, &prof);
+        prop_assert!(p.total.is_finite() && p.total > 0.0, "bad total {}", p.total);
+        prop_assert!(
+            p.total + 1e-18 >= p.t_hbm.max(p.t_onchip).max(p.t_flop),
+            "total below components"
+        );
+        prop_assert!((0.0..=1.0).contains(&p.occupancy.fraction), "occupancy out of range");
+        prop_assert!((0.0..=1.0).contains(&p.issue_eff), "issue eff out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_time_monotone_in_radius() {
+    check("radius monotonicity", 30, |rng| {
+        let dev = spec(*rng.choice(&ALL_GPUS));
+        let fp64 = rng.uniform() < 0.5;
+        let mut last = 0.0f64;
+        for r in [1usize, 4, 16, 64, 256] {
+            let prof = workloads::xcorr1d(
+                1 << 22,
+                r,
+                fp64,
+                Caching::Swc,
+                Unroll::Pointwise,
+                workloads::TILE_1D,
+            );
+            let t = predict(dev, &prof).total;
+            prop_assert!(t >= last, "time decreased with radius at r={r}");
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autotune_best_dominates_every_candidate() {
+    check("autotune optimality", 10, |rng| {
+        let dev = spec(*rng.choice(&ALL_GPUS));
+        let fp64 = rng.uniform() < 0.5;
+        let results = autotune(dev, 3, |tile: Tile| {
+            Some(workloads::diffusion(dev, &[128, 128, 128], 2, fp64, Caching::Hwc, tile))
+        });
+        prop_assert!(!results.is_empty(), "no candidates");
+        let best = results[0].time_s;
+        for r in &results {
+            prop_assert!(best <= r.time_s + 1e-18, "non-minimal best");
+        }
+        // every candidate obeys the pruning rules
+        for t in candidate_tiles(dev, 3) {
+            prop_assert!(t.threads() % dev.warp_size() == 0, "warp-size rule violated");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    check("json roundtrip", 60, |rng| {
+        // build a random JSON tree
+        fn build(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.uniform() < 0.5),
+                2 => Json::Num((rng.normal() * 1e6).round()),
+                3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| build(rng, depth - 1)).collect()),
+                _ => Json::obj(
+                    [("a", build(rng, depth - 1)), ("b", build(rng, depth - 1))].into(),
+                ),
+            }
+        }
+        let v = build(rng, 3);
+        let compact = Json::parse(&v.to_string_compact()).map_err(|e| e.to_string())?;
+        prop_assert!(compact == v, "compact roundtrip");
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        prop_assert!(pretty == v, "pretty roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_verify_accepts_self_and_ulp_metric_is_symmetricish() {
+    check("verify self-comparison", 40, |rng| {
+        let v = rng.normal_vec(100);
+        let rep = verify_slices(&v, &v, Tolerance::Exact);
+        prop_assert!(rep.passed && rep.failures == 0, "self-compare failed");
+        let (a, b) = (rng.normal(), rng.normal());
+        if a != 0.0 && b != 0.0 && (a - b).abs() / b.abs() < 0.5 {
+            let d1 = ulp_diff(a, b);
+            let d2 = ulp_diff(b, a);
+            prop_assert!(
+                (d1 - d2).abs() <= 0.5 * d1.max(d2).max(1.0),
+                "ulp metric wildly asymmetric"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_par_map_equals_serial_map() {
+    check("par_map == map", 20, |rng| {
+        let n = rng.below(500);
+        let xs = rng.normal_vec(n.max(1));
+        let par = stencilax::util::par::par_map(xs.len(), |i| xs[i] * 2.0 + 1.0);
+        let ser: Vec<f64> = xs.iter().map(|x| x * 2.0 + 1.0).collect();
+        prop_assert!(par == ser, "parallel map diverged");
+        Ok(())
+    });
+}
