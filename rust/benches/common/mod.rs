@@ -8,6 +8,10 @@ use stencilax::util::bench::Bencher;
 /// Executor over the default artifacts dir, or None (benches then print a
 /// skip notice instead of failing — artifacts are a build product).
 pub fn executor() -> Option<Executor> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature (DESIGN.md §9)");
+        return None;
+    }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");

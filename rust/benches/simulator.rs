@@ -3,10 +3,12 @@
 
 use stencilax::config::Config;
 use stencilax::coordinator::autotune::autotune;
+use stencilax::coordinator::tune::{tune_batch, PredictionCache};
 use stencilax::harness;
-use stencilax::model::specs::A100;
+use stencilax::model::specs::{spec, A100, ALL_GPUS};
 use stencilax::sim::kernel::{Caching, Unroll};
 use stencilax::sim::predict::predict;
+use stencilax::sim::workload::{registry, Workload};
 use stencilax::sim::workloads;
 use stencilax::util::bench::{black_box, Bencher};
 
@@ -30,6 +32,18 @@ fn main() {
         black_box(autotune(&A100, 3, |tile| {
             Some(workloads::mhd(&A100, &[128, 128, 128], true, Caching::Hwc, tile, 0))
         }));
+    });
+
+    // the batched service: full registry x all four devices, cold cache
+    let ws: Vec<&dyn Workload> = registry().iter().map(|w| w.as_ref()).collect();
+    let devs: Vec<_> = ALL_GPUS.iter().map(|&g| spec(g)).collect();
+    b.report("tune_batch(13 workloads x 4 devices, cold)", || {
+        black_box(tune_batch(&ws, &devs, true, Caching::Hwc, &PredictionCache::new()));
+    });
+    let warm = PredictionCache::new();
+    tune_batch(&ws, &devs, true, Caching::Hwc, &warm);
+    b.report("tune_batch(13 workloads x 4 devices, warm)", || {
+        black_box(tune_batch(&ws, &devs, true, Caching::Hwc, &warm));
     });
 
     let cfg = Config::default();

@@ -22,6 +22,10 @@ pub struct TuneResult {
     pub tile: Tile,
     pub time_s: f64,
     pub occupancy: f64,
+    /// Predicted off-chip-bandwidth component of the time. Secondary sort
+    /// key: among decompositions with identical totals (issue-bound
+    /// kernels), the one moving less HBM traffic wins deterministically.
+    pub t_hbm: f64,
 }
 
 /// Enumerate valid decompositions per the paper's pruning rules.
@@ -59,6 +63,13 @@ pub fn candidate_tiles(spec: &GpuSpec, dims: usize) -> Vec<Tile> {
 /// tile cannot launch (e.g. SWC shared-memory demand exceeds capacity —
 /// the paper's "failed launch" discard rule). Returns results sorted by
 /// predicted time; `.first()` is the winner.
+///
+/// This is the uncached single-search entry point; sweeps that revisit
+/// configurations should go through
+/// [`crate::coordinator::tune::autotune_cached`]. The two implementations
+/// are kept in lockstep (ranking: time, then predicted HBM component, then
+/// enumeration order) — pinned by the differential property test in
+/// rust/tests/integration_tune.rs.
 pub fn autotune(
     spec: &GpuSpec,
     dims: usize,
@@ -73,10 +84,20 @@ pub fn autotune(
                 return None;
             }
             let p = predict(spec, &prof);
-            Some(TuneResult { tile, time_s: p.total, occupancy: p.occupancy.fraction })
+            Some(TuneResult {
+                tile,
+                time_s: p.total,
+                occupancy: p.occupancy.fraction,
+                t_hbm: p.t_hbm,
+            })
         })
         .collect();
-    results.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
+    results.sort_by(|a, b| {
+        a.time_s
+            .partial_cmp(&b.time_s)
+            .unwrap()
+            .then(a.t_hbm.partial_cmp(&b.t_hbm).unwrap())
+    });
     results
 }
 

@@ -6,9 +6,11 @@ pub mod autotune;
 pub mod report;
 pub mod sweep;
 pub mod timing;
+pub mod tune;
 pub mod verify;
 
 pub use autotune::{autotune, TuneResult};
 pub use report::{AsciiPlot, Table};
 pub use sweep::Sweep;
+pub use tune::{autotune_cached, tune_batch, PredictionCache, TuneReport};
 pub use verify::{verify_slices, Tolerance, VerifyReport};

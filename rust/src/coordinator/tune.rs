@@ -1,0 +1,344 @@
+//! Batched autotune service (DESIGN.md §7).
+//!
+//! The paper's evaluation is one big loop — workloads × devices × tile
+//! decompositions, predict, rank — and this module is that loop as a
+//! service: [`tune_batch`] fans a `workloads × specs` cross product out
+//! over [`crate::util::par`], every tile evaluation goes through a
+//! memoized [`PredictionCache`] keyed by `(search key, tile)`, and each
+//! search returns a structured, JSON-serializable [`TuneReport`]. The CLI
+//! (`stencilax tune --all`), the figure harness, and the what-if explorer
+//! all run on this layer.
+//!
+//! Ranking: primary key is predicted time; among exact ties (common for
+//! 1-D and issue-bound kernels, where the model is tile-independent) the
+//! decomposition with less predicted off-chip traffic wins, and remaining
+//! ties resolve by enumeration order of [`candidate_tiles`] — the sort is
+//! stable, so results are reproducible bit-for-bit across thread counts.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::coordinator::autotune::{candidate_tiles, TuneResult};
+use crate::model::specs::GpuSpec;
+use crate::sim::kernel::{Caching, KernelProfile};
+use crate::sim::predict::predict;
+use crate::sim::workload::Workload;
+use crate::sim::workloads::Tile;
+use crate::util::json::Json;
+use crate::util::par::par_map;
+
+/// Memoized `(search key, tile) -> prediction` store shared across a batch.
+///
+/// Values are `(time_s, occupancy, t_hbm)`, or `None` for tiles discarded
+/// by the launch-validity rules — caching the discard too keeps repeated
+/// searches from rebuilding doomed profiles. Predictions are pure functions
+/// of the key, so concurrent duplicate computation is benign (both writers
+/// store the same value).
+#[derive(Debug, Default)]
+pub struct PredictionCache {
+    /// Two-level map so the hit path can look keys up by `&str` without
+    /// allocating an owned key per probe.
+    map: Mutex<HashMap<String, HashMap<Tile, Option<(f64, f64, f64)>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PredictionCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cached entries (valid and discarded alike).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().values().map(|inner| inner.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Look up `(key, tile)`, computing and storing on a miss. The closure
+    /// runs outside the lock so expensive evaluations do not serialize the
+    /// whole batch.
+    pub fn eval(
+        &self,
+        key: &str,
+        tile: Tile,
+        compute: impl FnOnce() -> Option<(f64, f64, f64)>,
+    ) -> Option<(f64, f64, f64)> {
+        if let Some(v) = self.map.lock().unwrap().get(key).and_then(|inner| inner.get(&tile)) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = compute();
+        self.map.lock().unwrap().entry(key.to_string()).or_default().insert(tile, v);
+        v
+    }
+}
+
+/// Process-wide cache for searches over the *unperturbed* Table 1 devices.
+///
+/// Keys must fully describe the search (workload, device name, precision,
+/// caching, launch bounds); what-if explorations over perturbed specs use
+/// fresh local caches instead, because perturbed devices share names.
+pub fn global_cache() -> &'static PredictionCache {
+    static CACHE: OnceLock<PredictionCache> = OnceLock::new();
+    CACHE.get_or_init(PredictionCache::new)
+}
+
+/// The §5.1 decomposition search with memoized predictions.
+///
+/// Semantics match [`crate::coordinator::autotune::autotune`] (same pruning
+/// rules, same discard-on-oversized-shared-memory), plus the cache and the
+/// deterministic tie-break described in the module docs.
+pub fn autotune_cached(
+    spec: &GpuSpec,
+    dims: usize,
+    key: &str,
+    cache: &PredictionCache,
+    build: impl Fn(Tile) -> Option<KernelProfile>,
+) -> Vec<TuneResult> {
+    search_tiles(&candidate_tiles(spec, dims), spec, key, cache, build)
+}
+
+/// Shared search body over a pre-enumerated candidate list (lets callers
+/// that also need the candidate count avoid enumerating twice).
+fn search_tiles(
+    tiles: &[Tile],
+    spec: &GpuSpec,
+    key: &str,
+    cache: &PredictionCache,
+    build: impl Fn(Tile) -> Option<KernelProfile>,
+) -> Vec<TuneResult> {
+    let mut results: Vec<TuneResult> = tiles
+        .iter()
+        .filter_map(|&tile| {
+            let (time_s, occupancy, t_hbm) = cache.eval(key, tile, || {
+                let prof = build(tile)?;
+                // discard decompositions that over-allocate shared memory
+                if prof.smem_per_block > spec.smem_kib_per_cu * 1024.0 {
+                    return None;
+                }
+                let p = predict(spec, &prof);
+                Some((p.total, p.occupancy.fraction, p.t_hbm))
+            })?;
+            Some(TuneResult { tile, time_s, occupancy, t_hbm })
+        })
+        .collect();
+    results.sort_by(|a, b| {
+        a.time_s
+            .partial_cmp(&b.time_s)
+            .unwrap()
+            .then(a.t_hbm.partial_cmp(&b.t_hbm).unwrap())
+    });
+    results
+}
+
+/// How many ranked decompositions a [`TuneReport`] retains.
+pub const REPORT_TOP_K: usize = 3;
+
+/// Structured outcome of one workload × device search.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub workload: String,
+    /// Short device id (Table 1 column).
+    pub gpu: String,
+    /// Full device name.
+    pub device: String,
+    pub fp64: bool,
+    pub caching: Caching,
+    /// Decompositions enumerated by the §5.1 pruning rules.
+    pub searched: usize,
+    /// Decompositions that survived launch-validity checks.
+    pub valid: usize,
+    /// Top [`REPORT_TOP_K`] decompositions, best first.
+    pub results: Vec<TuneResult>,
+}
+
+impl TuneReport {
+    pub fn best(&self) -> Option<&TuneResult> {
+        self.results.first()
+    }
+
+    /// Serialize through the in-crate JSON layer (`util::json`).
+    pub fn to_json(&self) -> Json {
+        let tile_json = |t: &TuneResult| {
+            Json::obj(vec![
+                (
+                    "tile",
+                    Json::arr(vec![
+                        Json::num(t.tile.tx as f64),
+                        Json::num(t.tile.ty as f64),
+                        Json::num(t.tile.tz as f64),
+                    ]),
+                ),
+                ("time_ms", Json::num(t.time_s * 1e3)),
+                ("occupancy", Json::num(t.occupancy)),
+            ])
+        };
+        let mut pairs = vec![
+            ("workload", Json::str(self.workload.as_str())),
+            ("gpu", Json::str(self.gpu.as_str())),
+            ("device", Json::str(self.device.as_str())),
+            ("precision", Json::str(if self.fp64 { "f64" } else { "f32" })),
+            ("caching", Json::str(self.caching.to_string())),
+            ("searched", Json::num(self.searched as f64)),
+            ("valid", Json::num(self.valid as f64)),
+            ("results", Json::arr(self.results.iter().map(tile_json).collect())),
+        ];
+        if let Some(best) = self.best() {
+            pairs.push((
+                "best_tile",
+                Json::arr(vec![
+                    Json::num(best.tile.tx as f64),
+                    Json::num(best.tile.ty as f64),
+                    Json::num(best.tile.tz as f64),
+                ]),
+            ));
+            pairs.push(("best_time_ms", Json::num(best.time_s * 1e3)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Tune every workload on every device spec, in parallel.
+///
+/// Jobs fan out over [`par_map`] (bounded by `STENCILAX_THREADS`); the
+/// result order is workload-major and independent of the thread count.
+pub fn tune_batch(
+    workloads: &[&dyn Workload],
+    specs: &[&GpuSpec],
+    fp64: bool,
+    caching: Caching,
+    cache: &PredictionCache,
+) -> Vec<TuneReport> {
+    let jobs: Vec<(&dyn Workload, &GpuSpec)> = workloads
+        .iter()
+        .flat_map(|&w| specs.iter().map(move |&s| (w, s)))
+        .collect();
+    par_map(jobs.len(), |i| {
+        let (w, spec) = jobs[i];
+        let key =
+            format!("{}|{}|fp64={fp64}|{caching}", w.name(), spec.name);
+        let tiles = candidate_tiles(spec, w.dims());
+        let searched = tiles.len();
+        let results = search_tiles(&tiles, spec, &key, cache, |tile| {
+            if !w.tile_valid(spec, tile) {
+                return None;
+            }
+            w.profile(spec, fp64, caching, tile)
+        });
+        let valid = results.len();
+        TuneReport {
+            workload: w.name(),
+            gpu: spec.gpu.to_string(),
+            device: spec.name.to_string(),
+            fp64,
+            caching,
+            searched,
+            valid,
+            results: results.into_iter().take(REPORT_TOP_K).collect(),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs::{spec, Gpu, A100};
+    use crate::sim::workload::find;
+    use crate::sim::workloads;
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let cache = PredictionCache::new();
+        let build = |tile| {
+            Some(workloads::diffusion(&A100, &[64, 64, 64], 2, true, Caching::Hwc, tile))
+        };
+        let first = autotune_cached(&A100, 3, "k", &cache, build);
+        assert_eq!(cache.hits(), 0);
+        let misses = cache.misses();
+        assert!(misses > 0 && misses == cache.len());
+        let second = autotune_cached(&A100, 3, "k", &cache, build);
+        assert_eq!(cache.misses(), misses, "second sweep must be pure hits");
+        assert_eq!(cache.hits(), misses);
+        assert_eq!(first.len(), second.len());
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.tile, b.tile);
+            assert_eq!(a.time_s, b.time_s);
+        }
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = PredictionCache::new();
+        let t1 = autotune_cached(&A100, 3, "r2", &cache, |tile| {
+            Some(workloads::diffusion(&A100, &[64, 64, 64], 2, true, Caching::Hwc, tile))
+        });
+        let t4 = autotune_cached(&A100, 3, "r4", &cache, |tile| {
+            Some(workloads::diffusion(&A100, &[64, 64, 64], 4, true, Caching::Hwc, tile))
+        });
+        assert!(cache.hits() == 0, "different keys must not alias");
+        assert_ne!(t1[0].time_s, t4[0].time_s);
+    }
+
+    #[test]
+    fn tie_break_prefers_less_offchip_traffic() {
+        // MHD on the A100 is issue-bound: every tile predicts the same
+        // total, so the winner must be the minimal-halo decomposition
+        // rather than enumeration noise.
+        let w = find("mhd").unwrap();
+        let dev = spec(Gpu::A100);
+        let results = autotune_cached(dev, 3, "tie", &PredictionCache::new(), |tile| {
+            w.profile(dev, true, Caching::Hwc, tile)
+        });
+        let best = &results[0];
+        let ties: Vec<_> = results.iter().filter(|r| r.time_s == best.time_s).collect();
+        assert!(ties.len() > 1, "premise: issue-bound search must tie on time");
+        let min_hbm = ties.iter().map(|r| r.t_hbm).fold(f64::INFINITY, f64::min);
+        assert_eq!(best.t_hbm, min_hbm, "winner must carry the least HBM traffic");
+        assert!(best.tile.threads() >= 512, "minimal-halo tiles are large: {:?}", best.tile);
+    }
+
+    #[test]
+    fn batch_is_workload_major_and_complete() {
+        let ws: Vec<&dyn Workload> =
+            vec![find("conv1d-r1").unwrap(), find("diffusion3d").unwrap()];
+        let devs = [spec(Gpu::A100), spec(Gpu::Mi100)];
+        let reports = tune_batch(&ws, &devs, true, Caching::Hwc, &PredictionCache::new());
+        assert_eq!(reports.len(), 4);
+        assert_eq!(reports[0].workload, "conv1d-r1");
+        assert_eq!(reports[0].gpu, "A100");
+        assert_eq!(reports[1].gpu, "MI100");
+        assert_eq!(reports[2].workload, "diffusion3d");
+        for r in &reports {
+            assert!(r.valid > 0 && r.valid <= r.searched);
+            assert!(!r.results.is_empty() && r.results.len() <= REPORT_TOP_K);
+        }
+    }
+
+    #[test]
+    fn report_json_has_the_contract_fields() {
+        let w = find("diffusion2d").unwrap();
+        let reports =
+            tune_batch(&[w], &[spec(Gpu::Mi250x)], false, Caching::Swc, &PredictionCache::new());
+        let j = reports[0].to_json();
+        assert_eq!(j.req_str("workload").unwrap(), "diffusion2d");
+        assert_eq!(j.req_str("gpu").unwrap(), "MI250X");
+        assert_eq!(j.req_str("precision").unwrap(), "f32");
+        assert!(j.req_f64("best_time_ms").unwrap() > 0.0);
+        assert_eq!(j.req_arr("best_tile").unwrap().len(), 3);
+        let text = j.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

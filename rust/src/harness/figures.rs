@@ -4,8 +4,8 @@
 //! crossovers fall), which rust/tests/integration_sim.rs asserts.
 
 use crate::config::Config;
-use crate::coordinator::autotune::autotune;
 use crate::coordinator::report::{AsciiPlot, Table};
+use crate::coordinator::tune::{autotune_cached, global_cache};
 use crate::model::specs::{spec, GpuSpec, MIB};
 use crate::sim::kernel::{Caching, KernelProfile, Unroll};
 use crate::sim::library::{diffusion_library_time, xcorr1d_library_time, Library};
@@ -231,7 +231,10 @@ pub fn diffusion_best(
     caching: Caching,
 ) -> f64 {
     let shape = diffusion_shape(dim);
-    let results = autotune(dev, dim, move |tile: Tile| {
+    // the figure/table generators revisit the same configurations many
+    // times; the process-wide prediction cache makes the revisits free
+    let key = format!("fig-diffusion{dim}d|r{r}|{}|fp64={fp64}|{caching}", dev.name);
+    let results = autotune_cached(dev, dim, &key, global_cache(), move |tile: Tile| {
         Some(workloads::diffusion(dev, &shape, r, fp64, caching, tile))
     });
     results.first().map(|b| b.time_s).unwrap_or(f64::NAN)
@@ -290,7 +293,8 @@ pub fn fig12(cfg: &Config) -> Output {
 pub const MHD_SHAPE: [usize; 3] = [128, 128, 128];
 
 pub fn mhd_best(dev: &'static GpuSpec, fp64: bool, caching: Caching, launch_bounds: u32) -> f64 {
-    let results = autotune(dev, 3, move |tile: Tile| {
+    let key = format!("fig-mhd|{}|fp64={fp64}|{caching}|lb{launch_bounds}", dev.name);
+    let results = autotune_cached(dev, 3, &key, global_cache(), move |tile: Tile| {
         Some(workloads::mhd(dev, &MHD_SHAPE, fp64, caching, tile, launch_bounds))
     });
     results.first().map(|b| b.time_s).unwrap_or(f64::NAN)

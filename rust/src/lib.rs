@@ -10,6 +10,30 @@
 //! * **L2/L1 (python/, build-time only)** — JAX models and Pallas kernels,
 //!   lowered once by `make artifacts` into `artifacts/*.hlo.txt`; Python is
 //!   never on the runtime path.
+//!
+//! The evaluation loop — *workloads × devices × tile decompositions,
+//! predict, rank* — runs on two dedicated layers (DESIGN.md §7):
+//!
+//! * [`sim::workload`] — the unified **workload registry**: every paper
+//!   benchmark (1-D convolution at radii 1..8, wide cross-correlation,
+//!   1/2/3-D diffusion, the fused MHD substep) implements the
+//!   [`sim::workload::Workload`] trait (name, dimensionality,
+//!   [`sim::kernel::KernelProfile`] builder, valid-tile predicate, native
+//!   reference evaluator) and is discovered by name through
+//!   [`sim::workload::registry`].
+//! * [`coordinator::tune`] — the **batched autotune service**:
+//!   [`coordinator::tune::tune_batch`] fans `workloads × GpuSpecs` out over
+//!   [`util::par`], memoizes every tile evaluation in a
+//!   [`coordinator::tune::PredictionCache`], and returns structured
+//!   [`coordinator::tune::TuneReport`]s serializable through
+//!   [`util::json`]. The CLI (`stencilax tune --all`), the figure harness,
+//!   and the §6.1 what-if explorer all sit on this service; results are
+//!   bit-identical for any `STENCILAX_THREADS` worker count.
+//!
+//! Cargo features: `pjrt` enables executing the AOT HLO artifacts through
+//! the XLA/PJRT bindings. The default (offline) build compiles everything
+//! — model, registry, tuner, harness, CLI — with a stub executor that
+//! reports the missing runtime; see DESIGN.md §9.
 
 pub mod config;
 pub mod util;

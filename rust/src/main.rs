@@ -6,7 +6,10 @@
 //!   tables  <id|all>            regenerate paper tables from the GPU model
 //!   measure <figure|bandwidth>  time the AOT artifacts through PJRT
 //!   check                       paper-vs-model claim table (EXPERIMENTS.md)
-//!   tune    <workload>          run the §5.1 decomposition autotuner
+//!   tune    <workload>|--all    run the §5.1 autotuner (registry-driven);
+//!                               --all batches every workload x device and
+//!                               writes a JSON TuneReport
+//!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
 //!
@@ -16,20 +19,21 @@
 use anyhow::{bail, Context, Result};
 
 use stencilax::config::Config;
-use stencilax::coordinator::autotune::autotune;
 use stencilax::coordinator::report::Table;
+use stencilax::coordinator::tune::{tune_batch, PredictionCache, TuneReport};
 use stencilax::coordinator::verify::{verify_slices, Tolerance};
 use stencilax::harness::{self, measured, paper};
 use stencilax::model::specs::spec;
 use stencilax::runtime::{DType, Executor, HostValue, Manifest};
 use stencilax::sim::kernel::Caching;
-use stencilax::sim::workloads;
+use stencilax::sim::workload::{self, Workload};
 use stencilax::stencil::grid::{Boundary, Grid};
 use stencilax::stencil::{conv, diffusion::Diffusion};
 use stencilax::util::cli::Args;
+use stencilax::util::json::Json;
 use stencilax::util::rng::Rng;
 
-const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help"];
+const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help", "all"];
 
 fn main() -> Result<()> {
     let args = Args::from_env(BOOL_FLAGS)?;
@@ -98,6 +102,7 @@ fn main() -> Result<()> {
             harness::whatif::explore(&cfg, axis).print();
         }
         "ablation" => harness::whatif::ablation(&cfg).print(),
+        "workloads" => cmd_workloads(),
         "tune" => cmd_tune(&cfg, &args)?,
         "verify" => cmd_verify(&cfg)?,
         other => bail!("unknown subcommand {other:?} (try --help)"),
@@ -105,41 +110,61 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Run the §5.1 decomposition search for a named workload on each device.
+/// List the workload registry (name, dimensionality, shape, native digest).
+fn cmd_workloads() {
+    let mut t = Table::new(
+        "Workload registry — every paper benchmark the tuner discovers",
+        &["name", "dims", "shape", "reference digest"],
+    );
+    for w in workload::registry() {
+        t.row(vec![
+            w.name(),
+            w.dims().to_string(),
+            format!("{:?}", w.shape()),
+            format!("{:+.6e}", w.reference_digest(42)),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+/// Run the §5.1 decomposition search through the batched tuner: one named
+/// workload, or `--all` for the full registry x device matrix.
 fn cmd_tune(cfg: &Config, args: &Args) -> Result<()> {
-    let workload = args.positional.first().map(|s| s.as_str()).unwrap_or("mhd");
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("mhd");
+    let all = args.has_flag("all") || which == "all";
     let fp64 = args.get_or("precision", "f64") == "f64";
     let caching = Caching::parse(args.get_or("caching", "hwc"))
         .context("--caching must be hwc or swc")?;
+
+    let selected: Vec<&'static dyn Workload> = if all {
+        workload::registry().iter().map(|w| w.as_ref()).collect()
+    } else {
+        vec![workload::find(which).with_context(|| {
+            format!("unknown workload {which:?} (see `stencilax workloads`)")
+        })?]
+    };
+    let specs: Vec<_> = cfg.devices.iter().map(|&g| spec(g)).collect();
+
+    let cache = PredictionCache::new();
+    let reports = tune_batch(&selected, &specs, fp64, caching, &cache);
+
     let mut t = Table::new(
-        &format!("Autotune — {workload} ({}, {caching})", if fp64 { "FP64" } else { "FP32" }),
-        &["device", "best tile", "time (ms)", "occupancy", "runner-up"],
+        &format!(
+            "Autotune — {} workload(s) x {} device(s) ({}, {caching})",
+            selected.len(),
+            specs.len(),
+            if fp64 { "FP64" } else { "FP32" }
+        ),
+        &["workload", "device", "best tile", "time (ms)", "occupancy", "runner-up"],
     );
-    for &gpu in &cfg.devices {
-        let dev = spec(gpu);
-        let results = match workload {
-            "mhd" => autotune(dev, 3, move |tile| {
-                Some(workloads::mhd(dev, &[128, 128, 128], fp64, caching, tile, 0))
-            }),
-            "diffusion" => autotune(dev, 3, move |tile| {
-                Some(workloads::diffusion(dev, &[256, 256, 256], 3, fp64, caching, tile))
-            }),
-            "xcorr" => autotune(dev, 1, move |tile| {
-                Some(workloads::xcorr1d(
-                    1 << 24,
-                    64,
-                    fp64,
-                    caching,
-                    stencilax::sim::kernel::Unroll::Pointwise,
-                    tile,
-                ))
-            }),
-            other => bail!("unknown workload {other:?} (mhd|diffusion|xcorr)"),
-        };
-        let best = results.first().context("no valid decomposition")?;
-        let second = results.get(1);
+    for r in &reports {
+        let best = r.best().with_context(|| {
+            format!("no valid decomposition for {} on {}", r.workload, r.gpu)
+        })?;
+        let second = r.results.get(1);
         t.row(vec![
-            dev.name.to_string(),
+            r.workload.clone(),
+            r.gpu.clone(),
             format!("({}, {}, {})", best.tile.tx, best.tile.ty, best.tile.tz),
             format!("{:.3}", best.time_s * 1e3),
             format!("{:.0}%", best.occupancy * 100.0),
@@ -151,7 +176,31 @@ fn cmd_tune(cfg: &Config, args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    println!(
+        "prediction cache: {} misses, {} hits ({} searches)",
+        cache.misses(),
+        cache.hits(),
+        reports.len()
+    );
+    if all || args.has_flag("save") {
+        let path = save_tune_reports(&cfg.output_dir, &reports)?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
+}
+
+/// Emit the structured reports as JSON under the output directory.
+fn save_tune_reports(
+    out_dir: &std::path::Path,
+    reports: &[TuneReport],
+) -> Result<std::path::PathBuf> {
+    let json = Json::arr(reports.iter().map(|r| r.to_json()).collect());
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating output dir {out_dir:?}"))?;
+    let path = out_dir.join("tune_reports.json");
+    std::fs::write(&path, json.to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
 }
 
 /// Cross-check a representative artifact of each kind against the native
@@ -256,7 +305,11 @@ SUBCOMMANDS:
   tables  <table1|table2|table3|tablec3|all> [--save]
   measure <bandwidth|fig7|fig8|fig11|fig13|...> [--save]   PJRT timings
   check   [--save]           paper-vs-model claim table
-  tune    <mhd|diffusion|xcorr> [--precision f32|f64] [--caching hwc|swc]
+  tune    <workload>|--all [--precision f32|f64] [--caching hwc|swc] [--save]
+                             batched §5.1 decomposition search; --all runs
+                             every registered workload on every device and
+                             writes results/tune_reports.json
+  workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance
   whatif  <smem|l1|hbm>      §6.1 hypothetical-hardware exploration

@@ -29,6 +29,16 @@ impl Gpu {
             _ => None,
         }
     }
+
+    /// Short Table 1 column id (stable key for reports and caches).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Gpu::A100 => "A100",
+            Gpu::V100 => "V100",
+            Gpu::Mi250x => "MI250X",
+            Gpu::Mi100 => "MI100",
+        }
+    }
 }
 
 pub const ALL_GPUS: [Gpu; 4] = [Gpu::A100, Gpu::V100, Gpu::Mi250x, Gpu::Mi100];
@@ -299,12 +309,7 @@ pub fn spec(gpu: Gpu) -> &'static GpuSpec {
 
 impl std::fmt::Display for Gpu {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Gpu::A100 => write!(f, "A100"),
-            Gpu::V100 => write!(f, "V100"),
-            Gpu::Mi250x => write!(f, "MI250X"),
-            Gpu::Mi100 => write!(f, "MI100"),
-        }
+        f.write_str(self.as_str())
     }
 }
 

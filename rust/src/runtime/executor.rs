@@ -4,14 +4,26 @@
 //! artifact (cached), and runs computations with host-side `f32`/`f64`
 //! tensors. All artifacts are lowered with `return_tuple=True`, so every
 //! result comes back as a tuple literal that is decomposed here.
+//!
+//! The `xla` bindings are unavailable in the offline build environment
+//! (DESIGN.md §9), so everything touching PJRT is gated behind the `pjrt`
+//! cargo feature. Without it, [`HostValue`] and the manifest plumbing still
+//! compile (they are pure host code used by verification and the native
+//! engine), and [`Executor::new`] reports the missing runtime instead.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
-use super::manifest::{ArtifactEntry, DType, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
+use super::manifest::ArtifactEntry;
+use super::manifest::{DType, Manifest, TensorSpec};
 
 /// A host-side tensor: data + shape, f32 or f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,7 +100,10 @@ impl HostValue {
         let b = other.to_f64_vec();
         a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl HostValue {
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64>;
         let lit = match self {
@@ -125,14 +140,24 @@ pub struct ExecTiming {
 }
 
 /// Artifact executor with a compile cache.
+///
+/// Without the `pjrt` feature the type still exists (so the coordinator,
+/// harness, benches, and examples compile unchanged) but cannot be
+/// constructed: [`Executor::new`] returns an error explaining the missing
+/// runtime, and every caller's artifact-absent skip path takes over.
 pub struct Executor {
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     /// Cumulative compile seconds (reported by the harness).
     pub compile_seconds: Mutex<f64>,
+    #[cfg(not(feature = "pjrt"))]
+    unconstructable: std::convert::Infallible,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executor {
     /// Create a CPU-PJRT executor over an artifacts directory.
     pub fn new(manifest: Manifest) -> Result<Self> {
@@ -231,10 +256,55 @@ impl Executor {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Executor {
+    /// Stub constructor: the offline build carries no PJRT runtime.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let _ = manifest;
+        bail!(
+            "stencilax was built without the `pjrt` feature: executing AOT \
+             artifacts requires the XLA/PJRT bindings (enable `--features pjrt` \
+             in an environment providing the `xla` crate; see DESIGN.md §9)"
+        )
+    }
+
+    /// Load the default manifest and create the executor.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("Executor cannot be constructed without the pjrt feature")
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<()> {
+        let _ = name;
+        unreachable!("Executor cannot be constructed without the pjrt feature")
+    }
+
+    /// Execute an artifact with host inputs; returns host outputs.
+    pub fn run(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let _ = (name, inputs);
+        unreachable!("Executor cannot be constructed without the pjrt feature")
+    }
+
+    /// Execute and report timing.
+    pub fn run_timed(
+        &self,
+        name: &str,
+        inputs: &[HostValue],
+    ) -> Result<(Vec<HostValue>, ExecTiming)> {
+        let _ = (name, inputs);
+        unreachable!("Executor cannot be constructed without the pjrt feature")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn host_value_roundtrip() {
         let v = HostValue::f64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
@@ -243,6 +313,15 @@ mod tests {
         let lit = v.to_literal().unwrap();
         let back = HostValue::from_literal(&lit).unwrap();
         assert_eq!(v, back);
+    }
+
+    #[test]
+    fn host_value_shape_and_len() {
+        let v = HostValue::f64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.len(), 6);
+        assert!(!v.is_empty());
+        assert_eq!(v.dtype(), DType::F64);
     }
 
     #[test]
@@ -265,5 +344,18 @@ mod tests {
         let a = HostValue::f64(vec![1.0, 2.0], &[2]);
         let b = HostValue::f32(vec![1.0, 2.5], &[2]);
         assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_executor_reports_missing_runtime() {
+        use std::path::PathBuf;
+        let m = Manifest::parse(r#"{"version": 1, "artifacts": []}"#, PathBuf::from("."))
+            .unwrap();
+        let err = match Executor::new(m) {
+            Ok(_) => panic!("stub constructor must fail"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -15,10 +15,12 @@ pub enum Caching {
 }
 
 impl Caching {
+    /// Accepts both the CLI spelling (`hwc`/`swc`) and the short display
+    /// form (`hw`/`sw`) that reports serialize, so emitted JSON round-trips.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
-            "hwc" => Some(Caching::Hwc),
-            "swc" => Some(Caching::Swc),
+            "hwc" | "hw" => Some(Caching::Hwc),
+            "swc" | "sw" => Some(Caching::Swc),
             _ => None,
         }
     }

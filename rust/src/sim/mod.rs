@@ -24,7 +24,9 @@ pub mod library;
 pub mod occupancy;
 pub mod pitfalls;
 pub mod predict;
+pub mod workload;
 pub mod workloads;
 
 pub use kernel::{Caching, KernelProfile, Unroll};
 pub use predict::{predict, Bound, Prediction};
+pub use workload::{registry, Workload};

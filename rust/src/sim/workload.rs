@@ -1,0 +1,324 @@
+//! Unified workload registry (DESIGN.md §7).
+//!
+//! Every benchmark of the paper — 1-D convolution at radii 1..8, the wide
+//! cross-correlation, 1/2/3-D diffusion, and the fused MHD substep — is one
+//! [`Workload`]: a name, a dimensionality, a [`KernelProfile`] builder for
+//! the performance model, a valid-tile predicate for the §5.1 decomposition
+//! search, and a reference evaluator backed by the native stencil engine.
+//! The CLI, the batched tuner ([`crate::coordinator::tune`]), and the
+//! figure harness discover workloads through [`registry`] by name instead
+//! of hard-coded match arms, so adding a workload is one registration.
+
+use std::sync::OnceLock;
+
+use crate::model::specs::GpuSpec;
+use crate::stencil::conv;
+use crate::stencil::diffusion::Diffusion;
+use crate::stencil::grid::{Boundary, Grid};
+use crate::stencil::mhd::{MhdParams, MhdState, MhdStepper};
+use crate::util::rng::Rng;
+
+use super::kernel::{Caching, KernelProfile, Unroll};
+use super::workloads::{self, Tile};
+
+/// One tunable benchmark of the paper.
+pub trait Workload: Send + Sync {
+    /// Registry name (e.g. `conv1d-r3`, `diffusion3d`, `mhd`).
+    fn name(&self) -> String;
+
+    /// Grid dimensionality (bounds the decomposition search space).
+    fn dims(&self) -> usize;
+
+    /// Benchmark problem shape (paper §5.1 sizes).
+    fn shape(&self) -> Vec<usize>;
+
+    /// Build the kernel profile for one candidate decomposition, or `None`
+    /// when the tile cannot launch (the paper's "failed launch" discard).
+    fn profile(
+        &self,
+        spec: &GpuSpec,
+        fp64: bool,
+        caching: Caching,
+        tile: Tile,
+    ) -> Option<KernelProfile>;
+
+    /// Valid-tile predicate beyond the global §5.1 pruning rules: unused
+    /// axes of lower-dimensional workloads must stay singleton.
+    fn tile_valid(&self, spec: &GpuSpec, tile: Tile) -> bool {
+        let _ = spec;
+        match self.dims() {
+            1 => tile.ty == 1 && tile.tz == 1,
+            2 => tile.tz == 1,
+            _ => true,
+        }
+    }
+
+    /// Reference evaluator: run the native engine on a small instance of
+    /// this workload and digest the output. Deterministic in `seed`; tests
+    /// use it to pin that every registered workload stays computable.
+    fn reference_digest(&self, seed: u64) -> f64;
+}
+
+fn xcorr_digest(radius: usize, flip_taps: bool, seed: u64) -> f64 {
+    let n = 4096usize;
+    let mut rng = Rng::new(seed);
+    let fpad = rng.normal_vec(n + 2 * radius);
+    let mut taps = rng.normal_vec(2 * radius + 1);
+    if flip_taps {
+        // convolution = cross-correlation with the kernel reversed
+        taps.reverse();
+    }
+    conv::xcorr1d(&fpad, &taps).iter().sum()
+}
+
+/// 1-D convolution (paper §3.1 / Figs. 7-9) at a fixed radius.
+struct Conv1d {
+    radius: usize,
+}
+
+impl Workload for Conv1d {
+    fn name(&self) -> String {
+        format!("conv1d-r{}", self.radius)
+    }
+
+    fn dims(&self) -> usize {
+        1
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        vec![1 << 24]
+    }
+
+    fn profile(
+        &self,
+        spec: &GpuSpec,
+        fp64: bool,
+        caching: Caching,
+        tile: Tile,
+    ) -> Option<KernelProfile> {
+        let _ = spec;
+        Some(workloads::xcorr1d(self.shape()[0], self.radius, fp64, caching, Unroll::Pointwise, tile))
+    }
+
+    fn reference_digest(&self, seed: u64) -> f64 {
+        xcorr_digest(self.radius, true, seed)
+    }
+}
+
+/// Wide 1-D cross-correlation (paper §4.1, the Fig. 8 sweep's upper range).
+struct Xcorr {
+    radius: usize,
+}
+
+impl Workload for Xcorr {
+    fn name(&self) -> String {
+        "xcorr".to_string()
+    }
+
+    fn dims(&self) -> usize {
+        1
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        vec![1 << 24]
+    }
+
+    fn profile(
+        &self,
+        spec: &GpuSpec,
+        fp64: bool,
+        caching: Caching,
+        tile: Tile,
+    ) -> Option<KernelProfile> {
+        let _ = spec;
+        Some(workloads::xcorr1d(self.shape()[0], self.radius, fp64, caching, Unroll::Pointwise, tile))
+    }
+
+    fn reference_digest(&self, seed: u64) -> f64 {
+        xcorr_digest(self.radius, false, seed)
+    }
+}
+
+/// Diffusion-equation step (paper §3.2, Figs. 10-12) at radius 3.
+struct DiffusionStep {
+    dims: usize,
+    radius: usize,
+}
+
+impl DiffusionStep {
+    /// Paper problem sizes: 64 MiB FP32 per dimension count (§5.1).
+    fn paper_shape(&self) -> Vec<usize> {
+        match self.dims {
+            1 => vec![1 << 24],
+            2 => vec![4096, 4096],
+            _ => vec![256, 256, 256],
+        }
+    }
+}
+
+impl Workload for DiffusionStep {
+    fn name(&self) -> String {
+        format!("diffusion{}d", self.dims)
+    }
+
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        self.paper_shape()
+    }
+
+    fn profile(
+        &self,
+        spec: &GpuSpec,
+        fp64: bool,
+        caching: Caching,
+        tile: Tile,
+    ) -> Option<KernelProfile> {
+        Some(workloads::diffusion(spec, &self.paper_shape(), self.radius, fp64, caching, tile))
+    }
+
+    fn reference_digest(&self, seed: u64) -> f64 {
+        let shape = vec![16usize; self.dims];
+        let mut rng = Rng::new(seed);
+        let g = Grid::from_fn(&shape, self.radius, |_, _, _| rng.normal());
+        let d = Diffusion::new(self.radius, 1.0, 1.0, Boundary::Periodic);
+        let out = d.step(&g, self.dims, d.stable_dt(self.dims));
+        out.interior_to_vec().iter().sum()
+    }
+}
+
+/// Fused MHD RK3 substep (paper §3.3/§4.4, Figs. 13-14) on the 128^3 box.
+struct Mhd;
+
+impl Workload for Mhd {
+    fn name(&self) -> String {
+        "mhd".to_string()
+    }
+
+    fn dims(&self) -> usize {
+        3
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        vec![128, 128, 128]
+    }
+
+    fn profile(
+        &self,
+        spec: &GpuSpec,
+        fp64: bool,
+        caching: Caching,
+        tile: Tile,
+    ) -> Option<KernelProfile> {
+        Some(workloads::mhd(spec, &self.shape(), fp64, caching, tile, 0))
+    }
+
+    fn reference_digest(&self, seed: u64) -> f64 {
+        let n = 8usize;
+        let mut rng = Rng::new(seed);
+        let mut state = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+        let par = MhdParams {
+            dx: 2.0 * std::f64::consts::PI / n as f64,
+            ..Default::default()
+        };
+        let mut stepper = MhdStepper::new(par, 3, n, n, n);
+        stepper.substep(&mut state, 1e-4, 0);
+        state.stacked_interior().iter().sum()
+    }
+}
+
+/// The central registry: every paper workload, in a stable order.
+pub fn registry() -> &'static [Box<dyn Workload>] {
+    static REG: OnceLock<Vec<Box<dyn Workload>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut reg: Vec<Box<dyn Workload>> = Vec::new();
+        for radius in 1..=8 {
+            reg.push(Box::new(Conv1d { radius }));
+        }
+        reg.push(Box::new(Xcorr { radius: 64 }));
+        for dims in 1..=3 {
+            reg.push(Box::new(DiffusionStep { dims, radius: 3 }));
+        }
+        reg.push(Box::new(Mhd));
+        reg
+    })
+}
+
+/// Look a workload up by registry name (with CLI-friendly aliases).
+pub fn find(name: &str) -> Option<&'static dyn Workload> {
+    let name = match name {
+        "diffusion" => "diffusion3d",
+        "conv1d" => "conv1d-r3",
+        other => other,
+    };
+    registry().iter().find(|w| w.name() == name).map(|b| b.as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs::{A100, MI250X};
+
+    #[test]
+    fn registry_covers_every_paper_workload() {
+        let names: Vec<String> = registry().iter().map(|w| w.name()).collect();
+        assert_eq!(names.len(), 13, "{names:?}");
+        for expect in
+            ["conv1d-r1", "conv1d-r8", "xcorr", "diffusion1d", "diffusion2d", "diffusion3d", "mhd"]
+        {
+            assert!(names.iter().any(|n| n == expect), "{expect} missing from {names:?}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(find("diffusion").unwrap().name(), "diffusion3d");
+        assert_eq!(find("conv1d").unwrap().name(), "conv1d-r3");
+        assert!(find("h100-only-workload").is_none());
+    }
+
+    #[test]
+    fn profiles_build_on_every_device_tile_combo() {
+        for w in registry() {
+            for spec in [&A100, &MI250X] {
+                let tile = Tile { tx: 64, ty: 1, tz: 1 };
+                let prof = w.profile(spec, true, Caching::Hwc, tile).unwrap();
+                assert!(prof.elems > 0.0, "{}", w.name());
+                assert!(prof.hbm_bytes > 0.0, "{}", w.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tile_predicate_enforces_dimensionality() {
+        let conv = find("conv1d-r1").unwrap();
+        assert!(conv.tile_valid(&A100, Tile { tx: 256, ty: 1, tz: 1 }));
+        assert!(!conv.tile_valid(&A100, Tile { tx: 256, ty: 2, tz: 1 }));
+        let d2 = find("diffusion2d").unwrap();
+        assert!(d2.tile_valid(&A100, Tile { tx: 64, ty: 8, tz: 1 }));
+        assert!(!d2.tile_valid(&A100, Tile { tx: 64, ty: 8, tz: 2 }));
+        let mhd = find("mhd").unwrap();
+        assert!(mhd.tile_valid(&A100, Tile { tx: 32, ty: 4, tz: 4 }));
+    }
+
+    #[test]
+    fn reference_digests_are_deterministic_and_seed_sensitive() {
+        for w in registry() {
+            let a = w.reference_digest(11);
+            let b = w.reference_digest(11);
+            let c = w.reference_digest(12);
+            assert!(a.is_finite(), "{}", w.name());
+            assert_eq!(a, b, "{} digest must be deterministic", w.name());
+            assert_ne!(a, c, "{} digest must depend on the seed", w.name());
+        }
+    }
+
+    #[test]
+    fn shapes_match_dimensionality() {
+        for w in registry() {
+            assert_eq!(w.shape().len(), w.dims(), "{}", w.name());
+        }
+    }
+}

@@ -8,7 +8,8 @@ use crate::model::specs::{GpuSpec, MIB};
 use super::kernel::{Caching, KernelProfile, Unroll};
 
 /// Tile (thread-block) decomposition; the autotuner searches over these.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// `Eq + Hash` so tiles can key the tuner's prediction cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Tile {
     pub tx: u32,
     pub ty: u32,
@@ -99,7 +100,7 @@ pub fn xcorr1d(
         onchip_loads_per_elem: taps,
         instr_per_elem: mac + ld + idx,
         ilp: ilp_of(unroll),
-            ipc_fraction: 1.0,
+        ipc_fraction: 1.0,
         regs_per_thread: regs_of(unroll, caching),
         smem_per_block: smem,
         block_threads: tile.threads(),
@@ -121,7 +122,7 @@ pub fn copy(n_bytes: f64, fp64: bool) -> KernelProfile {
         onchip_loads_per_elem: 1.0,
         instr_per_elem: 2.0,
         ilp: 4.0,
-            ipc_fraction: 1.0,
+        ipc_fraction: 1.0,
         regs_per_thread: 24,
         smem_per_block: 0.0,
         block_threads: 256,
@@ -195,7 +196,7 @@ pub fn diffusion(
         onchip_loads_per_elem: loads,
         instr_per_elem: macs + loads + idx,
         ilp: 2.0,
-            ipc_fraction: 1.0,
+        ipc_fraction: 1.0,
         regs_per_thread: 40 + 4 * radius as u32,
         smem_per_block: smem,
         block_threads: tile.threads(),

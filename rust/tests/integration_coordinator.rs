@@ -9,6 +9,12 @@ use stencilax::runtime::{Executor, Manifest};
 use stencilax::util::bench::Bencher;
 
 fn executor() -> Option<Executor> {
+    if cfg!(not(feature = "pjrt")) {
+        // intentionally skipped: executing artifacts needs the XLA/PJRT
+        // bindings, which the offline build does not carry (DESIGN.md §9)
+        eprintln!("skipping: stencilax built without the `pjrt` feature");
+        return None;
+    }
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");

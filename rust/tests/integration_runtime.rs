@@ -11,6 +11,12 @@ use stencilax::stencil::{conv, diffusion::Diffusion};
 use stencilax::util::rng::Rng;
 
 fn executor() -> Option<Executor> {
+    if cfg!(not(feature = "pjrt")) {
+        // intentionally skipped: executing artifacts needs the XLA/PJRT
+        // bindings, which the offline build does not carry (DESIGN.md §9)
+        eprintln!("skipping: stencilax built without the `pjrt` feature");
+        return None;
+    }
     let dir = manifest_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
