@@ -69,9 +69,9 @@ fn main() -> Result<()> {
 
         // cross-check against the native engine periodically
         if step % check_every == 0 {
-            native = d.step(&native, 3, dt);
+            native = d.step(&mut native, 3, dt);
             for _ in 1..check_every {
-                native = d.step(&native, 3, dt);
+                native = d.step(&mut native, 3, dt);
             }
             // re-sync cadence: native advanced check_every steps in total
             let err = grid.max_abs_diff(&native);

@@ -1,81 +1,46 @@
 //! Bench: the native Rust stencil engine (the L3 hot paths the perf pass
-//! optimizes — see EXPERIMENTS.md §Perf).
+//! optimizes — see EXPERIMENTS.md §Perf). The main cases run through the
+//! shared suite behind `stencilax bench` (coordinator::bench), so this
+//! binary and the CLI report the same numbers; a few cold-path micro
+//! benches ride along.
 
-use stencilax::stencil::diffusion::Diffusion;
-use stencilax::stencil::grid::{Boundary, Grid};
-use stencilax::stencil::mhd::{MhdParams, MhdState, MhdStepper};
-use stencilax::stencil::{central_weights, conv};
+use stencilax::coordinator::bench::run_suite;
+use stencilax::stencil::central_weights;
+use stencilax::stencil::mhd::MhdState;
 use stencilax::util::bench::{black_box, Bencher};
 use stencilax::util::rng::Rng;
 
 fn main() {
     println!("=== native_engine ===");
-    let b = Bencher { warmup: 2, min_iters: 5, max_iters: 50, budget: std::time::Duration::from_secs(3) };
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    for r in run_suite(smoke) {
+        println!(
+            "         -> {:<12} {:?}: {:.1} Melem/s",
+            r.name,
+            r.shape,
+            r.melem_per_s()
+        );
+    }
+
+    let b = Bencher {
+        warmup: 2,
+        min_iters: 5,
+        max_iters: 50,
+        budget: std::time::Duration::from_secs(3),
+    };
     let mut rng = Rng::new(1);
 
-    // 1-D xcorr at the paper's FP64 problem size
-    {
-        let (n, r) = (1usize << 24, 3usize);
-        let fpad = rng.normal_vec(n + 2 * r);
-        let taps = rng.normal_vec(2 * r + 1);
-        let stats = b.report("xcorr1d n=2^24 r=3", || {
-            black_box(conv::xcorr1d(&fpad, &taps));
-        });
-        println!(
-            "         -> {:.2} GiB/s effective",
-            (2 * n * 8) as f64 / stats.median_s / (1u64 << 30) as f64
-        );
-    }
-
-    // 3-D diffusion step at 128^3
-    {
-        let n = 128usize;
-        let mut g = Grid::new(n, n, n, 3);
-        g.interior_from_slice(&rng.normal_vec(n * n * n));
-        g.fill_ghosts(Boundary::Periodic);
-        let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
-        let stats = b.report("diffusion3d 128^3 r=3 (prefilled)", || {
-            black_box(d.step_prefilled(&g, 3, 1e-3));
-        });
-        println!(
-            "         -> {:.1} Melem/s",
-            (n * n * n) as f64 / stats.median_s / 1e6
-        );
-    }
-
-    // ghost-zone fill (the padding path between PJRT substeps)
+    // stacked export (PJRT upload prep)
     {
         let n = 64usize;
         let mut st = MhdState::from_fn(n, n, n, 3, |_, _, _, _| rng.normal());
-        let stats = b.report("mhd fill_ghosts 8x64^3", || {
-            st.fill_ghosts();
-        });
-        println!(
-            "         -> {:.1} Melem/s",
-            (8 * n * n * n) as f64 / stats.median_s / 1e6
-        );
-        // stacked export (PJRT upload prep)
+        st.fill_ghosts();
         let stats = b.report("mhd stacked_padded 8x64^3", || {
             black_box(st.stacked_padded());
         });
         println!(
             "         -> {:.1} Melem/s",
             (8 * n * n * n) as f64 / stats.median_s / 1e6
-        );
-    }
-
-    // full native MHD substep at 32^3
-    {
-        let n = 32usize;
-        let par = MhdParams { dx: 2.0 * std::f64::consts::PI / n as f64, ..Default::default() };
-        let mut st = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
-        let mut stepper = MhdStepper::new(par, 3, n, n, n);
-        let stats = b.report("mhd native substep 32^3", || {
-            stepper.substep(&mut st, 1e-5, 0);
-        });
-        println!(
-            "         -> {:.2} Melem-updates/s",
-            (n * n * n) as f64 / stats.median_s / 1e6
         );
     }
 

@@ -1,0 +1,204 @@
+//! `stencilax bench` — the native-engine benchmark service.
+//!
+//! Runs the engine hot paths the perf pass optimizes (EXPERIMENTS.md
+//! §Perf) through the in-crate [`Bencher`] and emits a machine-readable
+//! `BENCH_native.json` via [`crate::util::json`], seeding the repo's perf
+//! trajectory: CI's bench-smoke job runs `stencilax bench --smoke`, checks
+//! the report parses, and uploads it as an artifact, so every PR leaves a
+//! comparable timing record. The full mode uses the paper's §5.1 problem
+//! sizes; smoke mode shrinks them to CI scale with a calibrated
+//! [`Bencher::smoke`] budget.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::stencil::conv;
+use crate::stencil::diffusion::Diffusion;
+use crate::stencil::exec::DoubleBuffer;
+use crate::stencil::grid::{Boundary, Grid};
+use crate::stencil::mhd::{MhdParams, MhdState, MhdStepper};
+use crate::util::bench::{black_box, Bencher, Stats};
+use crate::util::json::Json;
+use crate::util::par;
+use crate::util::rng::Rng;
+
+/// One benchmark case's outcome.
+pub struct BenchResult {
+    /// Stable machine key (`mhd-step`, `diffusion2d`, ...).
+    pub name: String,
+    /// Problem shape (interior extents, or element count for 1-D).
+    pub shape: Vec<usize>,
+    /// Elements updated per iteration (for Melem/s rates).
+    pub elems: f64,
+    pub stats: Stats,
+}
+
+impl BenchResult {
+    pub fn melem_per_s(&self) -> f64 {
+        self.elems / self.stats.median_s / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.stats.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("Stats::to_json returns an object"),
+        };
+        obj.insert("name".into(), Json::str(self.name.clone()));
+        obj.insert(
+            "shape".into(),
+            Json::arr(self.shape.iter().map(|&n| Json::num(n as f64)).collect()),
+        );
+        obj.insert("elems".into(), Json::num(self.elems));
+        obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
+        Json::Obj(obj)
+    }
+}
+
+/// Run the native-engine suite. `smoke` selects CI-scale problem sizes and
+/// the calibrated smoke budget; otherwise the paper's §5.1 sizes run under
+/// the paper measurement methodology.
+pub fn run_suite(smoke: bool) -> Vec<BenchResult> {
+    let b = if smoke { Bencher::smoke() } else { Bencher::paper() };
+    let mut rng = Rng::new(1);
+    let mut out = Vec::new();
+    let mut push = |name: &str, shape: Vec<usize>, elems: usize, stats: Stats| {
+        out.push(BenchResult { name: name.into(), shape, elems: elems as f64, stats });
+    };
+
+    // 1-D cross-correlation at the paper's FP64 problem size
+    {
+        let n = if smoke { 1usize << 20 } else { 1 << 24 };
+        let r = 3usize;
+        let fpad = rng.normal_vec(n + 2 * r);
+        let taps = rng.normal_vec(2 * r + 1);
+        let stats = b.report(&format!("xcorr1d n=2^{} r=3", n.trailing_zeros()), || {
+            black_box(conv::xcorr1d(&fpad, &taps));
+        });
+        push("xcorr1d", vec![n], n, stats);
+    }
+
+    // 2-D diffusion (the nz == 1 decomposition regression target)
+    {
+        let n = if smoke { 512usize } else { 4096 };
+        let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n], 3, |i, j, _| {
+            ((i * 31 + j * 17) % 13) as f64
+        }));
+        let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(2);
+        let stats = b.report(&format!("diffusion2d {n}^2 r=3 (buffered)"), || {
+            d.step_buffered(&mut field, 2, dt);
+        });
+        push("diffusion2d", vec![n, n], n * n, stats);
+    }
+
+    // 3-D diffusion step
+    {
+        let n = if smoke { 48usize } else { 128 };
+        let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n, n], 3, |i, j, k| {
+            ((i * 7 + j * 5 + k * 3) % 11) as f64
+        }));
+        let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(3);
+        let stats = b.report(&format!("diffusion3d {n}^3 r=3 (buffered)"), || {
+            d.step_buffered(&mut field, 3, dt);
+        });
+        push("diffusion3d", vec![n, n, n], n * n * n, stats);
+    }
+
+    // full MHD RK3 step (three fused substeps) — the headline fusion case
+    {
+        let n = if smoke { 16usize } else { 64 };
+        let par = MhdParams { dx: 2.0 * std::f64::consts::PI / n as f64, ..Default::default() };
+        let mut st = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+        let mut stepper = MhdStepper::new(par, 3, n, n, n);
+        let dt = 1e-5;
+        let stats = b.report(&format!("mhd rk3 step {n}^3 (fused)"), || {
+            stepper.step(&mut st, dt);
+        });
+        push("mhd-step", vec![n, n, n], 3 * n * n * n, stats);
+
+        let stats = b.report(&format!("mhd substep {n}^3 (fused)"), || {
+            stepper.substep(&mut st, dt, 0);
+        });
+        push("mhd-substep", vec![n, n, n], n * n * n, stats);
+
+        let stats = b.report(&format!("mhd fill_ghosts 8x{n}^3"), || {
+            st.fill_ghosts();
+        });
+        push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats);
+    }
+
+    out
+}
+
+/// Assemble the machine-readable report.
+pub fn suite_json(results: &[BenchResult], smoke: bool) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("stencilax-bench/1")),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("threads", Json::num(par::num_threads() as f64)),
+        ("cases", Json::arr(results.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+/// Write `BENCH_native.json` under `out_dir`.
+pub fn write_report(out_dir: &Path, results: &[BenchResult], smoke: bool) -> Result<PathBuf> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating output dir {out_dir:?}"))?;
+    let path = out_dir.join("BENCH_native.json");
+    std::fs::write(&path, suite_json(results, smoke).to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_json_roundtrips_and_carries_every_case() {
+        let results = vec![
+            BenchResult {
+                name: "mhd-step".into(),
+                shape: vec![16, 16, 16],
+                elems: 3.0 * 4096.0,
+                stats: Stats::from_samples(vec![0.5, 0.25, 1.0]),
+            },
+            BenchResult {
+                name: "xcorr1d".into(),
+                shape: vec![1 << 20],
+                elems: (1 << 20) as f64,
+                stats: Stats::from_samples(vec![2e-3]),
+            },
+        ];
+        let j = suite_json(&results, true);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_str("schema").unwrap(), "stencilax-bench/1");
+        assert_eq!(parsed.req_str("mode").unwrap(), "smoke");
+        assert!(parsed.req_u64("threads").unwrap() >= 1);
+        let cases = parsed.req_arr("cases").unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].req_str("name").unwrap(), "mhd-step");
+        assert_eq!(cases[0].req_f64("median_s").unwrap(), 0.5);
+        assert_eq!(cases[0].get("shape").unwrap().usize_vec().unwrap(), vec![16, 16, 16]);
+        assert!(cases[0].req_f64("melem_per_s").unwrap() > 0.0);
+        assert_eq!(cases[1].req_u64("iters").unwrap(), 1);
+    }
+
+    #[test]
+    fn write_report_emits_parseable_file() {
+        let dir = std::env::temp_dir().join("stencilax_bench_test");
+        let results = vec![BenchResult {
+            name: "diffusion2d".into(),
+            shape: vec![64, 64],
+            elems: 4096.0,
+            stats: Stats::from_samples(vec![1e-4, 2e-4, 3e-4]),
+        }];
+        let path = write_report(&dir, &results, true).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req_arr("cases").unwrap().len(), 1);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -3,6 +3,7 @@
 //! paper's tables and figures.
 
 pub mod autotune;
+pub mod bench;
 pub mod report;
 pub mod sweep;
 pub mod timing;

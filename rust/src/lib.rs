@@ -30,6 +30,14 @@
 //!   and the §6.1 what-if explorer all sit on this service; results are
 //!   bit-identical for any `STENCILAX_THREADS` worker count.
 //!
+//! The native engine executes through [`stencil::exec`] (DESIGN.md §10):
+//! fused, cache-blocked sweeps over x-contiguous rows on a persistent
+//! worker pool with reusable per-thread workspaces — the steady-state
+//! time loop (double-buffered diffusion, the fused MHD RHS+RK3 substep of
+//! [`stencil::mhd::fused`]) performs zero heap allocation after warmup,
+//! and `stencilax bench` keeps a machine-readable perf baseline current
+//! (`BENCH_native.json`, [`coordinator::bench`]).
+//!
 //! Cargo features: `pjrt` enables executing the AOT HLO artifacts through
 //! the XLA/PJRT bindings. The default (offline) build compiles everything
 //! — model, registry, tuner, harness, CLI — with a stub executor that

@@ -9,6 +9,7 @@
 //!   tune    <workload>|--all    run the §5.1 autotuner (registry-driven);
 //!                               --all batches every workload x device and
 //!                               writes a JSON TuneReport
+//!   bench   [--smoke]           native-engine suite -> BENCH_native.json
 //!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
@@ -33,7 +34,7 @@ use stencilax::util::cli::Args;
 use stencilax::util::json::Json;
 use stencilax::util::rng::Rng;
 
-const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help", "all"];
+const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help", "all", "smoke"];
 
 fn main() -> Result<()> {
     let args = Args::from_env(BOOL_FLAGS)?;
@@ -104,6 +105,7 @@ fn main() -> Result<()> {
         "ablation" => harness::whatif::ablation(&cfg).print(),
         "workloads" => cmd_workloads(),
         "tune" => cmd_tune(&cfg, &args)?,
+        "bench" => cmd_bench(&cfg, &args)?,
         "verify" => cmd_verify(&cfg)?,
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -201,6 +203,35 @@ fn save_tune_reports(
     std::fs::write(&path, json.to_string_pretty())
         .with_context(|| format!("writing {path:?}"))?;
     Ok(path)
+}
+
+/// Run the native-engine benchmark suite and write the machine-readable
+/// `BENCH_native.json` perf baseline (`--smoke` for the calibrated CI
+/// sizes; see EXPERIMENTS.md §Perf).
+fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
+    let smoke = args.has_flag("smoke");
+    println!(
+        "=== native engine bench ({}, {} threads) ===",
+        if smoke { "smoke" } else { "full" },
+        stencilax::util::par::num_threads()
+    );
+    let results = stencilax::coordinator::bench::run_suite(smoke);
+    let mut t = Table::new(
+        "Native engine — fused/blocked hot paths (median of N iters)",
+        &["case", "shape", "median (ms)", "Melem/s"],
+    );
+    for r in &results {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:?}", r.shape),
+            format!("{:.3}", r.stats.median_s * 1e3),
+            format!("{:.1}", r.melem_per_s()),
+        ]);
+    }
+    println!("{}", t.render());
+    let path = stencilax::coordinator::bench::write_report(&cfg.output_dir, &results, smoke)?;
+    println!("wrote {}", path.display());
+    Ok(())
 }
 
 /// Cross-check a representative artifact of each kind against the native
@@ -309,6 +340,9 @@ SUBCOMMANDS:
                              batched §5.1 decomposition search; --all runs
                              every registered workload on every device and
                              writes results/tune_reports.json
+  bench   [--smoke]          run the native-engine suite (fused MHD, blocked
+                             diffusion, xcorr) and write BENCH_native.json
+                             under --out; --smoke selects CI-scale sizes
   workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance

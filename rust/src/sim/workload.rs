@@ -182,9 +182,9 @@ impl Workload for DiffusionStep {
     fn reference_digest(&self, seed: u64) -> f64 {
         let shape = vec![16usize; self.dims];
         let mut rng = Rng::new(seed);
-        let g = Grid::from_fn(&shape, self.radius, |_, _, _| rng.normal());
+        let mut g = Grid::from_fn(&shape, self.radius, |_, _, _| rng.normal());
         let d = Diffusion::new(self.radius, 1.0, 1.0, Boundary::Periodic);
-        let out = d.step(&g, self.dims, d.stable_dt(self.dims));
+        let out = d.step(&mut g, self.dims, d.stable_dt(self.dims));
         out.interior_to_vec().iter().sum()
     }
 }

@@ -21,25 +21,19 @@ pub fn xcorr1d(fpad: &[f64], taps: &[f64]) -> Vec<f64> {
     // cache-resident output blocks instead of streaming the full array once
     // per tap — the naive whole-array version made taps+2 memory passes and
     // measured 0.9 GiB/s on 2^24 elements; blocking keeps the block in L2.
+    // Blocks are written in place through the persistent pool
+    // (§Perf/L3-5): no per-block buffers, no thread spawns per call.
     const BLOCK: usize = 8192;
     let mut out = vec![0.0f64; n];
-    let chunks = n.div_ceil(BLOCK);
-    let blocks: Vec<Vec<f64>> = crate::util::par::par_map(chunks, |c| {
+    crate::stencil::exec::par_chunks_mut(&mut out, BLOCK, |c, buf| {
         let lo = c * BLOCK;
-        let hi = (lo + BLOCK).min(n);
-        let mut buf = vec![0.0f64; hi - lo];
         for (j, &g) in taps.iter().enumerate() {
-            let src = &fpad[lo + j..hi + j];
+            let src = &fpad[lo + j..lo + buf.len() + j];
             for (o, &x) in buf.iter_mut().zip(src) {
                 *o += g * x;
             }
         }
-        buf
     });
-    for (c, buf) in blocks.into_iter().enumerate() {
-        let lo = c * BLOCK;
-        out[lo..lo + buf.len()].copy_from_slice(&buf);
-    }
     out
 }
 
@@ -48,54 +42,62 @@ pub fn xcorr1d(fpad: &[f64], taps: &[f64]) -> Vec<f64> {
 /// Kernel is centered: extent must be odd or 1 per axis. The grid's ghost
 /// width must cover the kernel radius on each used axis.
 pub fn xcorr_dense(input: &Grid, kernel: &[f64], kx: usize, ky: usize, kz: usize) -> Grid {
+    let mut out = Grid::new(input.nx, input.ny, input.nz, input.r);
+    xcorr_dense_into(input, kernel, kx, ky, kz, &mut out);
+    out
+}
+
+/// [`xcorr_dense`] into a caller-provided output grid (same interior shape
+/// and ghost width as `input`), allocation-free. The sweep is
+/// (j, k)-tile-blocked over x-contiguous rows, so 1-D/2-D inputs
+/// (`nz == 1`) distribute across threads — the old z-plane split ran them
+/// serial.
+pub fn xcorr_dense_into(
+    input: &Grid,
+    kernel: &[f64],
+    kx: usize,
+    ky: usize,
+    kz: usize,
+    out: &mut Grid,
+) {
     assert_eq!(kernel.len(), kx * ky * kz, "kernel size mismatch");
     for (ext, n) in [(kx, input.nx), (ky, input.ny), (kz, input.nz)] {
         assert!(ext == 1 || ext % 2 == 1, "kernel extents must be odd");
         assert!(ext / 2 <= input.r, "ghost width too small");
         let _ = n;
     }
+    assert_eq!(
+        (input.nx, input.ny, input.nz, input.r),
+        (out.nx, out.ny, out.nz, out.r),
+        "input/output shape mismatch"
+    );
     let (rx, ry, rz) = (kx / 2, ky / 2, kz / 2);
     let (px, py, _) = input.padded();
-    let mut out = Grid::new(input.nx, input.ny, input.nz, input.r);
     let r = input.r;
     let data = input.data();
     let nx = input.nx;
-    let ny = input.ny;
 
-    // split the interior z range across threads
-    let planes: Vec<Vec<f64>> = crate::util::par::par_map(input.nz, |k| {
-            let mut plane = vec![0.0f64; nx * ny];
-            for j in 0..ny {
-                let dst = &mut plane[j * nx..(j + 1) * nx];
-                for dz in 0..kz {
-                    for dy in 0..ky {
-                        for dx in 0..kx {
-                            let g = kernel[dx + kx * (dy + ky * dz)];
-                            if g == 0.0 {
-                                continue; // prune zeros like Astaroth's codegen
-                            }
-                            let pi0 = r + 0 - rx + dx;
-                            let pj = r + j - ry + dy;
-                            let pk = r + k - rz + dz;
-                            let base = pi0 + px * (pj + py * pk);
-                            let src = &data[base..base + nx];
-                            for (o, &x) in dst.iter_mut().zip(src) {
-                                *o += g * x;
-                            }
-                        }
+    crate::stencil::exec::par_fill_rows(out, |j, k, dst, _ws| {
+        dst.fill(0.0);
+        for dz in 0..kz {
+            for dy in 0..ky {
+                for dx in 0..kx {
+                    let g = kernel[dx + kx * (dy + ky * dz)];
+                    if g == 0.0 {
+                        continue; // prune zeros like Astaroth's codegen
+                    }
+                    let pi0 = r + 0 - rx + dx;
+                    let pj = r + j - ry + dy;
+                    let pk = r + k - rz + dz;
+                    let base = pi0 + px * (pj + py * pk);
+                    let src = &data[base..base + nx];
+                    for (o, &x) in dst.iter_mut().zip(src) {
+                        *o += g * x;
                     }
                 }
             }
-            plane
-        });
-    for (k, plane) in planes.into_iter().enumerate() {
-        for j in 0..ny {
-            for i in 0..nx {
-                out.set(i, j, k, plane[i + j * nx]);
-            }
         }
-    }
-    out
+    });
 }
 
 /// Build the dense cross-shaped kernel of paper Eq. (7):

@@ -6,6 +6,7 @@
 //! uses the dense combined kernel from [`super::conv::laplacian_cross_kernel`].
 
 use super::coeffs::central_weights;
+use super::exec::{self, DoubleBuffer};
 use super::grid::{Boundary, Grid};
 
 /// Diffusion stepper configuration.
@@ -35,68 +36,81 @@ impl Diffusion {
         0.8 * self.dx * self.dx / (dim as f64 * self.alpha * lam)
     }
 
-    /// Advance one step of size `dt`: fills ghosts, then applies the update.
-    pub fn step(&self, f: &Grid, dim: usize, dt: f64) -> Grid {
-        let mut src = f.clone();
-        src.fill_ghosts(self.boundary);
-        self.step_prefilled(&src, dim, dt)
+    /// Advance one step of size `dt`: fills `f`'s ghost zones in place (the
+    /// interior is untouched — EXPERIMENTS.md §Perf/L3-7 retired the
+    /// whole-grid clone this used to make), then applies the update into a
+    /// fresh grid.
+    pub fn step(&self, f: &mut Grid, dim: usize, dt: f64) -> Grid {
+        f.fill_ghosts(self.boundary);
+        self.step_prefilled(f, dim, dt)
     }
 
     /// Advance one step assuming ghosts are already filled.
-    ///
-    /// Parallelized over the z axis (2/3-D) or serial (1-D). Dimension is
-    /// explicit because a 1-D grid still carries unit y/z extents.
     pub fn step_prefilled(&self, src: &Grid, dim: usize, dt: f64) -> Grid {
+        let mut out = Grid::new(src.nx, src.ny, src.nz, src.r);
+        self.step_into(src, &mut out, dim, dt);
+        out
+    }
+
+    /// Advance one step from `src` (ghosts already filled) into `dst`,
+    /// allocation-free: the sweep is (j, k)-tile-blocked over x-contiguous
+    /// rows ([`exec::par_fill_rows`]), so 1-D/2-D grids (`nz == 1`)
+    /// distribute across threads too, and the Laplacian accumulator is a
+    /// reusable per-thread workspace row. Dimension is explicit because a
+    /// 1-D grid still carries unit y/z extents.
+    pub fn step_into(&self, src: &Grid, dst: &mut Grid, dim: usize, dt: f64) {
         assert!((1..=3).contains(&dim));
         assert!(src.r >= self.radius, "grid ghost width too small");
+        assert_eq!(
+            (src.nx, src.ny, src.nz, src.r),
+            (dst.nx, dst.ny, dst.nz, dst.r),
+            "src/dst shape mismatch"
+        );
         let s = dt * self.alpha / (self.dx * self.dx);
         let r = src.r;
         let rad = self.radius;
         let taps = 2 * rad + 1;
         let (px, py, _) = src.padded();
-        let (nx, ny, nz) = (src.nx, src.ny, src.nz);
+        let nx = src.nx;
         let data = src.data();
         let c2 = &self.c2;
         // axis strides in padded storage
         let strides = [1usize, px, px * py];
 
-        let mut out = Grid::new(nx, ny, nz, r);
-        let planes: Vec<Vec<f64>> = crate::util::par::par_map(nz, |k| {
-                let mut plane = vec![0.0f64; nx * ny];
-                for j in 0..ny {
-                    let base = r + px * (j + r + py * (k + r));
-                    let row = &mut plane[j * nx..(j + 1) * nx];
-                    // start from the centre value (identity tap)
-                    row.copy_from_slice(&data[base..base + nx]);
-                    let mut lap = vec![0.0f64; nx];
-                    for axis in 0..dim {
-                        let st = strides[axis];
-                        for t in 0..taps {
-                            let c = c2[t];
-                            if c == 0.0 {
-                                continue;
-                            }
-                            let off = base + t * st - rad * st;
-                            let srcrow = &data[off..off + nx];
-                            for (l, &x) in lap.iter_mut().zip(srcrow) {
-                                *l += c * x;
-                            }
-                        }
+        exec::par_fill_rows(dst, |j, k, out, ws| {
+            let base = r + px * (j + r + py * (k + r));
+            // start from the centre value (identity tap)
+            out.copy_from_slice(&data[base..base + nx]);
+            let lap = ws.scratch(nx);
+            lap.fill(0.0);
+            for axis in 0..dim {
+                let st = strides[axis];
+                for t in 0..taps {
+                    let c = c2[t];
+                    if c == 0.0 {
+                        continue;
                     }
-                    for (o, l) in row.iter_mut().zip(&lap) {
-                        *o += s * l;
+                    let off = base + t * st - rad * st;
+                    let srcrow = &data[off..off + nx];
+                    for (l, &x) in lap.iter_mut().zip(srcrow) {
+                        *l += c * x;
                     }
-                }
-                plane
-            });
-        for (k, plane) in planes.into_iter().enumerate() {
-            for j in 0..ny {
-                for i in 0..nx {
-                    out.set(i, j, k, plane[i + j * nx]);
                 }
             }
-        }
-        out
+            for (o, &l) in out.iter_mut().zip(lap.iter()) {
+                *o += s * l;
+            }
+        });
+    }
+
+    /// Advance a double-buffered field one step: fill ghosts in place, sweep
+    /// into the spare buffer, swap. The steady-state loop built on this
+    /// performs zero heap allocation after workspace warmup.
+    pub fn step_buffered(&self, field: &mut DoubleBuffer, dim: usize, dt: f64) {
+        let (cur, next) = field.pair();
+        cur.fill_ghosts(self.boundary);
+        self.step_into(cur, next, dim, dt);
+        field.swap();
     }
 
     /// The combined dt-folded scalar `dt * alpha / dx^2` handed to the AOT
@@ -112,9 +126,9 @@ mod tests {
 
     #[test]
     fn constant_field_is_fixed_point() {
-        let g = Grid::from_fn(&[8, 8, 8], 3, |_, _, _| 4.2);
+        let mut g = Grid::from_fn(&[8, 8, 8], 3, |_, _, _| 4.2);
         let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
-        let out = d.step(&g, 3, 0.05);
+        let out = d.step(&mut g, 3, 0.05);
         for v in out.interior_to_vec() {
             assert!((v - 4.2).abs() < 1e-13);
         }
@@ -124,11 +138,11 @@ mod tests {
     fn sine_mode_decays_analytically() {
         let n = 128;
         let dx = 2.0 * std::f64::consts::PI / n as f64;
-        let g = Grid::from_fn(&[n], 3, |i, _, _| (i as f64 * dx).sin());
+        let mut g = Grid::from_fn(&[n], 3, |i, _, _| (i as f64 * dx).sin());
         let d = Diffusion::new(3, 1.0, dx, Boundary::Periodic);
         let dt = 1e-4;
         // one Euler step of dt: f' = (1 - dt k^2) f with k = 1 (well resolved)
-        let stepped = d.step(&g, 1, dt);
+        let stepped = d.step(&mut g, 1, dt);
         for i in 0..n {
             let want = (1.0 - dt) * (i as f64 * dx).sin();
             assert!((stepped.get(i, 0, 0) - want).abs() < 1e-9, "i={i}");
@@ -137,10 +151,11 @@ mod tests {
 
     #[test]
     fn mean_conserved_on_periodic_box() {
-        let g = Grid::from_fn(&[16, 16], 2, |i, j, _| ((i * 31 + j * 17) % 11) as f64);
+        let mut g = Grid::from_fn(&[16, 16], 2, |i, j, _| ((i * 31 + j * 17) % 11) as f64);
         let d = Diffusion::new(2, 0.7, 1.0, Boundary::Periodic);
-        let out = d.step(&g, 2, d.stable_dt(2));
-        assert!((out.mean() - g.mean()).abs() < 1e-12);
+        let mean0 = g.mean();
+        let out = d.step(&mut g, 2, d.stable_dt(2));
+        assert!((out.mean() - mean0).abs() < 1e-12);
     }
 
     #[test]
@@ -151,7 +166,7 @@ mod tests {
         let mut f = g.clone();
         let mut prev = f.max_abs();
         for _ in 0..20 {
-            f = d.step(&f, 2, dt);
+            f = d.step(&mut f, 2, dt);
             let cur = f.max_abs();
             assert!(cur <= prev + 1e-12, "max must not grow (stability)");
             prev = cur;
@@ -168,10 +183,24 @@ mod tests {
             let dt = d.stable_dt(dim);
             let mut f = g.clone();
             for _ in 0..10 {
-                f = d.step(&f, dim, dt);
+                f = d.step(&mut f, dim, dt);
             }
             assert!(f.max_abs() <= g.max_abs() * (1.0 + 1e-9));
         }
+    }
+
+    #[test]
+    fn buffered_stepping_matches_allocating_path() {
+        let g = Grid::from_fn(&[12, 10], 2, |i, j, _| ((i * 5 + j * 3) % 7) as f64);
+        let d = Diffusion::new(2, 0.9, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(2);
+        let mut buf = DoubleBuffer::new(g.clone());
+        let mut plain = g;
+        for _ in 0..5 {
+            d.step_buffered(&mut buf, 2, dt);
+            plain = d.step(&mut plain, 2, dt);
+        }
+        assert_eq!(buf.cur().interior_to_vec(), plain.interior_to_vec());
     }
 
     #[test]

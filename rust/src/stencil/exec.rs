@@ -1,0 +1,339 @@
+//! Fused, allocation-free execution layer for the native stencil engine
+//! (the paper's §6 fusion + blocking strategy, CPU edition).
+//!
+//! The engine's hot loops share three needs: (1) parallelism that
+//! distributes work even when `nz == 1` (the old z-plane split ran every
+//! 1-D/2-D workload serial), (2) scratch memory that is reused instead of
+//! reallocated every step, and (3) disjoint mutable access to output rows
+//! so results are written in place rather than scattered from per-plane
+//! buffers. This module provides all three:
+//!
+//! * [`par_rows`] — (j, k)-tile-blocked decomposition over x-contiguous
+//!   interior rows, dispatched on the persistent
+//!   [`crate::util::par::pool`]. Blocks are runs of consecutive rows, so a
+//!   thread sweeping its block reuses the neighbour rows it just loaded
+//!   (the y/z halo of radius up to 8 stays cache-resident).
+//! * [`Workspace`] — per-thread scratch rows, grown once and reused; after
+//!   warmup the steady-state time loop performs zero heap allocation.
+//! * [`RowWriter`] / [`par_fill_rows`] / [`par_chunks_mut`] — disjoint
+//!   parallel writes into padded grid storage (or a flat slice) without
+//!   per-plane result buffers.
+//! * [`DoubleBuffer`] — the two-field storage that `step_into`-style APIs
+//!   ([`crate::stencil::diffusion::Diffusion::step_into`],
+//!   [`crate::stencil::mhd::MhdStepper`]) alternate between.
+
+use std::cell::RefCell;
+
+use super::grid::Grid;
+use crate::util::par;
+
+// ---------------------------------------------------------------------------
+// Per-thread workspaces
+// ---------------------------------------------------------------------------
+
+/// Reusable per-thread scratch memory. Grows monotonically; a steady-state
+/// loop asking for the same size every step never reallocates.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    buf: Vec<f64>,
+}
+
+impl Workspace {
+    /// Borrow `n` scratch doubles. Contents are unspecified (callers
+    /// overwrite); grows the backing store only when `n` exceeds every
+    /// previous request on this thread.
+    pub fn scratch(&mut self, n: usize) -> &mut [f64] {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        &mut self.buf[..n]
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<Workspace> = RefCell::new(Workspace::default());
+}
+
+/// Run `f` with this thread's workspace. Take/put-back instead of a held
+/// borrow so a (hypothetical) nested dispatch on the same thread sees a
+/// fresh workspace instead of a `RefCell` panic.
+fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    let mut ws = WORKSPACE.with(|c| std::mem::take(&mut *c.borrow_mut()));
+    let r = f(&mut ws);
+    WORKSPACE.with(|c| *c.borrow_mut() = ws);
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Row-block decomposition
+// ---------------------------------------------------------------------------
+
+/// Partition `rows` interior rows into contiguous blocks for `threads`-way
+/// work stealing. Returns `(n_blocks, rows_per_block)`. Oversubscribes by
+/// 4 blocks per thread so uneven per-row cost balances, while keeping each
+/// block a run of consecutive rows for halo reuse. A 2-D workload
+/// (`nz == 1`, `rows == ny`) therefore still decomposes across threads —
+/// the regression the old z-plane-only split failed.
+pub fn plan_blocks(rows: usize, threads: usize) -> (usize, usize) {
+    if rows == 0 {
+        return (0, 1);
+    }
+    let target = threads.max(1) * 4;
+    let per = rows.div_ceil(target).max(1);
+    (rows.div_ceil(per), per)
+}
+
+/// Parallel sweep over the `ny * nz` interior rows of a grid: `f(j, k, ws)`
+/// is called exactly once per row, with rows grouped into consecutive
+/// blocks per [`plan_blocks`]. Honours `STENCILAX_THREADS`; serial runs
+/// never touch the pool. Dispatch allocates nothing (workspaces grow once
+/// per thread on warmup).
+pub fn par_rows<F: Fn(usize, usize, &mut Workspace) + Sync>(ny: usize, nz: usize, f: F) {
+    let rows = ny * nz;
+    let threads = par::num_threads();
+    let (nblocks, per) = plan_blocks(rows, threads);
+    if threads <= 1 || nblocks <= 1 {
+        with_workspace(|ws| {
+            for row in 0..rows {
+                f(row % ny, row / ny, ws);
+            }
+        });
+        return;
+    }
+    par::pool().run(nblocks, threads, &|b| {
+        with_workspace(|ws| {
+            let lo = b * per;
+            let hi = (lo + per).min(rows);
+            for row in lo..hi {
+                f(row % ny, row / ny, ws);
+            }
+        });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Disjoint parallel writes
+// ---------------------------------------------------------------------------
+
+/// Hands out mutable interior rows of one grid to concurrent threads.
+///
+/// The borrow of the grid is held for the writer's lifetime, so no safe
+/// alias can exist; soundness across threads rests on the [`Self::row`]
+/// contract (each `(j, k)` visited by at most one thread at a time), which
+/// the row partition of [`par_rows`] provides.
+pub struct RowWriter<'a> {
+    ptr: *mut f64,
+    len: usize,
+    nx: usize,
+    px: usize,
+    py: usize,
+    r: usize,
+    _grid: std::marker::PhantomData<&'a mut Grid>,
+}
+
+// SAFETY: the only dereference path is `row`, whose disjointness contract
+// makes the handed-out slices non-overlapping across threads.
+unsafe impl Sync for RowWriter<'_> {}
+unsafe impl Send for RowWriter<'_> {}
+
+impl<'a> RowWriter<'a> {
+    pub fn new(g: &'a mut Grid) -> Self {
+        let (px, py, _) = g.padded();
+        let (nx, r) = (g.nx, g.r);
+        let data = g.data_mut();
+        let len = data.len();
+        Self { ptr: data.as_mut_ptr(), len, nx, px, py, r, _grid: std::marker::PhantomData }
+    }
+
+    /// Interior row `(0..nx, j, k)` as a mutable slice.
+    ///
+    /// # Safety
+    /// Each `(j, k)` must be handed to at most one thread at a time (the
+    /// [`par_rows`] block partition guarantees this when every closure call
+    /// touches only its own row).
+    #[inline]
+    pub unsafe fn row(&self, j: usize, k: usize) -> &mut [f64] {
+        let base = self.r + self.px * ((j + self.r) + self.py * (k + self.r));
+        debug_assert!(base + self.nx <= self.len, "row out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(base), self.nx)
+    }
+}
+
+/// Fill every interior row of `dst` in parallel: `f(j, k, row, ws)`
+/// receives each row's mutable slice exactly once. Safe wrapper over
+/// [`RowWriter`] + [`par_rows`].
+pub fn par_fill_rows<F: Fn(usize, usize, &mut [f64], &mut Workspace) + Sync>(
+    dst: &mut Grid,
+    f: F,
+) {
+    let (ny, nz) = (dst.ny, dst.nz);
+    let w = RowWriter::new(dst);
+    par_rows(ny, nz, |j, k, ws| {
+        // SAFETY: par_rows hands each (j, k) to exactly one closure call.
+        let row = unsafe { w.row(j, k) };
+        f(j, k, row, ws);
+    });
+}
+
+struct SendPtr(*mut f64);
+// SAFETY: only used to reconstruct disjoint sub-slices (see par_chunks_mut).
+unsafe impl Sync for SendPtr {}
+
+/// Parallel mutable chunks of a flat slice (the 1-D kernels' analogue of
+/// [`par_fill_rows`]): `f(c, chunk)` receives
+/// `data[c*chunk_len .. min((c+1)*chunk_len, len)]` exactly once per `c`.
+pub fn par_chunks_mut<F: Fn(usize, &mut [f64]) + Sync>(data: &mut [f64], chunk_len: usize, f: F) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n = data.len();
+    let chunks = n.div_ceil(chunk_len);
+    let threads = par::num_threads();
+    if threads <= 1 || chunks <= 1 {
+        for (c, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(c, chunk);
+        }
+        return;
+    }
+    let ptr = SendPtr(data.as_mut_ptr());
+    par::pool().run(chunks, threads, &|c| {
+        let lo = c * chunk_len;
+        let hi = (lo + chunk_len).min(n);
+        // SAFETY: chunk index c is dispatched exactly once and chunks are
+        // disjoint ranges of `data`, which stays borrowed for the call.
+        let s = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+        f(c, s);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Double-buffered field storage
+// ---------------------------------------------------------------------------
+
+/// Two-grid storage for `step_into`-style steady-state loops: the stepper
+/// reads `cur`, writes `next`, then [`Self::swap`]s — no allocation per
+/// step, ever.
+#[derive(Debug, Clone)]
+pub struct DoubleBuffer {
+    cur: Grid,
+    next: Grid,
+}
+
+impl DoubleBuffer {
+    pub fn new(initial: Grid) -> Self {
+        let next = initial.clone();
+        Self { cur: initial, next }
+    }
+
+    /// The live field.
+    pub fn cur(&self) -> &Grid {
+        &self.cur
+    }
+
+    pub fn cur_mut(&mut self) -> &mut Grid {
+        &mut self.cur
+    }
+
+    /// Both buffers at once, for `step_into(cur, next)` calls.
+    pub fn pair(&mut self) -> (&mut Grid, &mut Grid) {
+        (&mut self.cur, &mut self.next)
+    }
+
+    pub fn swap(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    pub fn into_cur(self) -> Grid {
+        self.cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_blocks_covers_all_rows() {
+        for rows in [0usize, 1, 2, 3, 5, 64, 4096, 4097] {
+            for threads in [1usize, 2, 4, 16] {
+                let (nb, per) = plan_blocks(rows, threads);
+                assert!(nb * per >= rows, "rows={rows} threads={threads}");
+                if nb > 0 {
+                    assert!((nb - 1) * per < rows, "empty tail block");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_blocks_distributes_2d_rows() {
+        // the satellite regression: nz == 1 must still decompose
+        let (nb, _) = plan_blocks(4096, 4);
+        assert!(nb >= 4, "2-D rows not speedup-eligible: {nb} blocks");
+        let (nb1, _) = plan_blocks(1, 4);
+        assert_eq!(nb1, 1);
+    }
+
+    #[test]
+    fn par_rows_visits_each_row_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let (ny, nz) = (13, 7);
+        let hits: Vec<AtomicU32> = (0..ny * nz).map(|_| AtomicU32::new(0)).collect();
+        par_rows(ny, nz, |j, k, _ws| {
+            hits[k * ny + j].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "row {i}");
+        }
+    }
+
+    #[test]
+    fn par_fill_rows_writes_expected_values() {
+        let mut g = Grid::new(5, 4, 3, 2);
+        par_fill_rows(&mut g, |j, k, row, _ws| {
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = (i + 10 * j + 100 * k) as f64;
+            }
+        });
+        for k in 0..3 {
+            for j in 0..4 {
+                for i in 0..5 {
+                    assert_eq!(g.get(i, j, k), (i + 10 * j + 100 * k) as f64);
+                }
+            }
+        }
+        // ghosts untouched (still zero)
+        assert_eq!(g.data()[0], 0.0);
+    }
+
+    #[test]
+    fn par_chunks_mut_is_exhaustive_and_disjoint() {
+        let mut v = vec![0.0f64; 1000];
+        par_chunks_mut(&mut v, 64, |c, chunk| {
+            for x in chunk.iter_mut() {
+                *x += 1.0 + c as f64;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, 1.0 + (i / 64) as f64, "index {i}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuses_storage() {
+        let mut ws = Workspace::default();
+        ws.scratch(64)[0] = 3.0;
+        let p1 = ws.scratch(64).as_ptr();
+        let p2 = ws.scratch(32).as_ptr();
+        assert_eq!(p1, p2, "shrinking request must not reallocate");
+    }
+
+    #[test]
+    fn double_buffer_swaps_without_reallocating() {
+        let g = Grid::from_fn(&[4], 1, |i, _, _| i as f64);
+        let mut db = DoubleBuffer::new(g);
+        let p_cur = db.cur().data().as_ptr();
+        db.swap();
+        db.swap();
+        assert_eq!(db.cur().data().as_ptr(), p_cur);
+        assert_eq!(db.cur().get(2, 0, 0), 2.0);
+    }
+}

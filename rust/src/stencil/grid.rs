@@ -123,6 +123,20 @@ impl Grid {
         &mut self.data
     }
 
+    /// Interior row `(0..nx, j, k)` — an x-contiguous slice of padded
+    /// storage; the unit every hot loop iterates over.
+    #[inline]
+    pub fn row(&self, j: usize, k: usize) -> &[f64] {
+        let base = self.idx(0, j, k);
+        &self.data[base..base + self.nx]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, j: usize, k: usize) -> &mut [f64] {
+        let base = self.idx(0, j, k);
+        &mut self.data[base..base + self.nx]
+    }
+
     /// Copy the interior into a contiguous `Vec` (x fastest).
     pub fn interior_to_vec(&self) -> Vec<f64> {
         let mut out = Vec::with_capacity(self.len());
@@ -197,12 +211,16 @@ impl Grid {
     }
 
     /// Max-norm of the interior.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf/L3-8): iterate contiguous interior rows
+    /// (same pattern as [`Self::interior_to_vec`]) instead of per-element
+    /// bounds-checked `get()` with three index multiplications.
     pub fn max_abs(&self) -> f64 {
         let mut m = 0.0f64;
         for k in 0..self.nz {
             for j in 0..self.ny {
-                for i in 0..self.nx {
-                    m = m.max(self.get(i, j, k).abs());
+                for &v in self.row(j, k) {
+                    m = m.max(v.abs());
                 }
             }
         }
@@ -214,8 +232,8 @@ impl Grid {
         let mut s = 0.0f64;
         for k in 0..self.nz {
             for j in 0..self.ny {
-                for i in 0..self.nx {
-                    s += self.get(i, j, k);
+                for &v in self.row(j, k) {
+                    s += v;
                 }
             }
         }
@@ -228,8 +246,8 @@ impl Grid {
         let mut m = 0.0f64;
         for k in 0..self.nz {
             for j in 0..self.ny {
-                for i in 0..self.nx {
-                    m = m.max((self.get(i, j, k) - other.get(i, j, k)).abs());
+                for (&a, &b) in self.row(j, k).iter().zip(other.row(j, k)) {
+                    m = m.max((a - b).abs());
                 }
             }
         }
@@ -289,6 +307,33 @@ mod tests {
         assert_eq!(d[g.pidx(0, 0, 0)], 222.0);
         // ghost at padded (4,0,0) == interior (0,2,2)
         assert_eq!(d[g.pidx(4, 0, 0)], 220.0);
+    }
+
+    #[test]
+    fn rows_are_contiguous_interior_slices() {
+        let mut g = Grid::from_fn(&[4, 3, 2], 2, |i, j, k| (i + 10 * j + 100 * k) as f64);
+        assert_eq!(g.row(2, 1), &[120.0, 121.0, 122.0, 123.0]);
+        g.row_mut(0, 0)[3] = -5.0;
+        assert_eq!(g.get(3, 0, 0), -5.0);
+    }
+
+    #[test]
+    fn stats_match_elementwise_reference() {
+        let g = Grid::from_fn(&[5, 4, 3], 2, |i, j, k| ((i * 7 + j * 3 + k * 11) % 13) as f64 - 6.0);
+        let h = Grid::from_fn(&[5, 4, 3], 2, |i, j, k| ((i + j + k) % 5) as f64);
+        let (mut m, mut s, mut d) = (0.0f64, 0.0f64, 0.0f64);
+        for k in 0..3 {
+            for j in 0..4 {
+                for i in 0..5 {
+                    m = m.max(g.get(i, j, k).abs());
+                    s += g.get(i, j, k);
+                    d = d.max((g.get(i, j, k) - h.get(i, j, k)).abs());
+                }
+            }
+        }
+        assert_eq!(g.max_abs(), m);
+        assert_eq!(g.mean(), s / 60.0);
+        assert_eq!(g.max_abs_diff(&h), d);
     }
 
     #[test]

@@ -6,7 +6,12 @@
 //! This is the Rust mirror of `python/compile/mhd_eqs.py`; the two are
 //! pinned against each other through PJRT executions of the exported
 //! oracle artifacts (rust/tests/integration_runtime.rs).
+//!
+//! Stepping runs through the fused RHS + RK3 sweep ([`fused`]), which
+//! never materializes an intermediate field; the unfused evaluator
+//! ([`rhs::MhdRhs::eval`]) is retained as the parity oracle.
 
+pub mod fused;
 pub mod ops;
 pub mod rhs;
 pub mod rk3;

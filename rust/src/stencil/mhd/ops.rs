@@ -40,34 +40,23 @@ impl DiffOps {
         let data = src.data();
 
         let mut out = Grid::new(nx, ny, nz, r);
-        let planes: Vec<Vec<f64>> = crate::util::par::par_map(nz, |k| {
-                let mut plane = vec![0.0f64; nx * ny];
-                for j in 0..ny {
-                    let base = r + px * (j + r + py * (k + r));
-                    let dst = &mut plane[j * nx..(j + 1) * nx];
-                    for (t, &c) in weights.iter().enumerate() {
-                        if c == 0.0 {
-                            continue; // prune zero taps (Astaroth codegen)
-                        }
-                        let off = base + t * st - rad * st;
-                        let srow = &data[off..off + nx];
-                        for (o, &x) in dst.iter_mut().zip(srow) {
-                            *o += c * x;
-                        }
-                    }
-                    for o in dst.iter_mut() {
-                        *o *= scale;
-                    }
+        crate::stencil::exec::par_fill_rows(&mut out, |j, k, dst, _ws| {
+            let base = r + px * (j + r + py * (k + r));
+            dst.fill(0.0);
+            for (t, &c) in weights.iter().enumerate() {
+                if c == 0.0 {
+                    continue; // prune zero taps (Astaroth codegen)
                 }
-                plane
-            });
-        for (k, plane) in planes.into_iter().enumerate() {
-            for j in 0..ny {
-                for i in 0..nx {
-                    out.set(i, j, k, plane[i + j * nx]);
+                let off = base + t * st - rad * st;
+                let srow = &data[off..off + nx];
+                for (o, &x) in dst.iter_mut().zip(srow) {
+                    *o += c * x;
                 }
             }
-        }
+            for o in dst.iter_mut() {
+                *o *= scale;
+            }
+        });
         out
     }
 
@@ -99,13 +88,14 @@ impl DiffOps {
     }
 }
 
-/// Interior-wise `a += b`.
+/// Interior-wise `a += b` over contiguous rows.
 pub fn add_assign(a: &mut Grid, b: &Grid) {
+    assert_eq!((a.nx, a.ny, a.nz), (b.nx, b.ny, b.nz), "shape mismatch");
     for k in 0..a.nz {
         for j in 0..a.ny {
-            for i in 0..a.nx {
-                let v = a.get(i, j, k) + b.get(i, j, k);
-                a.set(i, j, k, v);
+            let src = b.row(j, k);
+            for (x, &y) in a.row_mut(j, k).iter_mut().zip(src) {
+                *x += y;
             }
         }
     }

@@ -12,12 +12,16 @@ use super::{MhdState, NFIELDS, SS, UX};
 pub const RK3_ALPHA: [f64; 3] = [0.0, -5.0 / 9.0, -153.0 / 128.0];
 pub const RK3_BETA: [f64; 3] = [1.0 / 3.0, 15.0 / 16.0, 8.0 / 15.0];
 
-/// Time integrator owning the RHS evaluator and the scratch register `w`.
+/// Time integrator owning the RHS evaluator, the scratch register `w`, and
+/// the spare field buffer the fused sweep double-buffers into.
 #[derive(Debug, Clone)]
 pub struct MhdStepper {
     pub rhs: MhdRhs,
     /// 2N scratch register (one grid per field).
     pub w: MhdState,
+    /// Double-buffer destination of the fused substep; swapped with the
+    /// live state after every sweep, so stepping never allocates.
+    spare: MhdState,
     /// Courant numbers for the advective and diffusive dt limits.
     pub cdt: f64,
     pub cdtv: f64,
@@ -28,6 +32,7 @@ impl MhdStepper {
         Self {
             rhs: MhdRhs::new(par, radius),
             w: MhdState::zeros(nx, ny, nz, radius),
+            spare: MhdState::zeros(nx, ny, nz, radius),
             cdt: 0.4,
             cdtv: 0.3,
         }
@@ -60,9 +65,32 @@ impl MhdStepper {
         adv.min(diff)
     }
 
-    /// One RK substep in place. Fills ghosts, evaluates the RHS, and applies
-    /// the 2N update to both the state and the scratch register.
+    /// One RK substep in place: fills ghosts, then runs the fused
+    /// RHS + 2N-update sweep ([`super::fused::substep_fused`]) into the
+    /// spare buffer and swaps it with the state. Allocation-free after
+    /// workspace warmup; agrees with [`Self::substep_reference`] to
+    /// machine precision (EXPERIMENTS.md §Perf/L3-6).
     pub fn substep(&mut self, state: &mut MhdState, dt: f64, l: usize) {
+        assert!(l < 3);
+        state.fill_ghosts();
+        super::fused::substep_fused(
+            &self.rhs,
+            state,
+            &mut self.w,
+            &mut self.spare,
+            RK3_ALPHA[l],
+            RK3_BETA[l],
+            dt,
+        );
+        for f in 0..NFIELDS {
+            std::mem::swap(&mut state.fields[f], &mut self.spare.fields[f]);
+        }
+    }
+
+    /// The unfused reference substep: evaluate all eight RHS grids through
+    /// [`MhdRhs::eval`], then apply the 2N update elementwise. Kept as the
+    /// parity oracle for the fused path (`rust/tests/fused_parity.rs`).
+    pub fn substep_reference(&mut self, state: &mut MhdState, dt: f64, l: usize) {
         assert!(l < 3);
         state.fill_ghosts();
         let rhs = self.rhs.eval(state);
@@ -121,6 +149,25 @@ mod tests {
         let w2 = b[1] + b[2] * a[2];
         let w1 = b[0] + b[1] * a[1] + b[2] * a[2] * a[1];
         assert!((w1 + w2 + w3 - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn fused_substep_matches_reference() {
+        let n = 8;
+        let par = MhdParams { dx: 0.7, ..Default::default() };
+        let st0 = small_random_state(n, 1e-2, 11);
+        let mut a = st0.clone();
+        let mut b = st0;
+        let mut sa = MhdStepper::new(par.clone(), 3, n, n, n);
+        let mut sb = MhdStepper::new(par, 3, n, n, n);
+        let dt = 1e-3;
+        for l in 0..3 {
+            sa.substep(&mut a, dt, l);
+            sb.substep_reference(&mut b, dt, l);
+        }
+        let err =
+            a.fields.iter().zip(&b.fields).map(|(x, y)| x.max_abs_diff(y)).fold(0.0, f64::max);
+        assert!(err <= 1e-12, "fused vs reference differ by {err}");
     }
 
     #[test]

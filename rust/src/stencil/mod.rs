@@ -12,12 +12,19 @@
 //!    pure-jnp reference),
 //! 3. workload characterizer feeding the GPU performance model
 //!    ([`crate::sim`]).
+//!
+//! Execution goes through [`exec`]: fused, cache-blocked sweeps over
+//! x-contiguous rows with reusable per-thread workspaces and
+//! double-buffered field storage, so the steady-state time loop performs
+//! zero heap allocation after warmup (EXPERIMENTS.md §Perf/L3-5..L3-8).
 
 pub mod coeffs;
 pub mod conv;
 pub mod diffusion;
+pub mod exec;
 pub mod grid;
 pub mod mhd;
 
 pub use coeffs::central_weights;
+pub use exec::DoubleBuffer;
 pub use grid::{Boundary, Grid};

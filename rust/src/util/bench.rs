@@ -15,6 +15,19 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Machine-readable form for BENCH_native.json (see
+    /// [`crate::coordinator::bench`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("median_s", Json::num(self.median_s)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("min_s", Json::num(self.min_s)),
+            ("max_s", Json::num(self.max_s)),
+            ("iters", Json::num(self.iters as f64)),
+        ])
+    }
+
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -67,6 +80,13 @@ impl Bencher {
     /// keeps slow interpret-mode kernels tractable.
     pub fn paper() -> Self {
         Self { warmup: 3, min_iters: 5, max_iters: 100, budget: Duration::from_secs(5) }
+    }
+
+    /// Calibrated smoke mode for CI: one warm-up, a handful of iterations,
+    /// tight budget — enough to seed the perf trajectory without burning
+    /// runner minutes.
+    pub fn smoke() -> Self {
+        Self { warmup: 1, min_iters: 3, max_iters: 12, budget: Duration::from_millis(500) }
     }
 
     pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {

@@ -1,8 +1,20 @@
-//! Data-parallel helpers on std scoped threads (rayon is unavailable
-//! offline). The stencil engine parallelizes over z-planes exactly like the
-//! paper's thread-block decomposition splits its grids.
+//! Data-parallel helpers (rayon is unavailable offline).
+//!
+//! Two tiers:
+//!
+//! * [`par_map`] — scoped-thread fork/join for cold paths that want a
+//!   `Vec` of results (tuner sweeps, figure harness). Spawns threads per
+//!   call, so it allocates.
+//! * [`pool`] / [`ThreadPool::run`] — a persistent worker pool whose
+//!   dispatch performs **zero heap allocation**: the steady-state stencil
+//!   time loop ([`crate::stencil::exec`]) runs on it. Workers park on a
+//!   condvar between jobs and steal items off a shared atomic counter, so
+//!   uneven per-item cost (e.g. pruned stencil rows) balances.
+//!
+//! Both honour `STENCILAX_THREADS` (read per call via [`num_threads`]).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 /// Number of worker threads: `STENCILAX_THREADS` or the machine parallelism.
 pub fn num_threads() -> usize {
@@ -57,6 +69,206 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
     par_map(n, |i| f(i));
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool with allocation-free dispatch
+// ---------------------------------------------------------------------------
+
+/// Type-erased borrowed job. The pointee lives on the dispatching caller's
+/// stack; [`ThreadPool::run`] blocks until every worker has left the job
+/// before returning, which is what makes the lifetime erasure sound (the
+/// same argument as `std::thread::scope`).
+type JobRef = &'static (dyn Fn(usize) + Sync);
+
+struct Slot {
+    /// Bumped once per dispatch; workers detect new jobs by epoch change.
+    epoch: u64,
+    job: Option<JobRef>,
+    n_items: usize,
+    /// Worker threads participating in the current job (ids `0..participants`).
+    participants: usize,
+    /// Participating workers that have not yet finished the current job.
+    running: usize,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+    /// Work-stealing cursor over `0..n_items`.
+    next: AtomicUsize,
+    /// Set when a worker's job item panicked (re-raised by the caller).
+    panicked: AtomicBool,
+}
+
+/// Ignore mutex poisoning: the pool's own critical sections contain no user
+/// code, and a panicking job is re-raised by the dispatching caller anyway.
+fn lock_slot(shared: &Shared) -> MutexGuard<'_, Slot> {
+    shared.slot.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_on<'a>(cv: &Condvar, guard: MutexGuard<'a, Slot>) -> MutexGuard<'a, Slot> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Persistent worker pool. One process-wide instance lives behind [`pool`];
+/// dedicated instances exist only in tests.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    /// Serializes dispatches. `try_lock` failure (another dispatch already
+    /// in flight, including a nested call from inside a job) falls back to
+    /// inline serial execution, so the pool can never deadlock.
+    gate: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `workers` parked worker threads.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                job: None,
+                n_items: 0,
+                participants: 0,
+                running: 0,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        for id in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("stencilax-pool-{id}"))
+                .spawn(move || worker_loop(&sh, id))
+                .expect("spawning pool worker");
+        }
+        Self { shared, workers, gate: Mutex::new(()) }
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, work-stealing across up to
+    /// `threads` threads (the caller participates as one of them). Performs
+    /// no heap allocation. Falls back to inline serial execution when
+    /// `threads <= 1`, `n <= 1`, or another dispatch is already in flight.
+    pub fn run(&self, n: usize, threads: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let parts = threads.min(self.workers + 1).min(n);
+        if parts <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let _gate = match self.gate.try_lock() {
+            Ok(g) => g,
+            // a caller that panicked mid-job poisons the gate; the pool
+            // state itself is consistent (its guard waited), so reclaim it
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                for i in 0..n {
+                    f(i);
+                }
+                return;
+            }
+        };
+        // SAFETY: the reference escapes only to pool workers, and the
+        // DispatchGuard below blocks (even on unwind) until `running == 0`,
+        // i.e. until no worker can touch it any more.
+        let job: JobRef =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), JobRef>(f) };
+        self.shared.panicked.store(false, Ordering::Relaxed);
+        {
+            let mut s = lock_slot(&self.shared);
+            s.epoch += 1;
+            s.job = Some(job);
+            s.n_items = n;
+            s.participants = parts - 1; // the caller is the final participant
+            s.running = parts - 1;
+            self.shared.next.store(0, Ordering::Relaxed);
+            self.shared.work.notify_all();
+        }
+        let guard = DispatchGuard { shared: &self.shared };
+        loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        }
+        drop(guard); // waits for the workers, then clears the job
+        if self.shared.panicked.load(Ordering::Relaxed) {
+            panic!("pool worker panicked");
+        }
+    }
+}
+
+/// Waits for all participating workers and clears the job slot — runs on
+/// the normal path *and* when the caller's own `f(i)` unwinds, so workers
+/// never outlive the borrowed closure.
+struct DispatchGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for DispatchGuard<'_> {
+    fn drop(&mut self) {
+        let mut s = lock_slot(self.shared);
+        while s.running > 0 {
+            s = wait_on(&self.shared.done, s);
+        }
+        s.job = None;
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n) = {
+            let mut s = lock_slot(shared);
+            loop {
+                if s.epoch != seen {
+                    seen = s.epoch;
+                    if id < s.participants {
+                        break (s.job.expect("job published with epoch"), s.n_items);
+                    }
+                }
+                s = wait_on(&shared.work, s);
+            }
+        };
+        let stole = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            job(i);
+        }));
+        if stole.is_err() {
+            // drain the counter so sibling workers stop early, then report
+            shared.next.store(usize::MAX / 2, Ordering::Relaxed);
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut s = lock_slot(shared);
+        s.running -= 1;
+        if s.running == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool. Sized for the machine but never below 3 workers,
+/// so `STENCILAX_THREADS=4` is honoured even on small CI runners (idle
+/// workers just park on the condvar). Created lazily: a serial run
+/// (`STENCILAX_THREADS=1`) never spawns it.
+pub fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(avail.max(4) - 1)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +308,59 @@ mod tests {
             sum.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 499_500);
+    }
+
+    #[test]
+    fn pool_runs_every_item_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let p = ThreadPool::new(3);
+        for n in [0usize, 1, 2, 7, 100, 1000] {
+            for threads in [1usize, 2, 4, 8] {
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                p.run(n, threads, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "n={n} threads={threads} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuses_workers_across_dispatches() {
+        use std::sync::atomic::AtomicU64;
+        let p = ThreadPool::new(2);
+        let sum = AtomicU64::new(0);
+        for _ in 0..50 {
+            p.run(64, 3, &|i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * 2016);
+    }
+
+    #[test]
+    fn pool_nested_dispatch_falls_back_inline() {
+        use std::sync::atomic::AtomicU64;
+        let sum = AtomicU64::new(0);
+        // nested run() from inside a job must not deadlock
+        pool().run(8, 4, &|_| {
+            pool().run(8, 4, &|j| {
+                sum.fetch_add(j as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 8 * 28);
+    }
+
+    #[test]
+    #[should_panic(expected = "panick")]
+    fn pool_propagates_job_panics() {
+        let p = ThreadPool::new(2);
+        p.run(100, 3, &|i| {
+            if i == 37 {
+                panic!("job 37 panicked");
+            }
+        });
     }
 }

@@ -1,0 +1,89 @@
+//! The steady-state time loop must be allocation-free after warmup
+//! (ISSUE 2 acceptance): a counting allocator wraps the system allocator
+//! and pins zero heap allocations per step for double-buffered diffusion3d
+//! and the fused MHD stepper.
+//!
+//! The measurement runs serial (`STENCILAX_THREADS=1`, set before any
+//! engine call): under work stealing the *set* of pool threads touching a
+//! given step is nondeterministic, so a per-thread workspace could grow
+//! during the measured window without any per-step allocation existing.
+//! The serial path exercises exactly the same kernels and buffers — the
+//! parallel dispatch itself is allocation-free by construction
+//! (util/par.rs pool: borrowed job slot, atomic cursor, parked workers).
+//! Everything lives in one #[test] so the env var is set once, before any
+//! other engine activity in this process.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use stencilax::stencil::diffusion::Diffusion;
+use stencilax::stencil::exec::DoubleBuffer;
+use stencilax::stencil::grid::{Boundary, Grid};
+use stencilax::stencil::mhd::{MhdParams, MhdState, MhdStepper};
+
+struct Counting;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_stepping_is_allocation_free() {
+    std::env::set_var("STENCILAX_THREADS", "1");
+
+    // ---- diffusion3d, double-buffered ----------------------------------
+    let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
+    let g = Grid::from_fn(&[24, 24, 24], 3, |i, j, k| ((i * 7 + j * 5 + k * 3) % 11) as f64);
+    let mut field = DoubleBuffer::new(g);
+    let dt = d.stable_dt(3);
+    for _ in 0..3 {
+        d.step_buffered(&mut field, 3, dt); // warmup: workspace growth
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        d.step_buffered(&mut field, 3, dt);
+    }
+    let diffusion_allocs = allocs() - before;
+
+    // ---- fused MHD stepper ---------------------------------------------
+    let n = 16;
+    let par = MhdParams { dx: 2.0 * std::f64::consts::PI / n as f64, ..Default::default() };
+    let mut st = MhdState::from_fn(n, n, n, 3, |f, i, j, k| {
+        1e-3 * (((f * 31 + i * 7 + j * 5 + k * 3) % 13) as f64 - 6.0)
+    });
+    let mut stepper = MhdStepper::new(par, 3, n, n, n);
+    let dt = 1e-4;
+    for _ in 0..2 {
+        stepper.step(&mut st, dt); // warmup: MHD workspace is bigger
+    }
+    let before = allocs();
+    for _ in 0..4 {
+        stepper.step(&mut st, dt);
+    }
+    let mhd_allocs = allocs() - before;
+
+    assert!(st.max_abs().is_finite(), "integration blew up");
+    assert_eq!(diffusion_allocs, 0, "diffusion3d steady-state loop allocated");
+    assert_eq!(mhd_allocs, 0, "fused MHD steady-state loop allocated");
+}

@@ -66,10 +66,10 @@ fn prop_diffusion_conserves_mean_and_contracts() {
     check("diffusion mean + contraction", 25, |rng| {
         let n = 8 + 2 * rng.below(8);
         let r = 1 + rng.below(3);
-        let g = Grid::from_fn(&[n, n, n.min(8)], r, |_, _, _| rng.normal());
+        let mut g = Grid::from_fn(&[n, n, n.min(8)], r, |_, _, _| rng.normal());
         let d = Diffusion::new(r, rng.range(0.1, 2.0), rng.range(0.2, 1.0), Boundary::Periodic);
         let dt = d.stable_dt(3) * rng.range(0.2, 1.0);
-        let out = d.step(&g, 3, dt);
+        let out = d.step(&mut g, 3, dt);
         prop_assert!((out.mean() - g.mean()).abs() < 1e-10, "mean drifted");
         prop_assert!(out.max_abs() <= g.max_abs() * (1.0 + 1e-12), "max grew");
         Ok(())

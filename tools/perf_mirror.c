@@ -1,0 +1,519 @@
+/* Structural perf mirror of rust/src/stencil before/after ISSUE 2.
+ *
+ * "before" mirrors the seed engine: z-plane-only parallelism (serial when
+ * nz == 1), per-plane/per-row heap allocation, scatter through idx()
+ * multiplications, ~38 materialized intermediate grids per MHD substep,
+ * separate phi and RK3 passes.
+ * "after" mirrors the fused exec layer: (j,k) row-blocked parallelism,
+ * reusable per-thread workspaces, direct row writes, single fused sweep.
+ *
+ * gcc -O3 -march=native -pthread perf_mirror.c -o perf_mirror -lm
+ */
+#define _GNU_SOURCE
+#include <math.h>
+#include <pthread.h>
+#include <stdatomic.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + 1e-9 * ts.tv_nsec;
+}
+
+/* ---------------- parallel_for (scoped threads + atomic counter) ------- */
+typedef void (*item_fn)(int i, void *ctx);
+typedef struct {
+    atomic_int next;
+    int n;
+    item_fn f;
+    void *ctx;
+} pf_t;
+
+static void *pf_worker(void *arg) {
+    pf_t *p = (pf_t *)arg;
+    for (;;) {
+        int i = atomic_fetch_add(&p->next, 1);
+        if (i >= p->n) break;
+        p->f(i, p->ctx);
+    }
+    return NULL;
+}
+
+static void parallel_for(int n, int threads, item_fn f, void *ctx) {
+    pf_t p;
+    atomic_init(&p.next, 0);
+    p.n = n; p.f = f; p.ctx = ctx;
+    if (threads <= 1 || n <= 1) { for (int i = 0; i < n; i++) f(i, ctx); return; }
+    pthread_t th[16];
+    int nw = threads - 1; if (nw > 16) nw = 16;
+    for (int w = 0; w < nw; w++) pthread_create(&th[w], NULL, pf_worker, &p);
+    pf_worker(&p);
+    for (int w = 0; w < nw; w++) pthread_join(th[w], NULL);
+}
+
+/* ---------------- grid helpers ---------------------------------------- */
+#define R 3
+static int NX, NY, NZ, PX, PY, PZ;
+#define IDX(i, j, k) ((i) + R + PX * ((j) + R + PY * ((k) + R)))
+#define PIDX(pi, pj, pk) ((pi) + PX * ((pj) + PY * (pk)))
+static size_t PADDED;
+
+static const double C1[7] = {-1.0 / 60, 3.0 / 20, -3.0 / 4, 0.0, 3.0 / 4, -3.0 / 20, 1.0 / 60};
+static const double C2[7] = {1.0 / 90, -3.0 / 20, 1.5, -49.0 / 18, 1.5, -3.0 / 20, 1.0 / 90};
+
+static void fill_ghosts(double *d) {
+    for (int pk = 0; pk < PZ; pk++) {
+        int ki = pk >= R && pk < R + NZ;
+        for (int pj = 0; pj < PY; pj++) {
+            int ji = pj >= R && pj < R + NY;
+            if (ki && ji) {
+                for (int pi = 0; pi < R; pi++) {
+                    int wi = (pi - R + 4 * NX) % NX, wj = (pj - R + 4 * NY) % NY, wk = (pk - R + 4 * NZ) % NZ;
+                    d[PIDX(pi, pj, pk)] = d[IDX(wi, wj, wk)];
+                }
+                for (int pi = PX - R; pi < PX; pi++) {
+                    int wi = (pi - R + 4 * NX) % NX, wj = (pj - R + 4 * NY) % NY, wk = (pk - R + 4 * NZ) % NZ;
+                    d[PIDX(pi, pj, pk)] = d[IDX(wi, wj, wk)];
+                }
+            } else {
+                for (int pi = 0; pi < PX; pi++) {
+                    int wi = (pi - R + 4 * NX) % NX, wj = (pj - R + 4 * NY) % NY, wk = (pk - R + 4 * NZ) % NZ;
+                    d[PIDX(pi, pj, pk)] = d[IDX(wi, wj, wk)];
+                }
+            }
+        }
+    }
+}
+
+/* =================== 2-D diffusion ===================================== */
+/* BEFORE: clone + ghost fill on clone; z-plane par_map over nz==1 (serial);
+ * per-plane malloc, per-row lap malloc, scatter via IDX() per element. */
+static double dif_s;
+static void diffusion2d_before(double **field) {
+    double *src = malloc(PADDED * sizeof(double));
+    memcpy(src, *field, PADDED * sizeof(double)); /* the retired clone */
+    fill_ghosts(src);
+    double *out = calloc(PADDED, sizeof(double));
+    /* nz == 1: the old engine's par_map(nz, ..) collapses to serial */
+    {
+        double *plane = malloc((size_t)NX * NY * sizeof(double));
+        for (int j = 0; j < NY; j++) {
+            int base = IDX(0, j, 0);
+            double *row = plane + (size_t)j * NX;
+            memcpy(row, src + base, NX * sizeof(double));
+            double *lap = calloc(NX, sizeof(double)); /* per-row alloc! */
+            for (int axis = 0; axis < 2; axis++) {
+                int st = axis == 0 ? 1 : PX;
+                for (int t = 0; t < 7; t++) {
+                    double c = C2[t];
+                    if (c == 0.0) continue;
+                    const double *sr = src + base + (t - R) * st;
+                    for (int i = 0; i < NX; i++) lap[i] += c * sr[i];
+                }
+            }
+            for (int i = 0; i < NX; i++) row[i] += dif_s * lap[i];
+            free(lap);
+        }
+        for (int j = 0; j < NY; j++)
+            for (int i = 0; i < NX; i++) out[IDX(i, j, 0)] = plane[(size_t)j * NX + i];
+        free(plane);
+    }
+    free(src);
+    free(*field);
+    *field = out;
+}
+
+/* AFTER: in-place ghost fill, (j,k) row blocks, per-thread reused lap,
+ * direct row writes into the spare buffer. */
+typedef struct { double *src, *dst, **lap; int per, rows; } dif_ctx;
+static void diffusion2d_after_block(int b, void *cv) {
+    dif_ctx *c = (dif_ctx *)cv;
+    /* per-thread workspace: index by a cheap thread hash (block id works
+     * because blocks are handed to whichever thread steals them; use
+     * thread-local storage instead) */
+    static __thread double *lap = NULL;
+    if (!lap) lap = malloc(NX * sizeof(double));
+    int lo = b * c->per, hi = lo + c->per;
+    if (hi > c->rows) hi = c->rows;
+    for (int j = lo; j < hi; j++) {
+        int base = IDX(0, j, 0);
+        double *row = c->dst + base;
+        memcpy(row, c->src + base, NX * sizeof(double));
+        memset(lap, 0, NX * sizeof(double));
+        for (int axis = 0; axis < 2; axis++) {
+            int st = axis == 0 ? 1 : PX;
+            for (int t = 0; t < 7; t++) {
+                double cc = C2[t];
+                if (cc == 0.0) continue;
+                const double *sr = c->src + base + (t - R) * st;
+                for (int i = 0; i < NX; i++) lap[i] += cc * sr[i];
+            }
+        }
+        for (int i = 0; i < NX; i++) row[i] += dif_s * lap[i];
+    }
+}
+
+static void diffusion2d_after(double **cur, double **next, int threads) {
+    fill_ghosts(*cur);
+    int rows = NY;
+    int per = (rows + threads * 4 - 1) / (threads * 4);
+    int nblocks = (rows + per - 1) / per;
+    dif_ctx c = {*cur, *next, NULL, per, rows};
+    parallel_for(nblocks, threads, diffusion2d_after_block, &c);
+    double *t = *cur; *cur = *next; *next = t;
+}
+
+/* =================== MHD =============================================== */
+#define NF 8
+static const double ALPHA[3] = {0.0, -5.0 / 9.0, -153.0 / 128.0};
+static const double BETA[3] = {1.0 / 3.0, 15.0 / 16.0, 8.0 / 15.0};
+static double cs0 = 1.0, gam = 5.0 / 3.0, cp_ = 1.0, rho0 = 1.0, nu_v = 5e-3,
+              eta_v = 5e-3, zeta_v = 0.0, mu0_v = 1.0, kappa_v = 1e-3, inv_dx = 1.0;
+
+/* phi: the nonlinear pointwise map (A1-A4), shared by both paths.
+ * vals layout matches fused.rs: 0-2 glnrho, 3-5 gss, 6 lap_lnrho,
+ * 7 lap_ss, 8-16 du, 17-19 lap_u, 20-22 gdivu, 23-31 da, 32-34 lap_a,
+ * 35-37 gdiva. */
+static inline void phi(const double *v, const double *sv, double *cell) {
+    double lnrho = sv[0], ss = sv[4];
+    const double *u = sv + 1;
+    double divu = v[8] + v[12] + v[16];
+    double rho = exp(lnrho), inv_rho = exp(-lnrho);
+    double exparg = gam * ss / cp_ + (gam - 1.0) * (lnrho - log(rho0));
+    double cs2 = cs0 * cs0 * exp(exparg), temp = (cs0 * cs0 / (cp_ * (gam - 1.0))) * exp(exparg);
+    double bb[3] = {v[23 + 7] - v[23 + 5], v[23 + 2] - v[23 + 6], v[23 + 3] - v[23 + 1]};
+    double jv[3], jxb[3], uxb[3];
+    for (int a = 0; a < 3; a++) jv[a] = (v[35 + a] - v[32 + a]) / mu0_v;
+    jxb[0] = jv[1] * bb[2] - jv[2] * bb[1]; jxb[1] = jv[2] * bb[0] - jv[0] * bb[2];
+    jxb[2] = jv[0] * bb[1] - jv[1] * bb[0];
+    uxb[0] = u[1] * bb[2] - u[2] * bb[1]; uxb[1] = u[2] * bb[0] - u[0] * bb[2];
+    uxb[2] = u[0] * bb[1] - u[1] * bb[0];
+    double st[3][3], s2 = 0.0, sgl[3] = {0, 0, 0};
+    for (int a = 0; a < 3; a++)
+        for (int b = 0; b < 3; b++) {
+            st[a][b] = 0.5 * (v[8 + 3 * a + b] + v[8 + 3 * b + a]);
+            if (a == b) st[a][b] -= divu / 3.0;
+        }
+    for (int a = 0; a < 3; a++)
+        for (int b = 0; b < 3; b++) { s2 += st[a][b] * st[a][b]; sgl[a] += st[a][b] * v[b]; }
+    cell[0] = -(u[0] * v[0] + u[1] * v[1] + u[2] * v[2]) - divu;
+    for (int a = 0; a < 3; a++) {
+        double adv = -(u[0] * v[8 + 3 * a] + u[1] * v[8 + 3 * a + 1] + u[2] * v[8 + 3 * a + 2]);
+        double press = -cs2 * (v[3 + a] / cp_ + v[a]);
+        double visc = nu_v * (v[17 + a] + v[20 + a] / 3.0 + 2.0 * sgl[a]) + zeta_v * v[20 + a];
+        cell[1 + a] = adv + press + jxb[a] * inv_rho + visc;
+    }
+    double glnt[3], lap_lnt = gam / cp_ * v[7] + (gam - 1.0) * v[6];
+    for (int a = 0; a < 3; a++) glnt[a] = gam / cp_ * v[3 + a] + (gam - 1.0) * v[a];
+    double dkg = kappa_v * temp * (lap_lnt + glnt[0] * glnt[0] + glnt[1] * glnt[1] + glnt[2] * glnt[2]);
+    double j2 = jv[0] * jv[0] + jv[1] * jv[1] + jv[2] * jv[2];
+    double heat = dkg + eta_v * mu0_v * j2 + 2.0 * rho * nu_v * s2 + zeta_v * rho * divu * divu;
+    cell[4] = -(u[0] * v[3] + u[1] * v[4] + u[2] * v[5]) + heat * inv_rho / temp;
+    for (int a = 0; a < 3; a++) cell[5 + a] = uxb[a] + eta_v * v[32 + a];
+}
+
+/* ---- BEFORE: apply_axis materializing grids, z-plane parallel --------- */
+typedef struct { const double *src; double *out; const double *w; int st; double scale; } ax_ctx;
+static void apply_axis_plane(int k, void *cv) {
+    ax_ctx *c = (ax_ctx *)cv;
+    double *plane = malloc((size_t)NX * NY * sizeof(double)); /* per-plane alloc */
+    memset(plane, 0, (size_t)NX * NY * sizeof(double));
+    for (int j = 0; j < NY; j++) {
+        int base = IDX(0, j, k);
+        double *dst = plane + (size_t)j * NX;
+        for (int t = 0; t < 7; t++) {
+            double cc = c->w[t];
+            if (cc == 0.0) continue;
+            const double *sr = c->src + base + (t - R) * c->st;
+            for (int i = 0; i < NX; i++) dst[i] += cc * sr[i];
+        }
+        for (int i = 0; i < NX; i++) dst[i] *= c->scale;
+    }
+    for (int j = 0; j < NY; j++)   /* scatter via idx() per element */
+        for (int i = 0; i < NX; i++) c->out[IDX(i, j, k)] = plane[(size_t)j * NX + i];
+    free(plane);
+}
+
+static int g_threads = 2;
+static double *apply_axis_before(const double *src, int axis, const double *w, double scale) {
+    double *out = calloc(PADDED, sizeof(double));
+    int st = axis == 0 ? 1 : (axis == 1 ? PX : PX * PY);
+    ax_ctx c = {src, out, w, st, scale};
+    parallel_for(NZ, g_threads, apply_axis_plane, &c);
+    return out;
+}
+
+static void add_assign_before(double *a, const double *b) {
+    for (int k = 0; k < NZ; k++)       /* elementwise get/set with idx mults */
+        for (int j = 0; j < NY; j++)
+            for (int i = 0; i < NX; i++) a[IDX(i, j, k)] += b[IDX(i, j, k)];
+}
+
+static double *lap_before(const double *src) {
+    double *acc = apply_axis_before(src, 0, C2, inv_dx * inv_dx);
+    for (int ax = 1; ax < 3; ax++) {
+        double *t = apply_axis_before(src, ax, C2, inv_dx * inv_dx);
+        add_assign_before(acc, t);
+        free(t);
+    }
+    return acc;
+}
+
+static double *d1d1_before(const double *src, int a1, int a2) {
+    double *mid = apply_axis_before(src, a1, C1, inv_dx);
+    fill_ghosts(mid);
+    double *out = apply_axis_before(mid, a2, C1, inv_dx);
+    free(mid);
+    return out;
+}
+
+typedef struct { double **deriv; double **state; double **rhs; } phi_ctx;
+static void phi_plane_before(int k, void *cv) {
+    phi_ctx *c = (phi_ctx *)cv;
+    double *plane = malloc((size_t)NX * NY * NF * sizeof(double)); /* per-plane */
+    for (int j = 0; j < NY; j++)
+        for (int i = 0; i < NX; i++) {
+            double vals[38], sv[NF], cell[NF];
+            for (int v = 0; v < 38; v++) vals[v] = c->deriv[v][IDX(i, j, k)]; /* gathers */
+            for (int f = 0; f < NF; f++) sv[f] = c->state[f][IDX(i, j, k)];
+            phi(vals, sv, cell);
+            memcpy(plane + ((size_t)j * NX + i) * NF, cell, NF * sizeof(double));
+        }
+    for (int j = 0; j < NY; j++)       /* scatter into 8 rhs grids */
+        for (int i = 0; i < NX; i++)
+            for (int f = 0; f < NF; f++)
+                c->rhs[f][IDX(i, j, k)] = plane[((size_t)j * NX + i) * NF + f];
+    free(plane);
+}
+
+static void mhd_substep_before(double **state, double **w, int l, double dt) {
+    for (int f = 0; f < NF; f++) fill_ghosts(state[f]);
+    double *deriv[38];
+    int d = 0;
+    /* glnrho, gss */
+    for (int ax = 0; ax < 3; ax++) deriv[d++] = apply_axis_before(state[0], ax, C1, inv_dx);
+    for (int ax = 0; ax < 3; ax++) deriv[d++] = apply_axis_before(state[4], ax, C1, inv_dx);
+    deriv[d++] = lap_before(state[0]);
+    deriv[d++] = lap_before(state[4]);
+    for (int a = 0; a < 3; a++)
+        for (int b = 0; b < 3; b++) deriv[d++] = apply_axis_before(state[1 + a], b, C1, inv_dx);
+    for (int a = 0; a < 3; a++) deriv[d++] = lap_before(state[1 + a]);
+    for (int i = 0; i < 3; i++) { /* gdivu */
+        double *acc = calloc(PADDED, sizeof(double));
+        for (int j = 0; j < 3; j++) {
+            double *t = (i == j) ? apply_axis_before(state[1 + j], i, C2, inv_dx * inv_dx)
+                                 : d1d1_before(state[1 + j], j, i);
+            add_assign_before(acc, t);
+            free(t);
+        }
+        deriv[d++] = acc;
+    }
+    for (int a = 0; a < 3; a++)
+        for (int b = 0; b < 3; b++) deriv[d++] = apply_axis_before(state[5 + a], b, C1, inv_dx);
+    for (int a = 0; a < 3; a++) deriv[d++] = lap_before(state[5 + a]);
+    for (int i = 0; i < 3; i++) { /* gdiva */
+        double *acc = calloc(PADDED, sizeof(double));
+        for (int j = 0; j < 3; j++) {
+            double *t = (i == j) ? apply_axis_before(state[5 + j], i, C2, inv_dx * inv_dx)
+                                 : d1d1_before(state[5 + j], j, i);
+            add_assign_before(acc, t);
+            free(t);
+        }
+        deriv[d++] = acc;
+    }
+    double *rhs[NF];
+    for (int f = 0; f < NF; f++) rhs[f] = calloc(PADDED, sizeof(double));
+    phi_ctx pc = {deriv, state, rhs};
+    parallel_for(NZ, g_threads, phi_plane_before, &pc);
+    for (int v = 0; v < 38; v++) free(deriv[v]);
+    /* separate RK3 pass, elementwise with idx mults */
+    for (int f = 0; f < NF; f++)
+        for (int k = 0; k < NZ; k++)
+            for (int j = 0; j < NY; j++)
+                for (int i = 0; i < NX; i++) {
+                    double wv = ALPHA[l] * w[f][IDX(i, j, k)] + dt * rhs[f][IDX(i, j, k)];
+                    w[f][IDX(i, j, k)] = wv;
+                    state[f][IDX(i, j, k)] += BETA[l] * wv;
+                }
+    for (int f = 0; f < NF; f++) free(rhs[f]);
+}
+
+/* ---- AFTER: fused row sweep ------------------------------------------- */
+static void stencil_row_c(double *dst, const double *data, int base, int st, const double *w, double scale) {
+    memset(dst, 0, NX * sizeof(double));
+    for (int t = 0; t < 7; t++) {
+        double c = w[t];
+        if (c == 0.0) continue;
+        const double *sr = data + base + (t - R) * st;
+        for (int i = 0; i < NX; i++) dst[i] += c * sr[i];
+    }
+    for (int i = 0; i < NX; i++) dst[i] *= scale;
+}
+
+static void d1d1_row_c(double *dst, double *tmp, const double *data, int base, int s1, int s2) {
+    memset(dst, 0, NX * sizeof(double));
+    for (int t2 = 0; t2 < 7; t2++) {
+        double cb = C1[t2];
+        if (cb == 0.0) continue;
+        stencil_row_c(tmp, data, base + (t2 - R) * s2, s1, C1, inv_dx);
+        for (int i = 0; i < NX; i++) dst[i] += cb * tmp[i];
+    }
+    for (int i = 0; i < NX; i++) dst[i] *= inv_dx;
+}
+
+static void lap_row_c(double *dst, double *tmp, const double *data, int base) {
+    int strides[3] = {1, PX, PX * PY};
+    stencil_row_c(dst, data, base, strides[0], C2, inv_dx * inv_dx);
+    for (int a = 1; a < 3; a++) {
+        stencil_row_c(tmp, data, base, strides[a], C2, inv_dx * inv_dx);
+        for (int i = 0; i < NX; i++) dst[i] += tmp[i];
+    }
+}
+
+typedef struct { double **state; double **w; double **dst; int l; double dt; int per, rows; } fu_ctx;
+static void fused_block(int b, void *cv) {
+    fu_ctx *c = (fu_ctx *)cv;
+    static __thread double *buf = NULL;
+    if (!buf) buf = malloc(40 * (size_t)NX * sizeof(double));
+    int strides[3] = {1, PX, PX * PY};
+    int lo = b * c->per, hi = lo + c->per;
+    if (hi > c->rows) hi = c->rows;
+    for (int row = lo; row < hi; row++) {
+        int j = row % NY, k = row / NY;
+        int base = IDX(0, j, k);
+        double *tmp = buf + 38 * (size_t)NX, *tmp2 = buf + 39 * (size_t)NX;
+#define ROWB(n) (buf + (size_t)(n) * NX)
+        for (int ax = 0; ax < 3; ax++) {
+            stencil_row_c(ROWB(0 + ax), c->state[0], base, strides[ax], C1, inv_dx);
+            stencil_row_c(ROWB(3 + ax), c->state[4], base, strides[ax], C1, inv_dx);
+        }
+        lap_row_c(ROWB(6), tmp, c->state[0], base);
+        lap_row_c(ROWB(7), tmp, c->state[4], base);
+        for (int a = 0; a < 3; a++) {
+            for (int bb = 0; bb < 3; bb++) {
+                stencil_row_c(ROWB(8 + 3 * a + bb), c->state[1 + a], base, strides[bb], C1, inv_dx);
+                stencil_row_c(ROWB(23 + 3 * a + bb), c->state[5 + a], base, strides[bb], C1, inv_dx);
+            }
+            lap_row_c(ROWB(17 + a), tmp, c->state[1 + a], base);
+            lap_row_c(ROWB(32 + a), tmp, c->state[5 + a], base);
+            /* gdiv u and a */
+            for (int which = 0; which < 2; which++) {
+                double *dst = ROWB(which ? 35 + a : 20 + a);
+                memset(dst, 0, NX * sizeof(double));
+                for (int jf = 0; jf < 3; jf++) {
+                    const double *fd = c->state[(which ? 5 : 1) + jf];
+                    if (jf == a) stencil_row_c(tmp, fd, base, strides[a], C2, inv_dx * inv_dx);
+                    else d1d1_row_c(tmp, tmp2, fd, base, strides[jf], strides[a]);
+                    for (int i = 0; i < NX; i++) dst[i] += tmp[i];
+                }
+            }
+        }
+        for (int i = 0; i < NX; i++) {
+            double vals[38], sv[NF], cell[NF];
+            for (int v = 0; v < 38; v++) vals[v] = buf[(size_t)v * NX + i];
+            for (int f = 0; f < NF; f++) sv[f] = c->state[f][base + i];
+            phi(vals, sv, cell);
+            for (int f = 0; f < NF; f++) {
+                double wv = ALPHA[c->l] * c->w[f][base + i] + c->dt * cell[f];
+                c->w[f][base + i] = wv;
+                c->dst[f][base + i] = sv[f] + BETA[c->l] * wv;
+            }
+        }
+    }
+}
+
+static void mhd_substep_after(double **state, double **w, double **spare, int l, double dt, int threads) {
+    for (int f = 0; f < NF; f++) fill_ghosts(state[f]);
+    int rows = NY * NZ;
+    int per = (rows + threads * 4 - 1) / (threads * 4);
+    int nblocks = (rows + per - 1) / per;
+    fu_ctx c = {state, w, spare, l, dt, per, rows};
+    parallel_for(nblocks, threads, fused_block, &c);
+    for (int f = 0; f < NF; f++) { double *t = state[f]; state[f] = spare[f]; spare[f] = t; }
+}
+
+/* =================== driver ============================================ */
+static double checksum(double **state) {
+    double s = 0;
+    for (int f = 0; f < NF; f++)
+        for (int k = 0; k < NZ; k++)
+            for (int j = 0; j < NY; j++)
+                for (int i = 0; i < NX; i++) s += state[f][IDX(i, j, k)];
+    return s;
+}
+
+int main(int argc, char **argv) {
+    int threads = argc > 1 ? atoi(argv[1]) : 2;
+    g_threads = threads;
+
+    /* ---- 2-D diffusion 4096^2 r=3 ---- */
+    NX = 4096; NY = 4096; NZ = 1;
+    PX = NX + 2 * R; PY = NY + 2 * R; PZ = NZ + 2 * R;
+    PADDED = (size_t)PX * PY * PZ;
+    dif_s = 1e-4;
+    {
+        double *f = calloc(PADDED, sizeof(double));
+        for (int j = 0; j < NY; j++)
+            for (int i = 0; i < NX; i++) f[IDX(i, j, 0)] = (i * 31 + j * 17) % 13;
+        diffusion2d_before(&f); /* warmup */
+        double t0 = now_s();
+        for (int s = 0; s < 5; s++) diffusion2d_before(&f);
+        double tb = (now_s() - t0) / 5;
+        free(f);
+
+        double *cur = calloc(PADDED, sizeof(double));
+        double *next = calloc(PADDED, sizeof(double));
+        for (int j = 0; j < NY; j++)
+            for (int i = 0; i < NX; i++) cur[IDX(i, j, 0)] = (i * 31 + j * 17) % 13;
+        diffusion2d_after(&cur, &next, threads); /* warmup */
+        double t1 = now_s();
+        for (int s = 0; s < 5; s++) diffusion2d_after(&cur, &next, threads);
+        double ta = (now_s() - t1) / 5;
+        printf("diffusion2d 4096^2 r=3  threads=%d: before %.1f ms  after %.1f ms  speedup %.2fx\n",
+               threads, tb * 1e3, ta * 1e3, tb / ta);
+        free(cur); free(next);
+    }
+
+    /* ---- MHD 64^3 r=3, one RK3 step = 3 substeps ---- */
+    NX = NY = NZ = 64;
+    PX = NX + 2 * R; PY = NY + 2 * R; PZ = NZ + 2 * R;
+    PADDED = (size_t)PX * PY * PZ;
+    {
+        double *sb[NF], *wb[NF], *sa[NF], *wa[NF], *spare[NF];
+        for (int f = 0; f < NF; f++) {
+            sb[f] = calloc(PADDED, sizeof(double));
+            wb[f] = calloc(PADDED, sizeof(double));
+            sa[f] = calloc(PADDED, sizeof(double));
+            wa[f] = calloc(PADDED, sizeof(double));
+            spare[f] = calloc(PADDED, sizeof(double));
+            for (int k = 0; k < NZ; k++)
+                for (int j = 0; j < NY; j++)
+                    for (int i = 0; i < NX; i++) {
+                        double v = 1e-2 * (((f * 31 + i * 7 + j * 5 + k * 3) % 13) - 6);
+                        sb[f][IDX(i, j, k)] = v;
+                        sa[f][IDX(i, j, k)] = v;
+                    }
+        }
+        double dt = 1e-4;
+        for (int l = 0; l < 3; l++) mhd_substep_before(sb, wb, l, dt); /* warmup */
+        double t0 = now_s();
+        for (int s = 0; s < 3; s++)
+            for (int l = 0; l < 3; l++) mhd_substep_before(sb, wb, l, dt);
+        double tb = (now_s() - t0) / 3;
+
+        for (int l = 0; l < 3; l++) mhd_substep_after(sa, wa, spare, l, dt, threads);
+        double t1 = now_s();
+        for (int s = 0; s < 3; s++)
+            for (int l = 0; l < 3; l++) mhd_substep_after(sa, wa, spare, l, dt, threads);
+        double ta = (now_s() - t1) / 3;
+        printf("mhd 64^3 rk3 step       threads=%d: before %.1f ms  after %.1f ms  speedup %.2fx\n",
+               threads, tb * 1e3, ta * 1e3, tb / ta);
+        printf("  parity: |before-after| checksum delta = %.3e (both advanced 12 substeps)\n",
+               fabs(checksum(sb) - checksum(sa)));
+    }
+    return 0;
+}

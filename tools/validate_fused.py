@@ -1,0 +1,326 @@
+"""Validation mirror for rust/src/stencil/mhd/fused.rs.
+
+Two independent implementations of one MHD RK3 substep:
+  * reference: mirrors ops.rs apply_axis / d1d1-with-ghost-refill / rhs.rs
+    eval + rk3.rs substep_reference (vectorized numpy on padded arrays)
+  * fused: a literal port of fused.rs (flat arrays, identical index math,
+    per-row stencil_row / d1d1_row / gdiv_row helpers, scalar phi)
+They must agree to machine precision across substeps l=0,1,2.
+"""
+import numpy as np
+
+R = 3
+C1 = np.array([-1 / 60, 3 / 20, -3 / 4, 0.0, 3 / 4, -3 / 20, 1 / 60])
+C2 = np.array([1 / 90, -3 / 20, 3 / 2, -49 / 18, 3 / 2, -3 / 20, 1 / 90])
+
+# params (MhdParams with dx=0.37)
+cs0, gamma, cp, rho0 = 1.0, 5 / 3, 1.0, 1.0
+nu, eta, zeta, mu0, kappa = 5e-3, 5e-3, 0.3, 1.0, 1e-3  # zeta nonzero to exercise that term
+dx = 0.37
+inv_dx = 1.0 / dx
+ln_rho0 = np.log(rho0)
+temp0 = cs0 * cs0 / (cp * (gamma - 1.0))
+
+LNRHO, UX, UY, UZ, SS, AXF, AYF, AZF = range(8)
+NF = 8
+
+nx, ny, nz = 9, 7, 5
+px, py, pz = nx + 2 * R, ny + 2 * R, nz + 2 * R
+
+rng = np.random.default_rng(42)
+
+
+def pad_periodic(interior):  # interior shape (nz, ny, nx)
+    return np.pad(interior, R, mode="wrap")
+
+
+def interior(padded):
+    return padded[R:R + nz, R:R + ny, R:R + nx]
+
+
+AXIS = {0: 2, 1: 1, 2: 0}  # rust axis -> numpy axis (x fastest => last)
+
+
+def shifted(padded, ax, off):
+    sl = [slice(R, R + nz), slice(R, R + ny), slice(R, R + nx)]
+    a = AXIS[ax]
+    s = sl[a]
+    sl[a] = slice(s.start + off, s.stop + off)
+    return padded[tuple(sl)]
+
+
+# ---------------------------------------------------------------- reference
+def apply_axis(padded, ax, w, scale):
+    out = np.zeros((pz, py, px))
+    oi = interior(out)
+    for t, c in enumerate(w):
+        if c == 0.0:
+            continue
+        oi += c * shifted(padded, ax, t - R)
+    oi *= scale
+    return out
+
+
+def d1(padded, ax):
+    return apply_axis(padded, ax, C1, inv_dx)
+
+
+def d2(padded, ax):
+    return apply_axis(padded, ax, C2, inv_dx * inv_dx)
+
+
+def laplacian(padded):
+    acc = d2(padded, 0)
+    for ax in (1, 2):
+        interior(acc)[...] += interior(d2(padded, ax))
+    return acc
+
+
+def d1d1(padded, ax1, ax2):
+    mid = d1(padded, ax1)
+    mid = pad_periodic(interior(mid))  # the reference's ghost refill
+    return d1(mid, ax2)
+
+
+def reference_rhs(state_padded):
+    lnrho, ss = state_padded[LNRHO], state_padded[SS]
+    uu = [state_padded[UX + a] for a in range(3)]
+    aa = [state_padded[AXF + a] for a in range(3)]
+    glr = [interior(d1(lnrho, a)) for a in range(3)]
+    gs = [interior(d1(ss, a)) for a in range(3)]
+    lap_lnrho = interior(laplacian(lnrho))
+    lap_ss = interior(laplacian(ss))
+    duv = [[interior(d1(uu[i], j)) for j in range(3)] for i in range(3)]
+    lap_u = [interior(laplacian(uu[i])) for i in range(3)]
+
+    def gdiv(vv, i):
+        acc = np.zeros((nz, ny, nx))
+        for j in range(3):
+            t = d2(vv[j], i) if i == j else d1d1(vv[j], j, i)
+            acc += interior(t)
+        return acc
+
+    gdivu = [gdiv(uu, i) for i in range(3)]
+    dav = [[interior(d1(aa[i], j)) for j in range(3)] for i in range(3)]
+    lap_a = [interior(laplacian(aa[i])) for i in range(3)]
+    gdiva = [gdiv(aa, i) for i in range(3)]
+
+    lnrho_v, ss_v = interior(lnrho), interior(ss)
+    u = [interior(uu[a]) for a in range(3)]
+    divu = duv[0][0] + duv[1][1] + duv[2][2]
+    rho = np.exp(lnrho_v)
+    inv_rho = np.exp(-lnrho_v)
+    exparg = gamma * ss_v / cp + (gamma - 1.0) * (lnrho_v - ln_rho0)
+    cs2 = cs0 * cs0 * np.exp(exparg)
+    temp = temp0 * np.exp(exparg)
+    bb = [dav[2][1] - dav[1][2], dav[0][2] - dav[2][0], dav[1][0] - dav[0][1]]
+    jv = [(gdiva[a] - lap_a[a]) / mu0 for a in range(3)]
+    jxb = [jv[1] * bb[2] - jv[2] * bb[1], jv[2] * bb[0] - jv[0] * bb[2],
+           jv[0] * bb[1] - jv[1] * bb[0]]
+    uxb = [u[1] * bb[2] - u[2] * bb[1], u[2] * bb[0] - u[0] * bb[2],
+           u[0] * bb[1] - u[1] * bb[0]]
+    s_t = [[0.5 * (duv[a][b] + duv[b][a]) - (divu / 3.0 if a == b else 0.0)
+            for b in range(3)] for a in range(3)]
+    s2 = np.zeros((nz, ny, nx))
+    s_glnrho = [np.zeros((nz, ny, nx)) for _ in range(3)]
+    for a in range(3):
+        for b in range(3):
+            s2 += s_t[a][b] * s_t[a][b]
+            s_glnrho[a] += s_t[a][b] * glr[b]
+
+    cell = [None] * NF
+    cell[LNRHO] = -(u[0] * glr[0] + u[1] * glr[1] + u[2] * glr[2]) - divu
+    for a in range(3):
+        adv = -(u[0] * duv[a][0] + u[1] * duv[a][1] + u[2] * duv[a][2])
+        press = -cs2 * (gs[a] / cp + glr[a])
+        lorentz = jxb[a] * inv_rho
+        visc = nu * (lap_u[a] + gdivu[a] / 3.0 + 2.0 * s_glnrho[a]) + zeta * gdivu[a]
+        cell[UX + a] = adv + press + lorentz + visc
+    glnt = [gamma / cp * gs[a] + (gamma - 1.0) * glr[a] for a in range(3)]
+    lap_lnt = gamma / cp * lap_ss + (gamma - 1.0) * lap_lnrho
+    div_k_gradt = kappa * temp * (lap_lnt + glnt[0] ** 2 + glnt[1] ** 2 + glnt[2] ** 2)
+    j2 = jv[0] ** 2 + jv[1] ** 2 + jv[2] ** 2
+    heat = div_k_gradt + eta * mu0 * j2 + 2.0 * rho * nu * s2 + zeta * rho * divu * divu
+    cell[SS] = -(u[0] * gs[0] + u[1] * gs[1] + u[2] * gs[2]) + heat * inv_rho / temp
+    for a in range(3):
+        cell[AXF + a] = uxb[a] + eta * lap_a[a]
+    return cell
+
+
+# -------------------------------------------------------------------- fused
+def stencil_row(dst, data, base, stride, rad, w, scale):
+    dst[:] = 0.0
+    n = len(dst)
+    for t in range(len(w)):
+        c = w[t]
+        if c == 0.0:
+            continue
+        off = base + t * stride - rad * stride
+        dst += c * data[off:off + n]
+    dst *= scale
+
+
+def add_rows(dst, src):
+    dst += src
+
+
+def d1d1_row(dst, tmp, data, base, s1, s2, rad, c1, invdx):
+    dst[:] = 0.0
+    for t2 in range(len(c1)):
+        cb = c1[t2]
+        if cb == 0.0:
+            continue
+        mbase = base + t2 * s2 - rad * s2
+        stencil_row(tmp, data, mbase, s1, rad, c1, invdx)
+        dst += cb * tmp
+    dst *= invdx
+
+
+def laplacian_row(dst, tmp, data, base, strides, rad, c2, invdx2):
+    stencil_row(dst, data, base, strides[0], rad, c2, invdx2)
+    for st in strides[1:]:
+        stencil_row(tmp, data, base, st, rad, c2, invdx2)
+        add_rows(dst, tmp)
+
+
+def gdiv_row(dst, tmp, tmp2, vec_data, i, base, strides, rad, c1, c2, invdx):
+    dst[:] = 0.0
+    for jf in range(3):
+        if i == jf:
+            stencil_row(tmp, vec_data[jf], base, strides[i], rad, c2, invdx * invdx)
+        else:
+            d1d1_row(tmp, tmp2, vec_data[jf], base, strides[jf], strides[i], rad, c1, invdx)
+        add_rows(dst, tmp)
+
+
+(B_GLNRHO, B_GSS, B_LAP_LNRHO, B_LAP_SS, B_DU, B_LAP_U, B_GDIVU, B_DA,
+ B_LAP_A, B_GDIVA, B_TMP, B_TMP2, B_ROWS) = (0, 3, 6, 7, 8, 17, 20, 23, 32, 35, 38, 39, 40)
+
+
+def substep_fused(sd, wflat, dflat, alpha, beta, dt):
+    # sd: list of NF flat padded arrays; wflat/dflat: flat padded arrays (written)
+    strides = [1, px, px * py]
+    rad = R
+    ud = [sd[UX], sd[UY], sd[UZ]]
+    ad = [sd[AXF], sd[AYF], sd[AZF]]
+    buf = np.zeros(B_ROWS * nx)
+
+    def rowm(b):
+        return buf[b * nx:(b + 1) * nx]
+
+    tmp, tmp2 = rowm(B_TMP), rowm(B_TMP2)
+    for k in range(nz):
+        for j in range(ny):
+            base = R + px * ((j + R) + py * (k + R))
+            for ax in range(3):
+                stencil_row(rowm(B_GLNRHO + ax), sd[LNRHO], base, strides[ax], rad, C1, inv_dx)
+                stencil_row(rowm(B_GSS + ax), sd[SS], base, strides[ax], rad, C1, inv_dx)
+            laplacian_row(rowm(B_LAP_LNRHO), tmp, sd[LNRHO], base, strides, rad, C2, inv_dx ** 2)
+            laplacian_row(rowm(B_LAP_SS), tmp, sd[SS], base, strides, rad, C2, inv_dx ** 2)
+            for a in range(3):
+                for b in range(3):
+                    stencil_row(rowm(B_DU + 3 * a + b), ud[a], base, strides[b], rad, C1, inv_dx)
+                    stencil_row(rowm(B_DA + 3 * a + b), ad[a], base, strides[b], rad, C1, inv_dx)
+                laplacian_row(rowm(B_LAP_U + a), tmp, ud[a], base, strides, rad, C2, inv_dx ** 2)
+                laplacian_row(rowm(B_LAP_A + a), tmp, ad[a], base, strides, rad, C2, inv_dx ** 2)
+                gdiv_row(rowm(B_GDIVU + a), tmp, tmp2, ud, a, base, strides, rad, C1, C2, inv_dx)
+                gdiv_row(rowm(B_GDIVA + a), tmp, tmp2, ad, a, base, strides, rad, C1, C2, inv_dx)
+
+            def rb(b, i):
+                return buf[b * nx + i]
+
+            def sv(f, i):
+                return sd[f][base + i]
+
+            for i in range(nx):
+                lnrho_v, ss_v = sv(LNRHO, i), sv(SS, i)
+                u = [sv(UX, i), sv(UY, i), sv(UZ, i)]
+                glr = [rb(B_GLNRHO, i), rb(B_GLNRHO + 1, i), rb(B_GLNRHO + 2, i)]
+                gs = [rb(B_GSS, i), rb(B_GSS + 1, i), rb(B_GSS + 2, i)]
+                duv = [[rb(B_DU + 3 * a + b, i) for b in range(3)] for a in range(3)]
+                divu = duv[0][0] + duv[1][1] + duv[2][2]
+                rho = np.exp(lnrho_v)
+                inv_rho = np.exp(-lnrho_v)
+                exparg = gamma * ss_v / cp + (gamma - 1.0) * (lnrho_v - ln_rho0)
+                cs2 = cs0 * cs0 * np.exp(exparg)
+                temp = temp0 * np.exp(exparg)
+                dav = [[rb(B_DA + 3 * a + b, i) for b in range(3)] for a in range(3)]
+                bb = [dav[2][1] - dav[1][2], dav[0][2] - dav[2][0], dav[1][0] - dav[0][1]]
+                jv = [(rb(B_GDIVA + a, i) - rb(B_LAP_A + a, i)) / mu0 for a in range(3)]
+                jxb = [jv[1] * bb[2] - jv[2] * bb[1], jv[2] * bb[0] - jv[0] * bb[2],
+                       jv[0] * bb[1] - jv[1] * bb[0]]
+                uxb = [u[1] * bb[2] - u[2] * bb[1], u[2] * bb[0] - u[0] * bb[2],
+                       u[0] * bb[1] - u[1] * bb[0]]
+                s_t = [[0.0] * 3 for _ in range(3)]
+                for a in range(3):
+                    for b in range(3):
+                        s_t[a][b] = 0.5 * (duv[a][b] + duv[b][a])
+                        if a == b:
+                            s_t[a][b] -= divu / 3.0
+                s2 = 0.0
+                s_glnrho = [0.0] * 3
+                for a in range(3):
+                    for b in range(3):
+                        s2 += s_t[a][b] * s_t[a][b]
+                        s_glnrho[a] += s_t[a][b] * glr[b]
+                cell = [0.0] * NF
+                cell[LNRHO] = -(u[0] * glr[0] + u[1] * glr[1] + u[2] * glr[2]) - divu
+                for a in range(3):
+                    adv = -(u[0] * duv[a][0] + u[1] * duv[a][1] + u[2] * duv[a][2])
+                    press = -cs2 * (gs[a] / cp + glr[a])
+                    lorentz = jxb[a] * inv_rho
+                    visc = nu * (rb(B_LAP_U + a, i) + rb(B_GDIVU + a, i) / 3.0
+                                 + 2.0 * s_glnrho[a]) + zeta * rb(B_GDIVU + a, i)
+                    cell[UX + a] = adv + press + lorentz + visc
+                glnt = [gamma / cp * gs[a] + (gamma - 1.0) * glr[a] for a in range(3)]
+                lap_lnt = gamma / cp * rb(B_LAP_SS, i) + (gamma - 1.0) * rb(B_LAP_LNRHO, i)
+                div_k_gradt = kappa * temp * (lap_lnt + glnt[0] ** 2 + glnt[1] ** 2 + glnt[2] ** 2)
+                j2 = jv[0] ** 2 + jv[1] ** 2 + jv[2] ** 2
+                heat = (div_k_gradt + eta * mu0 * j2 + 2.0 * rho * nu * s2
+                        + zeta * rho * divu * divu)
+                cell[SS] = -(u[0] * gs[0] + u[1] * gs[1] + u[2] * gs[2]) + heat * inv_rho / temp
+                for a in range(3):
+                    cell[AXF + a] = uxb[a] + eta * rb(B_LAP_A + a, i)
+                for f in range(NF):
+                    wv = alpha * wflat[f][base + i] + dt * cell[f]
+                    wflat[f][base + i] = wv
+                    dflat[f][base + i] = sv(f, i) + beta * wv
+
+
+# ------------------------------------------------------------------- driver
+RK3_ALPHA = [0.0, -5.0 / 9.0, -153.0 / 128.0]
+RK3_BETA = [1.0 / 3.0, 15.0 / 16.0, 8.0 / 15.0]
+dt = 1e-3
+
+init = [1e-2 * rng.standard_normal((nz, ny, nx)) for _ in range(NF)]
+
+# reference trajectory
+ref_state = [i.copy() for i in init]
+ref_w = [np.zeros((nz, ny, nx)) for _ in range(NF)]
+# fused trajectory (flat padded arrays)
+fus_state = [i.copy() for i in init]
+fus_w = [np.zeros(px * py * pz) for _ in range(NF)]
+
+for l in range(3):
+    # reference substep
+    sp = np.stack([pad_periodic(f) for f in ref_state])
+    cell = reference_rhs(sp)
+    for f in range(NF):
+        wv = RK3_ALPHA[l] * ref_w[f] + dt * cell[f]
+        ref_w[f] = wv
+        ref_state[f] = ref_state[f] + RK3_BETA[l] * wv
+
+    # fused substep
+    sd = [pad_periodic(f).ravel().copy() for f in fus_state]
+    dflat = [np.zeros(px * py * pz) for _ in range(NF)]
+    substep_fused(sd, fus_w, dflat, RK3_ALPHA[l], RK3_BETA[l], dt)
+    fus_state = [interior(d.reshape(pz, py, px)).copy() for d in dflat]
+
+    err = max(np.max(np.abs(ref_state[f] - fus_state[f])) for f in range(NF))
+    werr = max(np.max(np.abs(ref_w[f] - interior(fus_w[f].reshape(pz, py, px))))
+               for f in range(NF))
+    scale = max(np.max(np.abs(ref_state[f])) for f in range(NF))
+    print(f"substep {l}: state err {err:.3e}  w err {werr:.3e}  (scale {scale:.3e})")
+    assert err < 1e-13 and werr < 1e-13, "fused diverged from reference"
+
+print("OK: fused algorithm matches the unfused reference")
