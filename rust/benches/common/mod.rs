@@ -20,7 +20,8 @@ pub fn executor() -> Option<Executor> {
     Some(Executor::new(Manifest::load(dir).ok()?).ok()?)
 }
 
-/// The measurement harness used by every bench binary.
+/// The measurement harness used by every bench binary (configuration
+/// consolidated in `util::bench`).
 pub fn bencher() -> Bencher {
-    Bencher { warmup: 2, min_iters: 5, max_iters: 30, budget: std::time::Duration::from_secs(3) }
+    Bencher::figures()
 }

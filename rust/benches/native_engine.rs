@@ -13,12 +13,25 @@ use stencilax::util::rng::Rng;
 fn main() {
     println!("=== native_engine ===");
     let smoke = std::env::args().any(|a| a == "--smoke");
-    for r in run_suite(smoke) {
+    // Pick up tuned launch plans when `stencilax tune --native` has run
+    // (the CLI's default output dir). `cargo bench` runs with CWD at the
+    // package root (rust/), the CLI at the repo root — probe both. A
+    // present-but-corrupt cache is a hard error, same as the CLI —
+    // silent fallback would mask a broken tuning pipeline.
+    let plans = ["results", "../results"]
+        .into_iter()
+        .map(std::path::Path::new)
+        .find_map(|dir| {
+            stencilax::coordinator::plans::PlanCache::load_if_exists(dir)
+                .expect("plan_cache.json exists but failed to load")
+        });
+    for r in run_suite(smoke, plans.as_ref()) {
         println!(
-            "         -> {:<12} {:?}: {:.1} Melem/s",
+            "         -> {:<12} {:?}: {:.1} Melem/s [{}]",
             r.name,
             r.shape,
-            r.melem_per_s()
+            r.melem_per_s(),
+            if r.tuned { "tuned" } else { "default" }
         );
     }
 

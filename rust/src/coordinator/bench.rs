@@ -8,20 +8,32 @@
 //! comparable timing record. The full mode uses the paper's §5.1 problem
 //! sizes; smoke mode shrinks them to CI scale with a calibrated
 //! [`Bencher::smoke`] budget.
+//!
+//! When a plan cache ([`crate::coordinator::plans::PlanCache`], written by
+//! `stencilax tune --native`) is supplied, every case runs under its tuned
+//! [`LaunchPlan`] — the cache keys by `(workload, shape, threads, host)`,
+//! so the lookup only hits for plans tuned at this exact configuration;
+//! everything else falls back to the default heuristics.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::plans::PlanCache;
+use crate::sim::workload::bench_sizes::{pick, DIFFUSION2D_N, DIFFUSION3D_N, MHD_N, XCORR_N};
 use crate::stencil::conv;
 use crate::stencil::diffusion::Diffusion;
 use crate::stencil::exec::DoubleBuffer;
 use crate::stencil::grid::{Boundary, Grid};
 use crate::stencil::mhd::{MhdParams, MhdState, MhdStepper};
-use crate::util::bench::{black_box, Bencher, Stats};
+use crate::stencil::plan::LaunchPlan;
 use crate::util::json::Json;
 use crate::util::par;
 use crate::util::rng::Rng;
+
+// The crate's single timing/stats implementation, re-exported so bench
+// consumers have one import path (satellite: consolidated bench utils).
+pub use crate::util::bench::{black_box, fmt_time, median, median_upper, Bencher, Stats};
 
 /// One benchmark case's outcome.
 pub struct BenchResult {
@@ -32,6 +44,10 @@ pub struct BenchResult {
     /// Elements updated per iteration (for Melem/s rates).
     pub elems: f64,
     pub stats: Stats,
+    /// The launch plan the case ran under (compact description).
+    pub plan: String,
+    /// Whether the plan came from the tuned plan cache.
+    pub tuned: bool,
 }
 
 impl BenchResult {
@@ -51,82 +67,115 @@ impl BenchResult {
         );
         obj.insert("elems".into(), Json::num(self.elems));
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
+        obj.insert("plan".into(), Json::str(self.plan.clone()));
+        obj.insert("tuned".into(), Json::Bool(self.tuned));
         Json::Obj(obj)
+    }
+}
+
+/// Resolve the launch plan for one case: the tuned entry for
+/// `(workload, shape, current threads, this host)` when the cache has
+/// one, else the default heuristics.
+fn case_plan(plans: Option<&PlanCache>, workload: &str, shape: &[usize]) -> (LaunchPlan, bool) {
+    let threads = par::num_threads();
+    match plans.and_then(|c| c.lookup(workload, shape, threads)) {
+        Some(e) => (e.plan, true),
+        None => (LaunchPlan::default_for(shape, 0), false),
     }
 }
 
 /// Run the native-engine suite. `smoke` selects CI-scale problem sizes and
 /// the calibrated smoke budget; otherwise the paper's §5.1 sizes run under
-/// the paper measurement methodology.
-pub fn run_suite(smoke: bool) -> Vec<BenchResult> {
+/// the paper measurement methodology. `plans` is the tuned plan cache, if
+/// one has been produced by `stencilax tune --native`.
+pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
     let b = if smoke { Bencher::smoke() } else { Bencher::paper() };
     let mut rng = Rng::new(1);
     let mut out = Vec::new();
-    let mut push = |name: &str, shape: Vec<usize>, elems: usize, stats: Stats| {
-        out.push(BenchResult { name: name.into(), shape, elems: elems as f64, stats });
-    };
+    let mut push =
+        |name: &str, shape: Vec<usize>, elems: usize, stats: Stats, plan: &LaunchPlan, tuned: bool| {
+            out.push(BenchResult {
+                name: name.into(),
+                shape,
+                elems: elems as f64,
+                stats,
+                plan: plan.describe(),
+                tuned,
+            });
+        };
 
-    // 1-D cross-correlation at the paper's FP64 problem size
+    // 1-D cross-correlation at the paper's FP64 problem size (tuned as
+    // the registry's conv1d-r3 workload; sizes shared via bench_sizes)
     {
-        let n = if smoke { 1usize << 20 } else { 1 << 24 };
+        let n = pick(XCORR_N, smoke);
         let r = 3usize;
+        let (plan, tuned) = case_plan(plans, "conv1d-r3", &[n]);
         let fpad = rng.normal_vec(n + 2 * r);
         let taps = rng.normal_vec(2 * r + 1);
+        // steady-state into-form on a reused buffer — the same form the
+        // tuner measures, so plan_cache and BENCH throughputs for this
+        // key are directly comparable
+        let mut out = vec![0.0f64; n];
         let stats = b.report(&format!("xcorr1d n=2^{} r=3", n.trailing_zeros()), || {
-            black_box(conv::xcorr1d(&fpad, &taps));
+            conv::xcorr1d_into(&plan, &fpad, &taps, &mut out);
+            black_box(&out);
         });
-        push("xcorr1d", vec![n], n, stats);
+        push("xcorr1d", vec![n], n, stats, &plan, tuned);
     }
 
     // 2-D diffusion (the nz == 1 decomposition regression target)
     {
-        let n = if smoke { 512usize } else { 4096 };
+        let n = pick(DIFFUSION2D_N, smoke);
+        let (plan, tuned) = case_plan(plans, "diffusion2d", &[n, n]);
         let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n], 3, |i, j, _| {
             ((i * 31 + j * 17) % 13) as f64
         }));
         let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
         let dt = d.stable_dt(2);
         let stats = b.report(&format!("diffusion2d {n}^2 r=3 (buffered)"), || {
-            d.step_buffered(&mut field, 2, dt);
+            d.step_buffered_plan(&plan, &mut field, 2, dt);
         });
-        push("diffusion2d", vec![n, n], n * n, stats);
+        push("diffusion2d", vec![n, n], n * n, stats, &plan, tuned);
     }
 
     // 3-D diffusion step
     {
-        let n = if smoke { 48usize } else { 128 };
+        let n = pick(DIFFUSION3D_N, smoke);
+        let (plan, tuned) = case_plan(plans, "diffusion3d", &[n, n, n]);
         let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n, n], 3, |i, j, k| {
             ((i * 7 + j * 5 + k * 3) % 11) as f64
         }));
         let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
         let dt = d.stable_dt(3);
         let stats = b.report(&format!("diffusion3d {n}^3 r=3 (buffered)"), || {
-            d.step_buffered(&mut field, 3, dt);
+            d.step_buffered_plan(&plan, &mut field, 3, dt);
         });
-        push("diffusion3d", vec![n, n, n], n * n * n, stats);
+        push("diffusion3d", vec![n, n, n], n * n * n, stats, &plan, tuned);
     }
 
     // full MHD RK3 step (three fused substeps) — the headline fusion case
     {
-        let n = if smoke { 16usize } else { 64 };
+        let n = pick(MHD_N, smoke);
+        let (plan, tuned) = case_plan(plans, "mhd", &[n, n, n]);
         let par = MhdParams { dx: 2.0 * std::f64::consts::PI / n as f64, ..Default::default() };
         let mut st = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
         let mut stepper = MhdStepper::new(par, 3, n, n, n);
         let dt = 1e-5;
         let stats = b.report(&format!("mhd rk3 step {n}^3 (fused)"), || {
-            stepper.step(&mut st, dt);
+            stepper.step_plan(&plan, &mut st, dt);
         });
-        push("mhd-step", vec![n, n, n], 3 * n * n * n, stats);
+        push("mhd-step", vec![n, n, n], 3 * n * n * n, stats, &plan, tuned);
 
         let stats = b.report(&format!("mhd substep {n}^3 (fused)"), || {
-            stepper.substep(&mut st, dt, 0);
+            stepper.substep_plan(&plan, &mut st, dt, 0);
         });
-        push("mhd-substep", vec![n, n, n], n * n * n, stats);
+        push("mhd-substep", vec![n, n, n], n * n * n, stats, &plan, tuned);
 
+        let default = LaunchPlan::default_for(&[n, n, n], 0);
         let stats = b.report(&format!("mhd fill_ghosts 8x{n}^3"), || {
             st.fill_ghosts();
         });
-        push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats);
+        push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats, &default, false);
     }
 
     out
@@ -164,12 +213,16 @@ mod tests {
                 shape: vec![16, 16, 16],
                 elems: 3.0 * 4096.0,
                 stats: Stats::from_samples(vec![0.5, 0.25, 1.0]),
+                plan: LaunchPlan::default().describe(),
+                tuned: false,
             },
             BenchResult {
                 name: "xcorr1d".into(),
                 shape: vec![1 << 20],
                 elems: (1 << 20) as f64,
                 stats: Stats::from_samples(vec![2e-3]),
+                plan: "rows16 t4 fused chunk8192".into(),
+                tuned: true,
             },
         ];
         let j = suite_json(&results, true);
@@ -183,7 +236,52 @@ mod tests {
         assert_eq!(cases[0].req_f64("median_s").unwrap(), 0.5);
         assert_eq!(cases[0].get("shape").unwrap().usize_vec().unwrap(), vec![16, 16, 16]);
         assert!(cases[0].req_f64("melem_per_s").unwrap() > 0.0);
+        assert_eq!(cases[0].get("tuned").unwrap().as_bool(), Some(false));
         assert_eq!(cases[1].req_u64("iters").unwrap(), 1);
+        assert_eq!(cases[1].req_str("plan").unwrap(), "rows16 t4 fused chunk8192");
+        assert_eq!(cases[1].get("tuned").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn native_instances_match_bench_case_sizes() {
+        // lockstep: tuned-plan cache keys embed the shape, so the tuner's
+        // native instances must build at exactly the suite's sizes
+        use crate::sim::workload::find;
+        for (name, shape) in [
+            ("conv1d-r3", vec![pick(XCORR_N, true)]),
+            ("diffusion2d", vec![pick(DIFFUSION2D_N, true); 2]),
+            ("diffusion3d", vec![pick(DIFFUSION3D_N, true); 3]),
+            ("mhd", vec![pick(MHD_N, true); 3]),
+        ] {
+            let inst = find(name).unwrap().native(true).expect(name);
+            assert_eq!(inst.shape(), shape, "{name}");
+        }
+    }
+
+    #[test]
+    fn case_plan_applies_tuned_entries() {
+        use crate::coordinator::plans::{host_fingerprint, PlanEntry};
+        use crate::stencil::plan::BlockShape;
+        let mut cache = PlanCache::new();
+        let threads = par::num_threads();
+        let plan = LaunchPlan { block: BlockShape::Rows(16), threads, ..LaunchPlan::default() };
+        cache.insert(PlanEntry {
+            workload: "diffusion2d".into(),
+            shape: vec![512, 512],
+            threads,
+            host: host_fingerprint(),
+            plan,
+            tuned_melem_per_s: 2.0,
+            default_melem_per_s: 1.0,
+        });
+        let (got, tuned) = case_plan(Some(&cache), "diffusion2d", &[512, 512]);
+        assert!(tuned);
+        assert_eq!(got, plan);
+        let (_, tuned) = case_plan(Some(&cache), "mhd", &[16, 16, 16]);
+        assert!(!tuned);
+        let (fallback, tuned) = case_plan(None, "diffusion2d", &[512, 512]);
+        assert!(!tuned);
+        assert_eq!(fallback, LaunchPlan::default_for(&[512, 512], 0));
     }
 
     #[test]
@@ -194,6 +292,8 @@ mod tests {
             shape: vec![64, 64],
             elems: 4096.0,
             stats: Stats::from_samples(vec![1e-4, 2e-4, 3e-4]),
+            plan: LaunchPlan::default().describe(),
+            tuned: false,
         }];
         let path = write_report(&dir, &results, true).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

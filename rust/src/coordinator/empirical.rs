@@ -1,0 +1,562 @@
+//! Empirical launch-plan autotuning — closing the paper's tuning loop on
+//! the native engine (ISSUE 3 tentpole).
+//!
+//! The analytical tuner ([`super::tune`]) ranks GPU tile decompositions
+//! against Table 1 specs; this module runs the same
+//! enumerate → prune → *measure* loop against the machine the engine
+//! actually executes on:
+//!
+//! 1. [`candidate_plans`] enumerates [`LaunchPlan`]s per workload (row
+//!    blocking, oversubscription, 1-D chunk length, thread budget, fusion,
+//!    workspace strategy);
+//! 2. candidates are pruned with analytical predictions from the
+//!    [`crate::model::calibrate::HostModel`], memoized through the
+//!    existing [`PredictionCache`] exactly like the GPU search;
+//! 3. survivors (always including the default plan) are measured with the
+//!    [`Bencher`] methodology (warm-up, then median of N);
+//! 4. the winner per `(workload, shape, threads, host)` persists to the
+//!    plan cache ([`super::plans`]), which `stencilax bench` loads on
+//!    startup; and
+//! 5. the host model's bandwidth/latency coefficients are refit from the
+//!    measurements ([`crate::model::calibrate::fit`]) — the calibration
+//!    report records predicted-vs-measured error before and after, and
+//!    the next tune run prunes with the corrected model.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::plans::{host_fingerprint, PlanCache, PlanEntry};
+use crate::coordinator::tune::PredictionCache;
+use crate::model::calibrate::{fit, Calibration, HostModel, SweepCost};
+use crate::model::specs::{spec, Gpu};
+use crate::sim::kernel::{Caching, KernelProfile};
+use crate::sim::workload::{NativeInstance, Workload};
+use crate::sim::workloads::{self, Tile};
+use crate::stencil::plan::{BlockShape, LaunchPlan, WorkspaceStrategy, DEFAULT_CHUNK};
+use crate::util::bench::{Bencher, Stats};
+use crate::util::json::Json;
+use crate::util::par;
+
+/// Schema tag of the calibration report.
+pub const CALIBRATION_SCHEMA: &str = "stencilax-calibration/1";
+/// File name under the output directory.
+pub const CALIBRATION_REPORT_FILE: &str = "calibration_report.json";
+/// Candidates surviving the analytical prune (the default plan is always
+/// kept on top of these).
+pub const PRUNE_KEEP: usize = 8;
+
+/// Enumerate candidate launch plans for a problem of interior `shape`
+/// under a `threads` budget. `chunked` selects the flat-1-D axis (vary
+/// the chunk length — the `par_chunks_mut_plan` path); grid sweeps vary
+/// the row-block decomposition and workspace strategy; a grid sweep with
+/// a single interior row (e.g. diffusion1d: `ny * nz == 1`) has no
+/// decomposition axis at all, so its set collapses to the knobs that are
+/// actually live — enumerating no-op variants would persist a
+/// timing-noise "winner". `include_unfused` adds the fusion-off
+/// candidate (meaningful for MHD, whose unfused reference path exists).
+/// The default plan is always element 0; the list is deduplicated and
+/// deterministic.
+pub fn candidate_plans(
+    shape: &[usize],
+    threads: usize,
+    chunked: bool,
+    include_unfused: bool,
+) -> Vec<LaunchPlan> {
+    let base = LaunchPlan::default_for(shape, threads);
+    let mut out: Vec<LaunchPlan> = Vec::new();
+    let mut push = |p: LaunchPlan, out: &mut Vec<LaunchPlan>| {
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    };
+    push(base, &mut out);
+    let rows: usize = if shape.len() > 1 { shape[1..].iter().product() } else { 1 };
+    if chunked {
+        for &chunk in &[1024usize, 4096, DEFAULT_CHUNK, 32768, 131072] {
+            push(LaunchPlan { chunk, ..base }, &mut out);
+        }
+        push(LaunchPlan { block: BlockShape::Serial, ..base }, &mut out);
+    } else if rows > 1 {
+        for &f in &[1usize, 2, 8] {
+            push(LaunchPlan { block: BlockShape::Oversubscribe(f), ..base }, &mut out);
+        }
+        for &b in &[1usize, 2, 4, 8, 16, 64] {
+            push(LaunchPlan { block: BlockShape::Rows(b), ..base }, &mut out);
+        }
+        push(LaunchPlan { block: BlockShape::Serial, ..base }, &mut out);
+        push(LaunchPlan { workspace: WorkspaceStrategy::Fresh, ..base }, &mut out);
+    } else {
+        // single-row sweep: only the workspace strategy is live
+        push(LaunchPlan { workspace: WorkspaceStrategy::Fresh, ..base }, &mut out);
+    }
+    if include_unfused {
+        push(LaunchPlan { fused: false, ..base }, &mut out);
+    }
+    out
+}
+
+/// Representative GPU tile for pulling the workload's per-element
+/// characterization (bytes/flops) out of its [`KernelProfile`] builder.
+fn profile_tile(dims: usize) -> Tile {
+    match dims {
+        1 => workloads::TILE_1D,
+        2 => Tile { tx: 64, ty: 4, tz: 1 },
+        _ => workloads::TILE_3D,
+    }
+}
+
+/// Host-side cost of one sweep under `plan`: compulsory traffic and flops
+/// scaled from the workload's kernel characterization, block count and
+/// halo from the plan's decomposition. The unfused MHD path still
+/// parallelizes each derivative fill but round-trips every intermediate
+/// grid through memory — modeled as ~20x traffic (coarse, but enough for
+/// the prune to price fusion). Chunked 1-D sweeps whose chunk overflows
+/// the per-core L2 lose the EXPERIMENTS.md §Perf/L3-1 blocking benefit
+/// and stream the input once per tap — modeled as `(taps+1)/2` extra
+/// passes, so oversized chunks rank behind the resident plateau instead
+/// of (wrongly) winning on block-overhead alone.
+fn sweep_cost(
+    prof: Option<&KernelProfile>,
+    shape: &[usize],
+    elems: f64,
+    plan: &LaunchPlan,
+    threads: usize,
+    chunked: bool,
+) -> SweepCost {
+    let (bytes_per_elem, flops_per_elem) = match prof {
+        Some(p) if p.elems > 0.0 => (p.hbm_bytes / p.elems, p.flops_per_elem),
+        _ => (16.0, 10.0),
+    };
+    let mut bytes = bytes_per_elem * elems;
+    let flops = flops_per_elem * elems;
+    let (blocks, halo) = if chunked {
+        let blocks = match plan.block {
+            BlockShape::Serial => 1,
+            _ => shape[0].div_ceil(plan.chunk.max(1)).max(1),
+        };
+        // L3-1 regression term: an L2-overflowing chunk streams the
+        // input once per tap instead of keeping the block resident
+        const CHUNK_L2_BYTES: usize = 512 * 1024;
+        if plan.chunk.saturating_mul(8) > CHUNK_L2_BYTES {
+            let taps = (flops_per_elem / 2.0).max(1.0);
+            bytes *= ((taps + 1.0) / 2.0).max(1.0);
+        }
+        // radius taps straddle chunk boundaries; one line per boundary
+        (blocks, 128.0)
+    } else {
+        let rows: usize = if shape.len() > 1 { shape[1..].iter().product() } else { 1 };
+        let (nb, _per) = plan.blocks(rows);
+        // consecutive-row blocks re-read the r=3 halo rows of their edges
+        (nb.max(1), 2.0 * 3.0 * shape[0] as f64 * 8.0)
+    };
+    let mut threads = threads.max(1);
+    if !plan.fused {
+        // the unfused reference still parallelizes each derivative fill
+        // (ops.rs par_fill_rows), so only the traffic multiplies: every
+        // intermediate grid round-trips through memory
+        bytes *= 20.0;
+    }
+    if matches!(plan.block, BlockShape::Serial) {
+        threads = 1;
+    }
+    SweepCost {
+        bytes,
+        flops,
+        blocks,
+        threads: threads.min(blocks),
+        halo_bytes_per_block: halo,
+    }
+}
+
+/// Synthetic tile key for memoizing host predictions in the existing
+/// [`PredictionCache`]. The prediction is a pure function of the
+/// [`SweepCost`] (bytes/flops/halo are fixed per search key; fusion is
+/// the only plan knob that rescales them), so the key is exactly the
+/// cost's decomposition discriminants: plans with identical cost share a
+/// slot (their predictions are equal by construction), distinct costs
+/// get distinct keys.
+fn plan_cache_tile(cost: &SweepCost, plan: &LaunchPlan) -> Tile {
+    Tile {
+        tx: cost.blocks.min(1 << 20) as u32 + 1,
+        ty: cost.threads.min(1 << 20) as u32 + 1,
+        tz: plan.fused as u32,
+    }
+}
+
+/// One measured candidate.
+#[derive(Debug, Clone)]
+pub struct PlanMeasurement {
+    pub plan: LaunchPlan,
+    /// Analytical prediction (seconds) under the model used for pruning.
+    pub predicted_s: f64,
+    pub stats: Stats,
+    pub cost: SweepCost,
+}
+
+/// Outcome of one workload's empirical search.
+#[derive(Debug, Clone)]
+pub struct NativeTuneOutcome {
+    pub workload: String,
+    pub shape: Vec<usize>,
+    pub threads: usize,
+    pub elems: f64,
+    /// Candidates enumerated before the analytical prune.
+    pub enumerated: usize,
+    /// Candidates discarded by the prune (never measured).
+    pub pruned: usize,
+    /// Measured survivors, best (lowest median) first.
+    pub measured: Vec<PlanMeasurement>,
+    pub default_plan: LaunchPlan,
+}
+
+impl NativeTuneOutcome {
+    /// The measured winner.
+    pub fn best(&self) -> &PlanMeasurement {
+        &self.measured[0]
+    }
+
+    /// The default plan's measurement (always present: the default is
+    /// never pruned).
+    pub fn default_measurement(&self) -> &PlanMeasurement {
+        self.measured
+            .iter()
+            .find(|m| m.plan == self.default_plan)
+            .expect("default plan is always measured")
+    }
+
+    /// Throughput of a measurement in Melem/s.
+    pub fn melem_per_s(&self, m: &PlanMeasurement) -> f64 {
+        self.elems / m.stats.median_s / 1e6
+    }
+
+    /// Plan-cache entry for the winner.
+    pub fn to_entry(&self) -> PlanEntry {
+        PlanEntry {
+            workload: self.workload.clone(),
+            shape: self.shape.clone(),
+            threads: self.threads,
+            host: host_fingerprint(),
+            plan: self.best().plan,
+            tuned_melem_per_s: self.melem_per_s(self.best()),
+            default_melem_per_s: self.melem_per_s(self.default_measurement()),
+        }
+    }
+}
+
+/// Enumerate, prune, and measure launch plans for one workload. `None`
+/// when the workload has no native path.
+pub fn tune_native(
+    w: &dyn Workload,
+    smoke: bool,
+    model: &HostModel,
+    cache: &PredictionCache,
+    bencher: &Bencher,
+) -> Option<NativeTuneOutcome> {
+    let mut inst: Box<dyn NativeInstance> = w.native(smoke)?;
+    let shape = inst.shape();
+    let elems = inst.elems();
+    let chunked = inst.chunked_1d();
+    let threads = par::num_threads();
+    let include_unfused = inst.has_unfused_path();
+    let candidates = candidate_plans(&shape, threads, chunked, include_unfused);
+    let enumerated = candidates.len();
+    let default_plan = LaunchPlan::default_for(&shape, threads);
+
+    // analytical prune, memoized through the shared PredictionCache
+    let prof = w.profile(spec(Gpu::A100), true, Caching::Hwc, profile_tile(w.dims()));
+    let key = format!("native|{}|{:?}|t{threads}", w.name(), shape);
+    let mut ranked: Vec<(LaunchPlan, SweepCost, f64)> = candidates
+        .into_iter()
+        .map(|plan| {
+            let cost = sweep_cost(prof.as_ref(), &shape, elems, &plan, threads, chunked);
+            let (t, _, _) = cache
+                .eval(&key, plan_cache_tile(&cost, &plan), || {
+                    let t = model.predict(&cost);
+                    Some((t, 0.0, t))
+                })
+                .expect("host predictions are total");
+            (plan, cost, t)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    let mut keep: Vec<(LaunchPlan, SweepCost, f64)> = Vec::new();
+    for item in ranked {
+        // the default plan and the fusion-off candidate are never pruned:
+        // the first is the before/after baseline, the second keeps fusion
+        // a *measured* axis rather than a model assumption
+        if keep.len() < PRUNE_KEEP || item.0 == default_plan || !item.0.fused {
+            keep.push(item);
+        }
+    }
+    let pruned = enumerated - keep.len();
+
+    // measure the survivors (paper methodology: warm-up, median of N)
+    inst.run(&default_plan); // global warm-up: grow per-thread workspaces
+    let mut measured: Vec<PlanMeasurement> = keep
+        .into_iter()
+        .map(|(plan, cost, predicted_s)| {
+            let stats = bencher.run(|| inst.run(&plan));
+            PlanMeasurement { plan, predicted_s, stats, cost }
+        })
+        .collect();
+    measured.sort_by(|a, b| a.stats.median_s.partial_cmp(&b.stats.median_s).unwrap());
+
+    Some(NativeTuneOutcome {
+        workload: w.name(),
+        shape,
+        threads,
+        elems,
+        enumerated,
+        pruned,
+        measured,
+        default_plan,
+    })
+}
+
+/// A whole empirical tuning run: outcomes, refit calibration, and the
+/// artifact paths written under the output directory.
+pub struct NativeTuneRun {
+    pub outcomes: Vec<NativeTuneOutcome>,
+    pub calibration: Calibration,
+    pub cache_path: PathBuf,
+    pub report_path: PathBuf,
+    pub prediction_hits: usize,
+    pub prediction_misses: usize,
+}
+
+/// Measurement budgets: CI smoke keeps a full-registry sweep under a
+/// minute; full mode follows the paper's warm-up + median methodology
+/// with a bounded budget per candidate.
+fn tune_bencher(smoke: bool) -> Bencher {
+    if smoke {
+        Bencher { warmup: 1, min_iters: 3, max_iters: 10, budget: Duration::from_millis(150) }
+    } else {
+        Bencher { warmup: 2, min_iters: 5, max_iters: 40, budget: Duration::from_secs(1) }
+    }
+}
+
+/// Run the closed loop over `workloads`: load the prior calibration (if a
+/// plan cache exists under `out_dir`), tune every workload, refit the
+/// host model from the measurements, and persist plan cache + calibration
+/// report.
+pub fn run_native_tune(
+    workloads: &[&dyn Workload],
+    smoke: bool,
+    out_dir: &Path,
+) -> Result<NativeTuneRun> {
+    let prior = PlanCache::load_if_exists(out_dir)?;
+    let model = prior
+        .as_ref()
+        .and_then(|c| c.calibration_for_host())
+        .map(|c| c.model)
+        .unwrap_or_else(HostModel::seed);
+    let pred_cache = PredictionCache::new();
+    let bencher = tune_bencher(smoke);
+
+    let outcomes: Vec<NativeTuneOutcome> = workloads
+        .iter()
+        .filter_map(|w| tune_native(*w, smoke, &model, &pred_cache, &bencher))
+        .collect();
+
+    // refit bandwidth/latency coefficients from every fused measurement
+    // (the unfused reference path is outside the cost model's regime)
+    let points: Vec<(SweepCost, f64)> = outcomes
+        .iter()
+        .flat_map(|o| {
+            o.measured
+                .iter()
+                .filter(|m| m.plan.fused)
+                .map(|m| (m.cost, m.stats.median_s))
+        })
+        .collect();
+    let calibration = fit(&points, model);
+
+    let mut cache = prior.unwrap_or_default();
+    for o in &outcomes {
+        cache.insert(o.to_entry());
+    }
+    // Persist the refit coefficients only when the run spanned more than
+    // one workload: a single workload's points cover one cost regime
+    // (e.g. conv1d is purely memory-bound), where the other coefficients
+    // are unidentifiable and would drift toward the clamps on noise —
+    // persisting that (even as the first-ever calibration) would degrade
+    // every later prune. Single-workload runs still report their fit;
+    // the cache keeps whatever broad fit it had (possibly none, in which
+    // case pruning uses the seed model until an --all run lands).
+    if outcomes.len() > 1 {
+        cache.set_calibration(calibration.clone());
+    }
+    let cache_path = cache.save(out_dir)?;
+
+    let report = calibration_report(&outcomes, &calibration, smoke);
+    let report_path = out_dir.join(CALIBRATION_REPORT_FILE);
+    std::fs::write(&report_path, report.to_string_pretty())
+        .with_context(|| format!("writing {report_path:?}"))?;
+
+    Ok(NativeTuneRun {
+        outcomes,
+        calibration,
+        cache_path,
+        report_path,
+        prediction_hits: pred_cache.hits(),
+        prediction_misses: pred_cache.misses(),
+    })
+}
+
+/// The machine-readable calibration report: fitted coefficients,
+/// predicted-vs-measured error before/after, and the per-workload
+/// default-vs-tuned record (the acceptance artifact).
+pub fn calibration_report(
+    outcomes: &[NativeTuneOutcome],
+    calibration: &Calibration,
+    smoke: bool,
+) -> Json {
+    let rows = outcomes
+        .iter()
+        .map(|o| {
+            let best = o.best();
+            let def = o.default_measurement();
+            let tuned = o.melem_per_s(best);
+            let default = o.melem_per_s(def);
+            Json::obj(vec![
+                ("workload", Json::str(o.workload.as_str())),
+                (
+                    "shape",
+                    Json::arr(o.shape.iter().map(|&n| Json::num(n as f64)).collect()),
+                ),
+                ("enumerated", Json::num(o.enumerated as f64)),
+                ("pruned", Json::num(o.pruned as f64)),
+                ("measured", Json::num(o.measured.len() as f64)),
+                ("plan", best.plan.to_json()),
+                ("plan_desc", Json::str(best.plan.describe())),
+                ("default_melem_per_s", Json::num(default)),
+                ("tuned_melem_per_s", Json::num(tuned)),
+                ("speedup", Json::num(tuned / default)),
+                (
+                    "differs_from_default",
+                    Json::Bool(best.plan != o.default_plan),
+                ),
+                ("measured_ms", Json::num(best.stats.median_s * 1e3)),
+                ("predicted_ms_before", Json::num(best.predicted_s * 1e3)),
+                (
+                    "predicted_ms_after",
+                    Json::num(calibration.model.predict(&best.cost) * 1e3),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str(CALIBRATION_SCHEMA)),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("host", Json::str(host_fingerprint())),
+        ("threads", Json::num(par::num_threads() as f64)),
+        ("calibration", calibration.to_json()),
+        ("workloads", Json::arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::find;
+
+    #[test]
+    fn candidate_plans_cover_the_knobs_and_dedupe() {
+        let threads = 4;
+        let grid = candidate_plans(&[512, 512], threads, false, false);
+        assert_eq!(grid[0], LaunchPlan::default_for(&[512, 512], threads));
+        assert!(grid.iter().any(|p| matches!(p.block, BlockShape::Rows(_))));
+        assert!(grid.iter().any(|p| p.block == BlockShape::Serial));
+        assert!(grid.iter().any(|p| p.workspace == WorkspaceStrategy::Fresh));
+        assert!(grid.iter().all(|p| p.fused));
+        let flat = candidate_plans(&[1 << 20], threads, true, false);
+        assert!(flat.iter().any(|p| p.chunk != DEFAULT_CHUNK));
+        let mhd = candidate_plans(&[48, 48, 48], threads, false, true);
+        assert!(mhd.iter().any(|p| !p.fused));
+        // a 1-D *grid* sweep (single interior row, not chunked) has no
+        // live decomposition axis: only the workspace knob remains
+        let single_row = candidate_plans(&[1 << 20], threads, false, false);
+        assert_eq!(single_row.len(), 2, "{single_row:?}");
+        assert!(single_row.iter().all(|p| p.block == grid[0].block && p.chunk == DEFAULT_CHUNK));
+        for plans in [&grid, &flat, &mhd, &single_row] {
+            let mut seen = plans.clone();
+            seen.dedup();
+            assert_eq!(seen.len(), plans.len(), "duplicate candidates");
+        }
+    }
+
+    #[test]
+    fn unfused_and_serial_cost_more_in_the_model() {
+        let shape = [48usize, 48, 48];
+        let base = LaunchPlan::default_for(&shape, 4);
+        let model = HostModel::seed();
+        let mk = |p: &LaunchPlan| {
+            model.predict(&sweep_cost(None, &shape, 48.0 * 48.0 * 48.0, p, 4, false))
+        };
+        let fused = mk(&base);
+        // unfused multiplies traffic ~20x; both decompose identically
+        assert!(mk(&LaunchPlan { fused: false, ..base }) > fused * 2.0);
+        // serial plans run one-threaded in the cost model
+        let serial = sweep_cost(
+            None,
+            &shape,
+            48.0 * 48.0 * 48.0,
+            &LaunchPlan { block: BlockShape::Serial, ..base },
+            4,
+            false,
+        );
+        assert_eq!((serial.threads, serial.blocks), (1, 1));
+    }
+
+    #[test]
+    fn tune_native_measures_ranks_and_memoizes() {
+        let w = find("conv1d-r1").unwrap();
+        let cache = PredictionCache::new();
+        let bencher =
+            Bencher { warmup: 0, min_iters: 1, max_iters: 2, budget: Duration::ZERO };
+        let out = tune_native(w, true, &HostModel::seed(), &cache, &bencher).unwrap();
+        assert!(!out.measured.is_empty());
+        assert_eq!(out.enumerated, out.pruned + out.measured.len());
+        assert!(out.best().stats.median_s <= out.default_measurement().stats.median_s);
+        assert!(cache.misses() > 0);
+        for m in &out.measured {
+            assert!(m.predicted_s > 0.0 && m.stats.median_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_native_tune_roundtrips_cache_and_report() {
+        let dir = std::env::temp_dir().join(format!("stencilax_tune_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // two workloads: multi-workload runs are the ones whose refit
+        // persists (single-regime fits are reported but never cached)
+        let ws: Vec<&dyn Workload> =
+            vec![find("conv1d-r1").unwrap(), find("diffusion1d").unwrap()];
+        let run = run_native_tune(&ws, true, &dir).unwrap();
+        assert_eq!(run.outcomes.len(), 2);
+        let cache = PlanCache::load_if_exists(&dir).unwrap().expect("cache written");
+        let o = &run.outcomes[0];
+        let entry = cache.lookup(&o.workload, &o.shape, o.threads).expect("entry for host");
+        assert!(entry.tuned_melem_per_s >= entry.default_melem_per_s * 0.999, "{entry:?}");
+        assert!(cache.calibration.is_some());
+        assert!(run.calibration.err_after <= run.calibration.err_before);
+
+        let text = std::fs::read_to_string(&run.report_path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.req_str("schema").unwrap(), CALIBRATION_SCHEMA);
+        let rows = j.req_arr("workloads").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].req_f64("speedup").unwrap() >= 0.999);
+
+        // single-workload re-run: its fit is reported but must NOT
+        // replace the cached multi-workload calibration
+        let solo: Vec<&dyn Workload> = vec![find("conv1d-r1").unwrap()];
+        let run2 = run_native_tune(&solo, true, &dir).unwrap();
+        assert!(run2.calibration.points > 0);
+        let cache2 = PlanCache::load_if_exists(&dir).unwrap().unwrap();
+        assert_eq!(cache2.calibration, cache.calibration, "solo run replaced calibration");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

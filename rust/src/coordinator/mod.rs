@@ -4,6 +4,8 @@
 
 pub mod autotune;
 pub mod bench;
+pub mod empirical;
+pub mod plans;
 pub mod report;
 pub mod sweep;
 pub mod timing;
@@ -11,6 +13,8 @@ pub mod tune;
 pub mod verify;
 
 pub use autotune::{autotune, TuneResult};
+pub use empirical::{candidate_plans, run_native_tune, tune_native, NativeTuneOutcome};
+pub use plans::{host_fingerprint, PlanCache, PlanEntry};
 pub use report::{AsciiPlot, Table};
 pub use sweep::Sweep;
 pub use tune::{autotune_cached, tune_batch, PredictionCache, TuneReport};

@@ -1,0 +1,319 @@
+//! Persistent launch-plan cache (`plan_cache.json`).
+//!
+//! The empirical tuner (`coordinator::empirical`) measures candidate
+//! [`LaunchPlan`]s and stores the winner per
+//! `(workload, shape, threads, host fingerprint)` here, together with the
+//! calibrated host-model coefficients ([`crate::model::calibrate`]).
+//! `stencilax bench` and the native bench harness load the cache on
+//! startup and run each case under its tuned plan; a cache tuned on a
+//! different host shape simply misses (the fingerprint is part of the
+//! key), falling back to [`LaunchPlan::default_for`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::calibrate::Calibration;
+use crate::stencil::plan::LaunchPlan;
+use crate::util::json::Json;
+
+/// Schema tag of the plan-cache file.
+pub const PLAN_SCHEMA: &str = "stencilax-plans/1";
+/// File name under the output directory (`results/` by default).
+pub const PLAN_CACHE_FILE: &str = "plan_cache.json";
+
+/// Coarse host identity: plans tuned on one machine shape must not be
+/// applied on another. OS + ISA + logical CPU count is deliberately
+/// coarse — CI runners of the same class share tuning, heterogeneous
+/// machines do not.
+pub fn host_fingerprint() -> String {
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    format!("{}-{}-{}cpu", std::env::consts::OS, std::env::consts::ARCH, cpus)
+}
+
+/// One tuned winner: the plan plus the throughputs that justified it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEntry {
+    pub workload: String,
+    /// Interior problem shape the measurement ran at.
+    pub shape: Vec<usize>,
+    /// Thread budget the tuning ran under.
+    pub threads: usize,
+    /// [`host_fingerprint`] of the tuning machine.
+    pub host: String,
+    pub plan: LaunchPlan,
+    /// Measured median throughput of the winning plan (Melem/s).
+    pub tuned_melem_per_s: f64,
+    /// Measured median throughput of [`LaunchPlan::default_for`] on the
+    /// same instance (Melem/s) — the before/after record.
+    pub default_melem_per_s: f64,
+}
+
+impl PlanEntry {
+    fn key_of(workload: &str, shape: &[usize], threads: usize, host: &str) -> String {
+        format!("{workload}|{shape:?}|t{threads}|{host}")
+    }
+
+    pub fn key(&self) -> String {
+        Self::key_of(&self.workload, &self.shape, self.threads, &self.host)
+    }
+
+    /// Did tuning pick something other than the default heuristics?
+    pub fn differs_from_default(&self) -> bool {
+        self.plan != LaunchPlan::default_for(&self.shape, self.plan.threads)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.as_str())),
+            (
+                "shape",
+                Json::arr(self.shape.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+            ("threads", Json::num(self.threads as f64)),
+            ("host", Json::str(self.host.as_str())),
+            ("plan", self.plan.to_json()),
+            ("tuned_melem_per_s", Json::num(self.tuned_melem_per_s)),
+            ("default_melem_per_s", Json::num(self.default_melem_per_s)),
+            ("differs_from_default", Json::Bool(self.differs_from_default())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanEntry> {
+        Ok(PlanEntry {
+            workload: j.req_str("workload")?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            threads: j.req_u64("threads")? as usize,
+            host: j.req_str("host")?.to_string(),
+            plan: LaunchPlan::from_json(j.req("plan")?)?,
+            tuned_melem_per_s: j.req_f64("tuned_melem_per_s")?,
+            default_melem_per_s: j.req_f64("default_melem_per_s")?,
+        })
+    }
+}
+
+/// The cache: tuned entries keyed by
+/// `(workload, shape, threads, host)`, plus the host-model calibration
+/// fitted from the same measurement run. The calibration is host-scoped
+/// like the entries: a cache copied from another machine must not seed
+/// pruning with that machine's coefficients, so consumers go through
+/// [`Self::calibration_for_host`].
+#[derive(Debug, Default, Clone)]
+pub struct PlanCache {
+    entries: BTreeMap<String, PlanEntry>,
+    pub calibration: Option<Calibration>,
+    /// [`host_fingerprint`] of the machine the calibration was fitted on.
+    pub calibration_host: Option<String>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store a calibration fitted on *this* host.
+    pub fn set_calibration(&mut self, cal: Calibration) {
+        self.calibration = Some(cal);
+        self.calibration_host = Some(host_fingerprint());
+    }
+
+    /// The stored calibration, only if it was fitted on this host —
+    /// foreign-host calibrations miss, exactly like foreign plan entries.
+    pub fn calibration_for_host(&self) -> Option<&Calibration> {
+        match (&self.calibration, &self.calibration_host) {
+            (Some(cal), Some(host)) if *host == host_fingerprint() => Some(cal),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PlanEntry> {
+        self.entries.values()
+    }
+
+    /// Insert or replace the entry under its own key.
+    pub fn insert(&mut self, entry: PlanEntry) {
+        self.entries.insert(entry.key(), entry);
+    }
+
+    /// Tuned entry for this workload instance *on this host*, if any.
+    /// The lookup-or-default policy lives with the consumer
+    /// (`coordinator::bench::case_plan`) — one site, not two.
+    pub fn lookup(&self, workload: &str, shape: &[usize], threads: usize) -> Option<&PlanEntry> {
+        self.entries.get(&PlanEntry::key_of(workload, shape, threads, &host_fingerprint()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("schema", Json::str(PLAN_SCHEMA)),
+            (
+                "entries",
+                Json::arr(self.entries.values().map(|e| e.to_json()).collect()),
+            ),
+        ];
+        if let Some(cal) = &self.calibration {
+            pairs.push(("calibration", cal.to_json()));
+        }
+        if let Some(host) = &self.calibration_host {
+            pairs.push(("calibration_host", Json::str(host.as_str())));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanCache> {
+        let schema = j.req_str("schema")?;
+        if schema != PLAN_SCHEMA {
+            bail!("unsupported plan-cache schema {schema:?} (want {PLAN_SCHEMA:?})");
+        }
+        let mut cache = PlanCache::new();
+        for e in j.req_arr("entries")? {
+            cache.insert(PlanEntry::from_json(e)?);
+        }
+        if let Some(cal) = j.get("calibration") {
+            cache.calibration = Some(Calibration::from_json(cal)?);
+        }
+        if let Some(host) = j.get("calibration_host") {
+            cache.calibration_host =
+                Some(host.as_str().context("calibration_host not a string")?.to_string());
+        }
+        Ok(cache)
+    }
+
+    /// Canonical path under an output directory.
+    pub fn path_in(out_dir: &Path) -> PathBuf {
+        out_dir.join(PLAN_CACHE_FILE)
+    }
+
+    pub fn load(path: &Path) -> Result<PlanCache> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan cache {path:?}"))?;
+        Self::from_json(&Json::parse(&text).with_context(|| format!("parsing {path:?}"))?)
+    }
+
+    /// Load the cache from `out_dir` if present and well-formed; `None`
+    /// when the file does not exist. A present-but-corrupt cache is an
+    /// error (silent fallback would mask a broken tuning pipeline).
+    pub fn load_if_exists(out_dir: &Path) -> Result<Option<PlanCache>> {
+        let path = Self::path_in(out_dir);
+        if !path.exists() {
+            return Ok(None);
+        }
+        Self::load(&path).map(Some)
+    }
+
+    pub fn save(&self, out_dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating output dir {out_dir:?}"))?;
+        let path = Self::path_in(out_dir);
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::calibrate::HostModel;
+
+    fn entry(workload: &str, threads: usize) -> PlanEntry {
+        PlanEntry {
+            workload: workload.into(),
+            shape: vec![512, 512],
+            threads,
+            host: host_fingerprint(),
+            plan: LaunchPlan {
+                block: crate::stencil::plan::BlockShape::Rows(16),
+                ..LaunchPlan::default()
+            },
+            tuned_melem_per_s: 123.4,
+            default_melem_per_s: 100.0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_entries_and_calibration() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry("diffusion2d", 4));
+        cache.insert(entry("mhd", 4));
+        cache.set_calibration(Calibration {
+            model: HostModel::seed(),
+            err_before: 1.0,
+            err_after: 0.2,
+            points: 7,
+        });
+        let text = cache.to_json().to_string_pretty();
+        let back = PlanCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.calibration, cache.calibration);
+        assert!(back.calibration_for_host().is_some(), "same-host calibration must hit");
+        let e = back.lookup("diffusion2d", &[512, 512], 4).unwrap();
+        assert_eq!(e, &entry("diffusion2d", 4));
+        assert!(e.differs_from_default());
+    }
+
+    #[test]
+    fn foreign_host_calibration_misses() {
+        let mut cache = PlanCache::new();
+        cache.set_calibration(Calibration {
+            model: HostModel::seed(),
+            err_before: 1.0,
+            err_after: 0.2,
+            points: 7,
+        });
+        cache.calibration_host = Some("plan9-vax-3cpu".into());
+        assert!(cache.calibration.is_some());
+        assert!(cache.calibration_for_host().is_none(), "foreign calibration must miss");
+        // and a roundtrip preserves the foreign scoping
+        let back =
+            PlanCache::from_json(&Json::parse(&cache.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert!(back.calibration_for_host().is_none());
+    }
+
+    #[test]
+    fn lookup_misses_on_wrong_host_shape_or_threads() {
+        let mut cache = PlanCache::new();
+        let mut foreign = entry("diffusion2d", 4);
+        foreign.host = "plan9-vax-3cpu".into();
+        cache.insert(foreign);
+        assert!(cache.lookup("diffusion2d", &[512, 512], 4).is_none());
+        cache.insert(entry("diffusion2d", 4));
+        assert!(cache.lookup("diffusion2d", &[512, 512], 4).is_some());
+        assert!(cache.lookup("diffusion2d", &[256, 256], 4).is_none());
+        assert!(cache.lookup("diffusion2d", &[512, 512], 2).is_none());
+        assert!(cache.lookup("mhd", &[64, 64, 64], 4).is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrips_on_disk() {
+        let dir = std::env::temp_dir().join("stencilax_plan_cache_test");
+        let mut cache = PlanCache::new();
+        cache.insert(entry("conv1d-r3", 2));
+        let path = cache.save(&dir).unwrap();
+        let loaded = PlanCache::load_if_exists(&dir).unwrap().unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(
+            loaded.lookup("conv1d-r3", &[512, 512], 2),
+            cache.lookup("conv1d-r3", &[512, 512], 2)
+        );
+        std::fs::remove_file(path).ok();
+        assert!(PlanCache::load_if_exists(&std::env::temp_dir().join("nope-nope"))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn rejects_foreign_schema() {
+        let j = Json::parse(r#"{"schema":"stencilax-plans/999","entries":[]}"#).unwrap();
+        assert!(PlanCache::from_json(&j).is_err());
+    }
+}

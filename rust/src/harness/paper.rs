@@ -10,6 +10,7 @@ use crate::sim::kernel::Caching;
 use crate::sim::library::{mhd_library_time, xcorr1d_library_time, Library};
 use crate::sim::predict::{ideal_time, predict};
 use crate::sim::workloads;
+use crate::util::bench::median_upper;
 
 use super::figures::{best_xcorr, mhd_best_tuned, xcorr_n, MHD_SHAPE, XCORR_RADII};
 use super::Output;
@@ -65,7 +66,7 @@ pub fn claims(cfg: &Config) -> Vec<Claim> {
 
     // ---- §5.2 Fig 7: A100-over-MI250X library speedup, median 2.8 ---------
     {
-        let mut ratios: Vec<f64> = XCORR_RADII
+        let ratios: Vec<f64> = XCORR_RADII
             .iter()
             .map(|&r| {
                 let a = xcorr1d_library_time(spec(Gpu::A100), xcorr_n(false), r, false, Library::VendorDnn);
@@ -73,12 +74,11 @@ pub fn claims(cfg: &Config) -> Vec<Claim> {
                 m / a
             })
             .collect();
-        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
         claim(
             "fig7/median-speedup",
             "median A100-over-MI250X speedup, library 1-D conv",
             2.8,
-            ratios[ratios.len() / 2],
+            median_upper(&ratios),
             0.7,
             1.3,
         );
@@ -100,7 +100,7 @@ pub fn claims(cfg: &Config) -> Vec<Claim> {
 
     // ---- §5.2 Fig 8: A100-over-MI250X handcrafted HWC FP64 median 1.5 -----
     {
-        let mut ratios: Vec<f64> = XCORR_RADII
+        let ratios: Vec<f64> = XCORR_RADII
             .iter()
             .map(|&r| {
                 let (a, _) = best_xcorr(cfg, spec(Gpu::A100), r, true, Caching::Hwc);
@@ -108,12 +108,11 @@ pub fn claims(cfg: &Config) -> Vec<Claim> {
                 m / a
             })
             .collect();
-        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
         claim(
             "fig8/hwc-median",
             "median A100-over-MI250X speedup, handcrafted HWC FP64",
             1.5,
-            ratios[ratios.len() / 2],
+            median_upper(&ratios),
             0.6,
             1.5,
         );

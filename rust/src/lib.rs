@@ -38,6 +38,19 @@
 //! and `stencilax bench` keeps a machine-readable perf baseline current
 //! (`BENCH_native.json`, [`coordinator::bench`]).
 //!
+//! Launch parameters are data, not constants (DESIGN.md §11): every hot
+//! path accepts a [`stencil::plan::LaunchPlan`] (row blocking, thread
+//! budget, fusion, 1-D chunking, workspace strategy), with the historical
+//! heuristics preserved as [`stencil::plan::LaunchPlan::default_for`].
+//! The empirical tuner ([`coordinator::empirical`], `stencilax tune
+//! --native`) enumerates candidate plans, prunes them with the calibrated
+//! host model ([`model::calibrate`]) through the shared
+//! [`coordinator::tune::PredictionCache`], measures survivors, persists
+//! winners per `(workload, shape, threads, host)` in the plan cache
+//! ([`coordinator::plans`], loaded by `stencilax bench` on startup), and
+//! refits the model's bandwidth/latency coefficients from the
+//! measurements — the paper's tuning strategy as a working closed loop.
+//!
 //! Cargo features: `pjrt` enables executing the AOT HLO artifacts through
 //! the XLA/PJRT bindings. The default (offline) build compiles everything
 //! — model, registry, tuner, harness, CLI — with a stub executor that

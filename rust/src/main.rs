@@ -9,7 +9,13 @@
 //!   tune    <workload>|--all    run the §5.1 autotuner (registry-driven);
 //!                               --all batches every workload x device and
 //!                               writes a JSON TuneReport
+//!   tune --native <w>|--all     empirical LaunchPlan tuning on the native
+//!                               engine: prune with the calibrated host
+//!                               model, measure, write plan_cache.json +
+//!                               calibration_report.json
+//!   plans                       list the tuned plan cache
 //!   bench   [--smoke]           native-engine suite -> BENCH_native.json
+//!                               (runs under tuned plans when cached)
 //!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
@@ -20,6 +26,8 @@
 use anyhow::{bail, Context, Result};
 
 use stencilax::config::Config;
+use stencilax::coordinator::empirical::run_native_tune;
+use stencilax::coordinator::plans::{host_fingerprint, PlanCache};
 use stencilax::coordinator::report::Table;
 use stencilax::coordinator::tune::{tune_batch, PredictionCache, TuneReport};
 use stencilax::coordinator::verify::{verify_slices, Tolerance};
@@ -34,7 +42,7 @@ use stencilax::util::cli::Args;
 use stencilax::util::json::Json;
 use stencilax::util::rng::Rng;
 
-const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help", "all", "smoke"];
+const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help", "all", "smoke", "native", "snapshot"];
 
 fn main() -> Result<()> {
     let args = Args::from_env(BOOL_FLAGS)?;
@@ -104,7 +112,14 @@ fn main() -> Result<()> {
         }
         "ablation" => harness::whatif::ablation(&cfg).print(),
         "workloads" => cmd_workloads(),
-        "tune" => cmd_tune(&cfg, &args)?,
+        "tune" => {
+            if args.has_flag("native") {
+                cmd_tune_native(&cfg, &args)?
+            } else {
+                cmd_tune(&cfg, &args)?
+            }
+        }
+        "plans" => cmd_plans(&cfg)?,
         "bench" => cmd_bench(&cfg, &args)?,
         "verify" => cmd_verify(&cfg)?,
         other => bail!("unknown subcommand {other:?} (try --help)"),
@@ -191,6 +206,112 @@ fn cmd_tune(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Empirical native-engine tuning (`tune --native`): enumerate
+/// `LaunchPlan`s per workload, prune with the (calibrated) host model
+/// through the shared `PredictionCache`, measure the survivors, persist
+/// the plan cache + calibration report (DESIGN.md §11).
+fn cmd_tune_native(cfg: &Config, args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let all = args.has_flag("all") || which == "all";
+    let smoke = args.has_flag("smoke");
+    let selected: Vec<&'static dyn Workload> = if all {
+        workload::registry().iter().map(|w| w.as_ref()).collect()
+    } else {
+        vec![workload::find(which).with_context(|| {
+            format!("unknown workload {which:?} (see `stencilax workloads`)")
+        })?]
+    };
+    println!(
+        "=== empirical autotune ({} workload(s), {}, {} threads, host {}) ===",
+        selected.len(),
+        if smoke { "smoke" } else { "full" },
+        stencilax::util::par::num_threads(),
+        host_fingerprint(),
+    );
+    let run = run_native_tune(&selected, smoke, &cfg.output_dir)?;
+    let mut t = Table::new(
+        "Empirical autotune — measured LaunchPlans (median of N iters)",
+        &["workload", "shape", "plans", "default", "tuned", "speedup", "winning plan"],
+    );
+    for o in &run.outcomes {
+        let best = o.best();
+        let def = o.default_measurement();
+        t.row(vec![
+            o.workload.clone(),
+            format!("{:?}", o.shape),
+            format!("{}/{}", o.measured.len(), o.enumerated),
+            format!("{:.1} Me/s", o.melem_per_s(def)),
+            format!("{:.1} Me/s", o.melem_per_s(best)),
+            format!("{:.2}x", def.stats.median_s / best.stats.median_s),
+            if best.plan == o.default_plan {
+                "(default)".into()
+            } else {
+                best.plan.describe()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+    let cal = &run.calibration;
+    println!(
+        "calibration: bw {:.1} GiB/s, {:.2} GFLOP/s/thread, {:.2} us/block; \
+model error {:.2} -> {:.2} (mean |ln pred/meas|, {} points)",
+        cal.model.bw_gibs,
+        cal.model.gflops_per_thread,
+        cal.model.block_overhead_us,
+        cal.err_before,
+        cal.err_after,
+        cal.points,
+    );
+    println!(
+        "prediction cache: {} misses, {} hits",
+        run.prediction_misses, run.prediction_hits
+    );
+    println!("wrote {}", run.cache_path.display());
+    println!("wrote {}", run.report_path.display());
+    Ok(())
+}
+
+/// List the tuned plan cache (loading it is the JSON-roundtrip check CI
+/// runs after `tune --native`).
+fn cmd_plans(cfg: &Config) -> Result<()> {
+    let cache = PlanCache::load_if_exists(&cfg.output_dir)?.with_context(|| {
+        format!(
+            "no plan cache under {:?} — run `stencilax tune --native --all` first",
+            cfg.output_dir
+        )
+    })?;
+    let mut t = Table::new(
+        &format!("Plan cache — {} tuned plan(s); this host is {}", cache.len(), host_fingerprint()),
+        &["workload", "shape", "threads", "host", "plan", "default", "tuned", "differs"],
+    );
+    for e in cache.iter() {
+        t.row(vec![
+            e.workload.clone(),
+            format!("{:?}", e.shape),
+            e.threads.to_string(),
+            e.host.clone(),
+            e.plan.describe(),
+            format!("{:.1} Me/s", e.default_melem_per_s),
+            format!("{:.1} Me/s", e.tuned_melem_per_s),
+            if e.differs_from_default() { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(cal) = &cache.calibration {
+        println!(
+            "calibration: bw {:.1} GiB/s, {:.2} GFLOP/s/thread, {:.2} us/block; \
+model error {:.2} -> {:.2} ({} points)",
+            cal.model.bw_gibs,
+            cal.model.gflops_per_thread,
+            cal.model.block_overhead_us,
+            cal.err_before,
+            cal.err_after,
+            cal.points,
+        );
+    }
+    Ok(())
+}
+
 /// Emit the structured reports as JSON under the output directory.
 fn save_tune_reports(
     out_dir: &std::path::Path,
@@ -210,15 +331,24 @@ fn save_tune_reports(
 /// sizes; see EXPERIMENTS.md §Perf).
 fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
     let smoke = args.has_flag("smoke");
+    let plans = PlanCache::load_if_exists(&cfg.output_dir)?;
     println!(
         "=== native engine bench ({}, {} threads) ===",
         if smoke { "smoke" } else { "full" },
         stencilax::util::par::num_threads()
     );
-    let results = stencilax::coordinator::bench::run_suite(smoke);
+    match &plans {
+        Some(c) => println!(
+            "plan cache: {} tuned plan(s) loaded from {}",
+            c.len(),
+            PlanCache::path_in(&cfg.output_dir).display()
+        ),
+        None => println!("plan cache: none (run `stencilax tune --native --all` to tune)"),
+    }
+    let results = stencilax::coordinator::bench::run_suite(smoke, plans.as_ref());
     let mut t = Table::new(
         "Native engine — fused/blocked hot paths (median of N iters)",
-        &["case", "shape", "median (ms)", "Melem/s"],
+        &["case", "shape", "median (ms)", "Melem/s", "plan"],
     );
     for r in &results {
         t.row(vec![
@@ -226,11 +356,26 @@ fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
             format!("{:?}", r.shape),
             format!("{:.3}", r.stats.median_s * 1e3),
             format!("{:.1}", r.melem_per_s()),
+            if r.tuned { format!("{} (tuned)", r.plan) } else { "default".to_string() },
         ]);
     }
     println!("{}", t.render());
     let path = stencilax::coordinator::bench::write_report(&cfg.output_dir, &results, smoke)?;
     println!("wrote {}", path.display());
+    if args.has_flag("snapshot") {
+        // Snapshot into the *current directory* — run from the repo root
+        // (as CI does) to refresh the tracked root-level BENCH_native.json
+        // that keeps the perf trajectory comparable across PRs. With
+        // `--out .` the report already IS the snapshot; copying a file
+        // onto itself would truncate it.
+        let snap = std::path::Path::new("BENCH_native.json");
+        let same = snap.canonicalize().ok() == path.canonicalize().ok();
+        if !same {
+            std::fs::copy(&path, snap)
+                .with_context(|| format!("copying snapshot to {snap:?}"))?;
+        }
+        println!("wrote {}", snap.display());
+    }
     Ok(())
 }
 
@@ -340,9 +485,19 @@ SUBCOMMANDS:
                              batched §5.1 decomposition search; --all runs
                              every registered workload on every device and
                              writes results/tune_reports.json
-  bench   [--smoke]          run the native-engine suite (fused MHD, blocked
-                             diffusion, xcorr) and write BENCH_native.json
-                             under --out; --smoke selects CI-scale sizes
+  tune --native <workload>|--all [--smoke]
+                             empirical LaunchPlan tuning on the native
+                             engine: enumerate plans, prune with the
+                             calibrated host model, measure survivors;
+                             writes plan_cache.json + calibration_report.json
+                             under --out (loaded by `bench` on startup)
+  plans                      list the tuned plan cache (+ calibration)
+  bench   [--smoke] [--snapshot]
+                             run the native-engine suite (fused MHD, blocked
+                             diffusion, xcorr) under tuned plans when cached
+                             and write BENCH_native.json under --out;
+                             --smoke selects CI-scale sizes, --snapshot also
+                             copies the report to ./BENCH_native.json
   workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance

@@ -1,0 +1,265 @@
+//! Measurement-driven calibration of the host-side analytical model.
+//!
+//! The GPU model ([`crate::sim::predict`]) predicts device kernels from
+//! Table 1 specs; the native engine runs on the *host* CPU, whose
+//! effective bandwidth and dispatch latency no table provides. This module
+//! closes that gap the way the paper closes it for GPUs (§5.2: measure,
+//! then calibrate): a three-coefficient binding-resource [`HostModel`]
+//! predicts a sweep's time from its memory traffic, arithmetic, and block
+//! decomposition, and [`fit`] refits the coefficients from the empirical
+//! tuner's measurements (`coordinator::empirical`), reporting
+//! predicted-vs-measured error before and after. The fitted coefficients
+//! persist in the plan cache, so the *next* tune run prunes candidates
+//! with a model the machine has already corrected — the closed loop the
+//! ISSUE-3 tentpole asks for.
+
+use anyhow::Result;
+
+use crate::model::specs::GIB;
+use crate::util::json::Json;
+
+/// Cost description of one native sweep under one launch plan — the
+/// host-side analogue of [`crate::sim::kernel::KernelProfile`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepCost {
+    /// Compulsory off-chip traffic: bytes read + written once per sweep.
+    pub bytes: f64,
+    /// Floating-point work per sweep (flops).
+    pub flops: f64,
+    /// Blocks the plan decomposes the sweep into.
+    pub blocks: usize,
+    /// Threads participating in the dispatch.
+    pub threads: usize,
+    /// Extra halo bytes re-read per block boundary (consecutive-row
+    /// blocks re-load the y/z halo of their first rows).
+    pub halo_bytes_per_block: f64,
+}
+
+/// Binding-resource host model, the CPU analogue of
+/// [`crate::sim::predict::predict`]:
+/// `t = max(t_mem, t_flop) * imbalance + blocks * overhead`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostModel {
+    /// Effective memory bandwidth, GiB/s — the bandwidth coefficient.
+    pub bw_gibs: f64,
+    /// Effective per-thread arithmetic throughput, GFLOP/s.
+    pub gflops_per_thread: f64,
+    /// Per-block dispatch/steal latency, microseconds — the latency
+    /// coefficient.
+    pub block_overhead_us: f64,
+}
+
+impl HostModel {
+    /// Deliberately rough laptop-class seed values; [`fit`] replaces them
+    /// from measurements on the first tune run, and subsequent runs load
+    /// the calibrated coefficients from the plan cache.
+    pub fn seed() -> HostModel {
+        HostModel { bw_gibs: 16.0, gflops_per_thread: 2.0, block_overhead_us: 2.0 }
+    }
+
+    /// Predicted sweep seconds. Bandwidth is shared across threads;
+    /// arithmetic scales with the threads that can actually be busy; the
+    /// last wave of blocks may be partially filled (load imbalance); every
+    /// block pays a dispatch latency.
+    pub fn predict(&self, c: &SweepCost) -> f64 {
+        let blocks = c.blocks.max(1) as f64;
+        let threads = c.threads.max(1).min(c.blocks.max(1)) as f64;
+        let bytes = c.bytes + blocks * c.halo_bytes_per_block;
+        let t_mem = bytes / (self.bw_gibs * GIB);
+        let t_flop = c.flops / (self.gflops_per_thread * 1e9 * threads);
+        let waves = (blocks / threads).ceil();
+        let imbalance = waves * threads / blocks;
+        t_mem.max(t_flop) * imbalance + blocks * self.block_overhead_us * 1e-6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bw_gibs", Json::num(self.bw_gibs)),
+            ("gflops_per_thread", Json::num(self.gflops_per_thread)),
+            ("block_overhead_us", Json::num(self.block_overhead_us)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<HostModel> {
+        Ok(HostModel {
+            bw_gibs: j.req_f64("bw_gibs")?,
+            gflops_per_thread: j.req_f64("gflops_per_thread")?,
+            block_overhead_us: j.req_f64("block_overhead_us")?,
+        })
+    }
+}
+
+/// Outcome of one [`fit`]: the refitted model plus the
+/// predicted-vs-measured error (mean |ln(pred/meas)|) before and after —
+/// the calibration report's headline numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    pub model: HostModel,
+    pub err_before: f64,
+    pub err_after: f64,
+    pub points: usize,
+}
+
+impl Calibration {
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.model.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("HostModel::to_json returns an object"),
+        };
+        obj.insert("err_before".into(), Json::num(self.err_before));
+        obj.insert("err_after".into(), Json::num(self.err_after));
+        obj.insert("points".into(), Json::num(self.points as f64));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        Ok(Calibration {
+            model: HostModel::from_json(j)?,
+            err_before: j.req_f64("err_before")?,
+            err_after: j.req_f64("err_after")?,
+            points: j.req_u64("points")? as usize,
+        })
+    }
+}
+
+/// Mean absolute log error of the model over `(cost, measured_s)` points.
+pub fn mean_abs_log_err(m: &HostModel, points: &[(SweepCost, f64)]) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    points.iter().map(|(c, meas)| (m.predict(c) / meas).ln().abs()).sum::<f64>()
+        / points.len() as f64
+}
+
+/// Refit the three coefficients from measurements by cyclic coordinate
+/// descent on a shrinking multiplicative grid (deterministic; no RNG).
+/// Non-finite or non-positive measurements are discarded.
+pub fn fit(points: &[(SweepCost, f64)], seed: HostModel) -> Calibration {
+    let pts: Vec<(SweepCost, f64)> =
+        points.iter().copied().filter(|(_, m)| m.is_finite() && *m > 0.0).collect();
+    let err_before = mean_abs_log_err(&seed, &pts);
+    if pts.is_empty() {
+        return Calibration { model: seed, err_before, err_after: err_before, points: 0 };
+    }
+    let mut best = seed;
+    let mut best_err = err_before;
+    let mut span = 16.0f64;
+    for _round in 0..14 {
+        for coeff in 0..3 {
+            let base = best;
+            for &f in &[1.0 / span, 1.0 / span.sqrt(), span.sqrt(), span] {
+                let mut m = base;
+                match coeff {
+                    0 => m.bw_gibs = (base.bw_gibs * f).clamp(0.25, 8192.0),
+                    1 => m.gflops_per_thread = (base.gflops_per_thread * f).clamp(0.01, 8192.0),
+                    _ => m.block_overhead_us = (base.block_overhead_us * f).clamp(0.01, 1e5),
+                }
+                let e = mean_abs_log_err(&m, &pts);
+                if e < best_err {
+                    best_err = e;
+                    best = m;
+                }
+            }
+        }
+        span = span.sqrt().max(1.02);
+    }
+    Calibration { model: best, err_before, err_after: best_err, points: pts.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> Vec<SweepCost> {
+        let mut out = Vec::new();
+        // both regimes, so bandwidth AND throughput are identifiable
+        for &flops_per_byte in &[0.05, 3.0] {
+            for &bytes in &[4e6, 32e6, 256e6] {
+                for &blocks in &[1usize, 8, 64, 512] {
+                    out.push(SweepCost {
+                        bytes,
+                        flops: bytes * flops_per_byte,
+                        blocks,
+                        threads: 4,
+                        halo_bytes_per_block: 4096.0,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fit_recovers_a_synthetic_model() {
+        let truth =
+            HostModel { bw_gibs: 24.0, gflops_per_thread: 4.0, block_overhead_us: 5.0 };
+        let pts: Vec<(SweepCost, f64)> =
+            costs().into_iter().map(|c| (c, truth.predict(&c))).collect();
+        let cal = fit(&pts, HostModel::seed());
+        assert!(cal.err_after <= cal.err_before, "{cal:?}");
+        assert!(cal.err_after < 0.1, "residual {cal:?}");
+        assert!(
+            (cal.model.bw_gibs / truth.bw_gibs).ln().abs() < 0.7,
+            "bandwidth off: {cal:?}"
+        );
+    }
+
+    #[test]
+    fn fit_discards_degenerate_measurements() {
+        let truth = HostModel::seed();
+        let c = costs()[0];
+        let pts = vec![(c, truth.predict(&c)), (c, 0.0), (c, f64::NAN)];
+        let cal = fit(&pts, truth);
+        assert_eq!(cal.points, 1);
+        assert!(cal.err_after.is_finite());
+    }
+
+    #[test]
+    fn fit_on_no_points_is_identity() {
+        let cal = fit(&[], HostModel::seed());
+        assert_eq!(cal.points, 0);
+        assert_eq!(cal.model, HostModel::seed());
+        assert_eq!(cal.err_before, cal.err_after);
+    }
+
+    #[test]
+    fn imbalance_penalizes_ragged_waves() {
+        let m = HostModel::seed();
+        // compute-bound cost so imbalance (not bandwidth) dominates
+        let mk = |blocks| SweepCost {
+            bytes: 1e3,
+            flops: 1e9,
+            blocks,
+            threads: 4,
+            halo_bytes_per_block: 0.0,
+        };
+        // 5 blocks on 4 threads: two waves, 37.5% idle; 8 blocks: balanced
+        assert!(m.predict(&mk(5)) > m.predict(&mk(8)));
+    }
+
+    #[test]
+    fn block_overhead_grows_with_blocks() {
+        let m = HostModel { block_overhead_us: 50.0, ..HostModel::seed() };
+        let mk = |blocks| SweepCost {
+            bytes: 1e6,
+            flops: 1e6,
+            blocks,
+            threads: 4,
+            halo_bytes_per_block: 0.0,
+        };
+        assert!(m.predict(&mk(4096)) > m.predict(&mk(16)));
+    }
+
+    #[test]
+    fn calibration_json_roundtrips() {
+        let cal = Calibration {
+            model: HostModel { bw_gibs: 12.5, gflops_per_thread: 3.25, block_overhead_us: 1.5 },
+            err_before: 0.8,
+            err_after: 0.1,
+            points: 42,
+        };
+        let text = cal.to_json().to_string_pretty();
+        let back = Calibration::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cal);
+    }
+}

@@ -2,8 +2,10 @@
 //! and Table 2 (benchmark systems) encoded as data, plus derived rates the
 //! simulator consumes. Every number carries its provenance in comments.
 
+pub mod calibrate;
 pub mod specs;
 pub mod systems;
 
+pub use calibrate::{Calibration, HostModel, SweepCost};
 pub use specs::{spec, Gpu, GpuSpec, Vendor, ALL_GPUS};
 pub use systems::{system_for, System, SYSTEMS};

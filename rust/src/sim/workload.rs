@@ -14,12 +14,47 @@ use std::sync::OnceLock;
 use crate::model::specs::GpuSpec;
 use crate::stencil::conv;
 use crate::stencil::diffusion::Diffusion;
+use crate::stencil::exec::DoubleBuffer;
 use crate::stencil::grid::{Boundary, Grid};
 use crate::stencil::mhd::{MhdParams, MhdState, MhdStepper};
+use crate::stencil::plan::LaunchPlan;
 use crate::util::rng::Rng;
 
 use super::kernel::{Caching, KernelProfile, Unroll};
 use super::workloads::{self, Tile};
+
+/// One prepared native-engine instance of a workload: input buffers and
+/// steppers built once, then run repeatedly under candidate
+/// [`LaunchPlan`]s. This is the empirical tuner's measurement hook
+/// (`coordinator::empirical`) — the bridge from the model-facing
+/// [`Workload`] registry to the engine the plans actually launch.
+pub trait NativeInstance {
+    /// Interior shape actually run (bench-scale, not the paper shape).
+    fn shape(&self) -> Vec<usize>;
+
+    /// Elements updated per [`Self::run`] (throughput denominator).
+    fn elems(&self) -> f64;
+
+    /// Whether this instance dispatches through the flat chunked 1-D
+    /// path (`par_chunks_mut_plan`, honoring `plan.chunk`) rather than
+    /// the row-blocked grid path — tells the tuner which plan axis is
+    /// actually live. A 1-D *grid* sweep (diffusion1d) is NOT chunked:
+    /// it is a single interior row with no decomposition axis.
+    fn chunked_1d(&self) -> bool {
+        false
+    }
+
+    /// Whether `plan.fused == false` selects a genuinely different
+    /// (unfused reference) execution path for this instance — tells the
+    /// tuner the fusion axis is live, so the fusion-off candidate is
+    /// enumerated and measured rather than assumed.
+    fn has_unfused_path(&self) -> bool {
+        false
+    }
+
+    /// Execute one iteration under `plan`.
+    fn run(&mut self, plan: &LaunchPlan);
+}
 
 /// One tunable benchmark of the paper.
 pub trait Workload: Send + Sync {
@@ -57,6 +92,155 @@ pub trait Workload: Send + Sync {
     /// this workload and digest the output. Deterministic in `seed`; tests
     /// use it to pin that every registered workload stays computable.
     fn reference_digest(&self, seed: u64) -> f64;
+
+    /// Build a native-engine instance of this workload at bench scale.
+    /// `smoke` selects the same CI sizes `stencilax bench --smoke` runs,
+    /// so tuned plans land on exactly the keys the bench later looks up.
+    /// `None` for model-only workloads with no native path.
+    fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
+        let _ = smoke;
+        None
+    }
+}
+
+/// Bench-scale problem sizes as `(smoke, full)`: the single source of
+/// truth shared by the [`Workload::native`] instances and the
+/// `coordinator::bench` suite. Plan-cache keys embed the shape, so a size
+/// diverging between the two sides would silently disable tuned plans —
+/// both read from here instead (pinned by a lockstep test in
+/// `coordinator::bench`).
+pub mod bench_sizes {
+    /// 1-D cross-correlation length (paper §5.1 FP64 problem size).
+    pub const XCORR_N: (usize, usize) = (1 << 20, 1 << 24);
+    /// 2-D diffusion edge.
+    pub const DIFFUSION2D_N: (usize, usize) = (512, 4096);
+    /// 3-D diffusion edge.
+    pub const DIFFUSION3D_N: (usize, usize) = (48, 128);
+    /// MHD box edge.
+    pub const MHD_N: (usize, usize) = (16, 64);
+
+    /// Select the mode's size from a `(smoke, full)` pair.
+    pub fn pick(n: (usize, usize), smoke: bool) -> usize {
+        if smoke {
+            n.0
+        } else {
+            n.1
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native instances (the empirical tuner's measurement targets)
+// ---------------------------------------------------------------------------
+
+/// Prepared 1-D cross-correlation: padded input, taps, reused output.
+struct XcorrNative {
+    fpad: Vec<f64>,
+    taps: Vec<f64>,
+    out: Vec<f64>,
+}
+
+impl XcorrNative {
+    fn new(n: usize, radius: usize) -> Self {
+        let mut rng = Rng::new(1);
+        Self {
+            fpad: rng.normal_vec(n + 2 * radius),
+            taps: rng.normal_vec(2 * radius + 1),
+            out: vec![0.0; n],
+        }
+    }
+}
+
+impl NativeInstance for XcorrNative {
+    fn shape(&self) -> Vec<usize> {
+        vec![self.out.len()]
+    }
+
+    fn elems(&self) -> f64 {
+        self.out.len() as f64
+    }
+
+    fn chunked_1d(&self) -> bool {
+        true
+    }
+
+    fn run(&mut self, plan: &LaunchPlan) {
+        conv::xcorr1d_into(plan, &self.fpad, &self.taps, &mut self.out);
+    }
+}
+
+/// Prepared double-buffered diffusion stepper.
+struct DiffusionNative {
+    d: Diffusion,
+    field: DoubleBuffer,
+    dim: usize,
+    dt: f64,
+}
+
+impl DiffusionNative {
+    fn new(shape: &[usize], radius: usize) -> Self {
+        let field = DoubleBuffer::new(Grid::from_fn(shape, radius, |i, j, k| {
+            ((i * 31 + j * 17 + k * 7) % 13) as f64
+        }));
+        let d = Diffusion::new(radius, 1.0, 1.0, Boundary::Periodic);
+        let dim = shape.len();
+        let dt = d.stable_dt(dim);
+        Self { d, field, dim, dt }
+    }
+}
+
+impl NativeInstance for DiffusionNative {
+    fn shape(&self) -> Vec<usize> {
+        let g = self.field.cur();
+        [g.nx, g.ny, g.nz][..self.dim].to_vec()
+    }
+
+    fn elems(&self) -> f64 {
+        let g = self.field.cur();
+        (g.nx * g.ny * g.nz) as f64
+    }
+
+    fn run(&mut self, plan: &LaunchPlan) {
+        self.d.step_buffered_plan(plan, &mut self.field, self.dim, self.dt);
+    }
+}
+
+/// Prepared MHD stepper: one RK3 substep per run (the bench's
+/// `mhd-substep` case), small-amplitude fields so thousands of timed
+/// substeps stay stable.
+struct MhdNative {
+    stepper: MhdStepper,
+    state: MhdState,
+    dt: f64,
+    n: usize,
+}
+
+impl MhdNative {
+    fn new(n: usize) -> Self {
+        let mut rng = Rng::new(1);
+        let par = MhdParams { dx: 2.0 * std::f64::consts::PI / n as f64, ..Default::default() };
+        let state = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+        let stepper = MhdStepper::new(par, 3, n, n, n);
+        Self { stepper, state, dt: 1e-5, n }
+    }
+}
+
+impl NativeInstance for MhdNative {
+    fn shape(&self) -> Vec<usize> {
+        vec![self.n, self.n, self.n]
+    }
+
+    fn elems(&self) -> f64 {
+        (self.n * self.n * self.n) as f64
+    }
+
+    fn has_unfused_path(&self) -> bool {
+        true // substep_plan with fused:false runs substep_reference
+    }
+
+    fn run(&mut self, plan: &LaunchPlan) {
+        self.stepper.substep_plan(plan, &mut self.state, self.dt, 0);
+    }
 }
 
 fn xcorr_digest(radius: usize, flip_taps: bool, seed: u64) -> f64 {
@@ -103,6 +287,12 @@ impl Workload for Conv1d {
     fn reference_digest(&self, seed: u64) -> f64 {
         xcorr_digest(self.radius, true, seed)
     }
+
+    fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
+        // the bench suite's xcorr1d sizes, shared via bench_sizes
+        let n = bench_sizes::pick(bench_sizes::XCORR_N, smoke);
+        Some(Box::new(XcorrNative::new(n, self.radius)))
+    }
 }
 
 /// Wide 1-D cross-correlation (paper §4.1, the Fig. 8 sweep's upper range).
@@ -136,6 +326,12 @@ impl Workload for Xcorr {
 
     fn reference_digest(&self, seed: u64) -> f64 {
         xcorr_digest(self.radius, false, seed)
+    }
+
+    fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
+        // 129 taps: smaller n keeps a single measurement sub-second
+        let n = if smoke { 1usize << 18 } else { 1 << 22 };
+        Some(Box::new(XcorrNative::new(n, self.radius)))
     }
 }
 
@@ -187,6 +383,22 @@ impl Workload for DiffusionStep {
         let out = d.step(&mut g, self.dims, d.stable_dt(self.dims));
         out.interior_to_vec().iter().sum()
     }
+
+    fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
+        // Bench-suite sizes for 2/3-D so tuned plans hit the bench's
+        // keys (pinned by coordinator::bench's lockstep test). The 1-D
+        // grid is deliberately small: a Grid pads every axis by the
+        // ghost radius, so a 1-D interior of n costs 49x its own storage
+        // ((n+2r) * 7 * 7 doubles at r=3) — 2^24 would be ~6.6 GB per
+        // buffer — and a single-row sweep has no decomposition axis to
+        // tune anyway.
+        let shape: Vec<usize> = match self.dims {
+            1 => vec![if smoke { 1 << 16 } else { 1 << 18 }],
+            2 => vec![bench_sizes::pick(bench_sizes::DIFFUSION2D_N, smoke); 2],
+            _ => vec![bench_sizes::pick(bench_sizes::DIFFUSION3D_N, smoke); 3],
+        };
+        Some(Box::new(DiffusionNative::new(&shape, self.radius)))
+    }
 }
 
 /// Fused MHD RK3 substep (paper §3.3/§4.4, Figs. 13-14) on the 128^3 box.
@@ -226,6 +438,10 @@ impl Workload for Mhd {
         let mut stepper = MhdStepper::new(par, 3, n, n, n);
         stepper.substep(&mut state, 1e-4, 0);
         state.stacked_interior().iter().sum()
+    }
+
+    fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
+        Some(Box::new(MhdNative::new(bench_sizes::pick(bench_sizes::MHD_N, smoke))))
     }
 }
 
@@ -319,6 +535,19 @@ mod tests {
     fn shapes_match_dimensionality() {
         for w in registry() {
             assert_eq!(w.shape().len(), w.dims(), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn native_instances_run_under_arbitrary_plans() {
+        use crate::stencil::plan::{BlockShape, LaunchPlan};
+        for name in ["conv1d-r1", "diffusion2d", "diffusion3d", "mhd"] {
+            let w = find(name).unwrap();
+            let mut inst = w.native(true).expect(name);
+            assert_eq!(inst.shape().len(), w.dims(), "{name}");
+            assert!(inst.elems() > 0.0, "{name}");
+            inst.run(&LaunchPlan::default_for(&inst.shape(), 2));
+            inst.run(&LaunchPlan { block: BlockShape::Serial, ..LaunchPlan::default() });
         }
     }
 }

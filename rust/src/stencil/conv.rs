@@ -8,25 +8,47 @@
 //! thread-block decomposition splits its grids.
 
 use super::grid::Grid;
+use super::plan::LaunchPlan;
 
 /// 1-D cross-correlation of a padded input; `taps.len() == 2r+1`.
 ///
 /// `fpad` must hold `n + 2r` elements; returns `n` outputs. Accumulates
 /// tap-major (left-to-right), matching the Pallas kernels and the oracle so
-/// comparisons can be held to a few ULP.
+/// comparisons can be held to a few ULP. Runs under the default
+/// [`LaunchPlan`]; tuned callers use [`xcorr1d_plan`].
 pub fn xcorr1d(fpad: &[f64], taps: &[f64]) -> Vec<f64> {
+    xcorr1d_plan(&LaunchPlan::default_for(&[fpad.len()], 0), fpad, taps)
+}
+
+/// [`xcorr1d`] under an explicit [`LaunchPlan`] (chunk length and thread
+/// budget come from the plan).
+pub fn xcorr1d_plan(plan: &LaunchPlan, fpad: &[f64], taps: &[f64]) -> Vec<f64> {
     assert!(taps.len() % 2 == 1, "tap count must be odd");
     let n = fpad.len() + 1 - taps.len();
-    // Perf (EXPERIMENTS.md §Perf/L3-1): accumulate tap-major within
-    // cache-resident output blocks instead of streaming the full array once
-    // per tap — the naive whole-array version made taps+2 memory passes and
-    // measured 0.9 GiB/s on 2^24 elements; blocking keeps the block in L2.
-    // Blocks are written in place through the persistent pool
-    // (§Perf/L3-5): no per-block buffers, no thread spawns per call.
-    const BLOCK: usize = 8192;
     let mut out = vec![0.0f64; n];
-    crate::stencil::exec::par_chunks_mut(&mut out, BLOCK, |c, buf| {
-        let lo = c * BLOCK;
+    xcorr1d_into(plan, fpad, taps, &mut out);
+    out
+}
+
+/// [`xcorr1d_plan`] into a caller-provided output buffer (`out.len()`
+/// must equal `fpad.len() + 1 - taps.len()`), allocation-free — the
+/// steady-state form the empirical tuner measures.
+///
+/// Perf (EXPERIMENTS.md §Perf/L3-1): accumulates tap-major within
+/// cache-resident output chunks instead of streaming the full array once
+/// per tap — the naive whole-array version made taps+2 memory passes and
+/// measured 0.9 GiB/s on 2^24 elements; chunking keeps the block in L2.
+/// Chunks are written in place through the persistent pool (§Perf/L3-5):
+/// no per-chunk buffers, no thread spawns per call. The chunk length
+/// (historically a fixed 8192) is now `plan.chunk` — a tunable.
+pub fn xcorr1d_into(plan: &LaunchPlan, fpad: &[f64], taps: &[f64], out: &mut [f64]) {
+    assert!(taps.len() % 2 == 1, "tap count must be odd");
+    let n = fpad.len() + 1 - taps.len();
+    assert_eq!(out.len(), n, "output length mismatch");
+    let chunk = plan.chunk.max(1);
+    crate::stencil::exec::par_chunks_mut_plan(plan, out, |c, buf| {
+        let lo = c * chunk;
+        buf.fill(0.0);
         for (j, &g) in taps.iter().enumerate() {
             let src = &fpad[lo + j..lo + buf.len() + j];
             for (o, &x) in buf.iter_mut().zip(src) {
@@ -34,7 +56,6 @@ pub fn xcorr1d(fpad: &[f64], taps: &[f64]) -> Vec<f64> {
             }
         }
     });
-    out
 }
 
 /// Dense cross-correlation with explicit kernel extents `(kx, ky, kz)`.
@@ -60,6 +81,19 @@ pub fn xcorr_dense_into(
     kz: usize,
     out: &mut Grid,
 ) {
+    xcorr_dense_into_plan(&LaunchPlan::default_for(&[], 0), input, kernel, kx, ky, kz, out);
+}
+
+/// [`xcorr_dense_into`] under an explicit [`LaunchPlan`].
+pub fn xcorr_dense_into_plan(
+    plan: &LaunchPlan,
+    input: &Grid,
+    kernel: &[f64],
+    kx: usize,
+    ky: usize,
+    kz: usize,
+    out: &mut Grid,
+) {
     assert_eq!(kernel.len(), kx * ky * kz, "kernel size mismatch");
     for (ext, n) in [(kx, input.nx), (ky, input.ny), (kz, input.nz)] {
         assert!(ext == 1 || ext % 2 == 1, "kernel extents must be odd");
@@ -77,7 +111,7 @@ pub fn xcorr_dense_into(
     let data = input.data();
     let nx = input.nx;
 
-    crate::stencil::exec::par_fill_rows(out, |j, k, dst, _ws| {
+    crate::stencil::exec::par_fill_rows_plan(plan, out, |j, k, dst, _ws| {
         dst.fill(0.0);
         for dz in 0..kz {
             for dy in 0..ky {
@@ -132,6 +166,28 @@ mod tests {
     fn xcorr1d_identity() {
         let fpad = vec![9.0, 1.0, 2.0, 3.0, 9.0];
         assert_eq!(xcorr1d(&fpad, &[0.0, 1.0, 0.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn xcorr1d_plan_chunks_match_default_bitwise() {
+        use crate::stencil::plan::{BlockShape, LaunchPlan};
+        let mut fpad = vec![0.0f64; 5000 + 6];
+        for (i, v) in fpad.iter_mut().enumerate() {
+            *v = ((i * 37) % 101) as f64 - 50.0;
+        }
+        let taps = [0.1, -0.2, 0.4, 1.0, 0.4, -0.2, 0.1];
+        let want = xcorr1d(&fpad, &taps);
+        for plan in [
+            LaunchPlan { chunk: 64, threads: 2, ..LaunchPlan::default() },
+            LaunchPlan { chunk: 100_000, ..LaunchPlan::default() },
+            LaunchPlan { block: BlockShape::Serial, chunk: 512, ..LaunchPlan::default() },
+        ] {
+            assert_eq!(xcorr1d_plan(&plan, &fpad, &taps), want, "{plan:?}");
+        }
+        // the into-form reuses a dirty buffer and must still agree
+        let mut out = vec![7.0f64; want.len()];
+        xcorr1d_into(&LaunchPlan { chunk: 333, ..LaunchPlan::default() }, &fpad, &taps, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use super::coeffs::central_weights;
 use super::exec::{self, DoubleBuffer};
 use super::grid::{Boundary, Grid};
+use super::plan::LaunchPlan;
 
 /// Diffusion stepper configuration.
 #[derive(Debug, Clone)]
@@ -57,8 +58,25 @@ impl Diffusion {
     /// rows ([`exec::par_fill_rows`]), so 1-D/2-D grids (`nz == 1`)
     /// distribute across threads too, and the Laplacian accumulator is a
     /// reusable per-thread workspace row. Dimension is explicit because a
-    /// 1-D grid still carries unit y/z extents.
+    /// 1-D grid still carries unit y/z extents. Runs under the default
+    /// [`LaunchPlan`]; tuned callers use [`Self::step_into_plan`].
     pub fn step_into(&self, src: &Grid, dst: &mut Grid, dim: usize, dt: f64) {
+        self.step_into_plan(&LaunchPlan::default_for(&[], 0), src, dst, dim, dt);
+    }
+
+    /// [`Self::step_into`] under an explicit [`LaunchPlan`]: the row
+    /// blocking, thread budget, and workspace strategy all come from the
+    /// plan (the empirical tuner's measurement hook). Results are
+    /// bit-identical across plans — blocking only reassigns rows to
+    /// threads (pinned by `rust/tests/plan_parity.rs`).
+    pub fn step_into_plan(
+        &self,
+        plan: &LaunchPlan,
+        src: &Grid,
+        dst: &mut Grid,
+        dim: usize,
+        dt: f64,
+    ) {
         assert!((1..=3).contains(&dim));
         assert!(src.r >= self.radius, "grid ghost width too small");
         assert_eq!(
@@ -77,7 +95,7 @@ impl Diffusion {
         // axis strides in padded storage
         let strides = [1usize, px, px * py];
 
-        exec::par_fill_rows(dst, |j, k, out, ws| {
+        exec::par_fill_rows_plan(plan, dst, |j, k, out, ws| {
             let base = r + px * (j + r + py * (k + r));
             // start from the centre value (identity tap)
             out.copy_from_slice(&data[base..base + nx]);
@@ -107,9 +125,20 @@ impl Diffusion {
     /// into the spare buffer, swap. The steady-state loop built on this
     /// performs zero heap allocation after workspace warmup.
     pub fn step_buffered(&self, field: &mut DoubleBuffer, dim: usize, dt: f64) {
+        self.step_buffered_plan(&LaunchPlan::default_for(&[], 0), field, dim, dt);
+    }
+
+    /// [`Self::step_buffered`] under an explicit [`LaunchPlan`].
+    pub fn step_buffered_plan(
+        &self,
+        plan: &LaunchPlan,
+        field: &mut DoubleBuffer,
+        dim: usize,
+        dt: f64,
+    ) {
         let (cur, next) = field.pair();
         cur.fill_ghosts(self.boundary);
-        self.step_into(cur, next, dim, dt);
+        self.step_into_plan(plan, cur, next, dim, dt);
         field.swap();
     }
 
@@ -201,6 +230,27 @@ mod tests {
             plain = d.step(&mut plain, 2, dt);
         }
         assert_eq!(buf.cur().interior_to_vec(), plain.interior_to_vec());
+    }
+
+    #[test]
+    fn plan_variants_match_default_bitwise() {
+        use crate::stencil::plan::{BlockShape, LaunchPlan, WorkspaceStrategy};
+        let g0 = Grid::from_fn(&[20, 12], 2, |i, j, _| ((i * 13 + j * 7) % 17) as f64);
+        let d = Diffusion::new(2, 0.8, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(2);
+        let mut src = g0.clone();
+        src.fill_ghosts(Boundary::Periodic);
+        let mut want = Grid::new(20, 12, 1, 2);
+        d.step_into(&src, &mut want, 2, dt);
+        for plan in [
+            LaunchPlan { block: BlockShape::Serial, ..LaunchPlan::default() },
+            LaunchPlan { block: BlockShape::Rows(3), threads: 2, ..LaunchPlan::default() },
+            LaunchPlan { workspace: WorkspaceStrategy::Fresh, ..LaunchPlan::default() },
+        ] {
+            let mut got = Grid::new(20, 12, 1, 2);
+            d.step_into_plan(&plan, &src, &mut got, 2, dt);
+            assert_eq!(got.interior_to_vec(), want.interior_to_vec(), "{plan:?}");
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 use std::cell::RefCell;
 
 use super::grid::Grid;
+use super::plan::{LaunchPlan, WorkspaceStrategy};
 use crate::util::par;
 
 // ---------------------------------------------------------------------------
@@ -64,44 +65,60 @@ fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
     r
 }
 
+/// [`with_workspace`] under a plan's [`WorkspaceStrategy`]: `Fresh` hands
+/// `f` a throwaway workspace (the pre-exec-layer allocation behavior, kept
+/// measurable so the tuner prices reuse instead of assuming it).
+fn with_workspace_mode<R>(mode: WorkspaceStrategy, f: impl FnOnce(&mut Workspace) -> R) -> R {
+    match mode {
+        WorkspaceStrategy::ThreadLocal => with_workspace(f),
+        WorkspaceStrategy::Fresh => f(&mut Workspace::default()),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Row-block decomposition
 // ---------------------------------------------------------------------------
 
 /// Partition `rows` interior rows into contiguous blocks for `threads`-way
-/// work stealing. Returns `(n_blocks, rows_per_block)`. Oversubscribes by
-/// 4 blocks per thread so uneven per-row cost balances, while keeping each
-/// block a run of consecutive rows for halo reuse. A 2-D workload
-/// (`nz == 1`, `rows == ny`) therefore still decomposes across threads —
-/// the regression the old z-plane-only split failed.
+/// work stealing, under the *default* launch heuristics. Returns
+/// `(n_blocks, rows_per_block)`. This is now a thin veneer over
+/// [`LaunchPlan::default_for`] + [`LaunchPlan::blocks`]: 4 blocks per
+/// thread so uneven per-row cost balances, each block a run of consecutive
+/// rows for halo reuse, and — the degenerate-case fix — an explicit serial
+/// plan `(1, rows)` when `rows < threads` instead of scattering single-row
+/// blocks. A 2-D workload (`nz == 1`, `rows == ny`) still decomposes
+/// across threads — the regression the old z-plane-only split failed.
 pub fn plan_blocks(rows: usize, threads: usize) -> (usize, usize) {
-    if rows == 0 {
-        return (0, 1);
-    }
-    let target = threads.max(1) * 4;
-    let per = rows.div_ceil(target).max(1);
-    (rows.div_ceil(per), per)
+    LaunchPlan::default_for(&[], threads).blocks(rows)
 }
 
 /// Parallel sweep over the `ny * nz` interior rows of a grid: `f(j, k, ws)`
 /// is called exactly once per row, with rows grouped into consecutive
-/// blocks per [`plan_blocks`]. Honours `STENCILAX_THREADS`; serial runs
-/// never touch the pool. Dispatch allocates nothing (workspaces grow once
-/// per thread on warmup).
-pub fn par_rows<F: Fn(usize, usize, &mut Workspace) + Sync>(ny: usize, nz: usize, f: F) {
+/// blocks per [`LaunchPlan::blocks`]. Honours the plan's thread budget
+/// (0 = `STENCILAX_THREADS` / machine); serial runs never touch the pool.
+/// Dispatch allocates nothing under the default
+/// [`WorkspaceStrategy::ThreadLocal`] (workspaces grow once per thread on
+/// warmup).
+pub fn par_rows_plan<F: Fn(usize, usize, &mut Workspace) + Sync>(
+    plan: &LaunchPlan,
+    ny: usize,
+    nz: usize,
+    f: F,
+) {
     let rows = ny * nz;
-    let threads = par::num_threads();
-    let (nblocks, per) = plan_blocks(rows, threads);
+    let threads = plan.effective_threads();
+    let (nblocks, per) = plan.blocks_with(rows, threads);
     if threads <= 1 || nblocks <= 1 {
-        with_workspace(|ws| {
+        with_workspace_mode(plan.workspace, |ws| {
             for row in 0..rows {
                 f(row % ny, row / ny, ws);
             }
         });
         return;
     }
+    let mode = plan.workspace;
     par::pool().run(nblocks, threads, &|b| {
-        with_workspace(|ws| {
+        with_workspace_mode(mode, |ws| {
             let lo = b * per;
             let hi = (lo + per).min(rows);
             for row in lo..hi {
@@ -109,6 +126,11 @@ pub fn par_rows<F: Fn(usize, usize, &mut Workspace) + Sync>(ny: usize, nz: usize
             }
         });
     });
+}
+
+/// [`par_rows_plan`] under the default plan (the seed heuristics).
+pub fn par_rows<F: Fn(usize, usize, &mut Workspace) + Sync>(ny: usize, nz: usize, f: F) {
+    par_rows_plan(&LaunchPlan::default_for(&[], 0), ny, nz, f);
 }
 
 // ---------------------------------------------------------------------------
@@ -161,18 +183,28 @@ impl<'a> RowWriter<'a> {
 
 /// Fill every interior row of `dst` in parallel: `f(j, k, row, ws)`
 /// receives each row's mutable slice exactly once. Safe wrapper over
-/// [`RowWriter`] + [`par_rows`].
-pub fn par_fill_rows<F: Fn(usize, usize, &mut [f64], &mut Workspace) + Sync>(
+/// [`RowWriter`] + [`par_rows_plan`].
+pub fn par_fill_rows_plan<F: Fn(usize, usize, &mut [f64], &mut Workspace) + Sync>(
+    plan: &LaunchPlan,
     dst: &mut Grid,
     f: F,
 ) {
     let (ny, nz) = (dst.ny, dst.nz);
     let w = RowWriter::new(dst);
-    par_rows(ny, nz, |j, k, ws| {
-        // SAFETY: par_rows hands each (j, k) to exactly one closure call.
+    par_rows_plan(plan, ny, nz, |j, k, ws| {
+        // SAFETY: par_rows_plan hands each (j, k) to exactly one closure
+        // call.
         let row = unsafe { w.row(j, k) };
         f(j, k, row, ws);
     });
+}
+
+/// [`par_fill_rows_plan`] under the default plan.
+pub fn par_fill_rows<F: Fn(usize, usize, &mut [f64], &mut Workspace) + Sync>(
+    dst: &mut Grid,
+    f: F,
+) {
+    par_fill_rows_plan(&LaunchPlan::default_for(&[], 0), dst, f);
 }
 
 struct SendPtr(*mut f64);
@@ -183,10 +215,35 @@ unsafe impl Sync for SendPtr {}
 /// [`par_fill_rows`]): `f(c, chunk)` receives
 /// `data[c*chunk_len .. min((c+1)*chunk_len, len)]` exactly once per `c`.
 pub fn par_chunks_mut<F: Fn(usize, &mut [f64]) + Sync>(data: &mut [f64], chunk_len: usize, f: F) {
+    chunks_mut_impl(data, chunk_len, par::num_threads(), f);
+}
+
+/// [`par_chunks_mut`] with chunk length and thread budget taken from a
+/// [`LaunchPlan`] (`plan.chunk`, `plan.threads`). [`BlockShape::Serial`]
+/// plans run inline on the caller.
+///
+/// [`BlockShape::Serial`]: super::plan::BlockShape::Serial
+pub fn par_chunks_mut_plan<F: Fn(usize, &mut [f64]) + Sync>(
+    plan: &LaunchPlan,
+    data: &mut [f64],
+    f: F,
+) {
+    let threads = match plan.block {
+        super::plan::BlockShape::Serial => 1,
+        _ => plan.effective_threads(),
+    };
+    chunks_mut_impl(data, plan.chunk.max(1), threads, f);
+}
+
+fn chunks_mut_impl<F: Fn(usize, &mut [f64]) + Sync>(
+    data: &mut [f64],
+    chunk_len: usize,
+    threads: usize,
+    f: F,
+) {
     assert!(chunk_len > 0, "chunk_len must be positive");
     let n = data.len();
     let chunks = n.div_ceil(chunk_len);
-    let threads = par::num_threads();
     if threads <= 1 || chunks <= 1 {
         for (c, chunk) in data.chunks_mut(chunk_len).enumerate() {
             f(c, chunk);
@@ -270,6 +327,64 @@ mod tests {
         assert!(nb >= 4, "2-D rows not speedup-eligible: {nb} blocks");
         let (nb1, _) = plan_blocks(1, 4);
         assert_eq!(nb1, 1);
+    }
+
+    #[test]
+    fn plan_blocks_degenerate_rows_pin_coverage() {
+        // satellite fix: for every rows in 1..=2*threads the partition must
+        // cover exactly, with no empty block, and rows < threads must be an
+        // explicit serial plan rather than single-row scatter.
+        for threads in [1usize, 2, 4, 8, 16] {
+            for rows in 1..=2 * threads {
+                let (nb, per) = plan_blocks(rows, threads);
+                assert!(nb >= 1 && per >= 1, "rows={rows} threads={threads}");
+                assert!(nb * per >= rows, "uncovered rows: rows={rows} threads={threads}");
+                assert!((nb - 1) * per < rows, "empty block: rows={rows} threads={threads}");
+                if rows < threads {
+                    assert_eq!((nb, per), (1, rows), "rows={rows} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_plan_honors_every_block_shape() {
+        use super::super::plan::{BlockShape, LaunchPlan, WorkspaceStrategy};
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let (ny, nz) = (11, 5);
+        for block in [
+            BlockShape::Oversubscribe(2),
+            BlockShape::Rows(3),
+            BlockShape::Serial,
+        ] {
+            for workspace in [WorkspaceStrategy::ThreadLocal, WorkspaceStrategy::Fresh] {
+                let plan = LaunchPlan { block, threads: 4, workspace, ..LaunchPlan::default() };
+                let hits: Vec<AtomicU32> = (0..ny * nz).map(|_| AtomicU32::new(0)).collect();
+                par_rows_plan(&plan, ny, nz, |j, k, ws| {
+                    ws.scratch(8)[0] = j as f64;
+                    hits[k * ny + j].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "{block:?} {workspace:?} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_plan_uses_plan_chunk() {
+        use super::super::plan::LaunchPlan;
+        let mut v = vec![0.0f64; 300];
+        let plan = LaunchPlan { chunk: 100, threads: 2, ..LaunchPlan::default() };
+        par_chunks_mut_plan(&plan, &mut v, |c, chunk| {
+            assert_eq!(chunk.len(), 100);
+            for x in chunk.iter_mut() {
+                *x = c as f64;
+            }
+        });
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[150], 1.0);
+        assert_eq!(v[299], 2.0);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use super::rhs::MhdRhs;
 use super::{MhdState, AX, LNRHO, NFIELDS, SS, UX};
 use crate::stencil::exec::{self, RowWriter};
+use crate::stencil::plan::LaunchPlan;
 
 // Row-workspace layout: `B_ROWS` rows of `nx` doubles per thread.
 const B_GLNRHO: usize = 0; // 3 rows: grad lnrho
@@ -172,7 +173,26 @@ fn gdiv_row(
 /// register `w`, write the updated fields into `dst` and the updated
 /// register into `w` in place. `alpha`/`beta` are the substep's 2N
 /// coefficients. All three states must share extents and ghost width.
+/// Runs under the default [`LaunchPlan`].
 pub fn substep_fused(
+    rhs: &MhdRhs,
+    src: &MhdState,
+    w: &mut MhdState,
+    dst: &mut MhdState,
+    alpha: f64,
+    beta: f64,
+    dt: f64,
+) {
+    substep_fused_plan(&LaunchPlan::default_for(&[], 0), rhs, src, w, dst, alpha, beta, dt);
+}
+
+/// [`substep_fused`] under an explicit [`LaunchPlan`]: row blocking,
+/// thread budget, and workspace strategy come from the plan. The sweep is
+/// bit-identical across plans — blocking only reassigns rows to threads
+/// (pinned by `rust/tests/plan_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn substep_fused_plan(
+    plan: &LaunchPlan,
     rhs: &MhdRhs,
     src: &MhdState,
     w: &mut MhdState,
@@ -214,7 +234,7 @@ pub fn substep_fused(
     let ln_rho0 = p.rho0.ln();
     let temp0 = p.temp0();
 
-    exec::par_rows(ny, nz, |j, k, ws| {
+    exec::par_rows_plan(plan, ny, nz, |j, k, ws| {
         let base = r + px * ((j + r) + py * (k + r));
         let buf = ws.scratch(B_ROWS * nx);
         let (rows, tmps) = buf.split_at_mut(B_TMP * nx);

@@ -7,6 +7,7 @@
 
 use super::rhs::{MhdParams, MhdRhs};
 use super::{MhdState, NFIELDS, SS, UX};
+use crate::stencil::plan::LaunchPlan;
 
 /// 2N-RK3 coefficients: `w_l = alpha_l w_{l-1} + dt RHS(f);  f += beta_l w_l`.
 pub const RK3_ALPHA: [f64; 3] = [0.0, -5.0 / 9.0, -153.0 / 128.0];
@@ -69,11 +70,29 @@ impl MhdStepper {
     /// RHS + 2N-update sweep ([`super::fused::substep_fused`]) into the
     /// spare buffer and swaps it with the state. Allocation-free after
     /// workspace warmup; agrees with [`Self::substep_reference`] to
-    /// machine precision (EXPERIMENTS.md §Perf/L3-6).
+    /// machine precision (EXPERIMENTS.md §Perf/L3-6). Runs under the
+    /// default [`LaunchPlan`]; tuned callers use [`Self::substep_plan`].
     pub fn substep(&mut self, state: &mut MhdState, dt: f64, l: usize) {
+        self.substep_plan(&LaunchPlan::default_for(&[], 0), state, dt, l);
+    }
+
+    /// [`Self::substep`] under an explicit [`LaunchPlan`]. `plan.fused`
+    /// selects the execution strategy: the fused single-sweep kernel
+    /// (default), or the unfused reference path
+    /// ([`Self::substep_reference`] — per-derivative intermediate grids,
+    /// the paper's unfused baseline), so fusion itself is a measurable
+    /// tuning axis rather than an assumption. The two agree to <= 1e-12
+    /// (`rust/tests/fused_parity.rs`); plans sharing a fusion mode are
+    /// bit-identical (`rust/tests/plan_parity.rs`).
+    pub fn substep_plan(&mut self, plan: &LaunchPlan, state: &mut MhdState, dt: f64, l: usize) {
         assert!(l < 3);
+        if !plan.fused {
+            self.substep_reference(state, dt, l);
+            return;
+        }
         state.fill_ghosts();
-        super::fused::substep_fused(
+        super::fused::substep_fused_plan(
+            plan,
             &self.rhs,
             state,
             &mut self.w,
@@ -114,6 +133,13 @@ impl MhdStepper {
     pub fn step(&mut self, state: &mut MhdState, dt: f64) {
         for l in 0..3 {
             self.substep(state, dt, l);
+        }
+    }
+
+    /// One full RK3 step under an explicit [`LaunchPlan`].
+    pub fn step_plan(&mut self, plan: &LaunchPlan, state: &mut MhdState, dt: f64) {
+        for l in 0..3 {
+            self.substep_plan(plan, state, dt, l);
         }
     }
 

@@ -17,6 +17,11 @@
 //! x-contiguous rows with reusable per-thread workspaces and
 //! double-buffered field storage, so the steady-state time loop performs
 //! zero heap allocation after warmup (EXPERIMENTS.md §Perf/L3-5..L3-8).
+//! Launch parameters are data, not constants: every hot path accepts a
+//! [`plan::LaunchPlan`] (row blocking, thread budget, fusion, chunking,
+//! workspace strategy), with the historical heuristics preserved as
+//! [`plan::LaunchPlan::default_for`] and the empirical autotuner
+//! (`coordinator::empirical`) searching the rest (DESIGN.md §11).
 
 pub mod coeffs;
 pub mod conv;
@@ -24,7 +29,9 @@ pub mod diffusion;
 pub mod exec;
 pub mod grid;
 pub mod mhd;
+pub mod plan;
 
 pub use coeffs::central_weights;
 pub use exec::DoubleBuffer;
 pub use grid::{Boundary, Grid};
+pub use plan::{BlockShape, LaunchPlan, WorkspaceStrategy};

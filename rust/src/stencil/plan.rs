@@ -1,0 +1,313 @@
+//! Launch parameters as data — the paper's central tuning premise applied
+//! to the native engine.
+//!
+//! The execution layer used to hard-code its launch heuristics: a fixed 4x
+//! block oversubscription in [`super::exec::plan_blocks`], a fixed
+//! 8192-element chunk in [`super::conv::xcorr1d`], fusion always on,
+//! thread-local workspaces always. No tuner could reach any of them — the
+//! exact failure mode the paper's §5.1 search exists to avoid (analytical
+//! intuition fixes constants that real hardware disagrees with). A
+//! [`LaunchPlan`] lifts every such knob into a value the hot paths accept
+//! and honor ([`super::exec::par_rows_plan`],
+//! [`super::diffusion::Diffusion::step_into_plan`],
+//! [`crate::stencil::mhd::MhdStepper::substep_plan`],
+//! [`super::conv::xcorr1d_plan`]); the historical heuristics are exactly
+//! [`LaunchPlan::default_for`]. The empirical autotuner
+//! (`coordinator::empirical`) enumerates candidate plans, prunes them with
+//! the analytical model, measures the survivors, and persists winners in
+//! the plan cache (`coordinator::plans`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::par;
+
+/// How interior rows are grouped into contiguous work blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockShape {
+    /// Target `threads * factor` blocks — the seed engine's heuristic
+    /// (factor [`DEFAULT_OVERSUB`]), trading stealing granularity against
+    /// per-block halo reuse.
+    Oversubscribe(usize),
+    /// A fixed run of consecutive rows per block.
+    Rows(usize),
+    /// One block: the whole sweep runs on the calling thread.
+    Serial,
+}
+
+/// Scratch-memory policy for the per-row workspaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkspaceStrategy {
+    /// Reuse the thread-local scratch rows (zero steady-state allocation).
+    ThreadLocal,
+    /// Fresh scratch per dispatch — the pre-exec-layer behavior, kept as a
+    /// tunable so the empirical search can price workspace reuse instead
+    /// of assuming it.
+    Fresh,
+}
+
+/// The seed engine's oversubscription factor (4 blocks per thread).
+pub const DEFAULT_OVERSUB: usize = 4;
+/// The seed engine's 1-D chunk length (`conv::xcorr1d`'s old `BLOCK`).
+pub const DEFAULT_CHUNK: usize = 8192;
+
+/// One launch configuration for a native-engine sweep. Plain old data:
+/// `Copy`, no heap, `Eq + Hash` so plans can key caches and be compared
+/// against the default ("did tuning actually pick something different?").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LaunchPlan {
+    /// Row-block decomposition of the (j, k) interior rows.
+    pub block: BlockShape,
+    /// Worker-thread budget (caller included); 0 = resolve
+    /// `STENCILAX_THREADS` / machine parallelism at dispatch time.
+    pub threads: usize,
+    /// Fused MHD substep (RHS + 2N update in one sweep) vs the unfused
+    /// reference path (`MhdStepper::substep_reference`).
+    pub fused: bool,
+    /// Elements per chunk for flat 1-D sweeps
+    /// ([`super::exec::par_chunks_mut_plan`]).
+    pub chunk: usize,
+    /// Scratch-memory policy.
+    pub workspace: WorkspaceStrategy,
+}
+
+impl Default for LaunchPlan {
+    fn default() -> Self {
+        Self::default_for(&[], 0)
+    }
+}
+
+impl LaunchPlan {
+    /// The engine's historical heuristics re-expressed as data: 4x block
+    /// oversubscription, 8192-element 1-D chunks, fusion on, thread-local
+    /// workspaces. `shape` is the interior extents of the target problem
+    /// (reserved for shape-aware defaults; every knob is currently
+    /// shape-independent, as the seed constants were); `threads` 0 defers
+    /// to the environment at dispatch time.
+    pub fn default_for(shape: &[usize], threads: usize) -> LaunchPlan {
+        let _ = shape;
+        LaunchPlan {
+            block: BlockShape::Oversubscribe(DEFAULT_OVERSUB),
+            threads,
+            fused: true,
+            chunk: DEFAULT_CHUNK,
+            workspace: WorkspaceStrategy::ThreadLocal,
+        }
+    }
+
+    /// Thread budget resolved against the environment.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            par::num_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Partition `rows` interior rows into `(n_blocks, rows_per_block)`
+    /// under this plan. Invariants: blocks cover all rows
+    /// (`n_blocks * per >= rows`) and the tail block is non-empty
+    /// (`(n_blocks - 1) * per < rows`). Degenerate parallelism
+    /// (`rows < threads` under [`BlockShape::Oversubscribe`]) resolves to
+    /// an explicit serial plan `(1, rows)` instead of scattering
+    /// single-row blocks across mostly-idle workers.
+    pub fn blocks(&self, rows: usize) -> (usize, usize) {
+        self.blocks_with(rows, self.effective_threads())
+    }
+
+    /// [`Self::blocks`] with the thread budget already resolved — the
+    /// dispatch hot path resolves it once and passes it here, so a sweep
+    /// reads the environment exactly once (as the seed engine did).
+    ///
+    /// Trade-off of the degenerate-case fix: serializing `rows < threads`
+    /// assumes rows are cheap (single-row blocks scattered over mostly
+    /// idle workers cost more than they pay). A grid with *few but very
+    /// long* rows (e.g. `ny = 3`, huge `nx`) would rather keep them
+    /// parallel — that shape should tune [`BlockShape::Rows`]`(1)`, which
+    /// reproduces the seed engine's row-scatter and is in the empirical
+    /// tuner's candidate set.
+    pub fn blocks_with(&self, rows: usize, threads: usize) -> (usize, usize) {
+        if rows == 0 {
+            return (0, 1);
+        }
+        let threads = threads.max(1);
+        let per = match self.block {
+            BlockShape::Serial => rows,
+            BlockShape::Rows(b) => b.clamp(1, rows),
+            BlockShape::Oversubscribe(f) => {
+                if rows < threads {
+                    return (1, rows);
+                }
+                rows.div_ceil(threads * f.max(1)).max(1)
+            }
+        };
+        (rows.div_ceil(per), per)
+    }
+
+    /// Compact human-readable form for tables and reports, e.g.
+    /// `ov4 t0 fused chunk8192`.
+    pub fn describe(&self) -> String {
+        let block = match self.block {
+            BlockShape::Oversubscribe(f) => format!("ov{f}"),
+            BlockShape::Rows(b) => format!("rows{b}"),
+            BlockShape::Serial => "serial".to_string(),
+        };
+        let ws = match self.workspace {
+            WorkspaceStrategy::ThreadLocal => "",
+            WorkspaceStrategy::Fresh => " fresh-ws",
+        };
+        format!(
+            "{block} t{} {} chunk{}{ws}",
+            self.threads,
+            if self.fused { "fused" } else { "unfused" },
+            self.chunk,
+        )
+    }
+
+    /// Serialize through the in-crate JSON layer (plan-cache schema).
+    pub fn to_json(&self) -> Json {
+        let block = match self.block {
+            BlockShape::Oversubscribe(f) => format!("oversubscribe:{f}"),
+            BlockShape::Rows(b) => format!("rows:{b}"),
+            BlockShape::Serial => "serial".to_string(),
+        };
+        Json::obj(vec![
+            ("block", Json::str(block)),
+            ("threads", Json::num(self.threads as f64)),
+            ("fused", Json::Bool(self.fused)),
+            ("chunk", Json::num(self.chunk as f64)),
+            (
+                "workspace",
+                Json::str(match self.workspace {
+                    WorkspaceStrategy::ThreadLocal => "thread-local",
+                    WorkspaceStrategy::Fresh => "fresh",
+                }),
+            ),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`] (strict: unknown shapes are errors, so
+    /// a stale or hand-edited plan cache fails loudly, not silently).
+    pub fn from_json(j: &Json) -> Result<LaunchPlan> {
+        let block_s = j.req_str("block")?;
+        let block = if block_s == "serial" {
+            BlockShape::Serial
+        } else if let Some(v) = block_s.strip_prefix("oversubscribe:") {
+            BlockShape::Oversubscribe(v.parse().context("oversubscribe factor")?)
+        } else if let Some(v) = block_s.strip_prefix("rows:") {
+            BlockShape::Rows(v.parse().context("rows per block")?)
+        } else {
+            bail!("unknown block shape {block_s:?}");
+        };
+        let fused = j.req("fused")?.as_bool().context("key \"fused\" not a bool")?;
+        let workspace = match j.req_str("workspace")? {
+            "thread-local" => WorkspaceStrategy::ThreadLocal,
+            "fresh" => WorkspaceStrategy::Fresh,
+            other => bail!("unknown workspace strategy {other:?}"),
+        };
+        Ok(LaunchPlan {
+            block,
+            threads: j.req_u64("threads")? as usize,
+            fused,
+            chunk: (j.req_u64("chunk")? as usize).max(1),
+            workspace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_seed_heuristics() {
+        let p = LaunchPlan::default_for(&[4096, 4096], 4);
+        assert_eq!(p.block, BlockShape::Oversubscribe(DEFAULT_OVERSUB));
+        assert_eq!(p.chunk, DEFAULT_CHUNK);
+        assert!(p.fused);
+        assert_eq!(p.workspace, WorkspaceStrategy::ThreadLocal);
+        // the seed's plan_blocks(4096, 4): 16 blocks of 256 rows
+        assert_eq!(p.blocks(4096), (16, 256));
+    }
+
+    #[test]
+    fn blocks_invariants_hold_for_every_shape() {
+        let shapes = [
+            BlockShape::Oversubscribe(1),
+            BlockShape::Oversubscribe(4),
+            BlockShape::Rows(1),
+            BlockShape::Rows(7),
+            BlockShape::Rows(1024),
+            BlockShape::Serial,
+        ];
+        for block in shapes {
+            for threads in [1usize, 2, 4, 16] {
+                for rows in [0usize, 1, 2, 3, 5, 63, 64, 4096, 4097] {
+                    let plan = LaunchPlan { block, threads, ..LaunchPlan::default() };
+                    let (nb, per) = plan.blocks(rows);
+                    if rows == 0 {
+                        assert_eq!(nb, 0);
+                        continue;
+                    }
+                    assert!(nb * per >= rows, "{block:?} rows={rows} threads={threads}");
+                    assert!((nb - 1) * per < rows, "empty tail: {block:?} rows={rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_rows_resolve_to_serial() {
+        // satellite fix: rows < threads must become one explicit serial
+        // block, not `rows` single-row blocks
+        for threads in [2usize, 4, 8, 16] {
+            for rows in 1..threads {
+                let plan = LaunchPlan::default_for(&[], threads);
+                assert_eq!(plan.blocks(rows), (1, rows), "rows={rows} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_fixed_rows_shapes() {
+        let serial = LaunchPlan { block: BlockShape::Serial, ..LaunchPlan::default() };
+        assert_eq!(serial.blocks(1000), (1, 1000));
+        let rows8 = LaunchPlan { block: BlockShape::Rows(8), ..LaunchPlan::default() };
+        assert_eq!(rows8.blocks(1000), (125, 8));
+        // fixed rows larger than the sweep clamp to one block
+        let rows_big = LaunchPlan { block: BlockShape::Rows(4096), ..LaunchPlan::default() };
+        assert_eq!(rows_big.blocks(1000), (1, 1000));
+    }
+
+    #[test]
+    fn json_roundtrips_every_variant() {
+        let plans = [
+            LaunchPlan::default(),
+            LaunchPlan { block: BlockShape::Rows(16), threads: 3, fused: false, chunk: 4096, workspace: WorkspaceStrategy::Fresh },
+            LaunchPlan { block: BlockShape::Serial, threads: 1, ..LaunchPlan::default() },
+        ];
+        for p in plans {
+            let j = p.to_json();
+            let text = j.to_string_pretty();
+            let back = LaunchPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, p, "{text}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_shapes() {
+        let j = Json::parse(
+            r#"{"block":"spiral:3","threads":1,"fused":true,"chunk":64,"workspace":"thread-local"}"#,
+        )
+        .unwrap();
+        assert!(LaunchPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn describe_is_compact_and_distinct() {
+        let a = LaunchPlan::default().describe();
+        let b = LaunchPlan { fused: false, ..LaunchPlan::default() }.describe();
+        assert!(a.contains("ov4") && a.contains("fused"), "{a}");
+        assert_ne!(a, b);
+    }
+}

@@ -1,8 +1,44 @@
 //! Criterion-style micro-benchmark harness (criterion is unavailable
 //! offline). Implements the paper's measurement methodology (§5.1): warm-up
 //! iterations, then N timed iterations, reporting the *median* plus spread.
+//!
+//! This is the crate's *single* timing/stats implementation: the native
+//! bench suite (`coordinator::bench`), the PJRT artifact timer
+//! (`coordinator::timing`), the empirical plan tuner
+//! (`coordinator::empirical`), the figure benches (`rust/benches/*`), and
+//! the paper-claim medians (`harness::paper`) all consume [`Stats`],
+//! [`Bencher`], and the [`median`]/[`median_upper`] helpers from here.
 
 use std::time::{Duration, Instant};
+
+/// Median of a sample set: midpoint of the central pair for even counts
+/// (the [`Stats`] convention).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    sorted_median(&mut v)
+}
+
+/// Upper median: the `n/2`-th order statistic of the sorted samples — the
+/// convention the paper harness uses for its small even-count claim sets
+/// (keeps a real sample, never an interpolated midpoint).
+pub fn median_upper(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty sample set");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// Sort in place and return the midpoint median.
+fn sorted_median(v: &mut [f64]) -> f64 {
+    assert!(!v.is_empty(), "median of empty sample set");
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
 
 /// One benchmark's statistics, in seconds.
 #[derive(Debug, Clone, Copy)]
@@ -29,14 +65,8 @@ impl Stats {
     }
 
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
-        assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median_s = sorted_median(&mut samples);
         let n = samples.len();
-        let median_s = if n % 2 == 1 {
-            samples[n / 2]
-        } else {
-            0.5 * (samples[n / 2 - 1] + samples[n / 2])
-        };
         Stats {
             median_s,
             mean_s: samples.iter().sum::<f64>() / n as f64,
@@ -87,6 +117,13 @@ impl Bencher {
     /// runner minutes.
     pub fn smoke() -> Self {
         Self { warmup: 1, min_iters: 3, max_iters: 12, budget: Duration::from_millis(500) }
+    }
+
+    /// The figure benches' configuration (`rust/benches/*` via
+    /// `benches/common`): consolidated here so every harness draws its
+    /// timer settings from one place.
+    pub fn figures() -> Self {
+        Self { warmup: 2, min_iters: 5, max_iters: 30, budget: Duration::from_secs(3) }
     }
 
     pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
@@ -146,6 +183,16 @@ mod tests {
         let stats = b.run(|| count += 1);
         assert!(stats.iters >= 7);
         assert_eq!(count, stats.iters + 1); // warmup
+    }
+
+    #[test]
+    fn median_helpers_agree_with_stats() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median_upper(&xs), 3.0);
+        assert_eq!(median(&xs), Stats::from_samples(xs.to_vec()).median_s);
+        let odd = [3.0, 1.0, 2.0];
+        assert_eq!(median(&odd), median_upper(&odd));
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Plan invariance (ISSUE 3 satellite): every candidate [`LaunchPlan`]
+//! must produce results identical to the default plan — row blocking,
+//! thread budget, chunk length, and workspace strategy only reassign work
+//! to threads, never change arithmetic. Plans sharing a fusion mode must
+//! match **bit for bit**; the unfused MHD candidate evaluates a genuinely
+//! different (reference) path and is held to the established fused-parity
+//! tolerance (<= 1e-12, `rust/tests/fused_parity.rs`) instead.
+//!
+//! Candidates come from the real enumerator
+//! (`coordinator::empirical::candidate_plans`), swept across thread
+//! budgets {1, 2, 4}, so exactly the plans the tuner can pick are the
+//! plans pinned here.
+
+use stencilax::coordinator::empirical::candidate_plans;
+use stencilax::prop_assert;
+use stencilax::stencil::conv;
+use stencilax::stencil::diffusion::Diffusion;
+use stencilax::stencil::grid::{Boundary, Grid};
+use stencilax::stencil::mhd::{MhdParams, MhdState, MhdStepper};
+use stencilax::stencil::plan::LaunchPlan;
+use stencilax::util::prop::check;
+use stencilax::util::rng::Rng;
+
+/// The tuner's candidate set, swept over explicit thread budgets.
+fn plans_for(shape: &[usize], chunked: bool, include_unfused: bool) -> Vec<LaunchPlan> {
+    let mut plans = Vec::new();
+    for threads in [1usize, 2, 4] {
+        for p in candidate_plans(shape, threads, chunked, include_unfused) {
+            if !plans.contains(&p) {
+                plans.push(p);
+            }
+        }
+    }
+    plans
+}
+
+#[test]
+fn diffusion_1_2_3d_bit_identical_across_candidate_plans() {
+    for (dim, shape) in [
+        (1usize, vec![257usize]),
+        (2, vec![33, 29]),
+        (3, vec![17, 13, 11]),
+    ] {
+        let mut rng = Rng::new(7 + dim as u64);
+        let mut src = Grid::from_fn(&shape, 3, |_, _, _| rng.normal());
+        src.fill_ghosts(Boundary::Periodic);
+        let d = Diffusion::new(3, 0.9, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(dim);
+        let (nx, ny, nz) = (src.nx, src.ny, src.nz);
+        let mut want = Grid::new(nx, ny, nz, 3);
+        d.step_into(&src, &mut want, dim, dt);
+        let want = want.interior_to_vec();
+        // grid candidates for the real dimensionality, plus the chunked
+        // 1-D set — the grid path ignores plan.chunk, so both must be
+        // bit-identical no matter what
+        let mut plans = plans_for(&shape, false, false);
+        plans.extend(plans_for(&shape, true, false));
+        for plan in plans {
+            let mut got = Grid::new(nx, ny, nz, 3);
+            d.step_into_plan(&plan, &src, &mut got, dim, dt);
+            assert_eq!(got.interior_to_vec(), want, "dim={dim} plan={plan:?}");
+        }
+    }
+}
+
+#[test]
+fn xcorr1d_bit_identical_across_chunk_plans() {
+    let mut rng = Rng::new(11);
+    let (n, r) = (10_000usize, 4usize);
+    let fpad = rng.normal_vec(n + 2 * r);
+    let taps = rng.normal_vec(2 * r + 1);
+    let want = conv::xcorr1d(&fpad, &taps);
+    for plan in plans_for(&[n], true, false) {
+        assert_eq!(conv::xcorr1d_plan(&plan, &fpad, &taps), want, "{plan:?}");
+    }
+}
+
+#[test]
+fn fused_mhd_bit_identical_unfused_within_parity_tolerance() {
+    let n = 8usize;
+    let par = MhdParams { dx: 2.0 * std::f64::consts::PI / n as f64, ..Default::default() };
+    let mut rng = Rng::new(3);
+    let st0 = MhdState::from_fn(n, n, n, 3, |_, _, _, _| 1e-2 * rng.normal());
+
+    let advance = |plan: &LaunchPlan| -> MhdState {
+        let mut st = st0.clone();
+        let mut stepper = MhdStepper::new(par.clone(), 3, n, n, n);
+        let dt = 1e-3;
+        for l in 0..3 {
+            stepper.substep_plan(plan, &mut st, dt, l);
+        }
+        st
+    };
+    let want = advance(&LaunchPlan::default_for(&[n, n, n], 0));
+    for plan in plans_for(&[n, n, n], false, true) {
+        let got = advance(&plan);
+        let err = got
+            .fields
+            .iter()
+            .zip(&want.fields)
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0, f64::max);
+        if plan.fused {
+            assert_eq!(err, 0.0, "fused plan diverged: {plan:?} (err {err:e})");
+        } else {
+            assert!(err <= 1e-12, "unfused plan outside tolerance: {plan:?} (err {err:e})");
+        }
+    }
+}
+
+#[test]
+fn prop_random_2d_shapes_are_plan_invariant() {
+    check("plan invariance on random 2-D shapes", 8, |rng| {
+        let nx = 3 + (rng.uniform() * 40.0) as usize;
+        let ny = 1 + (rng.uniform() * 24.0) as usize;
+        let radius = 1 + (rng.uniform() * 3.0) as usize;
+        let mut src = Grid::from_fn(&[nx, ny], radius, |_, _, _| rng.normal());
+        src.fill_ghosts(Boundary::Periodic);
+        let d = Diffusion::new(radius, 0.7, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(2);
+        let mut want = Grid::new(nx, ny, 1, radius);
+        d.step_into(&src, &mut want, 2, dt);
+        let want = want.interior_to_vec();
+        for plan in candidate_plans(&[nx, ny], 4, false, false) {
+            let mut got = Grid::new(nx, ny, 1, radius);
+            d.step_into_plan(&plan, &src, &mut got, 2, dt);
+            prop_assert!(
+                got.interior_to_vec() == want,
+                "plan {plan:?} diverged on {nx}x{ny} r={radius}"
+            );
+        }
+        Ok(())
+    });
+}

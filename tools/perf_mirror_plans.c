@@ -1,0 +1,167 @@
+/* Structural perf mirror of ISSUE 3's LaunchPlan search space.
+ *
+ * Mirrors the native engine's row-blocked diffusion sweep and chunked 1-D
+ * cross-correlation, then measures the knobs the empirical tuner
+ * (coordinator/empirical.rs) searches: rows-per-block / oversubscription
+ * for grid sweeps, chunk length for 1-D sweeps — against the default plan
+ * (4 blocks per thread, 8192-element chunks). Numbers feed EXPERIMENTS.md
+ * §Perf/L3-9; the Rust engine reproduces the same sweep structure, so the
+ * *relative* plan ordering carries over even though absolute times do not.
+ *
+ * gcc -O3 -march=native -pthread perf_mirror_plans.c -o perf_mirror_plans -lm
+ */
+#define _GNU_SOURCE
+#include <math.h>
+#include <pthread.h>
+#include <stdatomic.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + 1e-9 * ts.tv_nsec;
+}
+
+/* ---------------- parallel_for (scoped threads + atomic counter) ------- */
+typedef void (*item_fn)(int i, void *ctx);
+typedef struct {
+    atomic_int next;
+    int n;
+    item_fn f;
+    void *ctx;
+} pf_t;
+
+static void *pf_worker(void *arg) {
+    pf_t *p = (pf_t *)arg;
+    for (;;) {
+        int i = atomic_fetch_add(&p->next, 1);
+        if (i >= p->n) break;
+        p->f(i, p->ctx);
+    }
+    return NULL;
+}
+
+static void parallel_for(int n, int threads, item_fn f, void *ctx) {
+    pf_t p;
+    atomic_init(&p.next, 0);
+    p.n = n; p.f = f; p.ctx = ctx;
+    if (threads <= 1 || n <= 1) { for (int i = 0; i < n; i++) f(i, ctx); return; }
+    pthread_t th[16];
+    int nw = threads - 1; if (nw > 16) nw = 16;
+    for (int w = 0; w < nw; w++) pthread_create(&th[w], NULL, pf_worker, &p);
+    pf_worker(&p);
+    for (int w = 0; w < nw; w++) pthread_join(th[w], NULL);
+}
+
+/* ---------------- diffusion2d sweep under a row-block plan ------------- */
+#define RAD 3
+static int N2;              /* interior extent (N2 x N2) */
+static int P2;              /* padded extent */
+static double *SRC, *DST;
+static double C2[2 * RAD + 1];
+static int BLK_PER, BLK_N;  /* rows per block, number of blocks */
+
+static void diff2_block(int b, void *ctx) {
+    (void)ctx;
+    int lo = b * BLK_PER, hi = lo + BLK_PER;
+    if (hi > N2) hi = N2;
+    double s = 0.1;
+    for (int j = lo; j < hi; j++) {
+        double *out = DST + (size_t)(j + RAD) * P2 + RAD;
+        const double *base = SRC + (size_t)(j + RAD) * P2 + RAD;
+        for (int i = 0; i < N2; i++) {
+            double lap = 0.0;
+            for (int t = 0; t <= 2 * RAD; t++) {
+                lap += C2[t] * base[i + t - RAD];          /* x axis */
+                lap += C2[t] * base[i + (t - RAD) * P2];   /* y axis */
+            }
+            out[i] = base[i] + s * lap;
+        }
+    }
+}
+
+static double bench_diff2(int rows_per_block, int threads, int iters) {
+    BLK_PER = rows_per_block;
+    BLK_N = (N2 + BLK_PER - 1) / BLK_PER;
+    /* warm-up */
+    parallel_for(BLK_N, threads, diff2_block, NULL);
+    double best = 1e30;
+    for (int it = 0; it < iters; it++) {
+        double t0 = now_s();
+        parallel_for(BLK_N, threads, diff2_block, NULL);
+        double dt = now_s() - t0;
+        if (dt < best) best = dt;
+    }
+    return best;
+}
+
+/* ---------------- xcorr1d under a chunk plan --------------------------- */
+static int NX1, RX1;
+static double *FPAD, *OUT, TAPS[2 * 64 + 1];
+static int CHUNK;
+
+static void xcorr_chunk(int c, void *ctx) {
+    (void)ctx;
+    int lo = c * CHUNK, hi = lo + CHUNK;
+    if (hi > NX1) hi = NX1;
+    memset(OUT + lo, 0, (size_t)(hi - lo) * sizeof(double));
+    for (int t = 0; t <= 2 * RX1; t++) {
+        double g = TAPS[t];
+        const double *src = FPAD + lo + t;
+        for (int i = lo; i < hi; i++) OUT[i] += g * src[i - lo];
+    }
+}
+
+static double bench_xcorr(int chunk, int threads, int iters) {
+    CHUNK = chunk;
+    int nchunks = (NX1 + CHUNK - 1) / CHUNK;
+    parallel_for(nchunks, threads, xcorr_chunk, NULL);
+    double best = 1e30;
+    for (int it = 0; it < iters; it++) {
+        double t0 = now_s();
+        parallel_for(nchunks, threads, xcorr_chunk, NULL);
+        double dt = now_s() - t0;
+        if (dt < best) best = dt;
+    }
+    return best;
+}
+
+int main(int argc, char **argv) {
+    int threads = argc > 1 ? atoi(argv[1]) : 4;
+
+    for (int t = 0; t <= 2 * RAD; t++) C2[t] = (t == RAD) ? -2.0 : 1.0 / (1 + abs(t - RAD));
+
+    /* diffusion2d 2048^2, r=3: rows-per-block sweep */
+    N2 = 2048; P2 = N2 + 2 * RAD;
+    SRC = calloc((size_t)P2 * P2, sizeof(double));
+    DST = calloc((size_t)P2 * P2, sizeof(double));
+    for (int i = 0; i < P2 * P2; i++) SRC[i] = (i * 31 % 13) - 6.0;
+    int defblk = (N2 + 4 * threads - 1) / (4 * threads); /* default: 4 blocks/thread */
+    printf("diffusion2d %dx%d r=%d threads=%d\n", N2, N2, RAD, threads);
+    int rpbs[] = {1, 2, 4, 8, 16, 64, defblk, N2};
+    for (unsigned k = 0; k < sizeof(rpbs) / sizeof(rpbs[0]); k++) {
+        double s = bench_diff2(rpbs[k], rpbs[k] == N2 ? 1 : threads, 7);
+        printf("  rows/block %5d%s: %8.3f ms  %7.1f Melem/s\n",
+               rpbs[k], rpbs[k] == defblk ? " (ov4)" : rpbs[k] == N2 ? " (serial)" : "",
+               s * 1e3, (double)N2 * N2 / s / 1e6);
+    }
+
+    /* xcorr1d 2^24, r=3: chunk sweep */
+    NX1 = 1 << 24; RX1 = 3;
+    FPAD = malloc(((size_t)NX1 + 2 * RX1) * sizeof(double));
+    OUT = malloc((size_t)NX1 * sizeof(double));
+    for (int i = 0; i < NX1 + 2 * RX1; i++) FPAD[i] = (i * 17 % 11) - 5.0;
+    for (int t = 0; t <= 2 * RX1; t++) TAPS[t] = 0.1 * (t + 1);
+    printf("xcorr1d n=2^24 r=%d threads=%d\n", RX1, threads);
+    int chunks[] = {1024, 4096, 8192, 32768, 131072, 1 << 20};
+    for (unsigned k = 0; k < sizeof(chunks) / sizeof(chunks[0]); k++) {
+        double s = bench_xcorr(chunks[k], threads, 7);
+        printf("  chunk %7d%s: %8.3f ms  %7.1f Melem/s\n",
+               chunks[k], chunks[k] == 8192 ? " (default)" : "",
+               s * 1e3, (double)NX1 / s / 1e6);
+    }
+    return 0;
+}
