@@ -37,7 +37,7 @@ pub use crate::util::bench::{black_box, fmt_time, median, median_upper, Bencher,
 
 /// One benchmark case's outcome.
 pub struct BenchResult {
-    /// Stable machine key (`mhd-step`, `diffusion2d`, ...).
+    /// Stable machine key (`mhd-step`, `diffusion2d`, `service-x2`, ...).
     pub name: String,
     /// Problem shape (interior extents, or element count for 1-D).
     pub shape: Vec<usize>,
@@ -48,6 +48,9 @@ pub struct BenchResult {
     pub plan: String,
     /// Whether the plan came from the tuned plan cache.
     pub tuned: bool,
+    /// Case-specific extra keys merged into the JSON record (the service
+    /// cases carry `sessions` / `jobs_per_s` / `scaling_vs_single` here).
+    pub extra: Vec<(String, Json)>,
 }
 
 impl BenchResult {
@@ -69,6 +72,9 @@ impl BenchResult {
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
         obj.insert("plan".into(), Json::str(self.plan.clone()));
         obj.insert("tuned".into(), Json::Bool(self.tuned));
+        for (k, v) in &self.extra {
+            obj.insert(k.clone(), v.clone());
+        }
         Json::Obj(obj)
     }
 }
@@ -101,6 +107,7 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
                 stats,
                 plan: plan.describe(),
                 tuned,
+                extra: Vec::new(),
             });
         };
 
@@ -178,6 +185,10 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
         push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats, &default, false);
     }
 
+    // sharded job service at 1/2/4 concurrent sessions — the concurrent
+    // scaling record the single-gate pool used to make impossible
+    out.extend(crate::coordinator::service::bench_cases(smoke, plans));
+
     out
 }
 
@@ -215,6 +226,7 @@ mod tests {
                 stats: Stats::from_samples(vec![0.5, 0.25, 1.0]),
                 plan: LaunchPlan::default().describe(),
                 tuned: false,
+                extra: Vec::new(),
             },
             BenchResult {
                 name: "xcorr1d".into(),
@@ -223,6 +235,7 @@ mod tests {
                 stats: Stats::from_samples(vec![2e-3]),
                 plan: "rows16 t4 fused chunk8192".into(),
                 tuned: true,
+                extra: vec![("scaling_vs_single".into(), Json::num(1.75))],
             },
         ];
         let j = suite_json(&results, true);
@@ -240,6 +253,9 @@ mod tests {
         assert_eq!(cases[1].req_u64("iters").unwrap(), 1);
         assert_eq!(cases[1].req_str("plan").unwrap(), "rows16 t4 fused chunk8192");
         assert_eq!(cases[1].get("tuned").unwrap().as_bool(), Some(true));
+        // case-specific extras are merged into the record
+        assert_eq!(cases[1].req_f64("scaling_vs_single").unwrap(), 1.75);
+        assert!(cases[0].get("scaling_vs_single").is_none());
     }
 
     #[test]
@@ -294,6 +310,7 @@ mod tests {
             stats: Stats::from_samples(vec![1e-4, 2e-4, 3e-4]),
             plan: LaunchPlan::default().describe(),
             tuned: false,
+            extra: Vec::new(),
         }];
         let path = write_report(&dir, &results, true).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

@@ -7,6 +7,7 @@ pub mod bench;
 pub mod empirical;
 pub mod plans;
 pub mod report;
+pub mod service;
 pub mod sweep;
 pub mod timing;
 pub mod tune;
@@ -16,6 +17,7 @@ pub use autotune::{autotune, TuneResult};
 pub use empirical::{candidate_plans, run_native_tune, tune_native, NativeTuneOutcome};
 pub use plans::{host_fingerprint, PlanCache, PlanEntry};
 pub use report::{AsciiPlot, Table};
+pub use service::{parse_jobs, run_jobs, JobSpec, ServiceReport, SessionResult};
 pub use sweep::Sweep;
 pub use tune::{autotune_cached, tune_batch, PredictionCache, TuneReport};
 pub use verify::{verify_slices, Tolerance, VerifyReport};

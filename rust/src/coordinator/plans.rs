@@ -59,9 +59,14 @@ impl PlanEntry {
         Self::key_of(&self.workload, &self.shape, self.threads, &self.host)
     }
 
-    /// Did tuning pick something other than the default heuristics?
+    /// Did tuning pick something other than the default heuristics? The
+    /// baseline is the default plan *at this entry's tuning budget*
+    /// (`self.threads`) — building it from `self.plan.threads` would make
+    /// a winner that differs only in thread budget compare equal to a
+    /// default constructed with that same budget and always report
+    /// `false` in `plan_cache.json`.
     pub fn differs_from_default(&self) -> bool {
-        self.plan != LaunchPlan::default_for(&self.shape, self.plan.threads)
+        self.plan != LaunchPlan::default_for(&self.shape, self.threads)
     }
 
     pub fn to_json(&self) -> Json {
@@ -258,6 +263,28 @@ mod tests {
         let e = back.lookup("diffusion2d", &[512, 512], 4).unwrap();
         assert_eq!(e, &entry("diffusion2d", 4));
         assert!(e.differs_from_default());
+    }
+
+    #[test]
+    fn differs_from_default_detects_thread_budget_winners() {
+        // Regression: a winner that differs from the default heuristics
+        // ONLY in its thread budget used to report `false` because the
+        // baseline was built from `plan.threads` instead of the entry's
+        // tuning budget `threads`.
+        let mut e = entry("diffusion2d", 4);
+        e.plan = LaunchPlan::default_for(&e.shape, 1); // e.g. a serial-ish winner at budget 4
+        assert_ne!(e.plan.threads, e.threads);
+        assert!(
+            e.differs_from_default(),
+            "thread-budget-only winner must count as differing from the default"
+        );
+        // and a winner identical to the default at its own budget does not
+        let mut same = entry("diffusion2d", 4);
+        same.plan = LaunchPlan::default_for(&same.shape, 4);
+        assert!(!same.differs_from_default());
+        // the flag is what lands in plan_cache.json
+        let j = e.to_json();
+        assert_eq!(j.get("differs_from_default").unwrap().as_bool(), Some(true));
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Batched stencil job service (`stencilax serve`) — the serving layer on
+//! top of the sharded worker pool (DESIGN.md §12).
+//!
+//! A **job** is a `{workload, shape, steps}` request; a **session** is an
+//! admitted job: the workload resolved from the registry, the shape
+//! validated, and the [`LaunchPlan`] fixed by an admission-time
+//! [`PlanCache::lookup`] (tuned plans apply automatically when the cache
+//! has an entry for the session's key). Sessions drain from a queue onto
+//! the pool's shards with work-conserving assignment: one driver thread
+//! per shard, bound to it via [`par::bind_shard`], pops the next job
+//! whenever it goes idle. Each session's native instance (its
+//! [`DoubleBuffer`]-backed grids, steppers, scratch) is built *on the
+//! shard that runs it*, so at most `shards` sessions hold live field
+//! buffers at any moment — the queue itself is the backpressure.
+//!
+//! Because every driver is pinned to its own shard, concurrent sessions
+//! run on disjoint worker sets (cache-disjoint streams, after Casper)
+//! instead of collapsing to serial on a single dispatch gate — the bug
+//! this layer was grown out of (see `util::par`).
+//!
+//! Results stream out as they complete and aggregate into a
+//! machine-readable report (`serve_report.json`, schema
+//! [`SERVE_SCHEMA`]) with per-session [`Stats`] and service-level
+//! throughput (jobs/s, aggregate Melem/s).
+//!
+//! [`DoubleBuffer`]: crate::stencil::exec::DoubleBuffer
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::plans::PlanCache;
+use crate::sim::workload::{self, Workload};
+use crate::stencil::plan::LaunchPlan;
+use crate::util::bench::{fmt_time, Stats};
+use crate::util::json::Json;
+use crate::util::par;
+
+/// Schema tag of a job file (`serve --jobs`).
+pub const JOBS_SCHEMA: &str = "stencilax-jobs/1";
+/// Schema tag of the service report.
+pub const SERVE_SCHEMA: &str = "stencilax-serve/1";
+/// Report file name under the output directory.
+pub const SERVE_REPORT_FILE: &str = "serve_report.json";
+
+/// One job request: step `workload` at interior `shape` for `steps`
+/// iterations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    pub workload: String,
+    pub shape: Vec<usize>,
+    pub steps: usize,
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.as_str())),
+            ("shape", Json::arr(self.shape.iter().map(|&n| Json::num(n as f64)).collect())),
+            ("steps", Json::num(self.steps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let spec = JobSpec {
+            workload: j.req_str("workload")?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            steps: j.req_u64("steps")? as usize,
+        };
+        if spec.steps == 0 {
+            bail!("job {:?}: steps must be >= 1", spec.workload);
+        }
+        if spec.shape.is_empty() || spec.shape.contains(&0) {
+            bail!("job {:?}: shape {:?} has an empty axis", spec.workload, spec.shape);
+        }
+        Ok(spec)
+    }
+}
+
+/// Parse a job file (strict, like every other loader in the crate):
+/// `{"schema": "stencilax-jobs/1", "jobs": [{workload, shape, steps}, ..]}`.
+pub fn parse_jobs(j: &Json) -> Result<Vec<JobSpec>> {
+    let schema = j.req_str("schema")?;
+    if schema != JOBS_SCHEMA {
+        bail!("unsupported job-file schema {schema:?} (want {JOBS_SCHEMA:?})");
+    }
+    let jobs: Vec<JobSpec> = j
+        .req_arr("jobs")?
+        .iter()
+        .map(JobSpec::from_json)
+        .collect::<Result<Vec<_>>>()?;
+    if jobs.is_empty() {
+        bail!("job file contains no jobs");
+    }
+    Ok(jobs)
+}
+
+/// An admitted session: registry workload resolved, shape validated, and
+/// the launch plan fixed. Admission is cheap on purpose — no field buffer
+/// exists until a shard picks the session up.
+pub struct Session {
+    pub id: usize,
+    pub spec: JobSpec,
+    workload: &'static dyn Workload,
+    pub plan: LaunchPlan,
+    /// Whether the plan came from the tuned plan cache.
+    pub tuned: bool,
+}
+
+/// Admit one job: resolve the workload (aliases apply), validate the shape
+/// against [`Workload::supports_shape`], and resolve the launch plan —
+/// the tuned [`PlanCache`] entry for
+/// `(workload, shape, threads_budget, this host)` when one exists, else
+/// [`LaunchPlan::default_for`]. The session's thread budget is capped at
+/// its shard's share so concurrent streams stay cache-disjoint instead of
+/// oversubscribing each other's cores; a tuned plan below the cap runs
+/// exactly as the tuner measured it.
+pub fn admit(
+    id: usize,
+    spec: JobSpec,
+    plans: Option<&PlanCache>,
+    threads_budget: usize,
+) -> Result<Session> {
+    let w = workload::find(&spec.workload).with_context(|| {
+        format!("job {id}: unknown workload {:?} (see `stencilax workloads`)", spec.workload)
+    })?;
+    if !w.supports_shape(&spec.shape) {
+        bail!(
+            "job {id}: workload {} ({}-D) cannot run at shape {:?}",
+            w.name(),
+            w.dims(),
+            spec.shape
+        );
+    }
+    let name = w.name(); // canonical registry name keys the plan cache
+    let (mut plan, tuned) = match plans.and_then(|c| c.lookup(&name, &spec.shape, threads_budget)) {
+        Some(e) => (e.plan, true),
+        None => (LaunchPlan::default_for(&spec.shape, threads_budget), false),
+    };
+    // Cap, never inflate: a tuned winner below the budget (e.g. a serial
+    // winner) stays exactly as measured; 0 (resolve-at-dispatch) and
+    // over-budget plans clamp to the shard's share.
+    if plan.threads == 0 || plan.threads > threads_budget {
+        plan.threads = threads_budget;
+    }
+    Ok(Session { id, spec, workload: w, plan, tuned })
+}
+
+/// One completed session's record.
+pub struct SessionResult {
+    pub id: usize,
+    /// Canonical registry name (aliases resolved at admission).
+    pub workload: String,
+    pub shape: Vec<usize>,
+    pub steps: usize,
+    /// Shard whose driver executed the session.
+    pub shard: usize,
+    /// Compact plan description the session ran under.
+    pub plan: String,
+    pub tuned: bool,
+    pub elems_per_step: f64,
+    /// Per-step timing statistics (the cold-start first step is excluded
+    /// when `steps > 1`, so `stats.iters == steps - 1` for those).
+    pub stats: Stats,
+    /// FNV-1a over the final output's IEEE-754 bit patterns — the
+    /// service-vs-direct bit-parity witness.
+    pub digest_bits: u64,
+}
+
+impl SessionResult {
+    pub fn melem_per_s(&self) -> f64 {
+        self.elems_per_step / self.stats.median_s / 1e6
+    }
+
+    /// One streaming line, printed as each session completes.
+    pub fn describe_line(&self) -> String {
+        format!(
+            "serve job {:>3} {:<12} {:?} shard {} {:>3} steps median {}/step ({:.1} Melem/s{})",
+            self.id,
+            self.workload,
+            self.shape,
+            self.shard,
+            self.steps,
+            fmt_time(self.stats.median_s),
+            self.melem_per_s(),
+            if self.tuned { ", tuned" } else { "" },
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.stats.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("Stats::to_json returns an object"),
+        };
+        obj.insert("id".into(), Json::num(self.id as f64));
+        obj.insert("workload".into(), Json::str(self.workload.clone()));
+        obj.insert(
+            "shape".into(),
+            Json::arr(self.shape.iter().map(|&n| Json::num(n as f64)).collect()),
+        );
+        obj.insert("steps".into(), Json::num(self.steps as f64));
+        obj.insert("shard".into(), Json::num(self.shard as f64));
+        obj.insert("plan".into(), Json::str(self.plan.clone()));
+        obj.insert("tuned".into(), Json::Bool(self.tuned));
+        obj.insert("elems_per_step".into(), Json::num(self.elems_per_step));
+        obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
+        obj.insert("digest_bits".into(), Json::str(format!("{:#018x}", self.digest_bits)));
+        Json::Obj(obj)
+    }
+}
+
+/// The whole batch's outcome.
+pub struct ServiceReport {
+    /// Shards the batch actually ran on (the request clamps to the pool).
+    pub shards: usize,
+    /// Per-session worker-thread budget (`num_threads / shards`, min 1).
+    pub threads_per_shard: usize,
+    /// Wall-clock of the whole batch, admission to last completion.
+    pub wall_s: f64,
+    /// Per-session records, sorted by job id.
+    pub results: Vec<SessionResult>,
+}
+
+impl ServiceReport {
+    pub fn jobs_per_s(&self) -> f64 {
+        self.results.len() as f64 / self.wall_s
+    }
+
+    /// Aggregate service throughput: total elements updated across every
+    /// session and step, over the batch wall-clock.
+    pub fn aggregate_melem_per_s(&self) -> f64 {
+        self.results.iter().map(|r| r.elems_per_step * r.steps as f64).sum::<f64>()
+            / self.wall_s
+            / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SERVE_SCHEMA)),
+            ("shards", Json::num(self.shards as f64)),
+            ("threads_per_shard", Json::num(self.threads_per_shard as f64)),
+            ("jobs", Json::num(self.results.len() as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("jobs_per_s", Json::num(self.jobs_per_s())),
+            ("aggregate_melem_per_s", Json::num(self.aggregate_melem_per_s())),
+            ("sessions", Json::arr(self.results.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Write `serve_report.json` under `out_dir`.
+    pub fn save(&self, out_dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating output dir {out_dir:?}"))?;
+        let path = out_dir.join(SERVE_REPORT_FILE);
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// FNV-1a over the IEEE-754 bit patterns of a slice — the digest both the
+/// service and its parity tests compute, so "bit-identical" is checkable
+/// without shipping whole fields around.
+pub fn fnv_bits(xs: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn run_session(s: &Session, shard: usize) -> SessionResult {
+    // Built here, on the shard that runs it — at most `shards` sessions
+    // hold live buffers at once (the queue is the backpressure).
+    let mut inst =
+        s.workload.native_at(&s.spec.shape).expect("admission validated supports_shape");
+    let mut samples = Vec::with_capacity(s.spec.steps);
+    for _ in 0..s.spec.steps {
+        let t0 = Instant::now();
+        inst.run(&s.plan);
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    // The first step pays one-time costs (lazy shard-worker spawn,
+    // workspace growth); drop its sample so short sessions report
+    // steady-state per-step stats. The step itself still ran — a job's
+    // result is always exactly `steps` state advances — and a 1-step
+    // session keeps its only sample.
+    if samples.len() > 1 {
+        samples.remove(0);
+    }
+    SessionResult {
+        id: s.id,
+        workload: s.workload.name(),
+        shape: s.spec.shape.clone(),
+        steps: s.spec.steps,
+        shard,
+        plan: s.plan.describe(),
+        tuned: s.tuned,
+        elems_per_step: inst.elems(),
+        stats: Stats::from_samples(samples),
+        digest_bits: fnv_bits(&inst.output()),
+    }
+}
+
+/// Run a batch of jobs on `shards` shards, clamped to the pool's shard
+/// count, to the job count (fewer jobs than shards would only fragment
+/// the thread budget), and to `num_threads` (a `STENCILAX_THREADS=1` run
+/// must not step four sessions concurrently just because four shards were
+/// requested); call early in the process for the request to size the
+/// pool. Admission is all-or-nothing: any invalid job fails the batch
+/// before a single step runs. `quiet` suppresses the per-session
+/// streaming lines (the bench harness runs batches in a timing loop).
+pub fn run_jobs(
+    jobs: &[JobSpec],
+    shards: usize,
+    plans: Option<&PlanCache>,
+    quiet: bool,
+) -> Result<ServiceReport> {
+    let shards = par::request_shards(shards.max(1))
+        .min(shards.max(1))
+        .min(jobs.len().max(1))
+        .min(par::num_threads());
+    let threads_per_shard = (par::num_threads() / shards).max(1);
+    let sessions: Vec<Session> = jobs
+        .iter()
+        .enumerate()
+        .map(|(id, spec)| admit(id, spec.clone(), plans, threads_per_shard))
+        .collect::<Result<Vec<_>>>()?;
+    let queue = AtomicUsize::new(0);
+    let results: Mutex<Vec<SessionResult>> = Mutex::new(Vec::with_capacity(sessions.len()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for shard in 0..shards {
+            let (queue, results, sessions) = (&queue, &results, &sessions);
+            scope.spawn(move || {
+                // Pin this driver's dispatches to its shard: sessions on
+                // different shards share no pool workers.
+                let _bind = par::bind_shard(shard);
+                loop {
+                    let i = queue.fetch_add(1, Ordering::Relaxed);
+                    if i >= sessions.len() {
+                        break;
+                    }
+                    let r = run_session(&sessions[i], shard);
+                    if !quiet {
+                        println!("{}", r.describe_line());
+                    }
+                    results.lock().unwrap_or_else(|e| e.into_inner()).push(r);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut results = results.into_inner().unwrap_or_else(|e| e.into_inner());
+    results.sort_by_key(|r| r.id);
+    Ok(ServiceReport { shards, threads_per_shard, wall_s, results })
+}
+
+// ---------------------------------------------------------------------------
+// Service-throughput bench cases (recorded into BENCH_native.json)
+// ---------------------------------------------------------------------------
+
+/// The `stencilax bench` service cases: the same diffusion2d workload
+/// served at 1/2/4 concurrent sessions, one session per shard. `service-x1`
+/// is the single-stream baseline; the x2/x4 cases carry
+/// `scaling_vs_single` (aggregate throughput over the x1 case) so the
+/// snapshot records how far from linear the concurrent scaling lands —
+/// under the old single-gate pool the extra sessions collapsed to serial
+/// and the ratio pinned near 1.
+pub fn bench_cases(
+    smoke: bool,
+    plans: Option<&PlanCache>,
+) -> Vec<crate::coordinator::bench::BenchResult> {
+    use crate::coordinator::bench::BenchResult;
+    use crate::sim::workload::bench_sizes::{pick, DIFFUSION2D_N};
+    use crate::util::bench::{black_box, Bencher};
+
+    let b = if smoke { Bencher::smoke() } else { Bencher::paper() };
+    let n = pick(DIFFUSION2D_N, smoke);
+    let steps = if smoke { 4 } else { 8 };
+    let mut out: Vec<BenchResult> = Vec::new();
+    let mut single_melem = f64::NAN;
+    for sessions in [1usize, 2, 4] {
+        let jobs: Vec<JobSpec> = (0..sessions)
+            .map(|_| JobSpec { workload: "diffusion2d".into(), shape: vec![n, n], steps })
+            .collect();
+        let elems = (sessions * steps * n * n) as f64;
+        let label = format!("service diffusion2d {n}^2 x{sessions} ({steps} steps/job)");
+        // record what the batch ACTUALLY ran (shards can clamp to the
+        // pool, plans can hit the tuned cache), not what was requested
+        let mut last: Option<(usize, usize, bool)> = None;
+        let stats = b.report(&label, || {
+            let rep = run_jobs(&jobs, sessions, plans, true).expect("service bench batch");
+            last = Some((
+                rep.shards,
+                rep.threads_per_shard,
+                rep.results.iter().any(|r| r.tuned),
+            ));
+            black_box(rep.wall_s);
+        });
+        let (shards, budget, tuned) = last.expect("bencher runs the batch at least once");
+        let melem = elems / stats.median_s / 1e6;
+        if sessions == 1 {
+            single_melem = melem;
+        }
+        out.push(BenchResult {
+            name: format!("service-x{sessions}"),
+            shape: vec![n, n],
+            elems,
+            stats,
+            plan: format!("shards{shards} t{budget}"),
+            tuned,
+            extra: vec![
+                ("sessions".into(), Json::num(sessions as f64)),
+                ("steps_per_session".into(), Json::num(steps as f64)),
+                ("jobs_per_s".into(), Json::num(sessions as f64 / stats.median_s)),
+                ("scaling_vs_single".into(), Json::num(melem / single_melem)),
+            ],
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plans::{host_fingerprint, PlanEntry};
+    use crate::stencil::plan::BlockShape;
+
+    fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
+        JobSpec { workload: workload.into(), shape: shape.to_vec(), steps }
+    }
+
+    #[test]
+    fn job_file_roundtrips_and_is_strict() {
+        let jobs = vec![job("diffusion2d", &[64, 64], 4), job("mhd", &[8, 8, 8], 2)];
+        let file = Json::obj(vec![
+            ("schema", Json::str(JOBS_SCHEMA)),
+            ("jobs", Json::arr(jobs.iter().map(|j| j.to_json()).collect())),
+        ]);
+        let back = parse_jobs(&Json::parse(&file.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, jobs);
+
+        let bad_schema = Json::parse(r#"{"schema":"stencilax-jobs/999","jobs":[]}"#).unwrap();
+        assert!(parse_jobs(&bad_schema).is_err());
+        let empty = Json::parse(r#"{"schema":"stencilax-jobs/1","jobs":[]}"#).unwrap();
+        assert!(parse_jobs(&empty).is_err());
+        let zero_steps = Json::parse(
+            r#"{"schema":"stencilax-jobs/1","jobs":[{"workload":"mhd","shape":[8,8,8],"steps":0}]}"#,
+        )
+        .unwrap();
+        assert!(parse_jobs(&zero_steps).is_err());
+        let zero_axis = Json::parse(
+            r#"{"schema":"stencilax-jobs/1","jobs":[{"workload":"diffusion2d","shape":[8,0],"steps":1}]}"#,
+        )
+        .unwrap();
+        assert!(parse_jobs(&zero_axis).is_err());
+    }
+
+    #[test]
+    fn admission_validates_and_resolves_plans() {
+        assert!(admit(0, job("no-such-workload", &[8], 1), None, 2).is_err());
+        assert!(admit(0, job("mhd", &[8, 8, 12], 1), None, 2).is_err(), "non-cubic MHD box");
+        assert!(admit(0, job("diffusion2d", &[8], 1), None, 2).is_err(), "dims mismatch");
+
+        // aliases resolve to the canonical registry name
+        let s = admit(3, job("conv1d", &[4096], 2), None, 2).unwrap();
+        assert_eq!(s.plan, LaunchPlan::default_for(&[4096], 2));
+        assert!(!s.tuned);
+
+        // an admission-time cache hit applies the tuned plan, clamped to
+        // the shard's thread budget
+        let mut cache = PlanCache::new();
+        let tuned_plan =
+            LaunchPlan { block: BlockShape::Rows(16), threads: 2, ..LaunchPlan::default() };
+        cache.insert(PlanEntry {
+            workload: "diffusion2d".into(),
+            shape: vec![64, 64],
+            threads: 2,
+            host: host_fingerprint(),
+            plan: tuned_plan,
+            tuned_melem_per_s: 2.0,
+            default_melem_per_s: 1.0,
+        });
+        let s = admit(0, job("diffusion2d", &[64, 64], 1), Some(&cache), 2).unwrap();
+        assert!(s.tuned);
+        assert_eq!(s.plan.block, BlockShape::Rows(16));
+        assert_eq!(s.plan.threads, 2);
+        // a different shape misses the cache
+        let s = admit(1, job("diffusion2d", &[32, 32], 1), Some(&cache), 2).unwrap();
+        assert!(!s.tuned);
+
+        // a tuned winner BELOW the budget (serial winner) must run exactly
+        // as measured — the budget caps, never inflates
+        let serial_winner =
+            LaunchPlan { block: BlockShape::Serial, threads: 1, ..LaunchPlan::default() };
+        cache.insert(PlanEntry {
+            workload: "mhd".into(),
+            shape: vec![8, 8, 8],
+            threads: 2,
+            host: host_fingerprint(),
+            plan: serial_winner,
+            tuned_melem_per_s: 2.0,
+            default_melem_per_s: 1.0,
+        });
+        let s = admit(0, job("mhd", &[8, 8, 8], 1), Some(&cache), 2).unwrap();
+        assert!(s.tuned);
+        assert_eq!(s.plan, serial_winner, "budget must not inflate a tuned serial winner");
+    }
+
+    #[test]
+    fn batch_covers_every_workload_family() {
+        let jobs = vec![
+            job("conv1d-r3", &[4096], 2),
+            job("diffusion1d", &[2048], 2),
+            job("diffusion2d", &[24, 24], 2),
+            job("diffusion3d", &[10, 10, 10], 2),
+            job("mhd", &[8, 8, 8], 2),
+        ];
+        let rep = run_jobs(&jobs, 2, None, true).unwrap();
+        assert!(rep.shards >= 1 && rep.shards <= 2);
+        assert_eq!(rep.results.len(), jobs.len());
+        for (i, r) in rep.results.iter().enumerate() {
+            assert_eq!(r.id, i, "results sorted by job id");
+            assert_eq!(r.shape, jobs[i].shape);
+            assert!(r.shard < rep.shards);
+            assert!(r.stats.median_s > 0.0, "{}", r.workload);
+            assert!(r.melem_per_s() > 0.0, "{}", r.workload);
+        }
+        assert!(rep.wall_s > 0.0);
+        assert!(rep.jobs_per_s() > 0.0);
+        assert!(rep.aggregate_melem_per_s() > 0.0);
+    }
+
+    #[test]
+    fn identical_jobs_produce_identical_digests() {
+        // two sessions of the same spec run (possibly) on different
+        // shards — plan-invariant bit-identity must hold across them
+        let jobs = vec![job("diffusion2d", &[24, 24], 3), job("diffusion2d", &[24, 24], 3)];
+        let rep = run_jobs(&jobs, 2, None, true).unwrap();
+        assert_eq!(rep.results.len(), 2);
+        assert_eq!(rep.results[0].digest_bits, rep.results[1].digest_bits);
+    }
+
+    #[test]
+    fn report_json_carries_sessions_and_aggregates() {
+        let jobs = vec![job("diffusion2d", &[16, 16], 2)];
+        let rep = run_jobs(&jobs, 1, None, true).unwrap();
+        let j = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.req_str("schema").unwrap(), SERVE_SCHEMA);
+        assert_eq!(j.req_u64("jobs").unwrap(), 1);
+        assert!(j.req_f64("wall_s").unwrap() > 0.0);
+        assert!(j.req_f64("jobs_per_s").unwrap() > 0.0);
+        assert!(j.req_f64("aggregate_melem_per_s").unwrap() > 0.0);
+        let sessions = j.req_arr("sessions").unwrap();
+        assert_eq!(sessions.len(), 1);
+        let s = &sessions[0];
+        assert_eq!(s.req_str("workload").unwrap(), "diffusion2d");
+        assert!(s.req_f64("median_s").unwrap() > 0.0);
+        assert!(s.req_str("digest_bits").unwrap().starts_with("0x"));
+    }
+
+    #[test]
+    fn fnv_bits_is_bit_sensitive() {
+        assert_eq!(fnv_bits(&[1.0, 2.0]), fnv_bits(&[1.0, 2.0]));
+        assert_ne!(fnv_bits(&[1.0, 2.0]), fnv_bits(&[2.0, 1.0]));
+        // distinguishes bit patterns equality would conflate
+        assert_ne!(fnv_bits(&[0.0]), fnv_bits(&[-0.0]));
+        assert_ne!(fnv_bits(&[]), fnv_bits(&[0.0]));
+    }
+}

@@ -16,6 +16,9 @@
 //!   plans                       list the tuned plan cache
 //!   bench   [--smoke]           native-engine suite -> BENCH_native.json
 //!                               (runs under tuned plans when cached)
+//!   serve --jobs <file|-> [--shards N]
+//!                               batched stencil job service on the sharded
+//!                               worker pool -> serve_report.json
 //!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
@@ -121,6 +124,7 @@ fn main() -> Result<()> {
         }
         "plans" => cmd_plans(&cfg)?,
         "bench" => cmd_bench(&cfg, &args)?,
+        "serve" => cmd_serve(&cfg, &args)?,
         "verify" => cmd_verify(&cfg)?,
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -379,6 +383,67 @@ fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the batched stencil job service: admit a job file, drain the
+/// sessions onto pool shards, stream per-session results, and write the
+/// machine-readable `serve_report.json` (see `coordinator::service`).
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    use stencilax::coordinator::service;
+    let src = args.get("jobs").context("serve requires --jobs <file|->")?;
+    let text = if src == "-" {
+        use std::io::Read;
+        let mut s = String::new();
+        std::io::stdin().read_to_string(&mut s).context("reading jobs from stdin")?;
+        s
+    } else {
+        std::fs::read_to_string(src).with_context(|| format!("reading job file {src:?}"))?
+    };
+    let jobs = service::parse_jobs(&Json::parse(&text).context("parsing job file")?)?;
+    let shards = args.get_usize("shards", 2)?;
+    let plans = PlanCache::load_if_exists(&cfg.output_dir)?;
+    println!(
+        "=== stencil job service: {} job(s), {} shard(s) requested, host {} ===",
+        jobs.len(),
+        shards,
+        host_fingerprint(),
+    );
+    match &plans {
+        Some(c) => println!("plan cache: {} tuned plan(s) consulted at admission", c.len()),
+        None => println!("plan cache: none (run `stencilax tune --native --all` to tune)"),
+    }
+    let report = service::run_jobs(&jobs, shards, plans.as_ref(), false)?;
+    let mut t = Table::new(
+        &format!(
+            "Job service — {} session(s) on {} shard(s), {} thread(s) each",
+            report.results.len(),
+            report.shards,
+            report.threads_per_shard
+        ),
+        &["id", "workload", "shape", "steps", "shard", "plan", "median/step", "Melem/s"],
+    );
+    for r in &report.results {
+        t.row(vec![
+            r.id.to_string(),
+            r.workload.clone(),
+            format!("{:?}", r.shape),
+            r.steps.to_string(),
+            r.shard.to_string(),
+            if r.tuned { format!("{} (tuned)", r.plan) } else { r.plan.clone() },
+            format!("{:.3} ms", r.stats.median_s * 1e3),
+            format!("{:.1}", r.melem_per_s()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "aggregate: {:.2} jobs/s, {:.1} Melem/s over {:.3} s wall",
+        report.jobs_per_s(),
+        report.aggregate_melem_per_s(),
+        report.wall_s,
+    );
+    let path = report.save(&cfg.output_dir)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
 /// Cross-check a representative artifact of each kind against the native
 /// engine under the Table B2 tolerance rules.
 fn cmd_verify(cfg: &Config) -> Result<()> {
@@ -498,6 +563,12 @@ SUBCOMMANDS:
                              and write BENCH_native.json under --out;
                              --smoke selects CI-scale sizes, --snapshot also
                              copies the report to ./BENCH_native.json
+  serve --jobs <file|-> [--shards N]
+                             batched stencil job service: admit the job
+                             file ({workload, shape, steps} requests, plan
+                             cache consulted at admission), drain sessions
+                             onto N disjoint pool shards (default 2), and
+                             write serve_report.json under --out
   workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance

@@ -54,6 +54,12 @@ pub trait NativeInstance {
 
     /// Execute one iteration under `plan`.
     fn run(&mut self, plan: &LaunchPlan);
+
+    /// Canonical flattened output of the instance's current state (the
+    /// xcorr output row, a grid's interior, the MHD stacked interior).
+    /// The job service (`coordinator::service`) digests this for its
+    /// service-vs-direct bit-parity guarantees.
+    fn output(&self) -> Vec<f64>;
 }
 
 /// One tunable benchmark of the paper.
@@ -99,6 +105,26 @@ pub trait Workload: Send + Sync {
     /// `None` for model-only workloads with no native path.
     fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
         let _ = smoke;
+        None
+    }
+
+    /// Can [`Self::native_at`] build an instance at this interior shape?
+    /// The job service checks this at admission time, so a bad job fails
+    /// loudly before any buffer is allocated. Kept in lockstep with
+    /// `native_at`: `supports_shape(s)` implies `native_at(s).is_some()`,
+    /// which is why the default is `false` — a model-only workload with
+    /// no native path must not admit jobs it cannot run.
+    fn supports_shape(&self, shape: &[usize]) -> bool {
+        let _ = shape;
+        false
+    }
+
+    /// Build a native-engine instance at an arbitrary (caller-chosen)
+    /// interior shape — the job service's session factory, as
+    /// [`Self::native`] is to the tuner/bench. `None` for model-only
+    /// workloads or unsupported shapes (see [`Self::supports_shape`]).
+    fn native_at(&self, shape: &[usize]) -> Option<Box<dyn NativeInstance>> {
+        let _ = shape;
         None
     }
 }
@@ -167,6 +193,10 @@ impl NativeInstance for XcorrNative {
     fn run(&mut self, plan: &LaunchPlan) {
         conv::xcorr1d_into(plan, &self.fpad, &self.taps, &mut self.out);
     }
+
+    fn output(&self) -> Vec<f64> {
+        self.out.clone()
+    }
 }
 
 /// Prepared double-buffered diffusion stepper.
@@ -202,6 +232,10 @@ impl NativeInstance for DiffusionNative {
 
     fn run(&mut self, plan: &LaunchPlan) {
         self.d.step_buffered_plan(plan, &mut self.field, self.dim, self.dt);
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.field.cur().interior_to_vec()
     }
 }
 
@@ -240,6 +274,10 @@ impl NativeInstance for MhdNative {
 
     fn run(&mut self, plan: &LaunchPlan) {
         self.stepper.substep_plan(plan, &mut self.state, self.dt, 0);
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.state.stacked_interior()
     }
 }
 
@@ -290,8 +328,18 @@ impl Workload for Conv1d {
 
     fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
         // the bench suite's xcorr1d sizes, shared via bench_sizes
-        let n = bench_sizes::pick(bench_sizes::XCORR_N, smoke);
-        Some(Box::new(XcorrNative::new(n, self.radius)))
+        self.native_at(&[bench_sizes::pick(bench_sizes::XCORR_N, smoke)])
+    }
+
+    fn supports_shape(&self, shape: &[usize]) -> bool {
+        matches!(shape, &[n] if n > 0)
+    }
+
+    fn native_at(&self, shape: &[usize]) -> Option<Box<dyn NativeInstance>> {
+        match shape {
+            &[n] if n > 0 => Some(Box::new(XcorrNative::new(n, self.radius))),
+            _ => None,
+        }
     }
 }
 
@@ -330,8 +378,18 @@ impl Workload for Xcorr {
 
     fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
         // 129 taps: smaller n keeps a single measurement sub-second
-        let n = if smoke { 1usize << 18 } else { 1 << 22 };
-        Some(Box::new(XcorrNative::new(n, self.radius)))
+        self.native_at(&[if smoke { 1 << 18 } else { 1 << 22 }])
+    }
+
+    fn supports_shape(&self, shape: &[usize]) -> bool {
+        matches!(shape, &[n] if n > 0)
+    }
+
+    fn native_at(&self, shape: &[usize]) -> Option<Box<dyn NativeInstance>> {
+        match shape {
+            &[n] if n > 0 => Some(Box::new(XcorrNative::new(n, self.radius))),
+            _ => None,
+        }
     }
 }
 
@@ -397,7 +455,18 @@ impl Workload for DiffusionStep {
             2 => vec![bench_sizes::pick(bench_sizes::DIFFUSION2D_N, smoke); 2],
             _ => vec![bench_sizes::pick(bench_sizes::DIFFUSION3D_N, smoke); 3],
         };
-        Some(Box::new(DiffusionNative::new(&shape, self.radius)))
+        self.native_at(&shape)
+    }
+
+    fn supports_shape(&self, shape: &[usize]) -> bool {
+        shape.len() == self.dims && !shape.contains(&0)
+    }
+
+    fn native_at(&self, shape: &[usize]) -> Option<Box<dyn NativeInstance>> {
+        if !self.supports_shape(shape) {
+            return None;
+        }
+        Some(Box::new(DiffusionNative::new(shape, self.radius)))
     }
 }
 
@@ -441,7 +510,20 @@ impl Workload for Mhd {
     }
 
     fn native(&self, smoke: bool) -> Option<Box<dyn NativeInstance>> {
-        Some(Box::new(MhdNative::new(bench_sizes::pick(bench_sizes::MHD_N, smoke))))
+        let n = bench_sizes::pick(bench_sizes::MHD_N, smoke);
+        self.native_at(&[n, n, n])
+    }
+
+    fn supports_shape(&self, shape: &[usize]) -> bool {
+        // the MHD stepper is built for cubic boxes
+        matches!(shape, &[nx, ny, nz] if nx > 0 && nx == ny && ny == nz)
+    }
+
+    fn native_at(&self, shape: &[usize]) -> Option<Box<dyn NativeInstance>> {
+        if !self.supports_shape(shape) {
+            return None;
+        }
+        Some(Box::new(MhdNative::new(shape[0])))
     }
 }
 
@@ -535,6 +617,47 @@ mod tests {
     fn shapes_match_dimensionality() {
         for w in registry() {
             assert_eq!(w.shape().len(), w.dims(), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn native_at_builds_where_supports_shape_says_so() {
+        // lockstep contract the job service's admission relies on
+        let cases: &[(&str, Vec<usize>, bool)] = &[
+            ("conv1d-r3", vec![4096], true),
+            ("conv1d-r3", vec![64, 64], false),
+            ("xcorr", vec![4096], true),
+            ("diffusion1d", vec![512], true),
+            ("diffusion2d", vec![24, 24], true),
+            ("diffusion2d", vec![24], false),
+            ("diffusion2d", vec![24, 0], false),
+            ("diffusion3d", vec![12, 12, 12], true),
+            ("mhd", vec![8, 8, 8], true),
+            ("mhd", vec![8, 8, 12], false), // non-cubic box
+            ("mhd", vec![8, 8], false),
+        ];
+        for (name, shape, ok) in cases {
+            let w = find(name).unwrap();
+            assert_eq!(w.supports_shape(shape), *ok, "{name} {shape:?}");
+            assert_eq!(w.native_at(shape).is_some(), *ok, "{name} {shape:?}");
+            if *ok {
+                assert_eq!(w.native_at(shape).unwrap().shape(), *shape, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn instance_output_tracks_stepping() {
+        for name in ["conv1d-r3", "diffusion2d", "mhd"] {
+            let w = find(name).unwrap();
+            let shape = vec![8usize; w.dims()];
+            let mut inst = w.native_at(&shape).expect(name);
+            let before = inst.output();
+            assert!(!before.is_empty(), "{name}");
+            inst.run(&LaunchPlan::default_for(&shape, 2));
+            let after = inst.output();
+            assert_eq!(before.len(), after.len(), "{name}");
+            assert_ne!(before, after, "{name}: stepping must change the output");
         }
     }
 

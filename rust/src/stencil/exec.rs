@@ -9,8 +9,11 @@
 //! buffers. This module provides all three:
 //!
 //! * [`par_rows`] — (j, k)-tile-blocked decomposition over x-contiguous
-//!   interior rows, dispatched on the persistent
-//!   [`crate::util::par::pool`]. Blocks are runs of consecutive rows, so a
+//!   interior rows, dispatched on the persistent *sharded*
+//!   [`crate::util::par::pool`]: a dispatch takes the caller's bound shard
+//!   (multi-tenant sessions, see `coordinator::service`) or the first free
+//!   one, so concurrent steppers run on disjoint worker sets instead of
+//!   collapsing to serial. Blocks are runs of consecutive rows, so a
 //!   thread sweeping its block reuses the neighbour rows it just loaded
 //!   (the y/z halo of radius up to 8 stays cache-resident).
 //! * [`Workspace`] — per-thread scratch rows, grown once and reused; after
@@ -96,9 +99,11 @@ pub fn plan_blocks(rows: usize, threads: usize) -> (usize, usize) {
 /// is called exactly once per row, with rows grouped into consecutive
 /// blocks per [`LaunchPlan::blocks`]. Honours the plan's thread budget
 /// (0 = `STENCILAX_THREADS` / machine); serial runs never touch the pool.
-/// Dispatch allocates nothing under the default
-/// [`WorkspaceStrategy::ThreadLocal`] (workspaces grow once per thread on
-/// warmup).
+/// The dispatch lands on the calling thread's bound pool shard (or the
+/// first free one), so concurrent sweeps — two steppers, a tuner probe
+/// overlapping a bench — each get their own worker set. Dispatch allocates
+/// nothing under the default [`WorkspaceStrategy::ThreadLocal`]
+/// (workspaces grow once per thread on warmup).
 pub fn par_rows_plan<F: Fn(usize, usize, &mut Workspace) + Sync>(
     plan: &LaunchPlan,
     ny: usize,

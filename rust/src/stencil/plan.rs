@@ -188,14 +188,25 @@ impl LaunchPlan {
 
     /// Inverse of [`Self::to_json`] (strict: unknown shapes are errors, so
     /// a stale or hand-edited plan cache fails loudly, not silently).
+    /// Zero block factors (`oversubscribe:0`, `rows:0`) are rejected too:
+    /// no tuner emits them, so one in a cache means a hand edit that would
+    /// otherwise be silently papered over by the dispatch-time clamps.
     pub fn from_json(j: &Json) -> Result<LaunchPlan> {
         let block_s = j.req_str("block")?;
         let block = if block_s == "serial" {
             BlockShape::Serial
         } else if let Some(v) = block_s.strip_prefix("oversubscribe:") {
-            BlockShape::Oversubscribe(v.parse().context("oversubscribe factor")?)
+            let f: usize = v.parse().context("oversubscribe factor")?;
+            if f == 0 {
+                bail!("oversubscribe factor must be >= 1 (got {block_s:?})");
+            }
+            BlockShape::Oversubscribe(f)
         } else if let Some(v) = block_s.strip_prefix("rows:") {
-            BlockShape::Rows(v.parse().context("rows per block")?)
+            let b: usize = v.parse().context("rows per block")?;
+            if b == 0 {
+                bail!("rows per block must be >= 1 (got {block_s:?})");
+            }
+            BlockShape::Rows(b)
         } else {
             bail!("unknown block shape {block_s:?}");
         };
@@ -301,6 +312,28 @@ mod tests {
         )
         .unwrap();
         assert!(LaunchPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_zero_block_factors() {
+        // satellite fix: a hand-edited cache with a zero block factor must
+        // fail loudly in the strict loader, not be clamped into a plan no
+        // tuner ever emitted
+        for block in ["oversubscribe:0", "rows:0"] {
+            let j = Json::parse(&format!(
+                r#"{{"block":"{block}","threads":1,"fused":true,"chunk":64,"workspace":"thread-local"}}"#,
+            ))
+            .unwrap();
+            assert!(LaunchPlan::from_json(&j).is_err(), "{block} must be rejected");
+        }
+        // the well-formed factors still parse
+        for block in ["oversubscribe:1", "rows:1"] {
+            let j = Json::parse(&format!(
+                r#"{{"block":"{block}","threads":1,"fused":true,"chunk":64,"workspace":"thread-local"}}"#,
+            ))
+            .unwrap();
+            LaunchPlan::from_json(&j).unwrap();
+        }
     }
 
     #[test]

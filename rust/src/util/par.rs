@@ -5,16 +5,40 @@
 //! * [`par_map`] — scoped-thread fork/join for cold paths that want a
 //!   `Vec` of results (tuner sweeps, figure harness). Spawns threads per
 //!   call, so it allocates.
-//! * [`pool`] / [`ThreadPool::run`] — a persistent worker pool whose
-//!   dispatch performs **zero heap allocation**: the steady-state stencil
-//!   time loop ([`crate::stencil::exec`]) runs on it. Workers park on a
-//!   condvar between jobs and steal items off a shared atomic counter, so
-//!   uneven per-item cost (e.g. pruned stencil rows) balances.
+//! * [`pool`] / [`ThreadPool::run`] — a persistent *sharded* worker pool
+//!   whose dispatch performs **zero heap allocation**: the steady-state
+//!   stencil time loop ([`crate::stencil::exec`]) runs on it. Workers park
+//!   on a condvar between jobs and steal items off a shared atomic
+//!   counter, so uneven per-item cost (e.g. pruned stencil rows) balances.
 //!
-//! Both honour `STENCILAX_THREADS` (read per call via [`num_threads`]).
+//! # Shards
+//!
+//! The pool is partitioned into disjoint **shards**: each shard owns its
+//! own worker set, job slot, and steal counter, so a dispatch on one shard
+//! never contends with a dispatch on another. Historically the pool had a
+//! single dispatch gate and a second concurrent `run()` — two steppers
+//! stepping at once, a tuner probe overlapping a bench — hit `try_lock`
+//! `WouldBlock` and silently degraded to inline serial execution. Now an
+//! unbound [`ThreadPool::run`] probes shards starting at shard 0 and
+//! dispatches on the first free one, so concurrent top-level dispatches
+//! land on disjoint shards and *both* run multi-threaded; the old global
+//! API is therefore "shard 0 plus failover". Inline serial execution
+//! remains the final fallback when every probed shard is busy (e.g. a
+//! nested `run()` from inside a job at full saturation), which is what
+//! keeps the pool deadlock-free.
+//!
+//! Multi-tenant callers (the batched job service,
+//! `coordinator::service`) pin a thread to one shard with [`bind_shard`]:
+//! bound dispatches use only that shard, keeping concurrent stencil
+//! streams cache-disjoint instead of interleaved on shared workers.
+//!
+//! Both tiers honour `STENCILAX_THREADS` (read per call via
+//! [`num_threads`]); the global pool's shard count honours
+//! `STENCILAX_SHARDS` (default [`DEFAULT_SHARDS`]).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 
 /// Number of worker threads: `STENCILAX_THREADS` or the machine parallelism.
 pub fn num_threads() -> usize {
@@ -70,13 +94,13 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
 }
 
 // ---------------------------------------------------------------------------
-// Persistent worker pool with allocation-free dispatch
+// Persistent sharded worker pool with allocation-free dispatch
 // ---------------------------------------------------------------------------
 
 /// Type-erased borrowed job. The pointee lives on the dispatching caller's
-/// stack; [`ThreadPool::run`] blocks until every worker has left the job
-/// before returning, which is what makes the lifetime erasure sound (the
-/// same argument as `std::thread::scope`).
+/// stack; a dispatch blocks until every worker has left the job before
+/// returning, which is what makes the lifetime erasure sound (the same
+/// argument as `std::thread::scope`).
 type JobRef = &'static (dyn Fn(usize) + Sync);
 
 struct Slot {
@@ -110,73 +134,90 @@ fn wait_on<'a>(cv: &Condvar, guard: MutexGuard<'a, Slot>) -> MutexGuard<'a, Slot
     cv.wait(guard).unwrap_or_else(|e| e.into_inner())
 }
 
-/// Persistent worker pool. One process-wide instance lives behind [`pool`];
-/// dedicated instances exist only in tests.
-pub struct ThreadPool {
+/// One pool shard: a private worker set, job slot, and steal counter.
+/// Dispatches on different shards share nothing but the process.
+struct Shard {
     shared: Arc<Shared>,
-    workers: usize,
-    /// Serializes dispatches. `try_lock` failure (another dispatch already
-    /// in flight, including a nested call from inside a job) falls back to
-    /// inline serial execution, so the pool can never deadlock.
+    /// Serializes dispatches *on this shard only*. `try_lock` failure
+    /// (another dispatch already in flight here, including a nested call
+    /// from inside a job) makes the caller probe the next shard — or run
+    /// inline when no shard is free — so the pool can never deadlock.
     gate: Mutex<()>,
+    /// Upper bound on this shard's worker threads.
+    max_workers: usize,
+    /// Workers spawned so far (ids `0..spawned`, contiguous). Demand
+    /// driven: a dispatch spawns only the workers it will actually use,
+    /// so unused shards (and fully serial runs) never cost a thread, and
+    /// a shard serving budget-capped tenants never spawns its full
+    /// complement. Mutated only under `gate`, but kept in a Mutex so the
+    /// invariant doesn't rest on that.
+    spawned: Mutex<usize>,
+    index: usize,
 }
 
-impl ThreadPool {
-    /// Spawn a pool with `workers` parked worker threads.
-    pub fn new(workers: usize) -> Self {
-        let shared = Arc::new(Shared {
-            slot: Mutex::new(Slot {
-                epoch: 0,
-                job: None,
-                n_items: 0,
-                participants: 0,
-                running: 0,
+impl Shard {
+    fn new(index: usize, workers: usize) -> Shard {
+        Shard {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot {
+                    epoch: 0,
+                    job: None,
+                    n_items: 0,
+                    participants: 0,
+                    running: 0,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+                next: AtomicUsize::new(0),
+                panicked: AtomicBool::new(false),
             }),
-            work: Condvar::new(),
-            done: Condvar::new(),
-            next: AtomicUsize::new(0),
-            panicked: AtomicBool::new(false),
-        });
-        for id in 0..workers {
-            let sh = Arc::clone(&shared);
-            std::thread::Builder::new()
-                .name(format!("stencilax-pool-{id}"))
-                .spawn(move || worker_loop(&sh, id))
-                .expect("spawning pool worker");
+            gate: Mutex::new(()),
+            max_workers: workers,
+            spawned: Mutex::new(0),
+            index,
         }
-        Self { shared, workers, gate: Mutex::new(()) }
     }
 
-    /// Run `f(i)` for every `i in 0..n`, work-stealing across up to
-    /// `threads` threads (the caller participates as one of them). Performs
-    /// no heap allocation. Falls back to inline serial execution when
-    /// `threads <= 1`, `n <= 1`, or another dispatch is already in flight.
-    pub fn run(&self, n: usize, threads: usize, f: &(dyn Fn(usize) + Sync)) {
-        if n == 0 {
-            return;
+    /// Make at least `want` workers exist (clamped to `max_workers`);
+    /// returns how many exist afterwards.
+    fn ensure_workers(&self, want: usize) -> usize {
+        let want = want.min(self.max_workers);
+        let mut n = self.spawned.lock().unwrap_or_else(|e| e.into_inner());
+        while *n < want {
+            let sh = Arc::clone(&self.shared);
+            let id = *n;
+            std::thread::Builder::new()
+                .name(format!("stencilax-pool-{}-{id}", self.index))
+                .spawn(move || worker_loop(&sh, id))
+                .expect("spawning pool worker");
+            *n += 1;
         }
-        let parts = threads.min(self.workers + 1).min(n);
-        if parts <= 1 {
+        *n
+    }
+
+    /// Dispatch with this shard's gate already held. Returns the number of
+    /// participating threads (caller included).
+    fn dispatch(
+        &self,
+        _gate: MutexGuard<'_, ()>,
+        n: usize,
+        threads: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> usize {
+        let want = threads.min(self.max_workers + 1).min(n);
+        if want <= 1 {
             for i in 0..n {
                 f(i);
             }
-            return;
+            return 1;
         }
-        let _gate = match self.gate.try_lock() {
-            Ok(g) => g,
-            // a caller that panicked mid-job poisons the gate; the pool
-            // state itself is consistent (its guard waited), so reclaim it
-            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
-            Err(std::sync::TryLockError::WouldBlock) => {
-                for i in 0..n {
-                    f(i);
-                }
-                return;
-            }
-        };
-        // SAFETY: the reference escapes only to pool workers, and the
-        // DispatchGuard below blocks (even on unwind) until `running == 0`,
-        // i.e. until no worker can touch it any more.
+        // `want - 1 <= max_workers`, so ensure_workers returns at least
+        // `want - 1`; the min caps participation at the thread budget when
+        // earlier, wider dispatches already spawned more workers.
+        let parts = want.min(self.ensure_workers(want - 1) + 1);
+        // SAFETY: the reference escapes only to this shard's workers, and
+        // the DispatchGuard below blocks (even on unwind) until
+        // `running == 0`, i.e. until no worker can touch it any more.
         let job: JobRef =
             unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), JobRef>(f) };
         self.shared.panicked.store(false, Ordering::Relaxed);
@@ -202,6 +243,110 @@ impl ThreadPool {
         if self.shared.panicked.load(Ordering::Relaxed) {
             panic!("pool worker panicked");
         }
+        parts
+    }
+}
+
+/// Persistent sharded worker pool. One process-wide instance lives behind
+/// [`pool`]; dedicated instances exist only in tests.
+pub struct ThreadPool {
+    shards: Vec<Shard>,
+}
+
+impl ThreadPool {
+    /// Spawn a single-shard pool with `workers` worker threads — the
+    /// historical constructor, equivalent to `sharded(1, workers)`.
+    pub fn new(workers: usize) -> Self {
+        Self::sharded(1, workers)
+    }
+
+    /// A pool with `shards` disjoint shards of `workers_per_shard` worker
+    /// threads each. Workers spawn lazily on each shard's first parallel
+    /// dispatch.
+    pub fn sharded(shards: usize, workers_per_shard: usize) -> Self {
+        Self {
+            shards: (0..shards.max(1)).map(|i| Shard::new(i, workers_per_shard)).collect(),
+        }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Worker-thread capacity per shard (every shard is sized
+    /// identically; actual workers spawn on demand up to this bound).
+    pub fn workers_per_shard(&self) -> usize {
+        self.shards[0].max_workers
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, work-stealing across up to
+    /// `threads` threads (the caller participates as one of them). Performs
+    /// no heap allocation. Returns the number of threads that participated
+    /// in the dispatch (1 when it ran inline serial).
+    ///
+    /// Shard routing: a thread bound via [`bind_shard`] dispatches only on
+    /// its own shard; an unbound caller probes shards starting at 0 and
+    /// takes the first free one, so concurrent dispatches spread across
+    /// shards instead of collapsing to serial. Falls back to inline serial
+    /// execution when `threads <= 1`, `n <= 1`, or every probed shard is
+    /// already mid-dispatch.
+    pub fn run(&self, n: usize, threads: usize, f: &(dyn Fn(usize) + Sync)) -> usize {
+        match bound_shard() {
+            Some(s) => self.run_probing(s % self.shards.len(), 1, n, threads, f),
+            None => self.run_probing(0, self.shards.len(), n, threads, f),
+        }
+    }
+
+    /// [`Self::run`] pinned to one shard (index taken modulo the shard
+    /// count): never touches any other shard's workers, running inline
+    /// serial instead when that shard is busy. Multi-tenant callers use
+    /// this (via [`bind_shard`]) to keep concurrent streams cache-disjoint.
+    pub fn run_on(
+        &self,
+        shard: usize,
+        n: usize,
+        threads: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> usize {
+        self.run_probing(shard % self.shards.len(), 1, n, threads, f)
+    }
+
+    fn run_probing(
+        &self,
+        start: usize,
+        probes: usize,
+        n: usize,
+        threads: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        if threads <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return 1;
+        }
+        for k in 0..probes {
+            let shard = &self.shards[(start + k) % self.shards.len()];
+            let gate = match shard.gate.try_lock() {
+                Ok(g) => g,
+                // a caller that panicked mid-job poisons the gate; the
+                // shard state itself is consistent (its guard waited), so
+                // reclaim it
+                Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(TryLockError::WouldBlock) => continue,
+            };
+            return shard.dispatch(gate, n, threads, f);
+        }
+        // every probed shard is mid-dispatch (nested call or full
+        // saturation): inline serial, so the pool can never deadlock
+        for i in 0..n {
+            f(i);
+        }
+        1
     }
 }
 
@@ -257,16 +402,81 @@ fn worker_loop(shared: &Shared, id: usize) {
     }
 }
 
-/// The process-wide pool. Sized for the machine but never below 3 workers,
-/// so `STENCILAX_THREADS=4` is honoured even on small CI runners (idle
-/// workers just park on the condvar). Created lazily: a serial run
-/// (`STENCILAX_THREADS=1`) never spawns it.
+// ---------------------------------------------------------------------------
+// Shard binding (multi-tenant cache disjointness)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static BOUND_SHARD: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// RAII guard restoring the previous shard binding on drop.
+pub struct ShardBinding {
+    prev: Option<usize>,
+}
+
+impl Drop for ShardBinding {
+    fn drop(&mut self) {
+        BOUND_SHARD.with(|c| c.set(self.prev));
+    }
+}
+
+/// Pin this thread's pool dispatches to one shard (index taken modulo the
+/// pool's shard count at dispatch time). A bound dispatch probes only its
+/// own shard — if that shard is busy it runs inline instead of spilling
+/// onto other shards, preserving the cache-disjointness the binding exists
+/// for. Returns a guard that restores the previous binding when dropped.
+pub fn bind_shard(shard: usize) -> ShardBinding {
+    ShardBinding { prev: BOUND_SHARD.with(|c| c.replace(Some(shard))) }
+}
+
+/// This thread's shard binding, if any (see [`bind_shard`]).
+pub fn bound_shard() -> Option<usize> {
+    BOUND_SHARD.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// The process-wide pool
+// ---------------------------------------------------------------------------
+
+/// Default shard count of the process-wide pool (`STENCILAX_SHARDS`
+/// overrides). Sized for the job service's bench matrix (1/2/4 concurrent
+/// sessions); idle shards spawn no threads, so over-provisioning is free.
+pub const DEFAULT_SHARDS: usize = 4;
+
+fn env_shards() -> Option<usize> {
+    std::env::var("STENCILAX_SHARDS").ok()?.parse::<usize>().ok().map(|n| n.max(1))
+}
+
+static POOL: OnceLock<ThreadPool> = OnceLock::new();
+
+fn build_pool(min_shards: usize) -> ThreadPool {
+    // An explicit STENCILAX_SHARDS always wins (it is the operator's
+    // override, including `=1` to force the historical single-shard
+    // behavior); only the default yields to a larger request. Each shard
+    // is capped like the historical single pool: never below 3 workers,
+    // so `STENCILAX_THREADS=4` is honoured even on small CI runners
+    // (workers spawn on demand, so unused capacity costs nothing).
+    let shards = env_shards().unwrap_or_else(|| DEFAULT_SHARDS.max(min_shards));
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    ThreadPool::sharded(shards, avail.max(4) - 1)
+}
+
+/// The process-wide pool: [`DEFAULT_SHARDS`] shards (or
+/// `STENCILAX_SHARDS`), each sized for the machine. Created lazily, and
+/// each shard's workers spawn only on its first parallel dispatch: a
+/// serial run (`STENCILAX_THREADS=1`) never spawns a thread.
 pub fn pool() -> &'static ThreadPool {
-    static POOL: OnceLock<ThreadPool> = OnceLock::new();
-    POOL.get_or_init(|| {
-        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(avail.max(4) - 1)
-    })
+    POOL.get_or_init(|| build_pool(1))
+}
+
+/// Ask the process-wide pool for at least `n` shards and return the
+/// actual shard count. Only effective before the pool's first use — once
+/// created, the shard count is fixed — and an explicit `STENCILAX_SHARDS`
+/// setting always beats the request; callers must clamp to the returned
+/// value (the job service does).
+pub fn request_shards(n: usize) -> usize {
+    POOL.get_or_init(|| build_pool(n.max(1))).shards()
 }
 
 #[cfg(test)]
@@ -341,16 +551,35 @@ mod tests {
     }
 
     #[test]
-    fn pool_nested_dispatch_falls_back_inline() {
+    fn pool_nested_dispatch_never_deadlocks() {
         use std::sync::atomic::AtomicU64;
         let sum = AtomicU64::new(0);
-        // nested run() from inside a job must not deadlock
+        // nested run() from inside a job lands on a free shard (or runs
+        // inline at full saturation) — it must never deadlock
         pool().run(8, 4, &|_| {
             pool().run(8, 4, &|j| {
                 sum.fetch_add(j as u64, Ordering::Relaxed);
             });
         });
         assert_eq!(sum.load(Ordering::Relaxed), 8 * 28);
+    }
+
+    #[test]
+    fn single_shard_nested_dispatch_runs_inline() {
+        use std::sync::atomic::AtomicU64;
+        let p = ThreadPool::new(3);
+        let sum = AtomicU64::new(0);
+        let inner_parts = AtomicUsize::new(usize::MAX);
+        p.run(4, 4, &|_| {
+            let parts = p.run(8, 4, &|j| {
+                sum.fetch_add(j as u64, Ordering::Relaxed);
+            });
+            inner_parts.store(parts, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4 * 28);
+        // the single shard's gate was held by the outer dispatch, so the
+        // nested one must have reported inline serial execution
+        assert_eq!(inner_parts.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -362,5 +591,94 @@ mod tests {
                 panic!("job 37 panicked");
             }
         });
+    }
+
+    #[test]
+    fn concurrent_dispatches_land_on_disjoint_shards() {
+        // The tentpole regression: two OS threads dispatching concurrently
+        // must BOTH execute multi-threaded. The old single-gate pool made
+        // the second one silently collapse to inline serial.
+        use std::collections::HashSet;
+        use std::sync::Barrier;
+        let p = ThreadPool::sharded(2, 3);
+        let go = Barrier::new(2);
+        let run_one = |p: &ThreadPool| {
+            let ids = Mutex::new(HashSet::new());
+            go.wait();
+            let parts = p.run(32, 4, &|_i| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            });
+            (parts, ids.into_inner().unwrap().len())
+        };
+        let (a, b) = std::thread::scope(|s| {
+            let ha = s.spawn(|| run_one(&p));
+            let hb = s.spawn(|| run_one(&p));
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        for (tag, (parts, distinct)) in [("first", a), ("second", b)] {
+            assert!(parts > 1, "{tag} dispatch planned {parts} participant(s): serial collapse");
+            assert!(distinct > 1, "{tag} dispatch ran on {distinct} thread(s): serial collapse");
+        }
+    }
+
+    #[test]
+    fn run_on_pins_to_one_shard() {
+        use std::time::Duration;
+        let p = ThreadPool::sharded(2, 3);
+        let started = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let holder = s.spawn(|| {
+                p.run_on(0, 16, 4, &|_| {
+                    started.store(true, Ordering::Release);
+                    std::thread::sleep(Duration::from_millis(2));
+                })
+            });
+            while !started.load(Ordering::Acquire) {
+                std::hint::spin_loop();
+            }
+            // shard 0 is mid-dispatch: a pinned dispatch must fall back to
+            // inline serial (1 participant), never spill onto shard 1 ...
+            assert_eq!(p.run_on(0, 8, 4, &|_| {}), 1);
+            // ... while pinning to the free shard runs parallel
+            assert!(p.run_on(1, 8, 4, &|_| {}) > 1);
+            assert!(holder.join().unwrap() > 1);
+        });
+    }
+
+    #[test]
+    fn bind_shard_routes_and_restores() {
+        assert_eq!(bound_shard(), None);
+        {
+            let _outer = bind_shard(1);
+            assert_eq!(bound_shard(), Some(1));
+            {
+                let _inner = bind_shard(0);
+                assert_eq!(bound_shard(), Some(0));
+            }
+            assert_eq!(bound_shard(), Some(1));
+        }
+        assert_eq!(bound_shard(), None);
+        // a bound run still executes every item exactly once
+        use std::sync::atomic::AtomicU64;
+        let p = ThreadPool::sharded(2, 3);
+        let _bind = bind_shard(1);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        let parts = p.run(100, 4, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(parts > 1);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn sharded_pool_reports_shape() {
+        let p = ThreadPool::sharded(3, 2);
+        assert_eq!(p.shards(), 3);
+        assert_eq!(p.workers_per_shard(), 2);
+        // degenerate shard counts clamp to one shard
+        assert_eq!(ThreadPool::sharded(0, 2).shards(), 1);
     }
 }

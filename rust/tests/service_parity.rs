@@ -1,0 +1,112 @@
+//! Tentpole regressions for the sharded pool + batched job service
+//! (ISSUE 4): (1) two OS threads dispatching `pool().run` concurrently
+//! must BOTH execute multi-threaded — the old single-gate pool silently
+//! collapsed the second dispatch to inline serial; (2) a service session's
+//! stepped result must be bit-identical to the same workload stepped
+//! directly through `Diffusion::step_into_plan`-family APIs.
+
+use std::collections::HashSet;
+use std::sync::{Barrier, Mutex};
+
+use stencilax::coordinator::service::{self, JobSpec};
+use stencilax::stencil::diffusion::Diffusion;
+use stencilax::stencil::exec::DoubleBuffer;
+use stencilax::stencil::grid::{Boundary, Grid};
+use stencilax::stencil::plan::LaunchPlan;
+use stencilax::util::par;
+
+/// The tests in this binary share the process-wide pool, and the
+/// concurrency regression needs two shards free at the same instant —
+/// serialize them so a sibling test's bound drivers can't occupy shards
+/// mid-assertion.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+#[test]
+fn concurrent_global_dispatches_both_run_multithreaded() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    if par::pool().shards() < 2 {
+        // STENCILAX_SHARDS=1 makes collapse the configured behavior;
+        // the regression is only meaningful with >= 2 shards
+        eprintln!("skipping: pool has {} shard(s)", par::pool().shards());
+        return;
+    }
+    // Pin the regression on the *global* pool, exactly as the engine hot
+    // paths reach it. Per-item sleeps keep both dispatches in flight long
+    // enough that the parked workers of each shard provably join.
+    let go = Barrier::new(2);
+    let run_one = || {
+        let ids = Mutex::new(HashSet::new());
+        go.wait();
+        let parts = par::pool().run(32, 4, &|_i| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        (parts, ids.into_inner().unwrap().len())
+    };
+    let (a, b) = std::thread::scope(|s| {
+        let ha = s.spawn(|| run_one());
+        let hb = s.spawn(|| run_one());
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    for (tag, (parts, distinct)) in [("first", a), ("second", b)] {
+        assert!(
+            parts > 1,
+            "{tag} concurrent dispatch planned {parts} participant(s) — \
+the old gate fallback made it serial"
+        );
+        assert!(
+            distinct > 1,
+            "{tag} concurrent dispatch executed on {distinct} thread(s) — \
+the old gate fallback made it serial"
+        );
+    }
+}
+
+#[test]
+fn service_session_is_bit_identical_to_direct_stepping() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (n, steps) = (40usize, 5usize);
+    let jobs = vec![JobSpec { workload: "diffusion2d".into(), shape: vec![n, n], steps }];
+    let report = service::run_jobs(&jobs, 2, None, true).unwrap();
+    assert_eq!(report.results.len(), 1);
+    let served = &report.results[0];
+
+    // The direct path: the same instance construction the service's
+    // native_at performs (seed pattern included), stepped through the
+    // public plan-honoring stepper under the very plan the service
+    // resolved at admission.
+    let plan = LaunchPlan::default_for(&[n, n], report.threads_per_shard);
+    assert_eq!(served.plan, plan.describe(), "service must run the admission-resolved plan");
+    let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n], 3, |i, j, k| {
+        ((i * 31 + j * 17 + k * 7) % 13) as f64
+    }));
+    let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
+    let dt = d.stable_dt(2);
+    for _ in 0..steps {
+        d.step_buffered_plan(&plan, &mut field, 2, dt);
+    }
+    let direct = service::fnv_bits(&field.cur().interior_to_vec());
+    assert_eq!(
+        served.digest_bits, direct,
+        "service-stepped field diverged bitwise from direct stepping"
+    );
+}
+
+#[test]
+fn service_saturates_past_its_shard_count_without_loss() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // more jobs than shards: the queue drains work-conservingly and every
+    // job still completes exactly once
+    let jobs: Vec<JobSpec> = (0..5)
+        .map(|_| JobSpec { workload: "diffusion2d".into(), shape: vec![20, 20], steps: 2 })
+        .collect();
+    let report = service::run_jobs(&jobs, 2, None, true).unwrap();
+    assert_eq!(report.results.len(), 5);
+    let ids: Vec<usize> = report.results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    let shards_used: HashSet<usize> = report.results.iter().map(|r| r.shard).collect();
+    assert!(!shards_used.is_empty() && shards_used.len() <= report.shards);
+    // identical specs: every session's result is bit-identical
+    let digests: HashSet<u64> = report.results.iter().map(|r| r.digest_bits).collect();
+    assert_eq!(digests.len(), 1, "identical jobs must produce identical bits on every shard");
+}

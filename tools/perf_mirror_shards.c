@@ -1,0 +1,199 @@
+/* Structural perf mirror of ISSUE 4's concurrent-dispatch fix.
+ *
+ * Mirrors util/par.rs's persistent pool in its two generations:
+ *
+ *   gate    — one global dispatch gate; a second concurrent dispatch hits
+ *             trylock, fails, and silently degrades to inline serial
+ *             execution (the seed bug).
+ *   sharded — S disjoint shards (worker set + job slot + steal counter
+ *             each); session s pins to shard s % S, so concurrent
+ *             dispatches never contend and all run multi-threaded.
+ *
+ * The workload is the engine's row-blocked diffusion2d sweep (radius-3
+ * star, 4-blocks-per-thread decomposition). Each "session" steps its own
+ * grid STEPS times while 1/2/4 sessions run concurrently; we report
+ * per-session wall times, the fraction of dispatches that collapsed to
+ * serial, and aggregate Melem/s. Numbers feed EXPERIMENTS.md §Perf/L3-10;
+ * the Rust engine reproduces the same dispatch structure, so the
+ * *relative* gate-vs-sharded behavior carries over even though absolute
+ * times do not.
+ *
+ * gcc -O3 -march=native -pthread perf_mirror_shards.c -o perf_mirror_shards -lm
+ */
+#define _GNU_SOURCE
+#include <math.h>
+#include <pthread.h>
+#include <stdatomic.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+#include <unistd.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + 1e-9 * ts.tv_nsec;
+}
+
+/* ---------------- pool shard: trylock gate + atomic steal counter ------ */
+typedef void (*item_fn)(int i, void *ctx);
+typedef struct {
+    pthread_mutex_t gate;
+    atomic_int next;
+    int n;
+    item_fn f;
+    void *ctx;
+} shard_t;
+
+static void shard_init(shard_t *s) {
+    pthread_mutex_init(&s->gate, NULL);
+    atomic_init(&s->next, 0);
+}
+
+static void *shard_worker(void *arg) {
+    shard_t *s = (shard_t *)arg;
+    for (;;) {
+        int i = atomic_fetch_add(&s->next, 1);
+        if (i >= s->n) break;
+        s->f(i, s->ctx);
+    }
+    return NULL;
+}
+
+/* Dispatch on one shard whose gate the caller already holds. The real
+ * pool parks persistent workers on a condvar; spawning per dispatch only
+ * adds a constant cost to both pools being compared. Returns participant
+ * count. */
+static int shard_dispatch(shard_t *s, int n, int threads, item_fn f, void *ctx) {
+    s->n = n; s->f = f; s->ctx = ctx;
+    atomic_store(&s->next, 0);
+    pthread_t th[16];
+    int nw = threads - 1; if (nw > 16) nw = 16;
+    for (int w = 0; w < nw; w++) pthread_create(&th[w], NULL, shard_worker, s);
+    shard_worker(s);
+    for (int w = 0; w < nw; w++) pthread_join(th[w], NULL);
+    return nw + 1;
+}
+
+/* gate pool: ONE shard; busy gate => inline serial (seed behavior).
+ * sharded pool: session pins its own shard => gate never contested.
+ * Returns participants (1 == collapsed serial). */
+static int pool_run(shard_t *shards, int nshards, int pin, int n, int threads,
+                    item_fn f, void *ctx) {
+    shard_t *s = &shards[pin % nshards];
+    if (threads <= 1 || n <= 1 || pthread_mutex_trylock(&s->gate) != 0) {
+        for (int i = 0; i < n; i++) f(i, ctx);  /* silent serial collapse */
+        return 1;
+    }
+    int parts = shard_dispatch(s, n, threads, f, ctx);
+    pthread_mutex_unlock(&s->gate);
+    return parts;
+}
+
+/* ---------------- diffusion2d session (row-blocked sweep) -------------- */
+#define RAD 3
+typedef struct {
+    int n, per, nblocks, threads;
+    double *src, *dst;
+    shard_t *shards;
+    int nshards, pin;
+    long collapsed, dispatches;
+    double wall;
+} session_t;
+
+static void sweep_block(int b, void *ctx) {
+    session_t *se = (session_t *)ctx;
+    int n = se->n, stride = n + 2 * RAD;
+    int lo = b * se->per, hi = lo + se->per;
+    if (hi > n) hi = n;
+    static const double w[RAD + 1] = {-2.5, 1.4, -0.2, 0.03};
+    for (int j = lo; j < hi; j++) {
+        const double *r = se->src + (j + RAD) * stride + RAD;
+        double *o = se->dst + (j + RAD) * stride + RAD;
+        for (int i = 0; i < n; i++) {
+            double acc = 2.0 * w[0] * r[i];
+            for (int k = 1; k <= RAD; k++)
+                acc += w[k] * (r[i - k] + r[i + k] + r[i - k * stride] + r[i + k * stride]);
+            o[i] = r[i] + 1e-4 * acc;
+        }
+    }
+}
+
+#define STEPS 40
+static void *session_main(void *arg) {
+    session_t *se = (session_t *)arg;
+    double t0 = now_s();
+    for (int s = 0; s < STEPS; s++) {
+        /* 4 blocks per thread, the engine's default decomposition */
+        se->nblocks = 4 * se->threads;
+        se->per = (se->n + se->nblocks - 1) / se->nblocks;
+        se->nblocks = (se->n + se->per - 1) / se->per;
+        int parts = pool_run(se->shards, se->nshards, se->pin, se->nblocks,
+                             se->threads, sweep_block, se);
+        se->dispatches++;
+        /* a collapse is a dispatch that ASKED for parallelism and ran
+         * serial anyway; a threads==1 budget running serial is policy */
+        if (parts == 1 && se->threads > 1) se->collapsed++;
+        double *t = se->src; se->src = se->dst; se->dst = t;
+    }
+    se->wall = now_s() - t0;
+    return NULL;
+}
+
+static double run_batch(const char *mode, int nshards, int sessions, int n, int threads) {
+    shard_t shards[8];
+    for (int i = 0; i < nshards; i++) shard_init(&shards[i]);
+    session_t se[8];
+    int stride = n + 2 * RAD;
+    for (int s = 0; s < sessions; s++) {
+        se[s].n = n; se[s].threads = threads;
+        se[s].src = calloc((size_t)stride * stride, sizeof(double));
+        se[s].dst = calloc((size_t)stride * stride, sizeof(double));
+        for (int j = 0; j < stride; j++)
+            for (int i = 0; i < stride; i++)
+                se[s].src[j * stride + i] = ((i * 31 + j * 17) % 13);
+        se[s].shards = shards; se[s].nshards = nshards;
+        se[s].pin = s; /* gate mode: nshards==1, every session pins shard 0 */
+        se[s].collapsed = 0; se[s].dispatches = 0;
+    }
+    double t0 = now_s();
+    pthread_t th[8];
+    for (int s = 0; s < sessions; s++) pthread_create(&th[s], NULL, session_main, &se[s]);
+    for (int s = 0; s < sessions; s++) pthread_join(th[s], NULL);
+    double wall = now_s() - t0;
+    long collapsed = 0, dispatches = 0;
+    double slowest = 0.0;
+    for (int s = 0; s < sessions; s++) {
+        collapsed += se[s].collapsed; dispatches += se[s].dispatches;
+        if (se[s].wall > slowest) slowest = se[s].wall;
+        free(se[s].src); free(se[s].dst);
+    }
+    double melem = (double)sessions * STEPS * n * n / wall / 1e6;
+    printf("%-8s x%d  wall %6.3f s  slowest-session %6.3f s  collapsed %3ld/%ld  %8.1f Melem/s\n",
+           mode, sessions, wall, slowest, collapsed, dispatches, melem);
+    return melem;
+}
+
+int main(void) {
+    int ncpu = (int)sysconf(_SC_NPROCESSORS_ONLN);
+    int n = 2048;
+    printf("=== concurrent-dispatch mirror: diffusion2d %dx%d, %d steps/session, %d cpus ===\n",
+           n, n, STEPS, ncpu);
+    for (int sessions = 1; sessions <= 4; sessions *= 2) {
+        /* per-session thread budget = machine threads / sessions, floor 1 —
+         * the job service's shard sizing */
+        int budget = ncpu / sessions; if (budget < 1) budget = 1;
+        /* gate: one shard, every session requests the FULL machine budget
+         * (the seed engine's default) and the losers collapse serial */
+        double g = run_batch("gate", 1, sessions, n, ncpu);
+        /* sharded, service policy: one shard per session, disjoint budgets */
+        double s = run_batch("sharded", sessions, sessions, n, budget);
+        /* sharded, failover policy (unbound run()): full budget each, no
+         * collapse, cores oversubscribed instead of silently serialized */
+        double f = run_batch("failover", sessions, sessions, n, ncpu);
+        printf("         x%d sharded/gate %.2fx, failover/gate %.2fx\n",
+               sessions, s / g, f / g);
+    }
+    return 0;
+}
