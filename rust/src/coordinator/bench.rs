@@ -189,6 +189,10 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
     // scaling record the single-gate pool used to make impossible
     out.extend(crate::coordinator::service::bench_cases(smoke, plans));
 
+    // online daemon queue with staggered arrivals — per-job latency
+    // percentiles (p50/p95) alongside throughput
+    out.push(crate::coordinator::daemon::bench_case(smoke, plans));
+
     out
 }
 

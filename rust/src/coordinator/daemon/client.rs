@@ -1,0 +1,225 @@
+//! `stencilax submit` — the daemon's socket client.
+//!
+//! Submits a job file's entries as NDJSON request lines over the Unix
+//! socket and consumes the event stream until every submission reached a
+//! terminal event (`done` or `rejected`), tolerating completions arriving
+//! in any order (sessions run concurrently on disjoint shards, so job 2
+//! routinely finishes before job 1). With `shutdown`, it then asks the
+//! daemon to stop and waits for the final aggregate `report` event.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::service::{job_entries, SessionResult};
+use crate::util::json::Json;
+
+use super::protocol::{Event, Request};
+
+/// Terminal accounting over an event stream: which submissions resolved,
+/// how, and the final report if one arrived. Order-independent — `done`
+/// for job 2 before job 1 is the common case, not an error.
+#[derive(Default)]
+pub struct EventAccumulator {
+    pub accepted: usize,
+    pub started: usize,
+    pub done: Vec<SessionResult>,
+    pub rejected: Vec<(usize, String)>,
+    pub report: Option<Json>,
+}
+
+impl EventAccumulator {
+    pub fn observe(&mut self, ev: Event) {
+        match ev {
+            Event::Accepted { .. } => self.accepted += 1,
+            Event::Started { .. } => self.started += 1,
+            Event::Done(r) => self.done.push(r),
+            Event::Rejected { id, error } => self.rejected.push((id, error)),
+            Event::Report(j) => self.report = Some(j),
+        }
+    }
+
+    /// Jobs that reached a terminal state (done or rejected).
+    pub fn terminal(&self) -> usize {
+        self.done.len() + self.rejected.len()
+    }
+
+    /// Completed sessions sorted by job id, whatever order they finished.
+    pub fn done_by_id(&self) -> Vec<&SessionResult> {
+        let mut v: Vec<&SessionResult> = self.done.iter().collect();
+        v.sort_by_key(|r| r.id);
+        v
+    }
+}
+
+/// What one `submit` run saw.
+pub struct SubmitSummary {
+    pub submitted: usize,
+    pub outcome: EventAccumulator,
+}
+
+/// Validate the job-file envelope (the batch loader's
+/// [`job_entries`] gate) and return the raw job entries to ship.
+/// Entries are forwarded to the daemon *unvalidated* — admission is the
+/// daemon's job, and a malformed entry comes back as a `rejected` event
+/// instead of failing the file.
+pub fn job_lines(file: &Json) -> Result<Vec<String>> {
+    Ok(job_entries(file)?.iter().map(|j| j.to_string_compact()).collect())
+}
+
+/// Connect to the daemon socket, retrying briefly — `submit` typically
+/// races the daemon's startup in scripts and CI.
+pub fn connect(socket: &Path, patience: Duration) -> Result<UnixStream> {
+    let t0 = std::time::Instant::now();
+    loop {
+        match UnixStream::connect(socket) {
+            Ok(s) => return Ok(s),
+            Err(_) if t0.elapsed() < patience => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to daemon at {socket:?}"));
+            }
+        }
+    }
+}
+
+/// Reclaim the background sender thread's write half (all job lines
+/// written, or the write error that stopped it).
+fn join_sender(h: std::thread::JoinHandle<std::io::Result<UnixStream>>) -> Result<UnixStream> {
+    match h.join() {
+        Ok(r) => r.context("writing job lines"),
+        Err(_) => bail!("submit sender thread panicked"),
+    }
+}
+
+/// Submit `lines` (raw NDJSON job objects, see [`job_lines`]) and stream
+/// events until all submissions are terminal; with `shutdown`, then stop
+/// the daemon and wait for the final report. `on_event` sees every raw
+/// line + parsed event (the CLI pretty-prints or echoes raw from it).
+///
+/// Submission runs on a background thread while this thread drains the
+/// event stream: the daemon's bounded queue intentionally stops reading
+/// when full (backpressure), so a client that wrote its whole file
+/// before reading anything would deadlock against it once the file
+/// outgrows queue + socket buffers — events must be consumed while
+/// submitting.
+pub fn submit_lines(
+    socket: &Path,
+    lines: &[String],
+    shutdown: bool,
+    mut on_event: impl FnMut(&str, &Event),
+) -> Result<SubmitSummary> {
+    let stream = connect(socket, Duration::from_secs(5))?;
+    let mut writer = stream.try_clone().context("cloning socket stream")?;
+    let mut reader = BufReader::new(stream);
+    let to_send: Vec<String> = lines.to_vec();
+    let mut sender = Some(std::thread::spawn(move || -> std::io::Result<UnixStream> {
+        for line in &to_send {
+            writeln!(writer, "{line}")?;
+        }
+        writer.flush()?;
+        Ok(writer)
+    }));
+
+    let mut outcome = EventAccumulator::default();
+    let mut line = String::new();
+    let mut asked_stop = false;
+    loop {
+        if outcome.terminal() >= lines.len() && !shutdown {
+            break;
+        }
+        if outcome.terminal() >= lines.len() && shutdown && !asked_stop {
+            // all submissions are terminal, so the sender has long
+            // finished — reclaim its write half for the control message
+            let mut writer = join_sender(sender.take().expect("sender joined once"))?;
+            writeln!(writer, "{}", Request::Shutdown.to_line()).context("writing shutdown")?;
+            writer.flush().context("flushing shutdown")?;
+            asked_stop = true;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // daemon closed the connection
+            Ok(_) => {
+                let ev = Event::parse_line(&line)
+                    .with_context(|| format!("unparseable event line {line:?}"))?;
+                on_event(line.trim_end(), &ev);
+                let is_report = matches!(ev, Event::Report(_));
+                outcome.observe(ev);
+                if is_report {
+                    break;
+                }
+            }
+            Err(e) => return Err(e).context("reading event stream"),
+        }
+    }
+    // surface a sender-side write error (e.g. the daemon went away
+    // mid-submission and the stream broke before any terminal event)
+    if let Some(h) = sender.take() {
+        join_sender(h)?;
+    }
+    Ok(SubmitSummary { submitted: lines.len(), outcome })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::Stats;
+
+    fn done(id: usize) -> Event {
+        Event::Done(SessionResult {
+            id,
+            workload: "diffusion2d".into(),
+            shape: vec![8, 8],
+            steps: 1,
+            shard: id % 2,
+            plan: "ov4 t1".into(),
+            tuned: false,
+            elems_per_step: 64.0,
+            stats: Stats::from_samples(vec![1e-4]),
+            digest_bits: 7,
+            latency_s: 1e-3,
+        })
+    }
+
+    #[test]
+    fn accumulator_tolerates_out_of_order_completions() {
+        // job 2 and 1 finish before job 0 — the sharded daemon's normal
+        // interleaving; terminal accounting and ordering must not care
+        let mut acc = EventAccumulator::default();
+        for ev in [
+            done(2),
+            Event::Rejected { id: 3, error: "unknown workload".into() },
+            done(1),
+            done(0),
+        ] {
+            acc.observe(ev);
+        }
+        assert_eq!(acc.terminal(), 4);
+        assert_eq!(acc.done_by_id().iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(acc.rejected, vec![(3, "unknown workload".to_string())]);
+        assert!(acc.report.is_none());
+    }
+
+    #[test]
+    fn job_lines_keeps_the_envelope_strict_but_entries_raw() {
+        let file = Json::parse(
+            r#"{"schema":"stencilax-jobs/1","jobs":[
+                {"workload":"mhd","shape":[8,8,8],"steps":2},
+                {"workload":"mhd","shape":[8,8,8],"steps":0}
+            ]}"#,
+        )
+        .unwrap();
+        // the zero-steps entry is forwarded anyway: rejection is the
+        // daemon's call, reported per job
+        let lines = job_lines(&file).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].contains("\"steps\":0"));
+
+        let bad = Json::parse(r#"{"schema":"stencilax-jobs/999","jobs":[{}]}"#).unwrap();
+        assert!(job_lines(&bad).is_err());
+        let empty = Json::parse(r#"{"schema":"stencilax-jobs/1","jobs":[]}"#).unwrap();
+        assert!(job_lines(&empty).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! NDJSON wire protocol of the serving daemon (DESIGN.md §13).
+//!
+//! Every message is one JSON object per line, in both directions:
+//!
+//! * **Requests** (client → daemon), parsed by [`Request::parse_line`]:
+//!   a job submission — either a bare `{workload, shape, steps}` object
+//!   or the same fields with `"type": "submit"` — or a control message
+//!   `{"type": "drain"}` (stop admitting, finish everything queued, then
+//!   report and exit) / `{"type": "shutdown"}` (stop admitting, cancel
+//!   queued sessions that have not started, finish in-flight ones, then
+//!   report and exit).
+//! * **Events** (daemon → client), [`Event`]: `accepted` / `rejected` at
+//!   admission, `started` when a shard driver picks the session up,
+//!   `done` with the full per-session record (the same fields
+//!   `serve_report.json` carries, including the FNV bit digest and plan
+//!   provenance), and a final `report` with the aggregate
+//!   [`ServiceReport`] in the batch report's schema.
+//!
+//! The parser is strict in the crate's usual way: unknown `type` values,
+//! malformed JSON, and oversized lines ([`MAX_LINE_BYTES`]) are errors —
+//! the daemon turns each into a `rejected` event for that line and keeps
+//! serving (one bad tenant never takes the stream down).
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::service::{JobSpec, SessionResult};
+use crate::util::json::Json;
+
+/// Protocol identifier, carried by the final `report` event envelope.
+pub const PROTOCOL_SCHEMA: &str = "stencilax-ndjson/1";
+
+/// Hard cap on one request line. A line longer than this is rejected
+/// before parsing — NDJSON framing means a runaway (or hostile) line
+/// would otherwise buffer unboundedly.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// One client → daemon message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Submit a job for admission.
+    Submit(JobSpec),
+    /// Stop admitting; finish every queued session, then report and exit.
+    Drain,
+    /// Stop admitting; cancel queued sessions, finish in-flight ones,
+    /// then report and exit.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one NDJSON request line (already split on `\n`, trailing
+    /// whitespace tolerated). Errors name the failure precisely — they
+    /// travel back to the client verbatim inside `rejected` events.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let line = line.trim();
+        if line.len() > MAX_LINE_BYTES {
+            bail!("line exceeds {MAX_LINE_BYTES} bytes ({} bytes)", line.len());
+        }
+        let j = Json::parse(line).context("malformed NDJSON request line")?;
+        match j.get("type") {
+            None => Ok(Request::Submit(JobSpec::from_json(&j)?)),
+            Some(t) => match t.as_str() {
+                Some("submit") => Ok(Request::Submit(JobSpec::from_json(&j)?)),
+                Some("drain") => Ok(Request::Drain),
+                Some("shutdown") => Ok(Request::Shutdown),
+                Some(other) => bail!(
+                    "unknown message type {other:?} (want submit, drain, or shutdown)"
+                ),
+                None => bail!("\"type\" must be a string"),
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit(spec) => {
+                let mut obj = match spec.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("JobSpec::to_json returns an object"),
+                };
+                obj.insert("type".into(), Json::str("submit"));
+                Json::Obj(obj)
+            }
+            Request::Drain => Json::obj(vec![("type", Json::str("drain"))]),
+            Request::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
+        }
+    }
+
+    /// The wire form: one compact line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+/// One daemon → client message.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// The job was admitted: workload resolved, shape validated, plan
+    /// fixed (with provenance — `tuned` says it came from the plan cache).
+    Accepted { id: usize, spec: JobSpec, plan: String, tuned: bool },
+    /// The line/job was refused (malformed line, unknown message type,
+    /// admission failure, or a session cancelled by `shutdown`).
+    Rejected { id: usize, error: String },
+    /// A shard driver picked the session up.
+    Started { id: usize, shard: usize },
+    /// The session completed; carries the full per-session record.
+    Done(SessionResult),
+    /// Final aggregate report (the `serve_report.json` object), emitted
+    /// once when the daemon drains or shuts down.
+    Report(Json),
+}
+
+impl Event {
+    /// Job id the event concerns, when it concerns one.
+    pub fn id(&self) -> Option<usize> {
+        match self {
+            Event::Accepted { id, .. } | Event::Rejected { id, .. } | Event::Started { id, .. } => {
+                Some(*id)
+            }
+            Event::Done(r) => Some(r.id),
+            Event::Report(_) => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Accepted { id, spec, plan, tuned } => {
+                let mut obj = match spec.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("JobSpec::to_json returns an object"),
+                };
+                obj.insert("event".into(), Json::str("accepted"));
+                obj.insert("id".into(), Json::num(*id as f64));
+                obj.insert("plan".into(), Json::str(plan.clone()));
+                obj.insert("tuned".into(), Json::Bool(*tuned));
+                Json::Obj(obj)
+            }
+            Event::Rejected { id, error } => Json::obj(vec![
+                ("event", Json::str("rejected")),
+                ("id", Json::num(*id as f64)),
+                ("error", Json::str(error.as_str())),
+            ]),
+            Event::Started { id, shard } => Json::obj(vec![
+                ("event", Json::str("started")),
+                ("id", Json::num(*id as f64)),
+                ("shard", Json::num(*shard as f64)),
+            ]),
+            Event::Done(r) => {
+                let mut obj = match r.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("SessionResult::to_json returns an object"),
+                };
+                obj.insert("event".into(), Json::str("done"));
+                Json::Obj(obj)
+            }
+            Event::Report(report) => Json::obj(vec![
+                ("event", Json::str("report")),
+                ("schema", Json::str(PROTOCOL_SCHEMA)),
+                ("report", report.clone()),
+            ]),
+        }
+    }
+
+    /// The wire form: one compact line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Parse one event line — the client side of the stream.
+    pub fn from_json(j: &Json) -> Result<Event> {
+        match j.req_str("event")? {
+            "accepted" => Ok(Event::Accepted {
+                id: j.req_u64("id")? as usize,
+                spec: JobSpec::from_json(j)?,
+                plan: j.req_str("plan")?.to_string(),
+                tuned: j.req("tuned")?.as_bool().context("tuned not a bool")?,
+            }),
+            "rejected" => Ok(Event::Rejected {
+                id: j.req_u64("id")? as usize,
+                error: j.req_str("error")?.to_string(),
+            }),
+            "started" => Ok(Event::Started {
+                id: j.req_u64("id")? as usize,
+                shard: j.req_u64("shard")? as usize,
+            }),
+            "done" => Ok(Event::Done(SessionResult::from_json(j)?)),
+            "report" => Ok(Event::Report(j.req("report")?.clone())),
+            other => bail!("unknown event type {other:?}"),
+        }
+    }
+
+    pub fn parse_line(line: &str) -> Result<Event> {
+        Event::from_json(&Json::parse(line.trim()).context("malformed NDJSON event line")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::Stats;
+
+    fn job() -> JobSpec {
+        JobSpec { workload: "diffusion2d".into(), shape: vec![32, 32], steps: 3 }
+    }
+
+    #[test]
+    fn request_lines_roundtrip() {
+        for req in [Request::Submit(job()), Request::Drain, Request::Shutdown] {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "NDJSON lines must be single-line: {line:?}");
+            assert_eq!(Request::parse_line(&line).unwrap(), req);
+        }
+        // a bare job object (no "type") is a submit
+        let bare = job().to_json().to_string_compact();
+        assert_eq!(Request::parse_line(&bare).unwrap(), Request::Submit(job()));
+    }
+
+    #[test]
+    fn request_parse_rejects_bad_lines() {
+        // malformed JSON (also the truncated/partial-line case)
+        assert!(Request::parse_line("{\"workload\": \"diffu").is_err());
+        assert!(Request::parse_line("not json at all").is_err());
+        // unknown message type
+        let err = Request::parse_line(r#"{"type":"restart"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown message type"), "{err:#}");
+        // non-string type
+        assert!(Request::parse_line(r#"{"type":7}"#).is_err());
+        // a submit with bad job fields fails like the batch loader
+        assert!(Request::parse_line(r#"{"workload":"mhd","shape":[8,8,8],"steps":0}"#).is_err());
+        // oversized line
+        let pad = "x".repeat(MAX_LINE_BYTES);
+        let huge = format!(r#"{{"workload":"{pad}","shape":[8],"steps":1}}"#);
+        let err = Request::parse_line(&huge).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn event_lines_roundtrip() {
+        let done = SessionResult {
+            id: 3,
+            workload: "mhd".into(),
+            shape: vec![8, 8, 8],
+            steps: 2,
+            shard: 1,
+            plan: "rows4 t2".into(),
+            tuned: true,
+            elems_per_step: 512.0,
+            stats: Stats::from_samples(vec![1e-3, 2e-3]),
+            digest_bits: 0xdead_beef_cafe_f00d,
+            latency_s: 0.25,
+        };
+        let events = vec![
+            Event::Accepted { id: 0, spec: job(), plan: "ov4 t2".into(), tuned: false },
+            Event::Rejected { id: 1, error: "unknown workload \"nope\"".into() },
+            Event::Started { id: 0, shard: 1 },
+            Event::Done(done.clone()),
+            Event::Report(Json::obj(vec![("jobs", Json::num(2.0))])),
+        ];
+        for ev in &events {
+            let line = ev.to_line();
+            assert!(!line.contains('\n'), "{line:?}");
+            let back = Event::parse_line(&line).unwrap();
+            assert_eq!(back.to_line(), line, "roundtrip must be stable");
+        }
+        // the done event carries the full record, digest included
+        let back = Event::parse_line(&Event::Done(done.clone()).to_line()).unwrap();
+        match back {
+            Event::Done(r) => {
+                assert_eq!(r.digest_bits, done.digest_bits);
+                assert_eq!(r.stats.median_s, done.stats.median_s);
+                assert_eq!(r.latency_s, done.latency_s);
+                assert!(r.tuned);
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+        assert!(Event::parse_line(r#"{"event":"no-such"}"#).is_err());
+        assert!(Event::parse_line("{").is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! Bounded online job queue + the shared per-shard driver loop.
+//!
+//! This is the serving core both front-ends sit on (DESIGN.md §13): the
+//! batch path (`serve --jobs`, [`crate::coordinator::service::run_loaded`])
+//! admits a whole file, pushes it, and closes the queue; the daemon
+//! (`stencilax daemon`, [`super::server`]) keeps the queue open and pushes
+//! sessions as NDJSON requests arrive, *while earlier sessions run*.
+//!
+//! Semantics:
+//!
+//! * **Bounded**: [`JobQueue::push`] blocks while the queue is at
+//!   capacity — backpressure propagates to the socket/stdin reader, so a
+//!   firehose client cannot make the daemon buffer unbounded sessions.
+//! * **Work-conserving**: one driver per shard ([`drive`], on
+//!   [`par::drive_shards`]), each pinned to its shard, pops the next
+//!   session the moment it goes idle. A driver blocked on a momentarily
+//!   *empty but open* queue parks in [`JobQueue::pop`] without
+//!   terminating — the lifecycle difference from the old batch-only
+//!   drain, where queue-empty meant batch-done.
+//! * **Close vs abort**: [`JobQueue::close`] admits nothing *new* but
+//!   lets drivers drain what is queued — including a push that was
+//!   already blocked at capacity, whose job the daemon had accepted
+//!   (`drain` semantics: accepted work finishes); [`JobQueue::abort`]
+//!   refuses blocked pushes and hands back the not-yet-started sessions
+//!   so the caller can reject them (`shutdown` semantics). Both wake
+//!   every parked driver and blocked pusher.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::coordinator::service::{run_session, Session, SessionResult};
+use crate::util::par;
+
+use super::protocol::Event;
+
+/// Default capacity of the daemon's queue (`daemon --queue-cap`
+/// overrides). Sessions are cheap until a shard builds their buffers, so
+/// this bounds admission latency, not memory.
+pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+struct QueueState {
+    q: VecDeque<Session>,
+    /// No *new* pushes admitted; queued sessions (and pushes already
+    /// blocked at capacity — their jobs were accepted) still drain.
+    closed: bool,
+    /// Shutdown: blocked pushes are refused too, queued sessions were
+    /// handed back by [`JobQueue::abort`].
+    aborted: bool,
+    /// Pushes currently parked at capacity: drivers must not conclude
+    /// "closed and drained" while an accepted session is still in the
+    /// doorway.
+    waiting_pushers: usize,
+}
+
+/// Bounded MPMC session queue (see module docs for semantics).
+pub struct JobQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+/// Ignore mutex poisoning, as everywhere else in the crate: the critical
+/// sections hold no user code.
+fn lock(q: &JobQueue) -> MutexGuard<'_, QueueState> {
+    q.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl JobQueue {
+    pub fn bounded(cap: usize) -> JobQueue {
+        JobQueue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                closed: false,
+                aborted: false,
+                waiting_pushers: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        lock(self).q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        lock(self).q.is_empty()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        lock(self).closed
+    }
+
+    /// Pushes currently parked at capacity (test observability).
+    #[cfg(test)]
+    fn waiting(&self) -> usize {
+        lock(self).waiting_pushers
+    }
+
+    /// Enqueue a session, blocking while the queue is full. `Err` hands
+    /// the session back when the queue is closed (a *new* push after
+    /// drain) or aborted (shutdown, even mid-block) — the caller turns
+    /// it into a `rejected` event. A push already parked at capacity
+    /// when a `close` lands still completes: its job was accepted, and
+    /// drain's contract is that accepted work finishes.
+    pub fn push(&self, s: Session) -> Result<(), Session> {
+        let mut st = lock(self);
+        if st.closed {
+            return Err(s);
+        }
+        st.waiting_pushers += 1;
+        loop {
+            // every pusher resolution notifies ALL poppers: a popper
+            // parked on "closed but a push is still in the doorway" must
+            // re-evaluate whenever `waiting_pushers` drops
+            if st.aborted {
+                st.waiting_pushers -= 1;
+                self.not_empty.notify_all();
+                return Err(s);
+            }
+            if st.q.len() < self.cap {
+                st.q.push_back(s);
+                st.waiting_pushers -= 1;
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Dequeue the next session, blocking while the queue is empty but
+    /// still open. `None` only once the queue is closed *and* drained
+    /// (including any push that was mid-block at close time) — the
+    /// driver-loop exit condition.
+    pub fn pop(&self) -> Option<Session> {
+        let mut st = lock(self);
+        loop {
+            if let Some(s) = st.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(s);
+            }
+            if st.closed && st.waiting_pushers == 0 {
+                // cascade: wake sibling poppers so they re-check the
+                // terminal state too
+                self.not_empty.notify_all();
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Stop admitting; queued sessions — and pushes already blocked at
+    /// capacity — still drain (`drain` semantics).
+    pub fn close(&self) {
+        let mut st = lock(self);
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Stop admitting *and* hand back every not-yet-started session
+    /// (`shutdown` semantics); blocked pushes are refused, in-flight
+    /// sessions are unaffected.
+    pub fn abort(&self) -> Vec<Session> {
+        let mut st = lock(self);
+        st.closed = true;
+        st.aborted = true;
+        let cancelled = st.q.drain(..).collect();
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        cancelled
+    }
+}
+
+/// The shared driver loop: one driver per shard (each pinned via
+/// [`par::drive_shards`]), popping sessions work-conservingly until the
+/// queue is closed and drained. Emits [`Event::Started`] /
+/// [`Event::Done`] through `sink` as they happen (the daemon routes them
+/// to the submitting client; the batch path prints them). Returns every
+/// completed session, sorted by job id regardless of completion order.
+pub fn drive(queue: &JobQueue, shards: usize, sink: &(dyn Fn(Event) + Sync)) -> Vec<SessionResult> {
+    let per_shard = par::drive_shards(shards, |shard| {
+        let mut local = Vec::new();
+        while let Some(s) = queue.pop() {
+            sink(Event::Started { id: s.id, shard });
+            let r = run_session(&s, shard);
+            sink(Event::Done(r.clone()));
+            local.push(r);
+        }
+        local
+    });
+    let mut out: Vec<SessionResult> = per_shard.into_iter().flatten().collect();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{admit, JobSpec};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    fn session(id: usize) -> Session {
+        let spec = JobSpec { workload: "diffusion2d".into(), shape: vec![16, 16], steps: 1 };
+        admit(id, spec, None, 1).unwrap()
+    }
+
+    #[test]
+    fn fifo_and_close_drain() {
+        let q = JobQueue::bounded(8);
+        q.push(session(0)).ok().unwrap();
+        q.push(session(1)).ok().unwrap();
+        assert_eq!(q.len(), 2);
+        q.close();
+        assert!(q.push(session(2)).is_err(), "closed queue must refuse pushes");
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none(), "closed + drained => None");
+    }
+
+    #[test]
+    fn empty_open_queue_parks_pop_until_push_or_close() {
+        let q = JobQueue::bounded(4);
+        std::thread::scope(|s| {
+            let popper = s.spawn(|| q.pop());
+            std::thread::sleep(Duration::from_millis(10));
+            q.push(session(7)).ok().unwrap();
+            assert_eq!(popper.join().unwrap().unwrap().id, 7);
+            // and close() wakes a parked popper with None
+            let popper = s.spawn(|| q.pop());
+            std::thread::sleep(Duration::from_millis(10));
+            q.close();
+            assert!(popper.join().unwrap().is_none());
+        });
+    }
+
+    #[test]
+    fn full_queue_blocks_push_until_pop() {
+        let q = JobQueue::bounded(1);
+        q.push(session(0)).ok().unwrap();
+        let order = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let pusher = s.spawn(|| {
+                q.push(session(1)).ok().unwrap();
+                order.fetch_add(1, Ordering::SeqCst)
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(order.load(Ordering::SeqCst), 0, "push must block at capacity");
+            assert_eq!(q.pop().unwrap().id, 0);
+            pusher.join().unwrap();
+            assert_eq!(q.pop().unwrap().id, 1);
+        });
+    }
+
+    #[test]
+    fn close_lets_blocked_pushers_finish_but_refuses_new_ones() {
+        // drain contract: a push already parked at capacity carries an
+        // ACCEPTED job — close must let it land, not cancel it
+        let q = JobQueue::bounded(1);
+        q.push(session(0)).ok().unwrap();
+        std::thread::scope(|s| {
+            let blocked = s.spawn(|| q.push(session(1)));
+            while q.waiting() == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            q.close();
+            assert_eq!(q.pop().unwrap().id, 0);
+            assert!(blocked.join().unwrap().is_ok(), "blocked push must survive close");
+            assert_eq!(q.pop().unwrap().id, 1);
+            assert!(q.pop().is_none());
+        });
+        assert!(q.push(session(2)).is_err(), "new pushes after close are refused");
+    }
+
+    #[test]
+    fn abort_hands_back_queued_sessions_and_unblocks_pushers() {
+        let q = JobQueue::bounded(1);
+        q.push(session(0)).ok().unwrap();
+        std::thread::scope(|s| {
+            let blocked = s.spawn(|| q.push(session(1)));
+            std::thread::sleep(Duration::from_millis(10));
+            let cancelled = q.abort();
+            assert_eq!(cancelled.len(), 1);
+            assert_eq!(cancelled[0].id, 0);
+            // the blocked pusher gets its session back
+            let back = blocked.join().unwrap().err().expect("aborted queue refuses push");
+            assert_eq!(back.id, 1);
+        });
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn drive_runs_queued_sessions_and_sorts_by_id() {
+        let q = JobQueue::bounded(8);
+        for id in 0..4 {
+            q.push(session(id)).ok().unwrap();
+        }
+        q.close();
+        let started = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        let results = drive(&q, 2, &|ev| match ev {
+            Event::Started { .. } => {
+                started.fetch_add(1, Ordering::Relaxed);
+            }
+            Event::Done(_) => {
+                done.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        });
+        assert_eq!(results.len(), 4);
+        assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(started.load(Ordering::Relaxed), 4);
+        assert_eq!(done.load(Ordering::Relaxed), 4);
+        for r in &results {
+            assert!(r.shard < 2);
+            assert!(r.stats.median_s > 0.0);
+            assert!(r.latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn drive_serves_online_arrivals_pushed_while_drivers_run() {
+        // the daemon lifecycle: drivers start on an EMPTY open queue,
+        // park, and serve jobs that arrive afterwards
+        let q = JobQueue::bounded(2);
+        let results = std::thread::scope(|s| {
+            let submitter = s.spawn(|| {
+                for id in 0..3 {
+                    std::thread::sleep(Duration::from_millis(5));
+                    q.push(session(id)).ok().unwrap();
+                }
+                q.close();
+            });
+            let results = drive(&q, 2, &|_| {});
+            submitter.join().unwrap();
+            results
+        });
+        assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

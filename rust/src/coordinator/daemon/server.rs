@@ -1,0 +1,464 @@
+//! The long-lived serving daemon: admit NDJSON job requests *while
+//! sessions run*, stream events back, and report on drain/shutdown.
+//!
+//! Two transports share one core ([`Core`]): [`serve_stream`] serves a
+//! single client over a byte stream (the `--stdio` mode, and the unit the
+//! parity tests drive with in-memory buffers), and [`serve_socket`]
+//! serves concurrent clients over a Unix domain socket, routing each
+//! job's events back to the connection that submitted it. Both finish
+//! with the same aggregate [`ServiceReport`] the batch service writes —
+//! `daemon --stdio` and `serve --jobs` over the same job set produce
+//! bit-identical per-session digests (pinned by
+//! `rust/tests/daemon_protocol.rs`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::plans::PlanCache;
+use crate::coordinator::service::{admit, clamp_shards, Rejection, ServiceReport};
+
+use super::protocol::{Event, Request, MAX_LINE_BYTES};
+use super::queue::{drive, JobQueue, DEFAULT_QUEUE_CAP};
+
+/// Daemon configuration (the CLI fills this from flags).
+#[derive(Clone)]
+pub struct DaemonOpts {
+    /// Requested shard count (clamped like the batch service's).
+    pub shards: usize,
+    /// Tuned plan cache consulted at admission.
+    pub plans: Option<PlanCache>,
+    /// Queue capacity — [`JobQueue::push`] backpressure threshold.
+    pub queue_cap: usize,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> Self {
+        DaemonOpts { shards: 2, plans: None, queue_cap: DEFAULT_QUEUE_CAP }
+    }
+}
+
+/// How a handled request line leaves the read loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flow {
+    Continue,
+    Stop,
+}
+
+/// Outcome of one [`read_line_capped`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LineRead {
+    /// Clean end of stream with no pending bytes.
+    Eof,
+    /// One line (or an EOF-terminated fragment) is in the buffer.
+    Line,
+}
+
+/// Hard bound on how much of one request line the daemon will buffer:
+/// enough that `Request::parse_line`'s `> MAX_LINE_BYTES` check still
+/// trips, nothing more.
+const READ_CAP: usize = MAX_LINE_BYTES + 2;
+
+/// `read_line` with a hard memory bound: consumes through the next
+/// newline (or EOF) but buffers at most `cap` bytes of it, silently
+/// discarding the excess — a client streaming an endless unterminated
+/// line cannot grow daemon memory, and the over-cap remnant in `buf`
+/// still witnesses the oversize for `Request::parse_line`. A mid-line
+/// transport timeout surfaces as `Err` with the bytes read so far kept
+/// in `buf`; the socket loop retries with the same buffer. Bytes, not
+/// `String`: the line converts to UTF-8 once complete (lossily — bad
+/// bytes and cap-truncation are headed for a parse rejection anyway),
+/// so a scalar straddling two `fill_buf` chunks is never corrupted.
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() { LineRead::Eof } else { LineRead::Line });
+        }
+        let (take, done) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => (pos + 1, true),
+            None => (chunk.len(), false),
+        };
+        let room = cap.saturating_sub(buf.len());
+        buf.extend_from_slice(&chunk[..take.min(room)]);
+        r.consume(take);
+        if done {
+            return Ok(LineRead::Line);
+        }
+    }
+}
+
+type SharedWriter<W> = Arc<Mutex<W>>;
+
+/// Transport-agnostic daemon state: the queue, admission parameters, the
+/// id → client-writer routing table, and the rejection ledger.
+struct Core<W: Write + Send> {
+    queue: JobQueue,
+    shards: usize,
+    threads_per_shard: usize,
+    plans: Option<PlanCache>,
+    next_id: AtomicUsize,
+    routes: Mutex<HashMap<usize, SharedWriter<W>>>,
+    /// Writer of the connection that requested drain/shutdown — receives
+    /// the final `report` event.
+    controller: Mutex<Option<SharedWriter<W>>>,
+    rejected: Mutex<Vec<Rejection>>,
+    stop: AtomicBool,
+    /// Active window `(first, last)`: first submission attempt → latest
+    /// submission or session completion. The report's wall clock is this
+    /// span — not daemon-startup-to-shutdown — so a long-lived daemon's
+    /// idle time (before the first client, after the last completion,
+    /// waiting for a drain) does not dilute `jobs_per_s` into
+    /// meaninglessness vs the batch report it is diffed against.
+    /// (Idle gaps *between* jobs inside the window still count, exactly
+    /// as they would in a batch run's wall clock.)
+    window: Mutex<Option<(Instant, Instant)>>,
+}
+
+/// Write one event line, best-effort: a client that disconnected (or, on
+/// the socket transport, stalled past the write timeout) loses its
+/// remaining events, never the daemon. Returns whether the write landed
+/// so [`Core::route_event`] can evict a dead client's route.
+fn emit<W: Write>(w: &SharedWriter<W>, ev: &Event) -> bool {
+    let mut w = w.lock().unwrap_or_else(|e| e.into_inner());
+    let ok = writeln!(w, "{}", ev.to_line()).is_ok();
+    let _ = w.flush();
+    ok
+}
+
+impl<W: Write + Send> Core<W> {
+    fn new(opts: &DaemonOpts) -> Core<W> {
+        // the daemon's job count is unknown (jobs arrive online), so the
+        // shard clamp skips the batch path's job-count term
+        let (shards, threads_per_shard) = clamp_shards(opts.shards, usize::MAX);
+        Core {
+            queue: JobQueue::bounded(opts.queue_cap),
+            shards,
+            threads_per_shard,
+            plans: opts.plans.clone(),
+            next_id: AtomicUsize::new(0),
+            routes: Mutex::new(HashMap::new()),
+            controller: Mutex::new(None),
+            rejected: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            window: Mutex::new(None),
+        }
+    }
+
+    /// Extend the active window to now (opening it if this is the first
+    /// activity).
+    fn touch(&self) {
+        let now = Instant::now();
+        let mut w = self.window.lock().unwrap_or_else(|e| e.into_inner());
+        *w = Some(match *w {
+            None => (now, now),
+            Some((first, _)) => (first, now),
+        });
+    }
+
+    /// The active window's span in seconds (0 when nothing ever ran).
+    fn active_wall_s(&self) -> f64 {
+        self.window
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .map(|(first, last)| (last - first).as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    fn reject(&self, id: usize, error: String, w: &SharedWriter<W>) {
+        emit(w, &Event::Rejected { id, error: error.clone() });
+        self.rejected.lock().unwrap_or_else(|e| e.into_inner()).push(Rejection { id, error });
+    }
+
+    /// Route a driver-loop event ([`Event::Started`]/[`Event::Done`]) to
+    /// the client that submitted the job; `done` retires the route. A
+    /// write that fails (disconnected, or stalled past the socket write
+    /// timeout) evicts the route, so a dead client costs a shard driver
+    /// at most one bounded write — never a permanent stall.
+    fn route_event(&self, ev: Event) {
+        let Some(id) = ev.id() else { return };
+        let done = matches!(ev, Event::Done(_));
+        if done {
+            // completions extend the active window (see `window`)
+            self.touch();
+        }
+        let w = {
+            let mut routes = self.routes.lock().unwrap_or_else(|e| e.into_inner());
+            if done {
+                routes.remove(&id)
+            } else {
+                routes.get(&id).cloned()
+            }
+        };
+        if let Some(w) = w {
+            if !emit(&w, &ev) && !done {
+                self.routes.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+            }
+        }
+    }
+
+    /// Handle one request line from `w`'s connection. Every submission
+    /// attempt — including a malformed line — consumes a job id, so
+    /// clients can always match events to what they sent.
+    fn handle_line(&self, line: &str, w: &SharedWriter<W>) -> Flow {
+        let line = line.trim();
+        if line.is_empty() {
+            return Flow::Continue;
+        }
+        match Request::parse_line(line) {
+            Err(e) => {
+                self.touch();
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                self.reject(id, format!("{e:#}"), w);
+                Flow::Continue
+            }
+            Ok(Request::Drain) => {
+                *self.controller.lock().unwrap_or_else(|e| e.into_inner()) = Some(w.clone());
+                self.stop.store(true, Ordering::Release);
+                self.queue.close();
+                Flow::Stop
+            }
+            Ok(Request::Shutdown) => {
+                *self.controller.lock().unwrap_or_else(|e| e.into_inner()) = Some(w.clone());
+                self.stop.store(true, Ordering::Release);
+                for s in self.queue.abort() {
+                    let route =
+                        self.routes.lock().unwrap_or_else(|e| e.into_inner()).remove(&s.id);
+                    self.reject(
+                        s.id,
+                        "cancelled by shutdown before starting".into(),
+                        route.as_ref().unwrap_or(w),
+                    );
+                }
+                Flow::Stop
+            }
+            Ok(Request::Submit(spec)) => {
+                self.touch();
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                match admit(id, spec, self.plans.as_ref(), self.threads_per_shard) {
+                    Err(e) => self.reject(id, format!("{e:#}"), w),
+                    Ok(session) => {
+                        self.routes
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .insert(id, w.clone());
+                        emit(
+                            w,
+                            &Event::Accepted {
+                                id,
+                                spec: session.spec.clone(),
+                                plan: session.plan.describe(),
+                                tuned: session.tuned,
+                            },
+                        );
+                        // blocks at capacity: backpressure reaches the
+                        // transport reader, hence the submitting client
+                        if self.queue.push(session).is_err() {
+                            self.routes.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+                            self.reject(id, "queue closed before the session started".into(), w);
+                        }
+                    }
+                }
+                Flow::Continue
+            }
+        }
+    }
+
+    /// Consume the core into the aggregate report (drops the routing
+    /// table, so transport writers can be reclaimed by the caller).
+    fn into_report(
+        self,
+        results: Vec<crate::coordinator::service::SessionResult>,
+        wall_s: f64,
+    ) -> ServiceReport {
+        let mut rejected = self.rejected.into_inner().unwrap_or_else(|e| e.into_inner());
+        rejected.sort_by_key(|r| r.id);
+        ServiceReport {
+            shards: self.shards,
+            threads_per_shard: self.threads_per_shard,
+            wall_s,
+            results,
+            rejected,
+        }
+    }
+}
+
+/// Serve one client over a byte stream: NDJSON requests in, NDJSON events
+/// out, until EOF (an implicit drain) or an explicit drain/shutdown line.
+/// This is `stencilax daemon --stdio`; tests drive it with in-memory
+/// buffers. Returns the aggregate report and hands the writer back (the
+/// final `report` event has already been written to it).
+pub fn serve_stream<R: BufRead, W: Write + Send>(
+    input: R,
+    output: W,
+    opts: &DaemonOpts,
+) -> Result<(ServiceReport, W)> {
+    let core: Core<W> = Core::new(opts);
+    let writer = Arc::new(Mutex::new(output));
+    let results = std::thread::scope(|scope| {
+        let (core, writer) = (&core, &writer);
+        let driver =
+            scope.spawn(move || drive(&core.queue, core.shards, &|ev| core.route_event(ev)));
+        let mut input = input;
+        let mut line: Vec<u8> = Vec::new();
+        loop {
+            line.clear();
+            match read_line_capped(&mut input, &mut line, READ_CAP) {
+                Ok(LineRead::Eof) => break, // EOF: implicit drain
+                Ok(LineRead::Line) => {
+                    let text = String::from_utf8_lossy(&line);
+                    if core.handle_line(&text, writer) == Flow::Stop {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("daemon: read error, draining: {e}");
+                    break;
+                }
+            }
+        }
+        core.queue.close();
+        driver.join().expect("daemon driver panicked")
+    });
+    let wall_s = core.active_wall_s();
+    let report = core.into_report(results, wall_s);
+    emit(&writer, &Event::Report(report.to_json()));
+    let output = Arc::try_unwrap(writer)
+        .ok()
+        .expect("all writer clones retired with the core")
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner());
+    Ok((report, output))
+}
+
+/// Serve concurrent clients over a Unix domain socket at `path` (a stale
+/// socket file is replaced). Each connection submits jobs and receives
+/// its own jobs' events; a `drain`/`shutdown` from any client stops the
+/// daemon, whose final `report` event goes to that controller connection.
+/// Returns the aggregate report across every client.
+pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
+    if path.exists() {
+        // only ever unlink a *stale* daemon socket: a live daemon's
+        // socket (probe-connect succeeds) or an unrelated file at the
+        // path must not be destroyed by a second daemon's startup
+        use std::os::unix::fs::FileTypeExt;
+        let ft = std::fs::symlink_metadata(path)
+            .with_context(|| format!("inspecting existing socket path {path:?}"))?
+            .file_type();
+        if !ft.is_socket() {
+            bail!("refusing to replace non-socket file at {path:?}");
+        }
+        if UnixStream::connect(path).is_ok() {
+            bail!("a daemon is already listening on {path:?}");
+        }
+        std::fs::remove_file(path).with_context(|| format!("removing stale socket {path:?}"))?;
+    }
+    let listener = UnixListener::bind(path).with_context(|| format!("binding socket {path:?}"))?;
+    // non-blocking accept: the loop must notice drain/shutdown (set by a
+    // connection handler) without waiting for another client to connect
+    listener.set_nonblocking(true).context("setting socket non-blocking")?;
+    let core: Core<UnixStream> = Core::new(opts);
+    let results = std::thread::scope(|scope| {
+        let core = &core;
+        let driver =
+            scope.spawn(move || drive(&core.queue, core.shards, &|ev| core.route_event(ev)));
+        while !core.stopped() {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    scope.spawn(move || handle_conn(core, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // fatal accept error: flag the stop so connection
+                    // handlers (which poll `stopped`) wind down too —
+                    // the scope join below waits on them
+                    eprintln!("daemon: accept error, draining: {e}");
+                    core.stop.store(true, Ordering::Release);
+                    break;
+                }
+            }
+        }
+        core.queue.close();
+        driver.join().expect("daemon driver panicked")
+    });
+    let _ = std::fs::remove_file(path);
+    let wall_s = core.active_wall_s();
+    let controller = core.controller.lock().unwrap_or_else(|e| e.into_inner()).take();
+    let report = core.into_report(results, wall_s);
+    if let Some(w) = controller {
+        emit(&w, &Event::Report(report.to_json()));
+    }
+    Ok(report)
+}
+
+/// One socket connection's read loop. Reads with a short timeout so a
+/// parked connection notices daemon stop; partial lines accumulate
+/// (memory-capped) across timeouts until their newline arrives. A
+/// trailing unterminated fragment at client EOF is handled as a partial
+/// line — it parses or rejects — and the daemon keeps serving.
+fn handle_conn(core: &Core<UnixStream>, stream: UnixStream) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    // a client that stops reading fills its receive buffer; the write
+    // timeout turns the resulting blocked event write into an error, and
+    // route_event evicts the stalled client instead of stalling a shard
+    let _ = write_half.set_write_timeout(Some(Duration::from_secs(5)));
+    let w: SharedWriter<UnixStream> = Arc::new(Mutex::new(write_half));
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if core.stopped() {
+            return;
+        }
+        match read_line_capped(&mut reader, &mut buf, READ_CAP) {
+            Ok(LineRead::Eof) => return, // connection done; daemon keeps serving
+            Ok(LineRead::Line) => {
+                let stop = {
+                    let text = String::from_utf8_lossy(&buf);
+                    core.handle_line(&text, &w) == Flow::Stop
+                };
+                if stop {
+                    return;
+                }
+                buf.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                // timeout mid-wait (or mid-line: read bytes stay in buf)
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Convenience for tests and the parity suite: serve a whole NDJSON
+/// request script from a string and return the report plus the raw event
+/// lines the client would have seen.
+pub fn serve_script(script: &str, opts: &DaemonOpts) -> Result<(ServiceReport, Vec<String>)> {
+    let (report, out) = serve_stream(script.as_bytes(), Vec::<u8>::new(), opts)?;
+    let text = String::from_utf8(out).context("daemon emitted non-UTF-8 events")?;
+    Ok((report, text.lines().map(|s| s.to_string()).collect()))
+}

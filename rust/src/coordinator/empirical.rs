@@ -245,8 +245,26 @@ impl NativeTuneOutcome {
     }
 }
 
-/// Enumerate, prune, and measure launch plans for one workload. `None`
-/// when the workload has no native path.
+/// Thread budgets the serving layer admits sessions at: the full machine
+/// budget plus `threads / shards` for shards ∈ {2, 4} (deduped, min 1).
+/// Tuning at every one of these keys means an admitted session — whose
+/// budget is its shard's share, not the whole machine — hits the plan
+/// cache instead of falling back to the default heuristics
+/// (ROADMAP: tuned plans for shard-budget keys).
+pub fn service_budgets(threads: usize) -> Vec<usize> {
+    let mut out = vec![threads.max(1)];
+    for shards in [2usize, 4] {
+        let b = (threads / shards).max(1);
+        if !out.contains(&b) {
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Enumerate, prune, and measure launch plans for one workload at the
+/// full machine thread budget. `None` when the workload has no native
+/// path.
 pub fn tune_native(
     w: &dyn Workload,
     smoke: bool,
@@ -254,11 +272,25 @@ pub fn tune_native(
     cache: &PredictionCache,
     bencher: &Bencher,
 ) -> Option<NativeTuneOutcome> {
+    tune_native_at(w, smoke, model, cache, bencher, par::num_threads())
+}
+
+/// [`tune_native`] at an explicit `threads` budget — the budget is part
+/// of the plan-cache key, so the service budgets are tuned as their own
+/// searches (a winner at budget 4 says nothing about budget 1).
+pub fn tune_native_at(
+    w: &dyn Workload,
+    smoke: bool,
+    model: &HostModel,
+    cache: &PredictionCache,
+    bencher: &Bencher,
+    threads: usize,
+) -> Option<NativeTuneOutcome> {
     let mut inst: Box<dyn NativeInstance> = w.native(smoke)?;
     let shape = inst.shape();
     let elems = inst.elems();
     let chunked = inst.chunked_1d();
-    let threads = par::num_threads();
+    let threads = threads.max(1);
     let include_unfused = inst.has_unfused_path();
     let candidates = candidate_plans(&shape, threads, chunked, include_unfused);
     let enumerated = candidates.len();
@@ -338,9 +370,11 @@ fn tune_bencher(smoke: bool) -> Bencher {
 }
 
 /// Run the closed loop over `workloads`: load the prior calibration (if a
-/// plan cache exists under `out_dir`), tune every workload, refit the
-/// host model from the measurements, and persist plan cache + calibration
-/// report.
+/// plan cache exists under `out_dir`), tune every workload at every
+/// service budget ([`service_budgets`] — the full machine plus the
+/// shards ∈ {2, 4} shares, so admitted sessions hit the cache), refit
+/// the host model from the measurements, and persist plan cache +
+/// calibration report.
 pub fn run_native_tune(
     workloads: &[&dyn Workload],
     smoke: bool,
@@ -354,10 +388,16 @@ pub fn run_native_tune(
         .unwrap_or_else(HostModel::seed);
     let pred_cache = PredictionCache::new();
     let bencher = tune_bencher(smoke);
+    let budgets = service_budgets(par::num_threads());
 
     let outcomes: Vec<NativeTuneOutcome> = workloads
         .iter()
-        .filter_map(|w| tune_native(*w, smoke, &model, &pred_cache, &bencher))
+        .flat_map(|w| {
+            budgets
+                .iter()
+                .filter_map(|&b| tune_native_at(*w, smoke, &model, &pred_cache, &bencher, b))
+                .collect::<Vec<_>>()
+        })
         .collect();
 
     // refit bandwidth/latency coefficients from every fused measurement
@@ -378,14 +418,20 @@ pub fn run_native_tune(
         cache.insert(o.to_entry());
     }
     // Persist the refit coefficients only when the run spanned more than
-    // one workload: a single workload's points cover one cost regime
-    // (e.g. conv1d is purely memory-bound), where the other coefficients
-    // are unidentifiable and would drift toward the clamps on noise —
-    // persisting that (even as the first-ever calibration) would degrade
-    // every later prune. Single-workload runs still report their fit;
-    // the cache keeps whatever broad fit it had (possibly none, in which
-    // case pruning uses the seed model until an --all run lands).
-    if outcomes.len() > 1 {
+    // one *workload*: a single workload's points cover one cost regime
+    // (e.g. conv1d is purely memory-bound) — even across several thread
+    // budgets — where the other coefficients are unidentifiable and
+    // would drift toward the clamps on noise; persisting that (even as
+    // the first-ever calibration) would degrade every later prune.
+    // Single-workload runs still report their fit; the cache keeps
+    // whatever broad fit it had (possibly none, in which case pruning
+    // uses the seed model until an --all run lands).
+    let distinct_workloads = outcomes
+        .iter()
+        .map(|o| o.workload.as_str())
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
+    if distinct_workloads > 1 {
         cache.set_calibration(calibration.clone());
     }
     let cache_path = cache.save(out_dir)?;
@@ -426,6 +472,7 @@ pub fn calibration_report(
                     "shape",
                     Json::arr(o.shape.iter().map(|&n| Json::num(n as f64)).collect()),
                 ),
+                ("threads", Json::num(o.threads as f64)),
                 ("enumerated", Json::num(o.enumerated as f64)),
                 ("pruned", Json::num(o.pruned as f64)),
                 ("measured", Json::num(o.measured.len() as f64)),
@@ -527,6 +574,15 @@ mod tests {
     }
 
     #[test]
+    fn service_budgets_cover_the_shard_shares() {
+        assert_eq!(service_budgets(8), vec![8, 4, 2]);
+        assert_eq!(service_budgets(4), vec![4, 2, 1]);
+        assert_eq!(service_budgets(2), vec![2, 1]); // 2/4 dedupes into 1
+        assert_eq!(service_budgets(1), vec![1]);
+        assert_eq!(service_budgets(0), vec![1]);
+    }
+
+    #[test]
     fn run_native_tune_roundtrips_cache_and_report() {
         let dir = std::env::temp_dir().join(format!("stencilax_tune_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -534,12 +590,17 @@ mod tests {
         // persists (single-regime fits are reported but never cached)
         let ws: Vec<&dyn Workload> =
             vec![find("conv1d-r1").unwrap(), find("diffusion1d").unwrap()];
+        let budgets = service_budgets(crate::util::par::num_threads());
         let run = run_native_tune(&ws, true, &dir).unwrap();
-        assert_eq!(run.outcomes.len(), 2);
+        // one outcome per (workload, service budget): admitted sessions
+        // at budget threads/shards hit the cache instead of missing
+        assert_eq!(run.outcomes.len(), 2 * budgets.len());
         let cache = PlanCache::load_if_exists(&dir).unwrap().expect("cache written");
-        let o = &run.outcomes[0];
-        let entry = cache.lookup(&o.workload, &o.shape, o.threads).expect("entry for host");
-        assert!(entry.tuned_melem_per_s >= entry.default_melem_per_s * 0.999, "{entry:?}");
+        for o in &run.outcomes {
+            let entry = cache.lookup(&o.workload, &o.shape, o.threads).expect("entry for host");
+            assert!(entry.tuned_melem_per_s >= entry.default_melem_per_s * 0.999, "{entry:?}");
+            assert_eq!(entry.threads, o.threads, "budget keys the entry");
+        }
         assert!(cache.calibration.is_some());
         assert!(run.calibration.err_after <= run.calibration.err_before);
 
@@ -547,8 +608,9 @@ mod tests {
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.req_str("schema").unwrap(), CALIBRATION_SCHEMA);
         let rows = j.req_arr("workloads").unwrap();
-        assert_eq!(rows.len(), 2);
+        assert_eq!(rows.len(), 2 * budgets.len());
         assert!(rows[0].req_f64("speedup").unwrap() >= 0.999);
+        assert!(rows[0].req_u64("threads").unwrap() >= 1);
 
         // single-workload re-run: its fit is reported but must NOT
         // replace the cached multi-workload calibration

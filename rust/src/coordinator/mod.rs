@@ -4,6 +4,7 @@
 
 pub mod autotune;
 pub mod bench;
+pub mod daemon;
 pub mod empirical;
 pub mod plans;
 pub mod report;
@@ -14,10 +15,17 @@ pub mod tune;
 pub mod verify;
 
 pub use autotune::{autotune, TuneResult};
-pub use empirical::{candidate_plans, run_native_tune, tune_native, NativeTuneOutcome};
+pub use daemon::{serve_socket, serve_stream, DaemonOpts};
+pub use empirical::{
+    candidate_plans, run_native_tune, service_budgets, tune_native, tune_native_at,
+    NativeTuneOutcome,
+};
 pub use plans::{host_fingerprint, PlanCache, PlanEntry};
 pub use report::{AsciiPlot, Table};
-pub use service::{parse_jobs, run_jobs, JobSpec, ServiceReport, SessionResult};
+pub use service::{
+    job_entries, parse_jobs, parse_jobs_lenient, run_jobs, run_loaded, JobSpec, LoadedJobs,
+    Rejection, ServiceReport, SessionResult,
+};
 pub use sweep::Sweep;
 pub use tune::{autotune_cached, tune_batch, PredictionCache, TuneReport};
 pub use verify::{verify_slices, Tolerance, VerifyReport};

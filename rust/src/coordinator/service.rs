@@ -23,15 +23,25 @@
 //! [`SERVE_SCHEMA`]) with per-session [`Stats`] and service-level
 //! throughput (jobs/s, aggregate Melem/s).
 //!
+//! Since the daemon landed (DESIGN.md §13) this module is the *batch
+//! front-end* of a shared serving core: admission ([`admit`]) and the
+//! per-shard driver loop ([`crate::coordinator::daemon::queue`], on
+//! [`par::drive_shards`]) are one implementation with two faces —
+//! `serve --jobs` admits a whole file up front, pushes it through the
+//! queue, and closes it; `stencilax daemon` keeps the same queue open and
+//! admits NDJSON requests while sessions run. Bad jobs are *rejected
+//! per-job* (recorded in the report's `rejected` array), never aborting
+//! the rest of the batch.
+//!
 //! [`DoubleBuffer`]: crate::stencil::exec::DoubleBuffer
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::daemon::protocol::Event;
+use crate::coordinator::daemon::queue::{drive, JobQueue};
 use crate::coordinator::plans::PlanCache;
 use crate::sim::workload::{self, Workload};
 use crate::stencil::plan::LaunchPlan;
@@ -64,38 +74,105 @@ impl JobSpec {
         ])
     }
 
+    /// Structural validity, independent of any workload: the checks both
+    /// the JSON loader and [`admit`] apply, so a programmatically built
+    /// `JobSpec { steps: 0, .. }` rejects at admission instead of
+    /// panicking a shard driver on an empty sample set.
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("job {:?}: steps must be >= 1", self.workload);
+        }
+        if self.shape.is_empty() || self.shape.contains(&0) {
+            bail!("job {:?}: shape {:?} has an empty axis", self.workload, self.shape);
+        }
+        Ok(())
+    }
+
     pub fn from_json(j: &Json) -> Result<JobSpec> {
         let spec = JobSpec {
             workload: j.req_str("workload")?.to_string(),
             shape: j.req("shape")?.usize_vec()?,
             steps: j.req_u64("steps")? as usize,
         };
-        if spec.steps == 0 {
-            bail!("job {:?}: steps must be >= 1", spec.workload);
-        }
-        if spec.shape.is_empty() || spec.shape.contains(&0) {
-            bail!("job {:?}: shape {:?} has an empty axis", spec.workload, spec.shape);
-        }
+        spec.validate()?;
         Ok(spec)
     }
 }
 
-/// Parse a job file (strict, like every other loader in the crate):
-/// `{"schema": "stencilax-jobs/1", "jobs": [{workload, shape, steps}, ..]}`.
-pub fn parse_jobs(j: &Json) -> Result<Vec<JobSpec>> {
+/// Validate a job file's envelope — the schema tag and a non-empty
+/// `jobs` array — and return the raw entries. The single strictness
+/// gate every consumer shares: the strict loader ([`parse_jobs`]), the
+/// lenient one ([`parse_jobs_lenient`]), and the daemon submit client
+/// (which forwards entries unvalidated for per-job daemon admission).
+pub fn job_entries(j: &Json) -> Result<&[Json]> {
     let schema = j.req_str("schema")?;
     if schema != JOBS_SCHEMA {
         bail!("unsupported job-file schema {schema:?} (want {JOBS_SCHEMA:?})");
     }
-    let jobs: Vec<JobSpec> = j
-        .req_arr("jobs")?
-        .iter()
-        .map(JobSpec::from_json)
-        .collect::<Result<Vec<_>>>()?;
-    if jobs.is_empty() {
+    let entries = j.req_arr("jobs")?;
+    if entries.is_empty() {
         bail!("job file contains no jobs");
     }
-    Ok(jobs)
+    Ok(entries)
+}
+
+/// Parse a job file strictly: any malformed entry fails the whole file
+/// (`{"schema": "stencilax-jobs/1", "jobs": [{workload, shape, steps}, ..]}`).
+/// The serving paths use [`parse_jobs_lenient`] instead; this is the
+/// all-or-nothing variant for callers that treat the file as one unit.
+pub fn parse_jobs(j: &Json) -> Result<Vec<JobSpec>> {
+    job_entries(j)?.iter().map(JobSpec::from_json).collect()
+}
+
+/// One job that did not make it to execution: a malformed file entry, an
+/// admission failure (unknown workload, unsupported shape), or a session
+/// cancelled by a daemon `shutdown`. Recorded in the report's `rejected`
+/// array — a bad job never aborts the rest of the batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rejection {
+    pub id: usize,
+    pub error: String,
+}
+
+impl Rejection {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("error", Json::str(self.error.as_str())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Rejection> {
+        Ok(Rejection {
+            id: j.req_u64("id")? as usize,
+            error: j.req_str("error")?.to_string(),
+        })
+    }
+}
+
+/// A job file loaded with *per-job* error recovery: the envelope (schema
+/// tag, non-empty `jobs` array) stays strict, but each malformed entry
+/// becomes a [`Rejection`] (keyed by its index in the file) instead of
+/// failing the whole file — the strict-loader batch abort the daemon's
+/// per-job admission made obsolete.
+pub struct LoadedJobs {
+    /// Well-formed jobs, each with its file-order id.
+    pub jobs: Vec<(usize, JobSpec)>,
+    /// Entries that failed to parse.
+    pub rejected: Vec<Rejection>,
+}
+
+/// Parse a job file, recording malformed entries as rejections (see
+/// [`LoadedJobs`]).
+pub fn parse_jobs_lenient(j: &Json) -> Result<LoadedJobs> {
+    let mut out = LoadedJobs { jobs: Vec::new(), rejected: Vec::new() };
+    for (id, entry) in job_entries(j)?.iter().enumerate() {
+        match JobSpec::from_json(entry) {
+            Ok(spec) => out.jobs.push((id, spec)),
+            Err(e) => out.rejected.push(Rejection { id, error: format!("{e:#}") }),
+        }
+    }
+    Ok(out)
 }
 
 /// An admitted session: registry workload resolved, shape validated, and
@@ -108,6 +185,9 @@ pub struct Session {
     pub plan: LaunchPlan,
     /// Whether the plan came from the tuned plan cache.
     pub tuned: bool,
+    /// Admission instant — the submit→done latency clock the daemon's
+    /// streaming metrics report.
+    pub submitted: Instant,
 }
 
 /// Admit one job: resolve the workload (aliases apply), validate the shape
@@ -124,6 +204,7 @@ pub fn admit(
     plans: Option<&PlanCache>,
     threads_budget: usize,
 ) -> Result<Session> {
+    spec.validate().with_context(|| format!("job {id}: invalid spec"))?;
     let w = workload::find(&spec.workload).with_context(|| {
         format!("job {id}: unknown workload {:?} (see `stencilax workloads`)", spec.workload)
     })?;
@@ -146,10 +227,11 @@ pub fn admit(
     if plan.threads == 0 || plan.threads > threads_budget {
         plan.threads = threads_budget;
     }
-    Ok(Session { id, spec, workload: w, plan, tuned })
+    Ok(Session { id, spec, workload: w, plan, tuned, submitted: Instant::now() })
 }
 
 /// One completed session's record.
+#[derive(Debug, Clone)]
 pub struct SessionResult {
     pub id: usize,
     /// Canonical registry name (aliases resolved at admission).
@@ -168,6 +250,9 @@ pub struct SessionResult {
     /// FNV-1a over the final output's IEEE-754 bit patterns — the
     /// service-vs-direct bit-parity witness.
     pub digest_bits: u64,
+    /// Submit→done latency: admission instant to completion (includes
+    /// queue wait — what a daemon client actually experiences).
+    pub latency_s: f64,
 }
 
 impl SessionResult {
@@ -208,7 +293,36 @@ impl SessionResult {
         obj.insert("elems_per_step".into(), Json::num(self.elems_per_step));
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
         obj.insert("digest_bits".into(), Json::str(format!("{:#018x}", self.digest_bits)));
+        obj.insert("latency_s".into(), Json::num(self.latency_s));
         Json::Obj(obj)
+    }
+
+    /// Inverse of [`Self::to_json`] — the daemon wire protocol carries
+    /// whole session records in its `done` events, so clients (and the
+    /// parity tests) re-parse them.
+    pub fn from_json(j: &Json) -> Result<SessionResult> {
+        let digest = j.req_str("digest_bits")?;
+        let digest_bits = u64::from_str_radix(digest.trim_start_matches("0x"), 16)
+            .with_context(|| format!("bad digest_bits {digest:?}"))?;
+        Ok(SessionResult {
+            id: j.req_u64("id")? as usize,
+            workload: j.req_str("workload")?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            steps: j.req_u64("steps")? as usize,
+            shard: j.req_u64("shard")? as usize,
+            plan: j.req_str("plan")?.to_string(),
+            tuned: j.req("tuned")?.as_bool().context("tuned not a bool")?,
+            elems_per_step: j.req_f64("elems_per_step")?,
+            stats: Stats {
+                median_s: j.req_f64("median_s")?,
+                mean_s: j.req_f64("mean_s")?,
+                min_s: j.req_f64("min_s")?,
+                max_s: j.req_f64("max_s")?,
+                iters: j.req_u64("iters")? as usize,
+            },
+            digest_bits,
+            latency_s: j.req_f64("latency_s")?,
+        })
     }
 }
 
@@ -222,16 +336,27 @@ pub struct ServiceReport {
     pub wall_s: f64,
     /// Per-session records, sorted by job id.
     pub results: Vec<SessionResult>,
+    /// Jobs that never executed (parse/admission failures, cancelled
+    /// sessions), sorted by job id.
+    pub rejected: Vec<Rejection>,
 }
 
 impl ServiceReport {
+    /// (0 for a report with no wall time at all — a daemon that served
+    /// nothing — keeping the JSON finite.)
     pub fn jobs_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
         self.results.len() as f64 / self.wall_s
     }
 
     /// Aggregate service throughput: total elements updated across every
     /// session and step, over the batch wall-clock.
     pub fn aggregate_melem_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
         self.results.iter().map(|r| r.elems_per_step * r.steps as f64).sum::<f64>()
             / self.wall_s
             / 1e6
@@ -242,19 +367,27 @@ impl ServiceReport {
             ("schema", Json::str(SERVE_SCHEMA)),
             ("shards", Json::num(self.shards as f64)),
             ("threads_per_shard", Json::num(self.threads_per_shard as f64)),
-            ("jobs", Json::num(self.results.len() as f64)),
+            ("jobs", Json::num((self.results.len() + self.rejected.len()) as f64)),
             ("wall_s", Json::num(self.wall_s)),
             ("jobs_per_s", Json::num(self.jobs_per_s())),
             ("aggregate_melem_per_s", Json::num(self.aggregate_melem_per_s())),
             ("sessions", Json::arr(self.results.iter().map(|r| r.to_json()).collect())),
+            ("rejected", Json::arr(self.rejected.iter().map(|r| r.to_json()).collect())),
         ])
     }
 
     /// Write `serve_report.json` under `out_dir`.
     pub fn save(&self, out_dir: &Path) -> Result<PathBuf> {
+        self.save_as(out_dir, SERVE_REPORT_FILE)
+    }
+
+    /// Write the report under `out_dir` with an explicit file name (the
+    /// daemon writes `daemon_report.json` so CI can diff it against the
+    /// batch-mode `serve_report.json`).
+    pub fn save_as(&self, out_dir: &Path, file: &str) -> Result<PathBuf> {
         std::fs::create_dir_all(out_dir)
             .with_context(|| format!("creating output dir {out_dir:?}"))?;
-        let path = out_dir.join(SERVE_REPORT_FILE);
+        let path = out_dir.join(file);
         std::fs::write(&path, self.to_json().to_string_pretty())
             .with_context(|| format!("writing {path:?}"))?;
         Ok(path)
@@ -275,7 +408,7 @@ pub fn fnv_bits(xs: &[f64]) -> u64 {
     h
 }
 
-fn run_session(s: &Session, shard: usize) -> SessionResult {
+pub(crate) fn run_session(s: &Session, shard: usize) -> SessionResult {
     // Built here, on the shard that runs it — at most `shards` sessions
     // hold live buffers at once (the queue is the backpressure).
     let mut inst =
@@ -305,16 +438,30 @@ fn run_session(s: &Session, shard: usize) -> SessionResult {
         elems_per_step: inst.elems(),
         stats: Stats::from_samples(samples),
         digest_bits: fnv_bits(&inst.output()),
+        latency_s: s.submitted.elapsed().as_secs_f64(),
     }
 }
 
-/// Run a batch of jobs on `shards` shards, clamped to the pool's shard
-/// count, to the job count (fewer jobs than shards would only fragment
-/// the thread budget), and to `num_threads` (a `STENCILAX_THREADS=1` run
-/// must not step four sessions concurrently just because four shards were
-/// requested); call early in the process for the request to size the
-/// pool. Admission is all-or-nothing: any invalid job fails the batch
-/// before a single step runs. `quiet` suppresses the per-session
+/// Clamp a requested shard count for serving: to the pool's shard count,
+/// to `jobs` when known (fewer jobs than shards would only fragment the
+/// thread budget; pass `usize::MAX` for the daemon's unknown job count),
+/// and to `num_threads` (a `STENCILAX_THREADS=1` run must not step four
+/// sessions concurrently just because four shards were requested). Call
+/// early in the process for the request to size the pool. Returns
+/// `(shards, threads_per_shard)`.
+pub fn clamp_shards(requested: usize, jobs: usize) -> (usize, usize) {
+    let shards = par::request_shards(requested.max(1))
+        .min(requested.max(1))
+        .min(jobs.max(1))
+        .min(par::num_threads());
+    (shards, (par::num_threads() / shards).max(1))
+}
+
+/// Run a batch of jobs — the thin batch front-end of the shared serving
+/// core: admit everything up front (per-job: a bad job is recorded as
+/// rejected, the rest still run), push the sessions through a
+/// [`JobQueue`], close it, and drain it with the same per-shard drivers
+/// the daemon uses ([`drive`]). `quiet` suppresses the per-session
 /// streaming lines (the bench harness runs batches in a timing loop).
 pub fn run_jobs(
     jobs: &[JobSpec],
@@ -322,44 +469,46 @@ pub fn run_jobs(
     plans: Option<&PlanCache>,
     quiet: bool,
 ) -> Result<ServiceReport> {
-    let shards = par::request_shards(shards.max(1))
-        .min(shards.max(1))
-        .min(jobs.len().max(1))
-        .min(par::num_threads());
-    let threads_per_shard = (par::num_threads() / shards).max(1);
-    let sessions: Vec<Session> = jobs
-        .iter()
-        .enumerate()
-        .map(|(id, spec)| admit(id, spec.clone(), plans, threads_per_shard))
-        .collect::<Result<Vec<_>>>()?;
-    let queue = AtomicUsize::new(0);
-    let results: Mutex<Vec<SessionResult>> = Mutex::new(Vec::with_capacity(sessions.len()));
+    let loaded = LoadedJobs {
+        jobs: jobs.iter().cloned().enumerate().collect(),
+        rejected: Vec::new(),
+    };
+    run_loaded(&loaded, shards, plans, quiet)
+}
+
+/// [`run_jobs`] over an already-loaded job file, carrying its per-entry
+/// parse rejections through to the report.
+pub fn run_loaded(
+    loaded: &LoadedJobs,
+    shards: usize,
+    plans: Option<&PlanCache>,
+    quiet: bool,
+) -> Result<ServiceReport> {
+    let (shards, threads_per_shard) = clamp_shards(shards, loaded.jobs.len());
+    let mut rejected = loaded.rejected.clone();
+    let mut sessions: Vec<Session> = Vec::with_capacity(loaded.jobs.len());
+    for (id, spec) in &loaded.jobs {
+        match admit(*id, spec.clone(), plans, threads_per_shard) {
+            Ok(s) => sessions.push(s),
+            Err(e) => rejected.push(Rejection { id: *id, error: format!("{e:#}") }),
+        }
+    }
+    let queue = JobQueue::bounded(sessions.len().max(1));
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for shard in 0..shards {
-            let (queue, results, sessions) = (&queue, &results, &sessions);
-            scope.spawn(move || {
-                // Pin this driver's dispatches to its shard: sessions on
-                // different shards share no pool workers.
-                let _bind = par::bind_shard(shard);
-                loop {
-                    let i = queue.fetch_add(1, Ordering::Relaxed);
-                    if i >= sessions.len() {
-                        break;
-                    }
-                    let r = run_session(&sessions[i], shard);
-                    if !quiet {
-                        println!("{}", r.describe_line());
-                    }
-                    results.lock().unwrap_or_else(|e| e.into_inner()).push(r);
-                }
-            });
+    for s in sessions {
+        queue.push(s).ok().expect("fresh batch queue is open and sized for the batch");
+    }
+    queue.close();
+    let results = drive(&queue, shards, &|ev| {
+        if !quiet {
+            if let Event::Done(r) = &ev {
+                println!("{}", r.describe_line());
+            }
         }
     });
     let wall_s = t0.elapsed().as_secs_f64();
-    let mut results = results.into_inner().unwrap_or_else(|e| e.into_inner());
-    results.sort_by_key(|r| r.id);
-    Ok(ServiceReport { shards, threads_per_shard, wall_s, results })
+    rejected.sort_by_key(|r| r.id);
+    Ok(ServiceReport { shards, threads_per_shard, wall_s, results, rejected })
 }
 
 // ---------------------------------------------------------------------------
@@ -465,6 +614,11 @@ mod tests {
 
     #[test]
     fn admission_validates_and_resolves_plans() {
+        // structural validity is re-checked at admission: programmatic
+        // callers bypass the JSON loader, and a steps-0 session would
+        // otherwise panic a shard driver on an empty sample set
+        assert!(admit(0, job("diffusion2d", &[16, 16], 0), None, 2).is_err(), "steps 0");
+        assert!(admit(0, job("diffusion2d", &[16, 0], 1), None, 2).is_err(), "zero axis");
         assert!(admit(0, job("no-such-workload", &[8], 1), None, 2).is_err());
         assert!(admit(0, job("mhd", &[8, 8, 12], 1), None, 2).is_err(), "non-cubic MHD box");
         assert!(admit(0, job("diffusion2d", &[8], 1), None, 2).is_err(), "dims mismatch");
@@ -564,6 +718,64 @@ mod tests {
         assert_eq!(s.req_str("workload").unwrap(), "diffusion2d");
         assert!(s.req_f64("median_s").unwrap() > 0.0);
         assert!(s.req_str("digest_bits").unwrap().starts_with("0x"));
+    }
+
+    #[test]
+    fn lenient_loader_records_bad_entries_instead_of_failing_the_file() {
+        let text = r#"{"schema":"stencilax-jobs/1","jobs":[
+            {"workload":"diffusion2d","shape":[16,16],"steps":2},
+            {"workload":"mhd","shape":[8,8,8],"steps":0},
+            {"workload":"diffusion1d","shape":[0],"steps":1},
+            {"workload":"conv1d-r3","shape":[1024],"steps":1}
+        ]}"#;
+        let loaded = parse_jobs_lenient(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(loaded.jobs.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(loaded.rejected.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        // envelope stays strict
+        let bad = Json::parse(r#"{"schema":"stencilax-jobs/999","jobs":[{}]}"#).unwrap();
+        assert!(parse_jobs_lenient(&bad).is_err());
+        let empty = Json::parse(r#"{"schema":"stencilax-jobs/1","jobs":[]}"#).unwrap();
+        assert!(parse_jobs_lenient(&empty).is_err());
+    }
+
+    #[test]
+    fn bad_jobs_are_rejected_per_job_not_batch_aborted() {
+        // an unknown workload and an unsupported shape must not take the
+        // valid jobs down with them
+        let jobs = vec![
+            job("diffusion2d", &[16, 16], 2),
+            job("no-such-workload", &[8], 1),
+            job("mhd", &[8, 8, 12], 1), // non-cubic MHD box
+            job("diffusion1d", &[512], 2),
+        ];
+        let rep = run_jobs(&jobs, 2, None, true).unwrap();
+        assert_eq!(rep.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(rep.rejected.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(rep.rejected[0].error.contains("unknown workload"), "{:?}", rep.rejected[0]);
+        // the report JSON carries both arrays, and `jobs` counts them all
+        let j = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.req_u64("jobs").unwrap(), 4);
+        assert_eq!(j.req_arr("sessions").unwrap().len(), 2);
+        let rejected = j.req_arr("rejected").unwrap();
+        assert_eq!(rejected.len(), 2);
+        let back = Rejection::from_json(&rejected[0]).unwrap();
+        assert_eq!(back, rep.rejected[0]);
+    }
+
+    #[test]
+    fn session_result_json_roundtrips() {
+        let jobs = vec![job("diffusion2d", &[16, 16], 2)];
+        let rep = run_jobs(&jobs, 1, None, true).unwrap();
+        let r = &rep.results[0];
+        let back = SessionResult::from_json(&Json::parse(&r.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.digest_bits, r.digest_bits);
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.shape, r.shape);
+        assert_eq!(back.plan, r.plan);
+        assert_eq!(back.stats.median_s, r.stats.median_s);
+        assert_eq!(back.latency_s, r.latency_s);
+        assert!(r.latency_s > 0.0, "latency clock must run");
     }
 
     #[test]

@@ -51,6 +51,21 @@
 //! refits the model's bandwidth/latency coefficients from the
 //! measurements — the paper's tuning strategy as a working closed loop.
 //!
+//! Serving has **two front-ends over one core** (DESIGN.md §12–§13):
+//! admission ([`coordinator::service::admit`], plan cache consulted at
+//! the session's per-shard thread budget) and the per-shard driver loop
+//! ([`coordinator::daemon::queue`], pinned to disjoint pool shards via
+//! [`util::par::drive_shards`]) are shared between the batch service
+//! (`stencilax serve --jobs`, [`coordinator::service`]: admit a job
+//! file, drain it, write `serve_report.json` — bad jobs are rejected
+//! per-job, never aborting the batch) and the long-lived daemon
+//! (`stencilax daemon [--socket|--stdio]`, [`coordinator::daemon`]: a
+//! bounded online queue admitting NDJSON `{workload, shape, steps}`
+//! requests *while sessions run*, streaming
+//! `accepted`/`rejected`/`started`/`done` events and a final aggregate
+//! report; `stencilax submit` is its client). Both modes produce
+//! bit-identical per-session digests for the same job set.
+//!
 //! Cargo features: `pjrt` enables executing the AOT HLO artifacts through
 //! the XLA/PJRT bindings. The default (offline) build compiles everything
 //! — model, registry, tuner, harness, CLI — with a stub executor that

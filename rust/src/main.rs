@@ -19,6 +19,13 @@
 //!   serve --jobs <file|-> [--shards N]
 //!                               batched stencil job service on the sharded
 //!                               worker pool -> serve_report.json
+//!   daemon [--socket P|--stdio] [--shards N] [--queue-cap N]
+//!                               long-lived serving daemon: admit NDJSON
+//!                               job requests while sessions run, stream
+//!                               events, report on drain/shutdown
+//!   submit --socket P --jobs <file|-> [--shutdown] [--raw]
+//!                               submit a job file to a running daemon and
+//!                               stream its events
 //!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
@@ -45,7 +52,18 @@ use stencilax::util::cli::Args;
 use stencilax::util::json::Json;
 use stencilax::util::rng::Rng;
 
-const BOOL_FLAGS: &[&str] = &["no-pitfalls", "save", "help", "all", "smoke", "native", "snapshot"];
+const BOOL_FLAGS: &[&str] = &[
+    "no-pitfalls",
+    "save",
+    "help",
+    "all",
+    "smoke",
+    "native",
+    "snapshot",
+    "stdio",
+    "shutdown",
+    "raw",
+];
 
 fn main() -> Result<()> {
     let args = Args::from_env(BOOL_FLAGS)?;
@@ -125,6 +143,8 @@ fn main() -> Result<()> {
         "plans" => cmd_plans(&cfg)?,
         "bench" => cmd_bench(&cfg, &args)?,
         "serve" => cmd_serve(&cfg, &args)?,
+        "daemon" => cmd_daemon(&cfg, &args)?,
+        "submit" => cmd_submit(&args)?,
         "verify" => cmd_verify(&cfg)?,
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -234,8 +254,9 @@ fn cmd_tune_native(cfg: &Config, args: &Args) -> Result<()> {
     );
     let run = run_native_tune(&selected, smoke, &cfg.output_dir)?;
     let mut t = Table::new(
-        "Empirical autotune — measured LaunchPlans (median of N iters)",
-        &["workload", "shape", "plans", "default", "tuned", "speedup", "winning plan"],
+        "Empirical autotune — measured LaunchPlans (median of N iters; \
+budget rows cover the service's per-shard thread shares)",
+        &["workload", "shape", "budget", "plans", "default", "tuned", "speedup", "winning plan"],
     );
     for o in &run.outcomes {
         let best = o.best();
@@ -243,6 +264,7 @@ fn cmd_tune_native(cfg: &Config, args: &Args) -> Result<()> {
         t.row(vec![
             o.workload.clone(),
             format!("{:?}", o.shape),
+            format!("t{}", o.threads),
             format!("{}/{}", o.measured.len(), o.enumerated),
             format!("{:.1} Me/s", o.melem_per_s(def)),
             format!("{:.1} Me/s", o.melem_per_s(best)),
@@ -285,14 +307,20 @@ fn cmd_plans(cfg: &Config) -> Result<()> {
         )
     })?;
     let mut t = Table::new(
-        &format!("Plan cache — {} tuned plan(s); this host is {}", cache.len(), host_fingerprint()),
-        &["workload", "shape", "threads", "host", "plan", "default", "tuned", "differs"],
+        &format!(
+            "Plan cache — {} tuned plan(s); this host is {} \
+(budget = thread share the entry was tuned at: the full machine, or \
+threads/shards for the service budgets)",
+            cache.len(),
+            host_fingerprint()
+        ),
+        &["workload", "shape", "budget", "host", "plan", "default", "tuned", "differs"],
     );
     for e in cache.iter() {
         t.row(vec![
             e.workload.clone(),
             format!("{:?}", e.shape),
-            e.threads.to_string(),
+            format!("t{}", e.threads),
             e.host.clone(),
             e.plan.describe(),
             format!("{:.1} Me/s", e.default_melem_per_s),
@@ -383,26 +411,33 @@ fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the batched stencil job service: admit a job file, drain the
-/// sessions onto pool shards, stream per-session results, and write the
-/// machine-readable `serve_report.json` (see `coordinator::service`).
-fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
-    use stencilax::coordinator::service;
-    let src = args.get("jobs").context("serve requires --jobs <file|->")?;
-    let text = if src == "-" {
+/// Read a `--jobs <file|->` argument's text.
+fn read_jobs_arg(src: &str) -> Result<String> {
+    if src == "-" {
         use std::io::Read;
         let mut s = String::new();
         std::io::stdin().read_to_string(&mut s).context("reading jobs from stdin")?;
-        s
+        Ok(s)
     } else {
-        std::fs::read_to_string(src).with_context(|| format!("reading job file {src:?}"))?
-    };
-    let jobs = service::parse_jobs(&Json::parse(&text).context("parsing job file")?)?;
+        std::fs::read_to_string(src).with_context(|| format!("reading job file {src:?}"))
+    }
+}
+
+/// Run the batched stencil job service: admit a job file (per-job —
+/// malformed or inadmissible entries are recorded as rejected, the rest
+/// still run), drain the sessions onto pool shards, stream per-session
+/// results, and write the machine-readable `serve_report.json` (see
+/// `coordinator::service`).
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    use stencilax::coordinator::service;
+    let src = args.get("jobs").context("serve requires --jobs <file|->")?;
+    let text = read_jobs_arg(src)?;
+    let loaded = service::parse_jobs_lenient(&Json::parse(&text).context("parsing job file")?)?;
     let shards = args.get_usize("shards", 2)?;
     let plans = PlanCache::load_if_exists(&cfg.output_dir)?;
     println!(
         "=== stencil job service: {} job(s), {} shard(s) requested, host {} ===",
-        jobs.len(),
+        loaded.jobs.len() + loaded.rejected.len(),
         shards,
         host_fingerprint(),
     );
@@ -410,13 +445,14 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         Some(c) => println!("plan cache: {} tuned plan(s) consulted at admission", c.len()),
         None => println!("plan cache: none (run `stencilax tune --native --all` to tune)"),
     }
-    let report = service::run_jobs(&jobs, shards, plans.as_ref(), false)?;
+    let report = service::run_loaded(&loaded, shards, plans.as_ref(), false)?;
     let mut t = Table::new(
         &format!(
-            "Job service — {} session(s) on {} shard(s), {} thread(s) each",
+            "Job service — {} session(s) on {} shard(s), {} thread(s) each, {} rejected",
             report.results.len(),
             report.shards,
-            report.threads_per_shard
+            report.threads_per_shard,
+            report.rejected.len(),
         ),
         &["id", "workload", "shape", "steps", "shard", "plan", "median/step", "Melem/s"],
     );
@@ -433,6 +469,9 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    for r in &report.rejected {
+        println!("rejected job {:>3}: {}", r.id, r.error);
+    }
     println!(
         "aggregate: {:.2} jobs/s, {:.1} Melem/s over {:.3} s wall",
         report.jobs_per_s(),
@@ -441,6 +480,93 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     );
     let path = report.save(&cfg.output_dir)?;
     println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Run the long-lived serving daemon (`coordinator::daemon`): NDJSON job
+/// requests in over a Unix socket (or stdin), events out as they happen,
+/// aggregate report written on drain/shutdown. In `--stdio` mode stdout
+/// carries the event stream, so status lines go to stderr.
+fn cmd_daemon(cfg: &Config, args: &Args) -> Result<()> {
+    use stencilax::coordinator::daemon::{self, DaemonOpts};
+    let opts = DaemonOpts {
+        shards: args.get_usize("shards", 2)?,
+        plans: PlanCache::load_if_exists(&cfg.output_dir)?,
+        queue_cap: args.get_usize("queue-cap", daemon::DEFAULT_QUEUE_CAP)?,
+    };
+    eprintln!(
+        "=== stencilax daemon: {} shard(s) requested, queue cap {}, host {}, {} tuned plan(s) ===",
+        opts.shards,
+        opts.queue_cap,
+        host_fingerprint(),
+        opts.plans.as_ref().map_or(0, |c| c.len()),
+    );
+    let report = if args.has_flag("stdio") {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let (report, _) = daemon::serve_stream(stdin.lock(), stdout, &opts)?;
+        report
+    } else {
+        let socket = args.get("socket").context("daemon requires --socket <path> or --stdio")?;
+        eprintln!("daemon: listening on {socket}");
+        daemon::serve_socket(std::path::Path::new(socket), &opts)?
+    };
+    let path = report.save_as(&cfg.output_dir, daemon::DAEMON_REPORT_FILE)?;
+    eprintln!(
+        "daemon: served {} session(s), rejected {}, {:.2} jobs/s over {:.3} s wall",
+        report.results.len(),
+        report.rejected.len(),
+        report.jobs_per_s(),
+        report.wall_s,
+    );
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Submit a job file to a running daemon over its socket and stream the
+/// events back (`--raw` echoes the NDJSON lines verbatim; the default
+/// pretty-prints). `--shutdown` stops the daemon once this client's jobs
+/// are terminal and waits for the final aggregate report.
+fn cmd_submit(args: &Args) -> Result<()> {
+    use stencilax::coordinator::daemon::{client, Event};
+    let socket = args.get("socket").context("submit requires --socket <path>")?;
+    let src = args.get("jobs").context("submit requires --jobs <file|->")?;
+    let text = read_jobs_arg(src)?;
+    let lines = client::job_lines(&Json::parse(&text).context("parsing job file")?)?;
+    let raw = args.has_flag("raw");
+    let summary = client::submit_lines(
+        std::path::Path::new(socket),
+        &lines,
+        args.has_flag("shutdown"),
+        |line, ev| {
+            if raw {
+                println!("{line}");
+                return;
+            }
+            match ev {
+                Event::Accepted { id, spec, plan, tuned } => println!(
+                    "accepted job {id:>3} {:<12} {:?} x{} steps (plan {plan}{})",
+                    spec.workload,
+                    spec.shape,
+                    spec.steps,
+                    if *tuned { ", tuned" } else { "" },
+                ),
+                Event::Rejected { id, error } => println!("rejected job {id:>3}: {error}"),
+                Event::Started { id, shard } => println!("started  job {id:>3} on shard {shard}"),
+                Event::Done(r) => println!("{}", r.describe_line()),
+                Event::Report(j) => println!("final report: {}", j.to_string_compact()),
+            }
+        },
+    )?;
+    if !raw {
+        println!(
+            "submitted {}: {} done, {} rejected{}",
+            summary.submitted,
+            summary.outcome.done.len(),
+            summary.outcome.rejected.len(),
+            if summary.outcome.report.is_some() { ", daemon reported + stopped" } else { "" },
+        );
+    }
     Ok(())
 }
 
@@ -553,7 +679,10 @@ SUBCOMMANDS:
   tune --native <workload>|--all [--smoke]
                              empirical LaunchPlan tuning on the native
                              engine: enumerate plans, prune with the
-                             calibrated host model, measure survivors;
+                             calibrated host model, measure survivors —
+                             at the full thread budget AND the service
+                             budgets threads/shards for shards in {{2,4}},
+                             so admitted sessions hit the plan cache;
                              writes plan_cache.json + calibration_report.json
                              under --out (loaded by `bench` on startup)
   plans                      list the tuned plan cache (+ calibration)
@@ -565,10 +694,26 @@ SUBCOMMANDS:
                              copies the report to ./BENCH_native.json
   serve --jobs <file|-> [--shards N]
                              batched stencil job service: admit the job
-                             file ({workload, shape, steps} requests, plan
-                             cache consulted at admission), drain sessions
-                             onto N disjoint pool shards (default 2), and
-                             write serve_report.json under --out
+                             file ({{workload, shape, steps}} requests, plan
+                             cache consulted at admission; a bad job is
+                             recorded as rejected, the rest still run),
+                             drain sessions onto N disjoint pool shards
+                             (default 2), and write serve_report.json
+                             under --out
+  daemon [--socket PATH|--stdio] [--shards N] [--queue-cap N]
+                             long-lived serving daemon: admit NDJSON job
+                             lines ({{workload, shape, steps}}, or
+                             {{\"type\": \"drain\"|\"shutdown\"}}) over a Unix
+                             socket or stdin WHILE sessions run, stream
+                             accepted/rejected/started/done events as
+                             NDJSON, and write daemon_report.json under
+                             --out on drain/shutdown (stdin EOF = drain)
+  submit --socket PATH --jobs <file|-> [--shutdown] [--raw]
+                             submit a job file to a running daemon and
+                             stream its events (--raw echoes NDJSON
+                             verbatim; --shutdown stops the daemon after
+                             this client's jobs finish and prints the
+                             final aggregate report)
   workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance

@@ -28,6 +28,18 @@ pub fn median_upper(xs: &[f64]) -> f64 {
     v[v.len() / 2]
 }
 
+/// Nearest-rank percentile: the smallest sample with at least `q` (in
+/// `[0, 1]`) of the distribution at or below it — always a real sample,
+/// never an interpolated midpoint. The daemon-stream bench records
+/// p50/p95 latency with this.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample set");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
 /// Sort in place and return the midpoint median.
 fn sorted_median(v: &mut [f64]) -> f64 {
     assert!(!v.is_empty(), "median of empty sample set");
@@ -165,6 +177,20 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.8), 4.0);
+        assert_eq!(percentile(&xs, 0.95), 5.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        // nearest-rank p50 of an even count keeps a real sample (the
+        // lower of the central pair), never an interpolated midpoint
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.0);
+    }
 
     #[test]
     fn stats_median_odd_even() {

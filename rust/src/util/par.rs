@@ -435,6 +435,35 @@ pub fn bound_shard() -> Option<usize> {
     BOUND_SHARD.with(|c| c.get())
 }
 
+/// Run one *driver* closure per shard on scoped threads, each pinned to
+/// its shard via [`bind_shard`], and return the per-driver results in
+/// shard order.
+///
+/// This is the multi-tenant driver lifecycle both serving front-ends
+/// share (`coordinator::service` batch mode and the
+/// `coordinator::daemon` online queue): a driver owns its shard for its
+/// whole life and loops popping work from some queue. The loop body is
+/// the caller's — crucially, a driver blocked on a *momentarily empty but
+/// still open* queue (the online case: jobs arrive over a socket while
+/// sessions run) simply parks inside `f` without terminating; the scoped
+/// join only completes once every driver's `f` returns, i.e. once the
+/// queue is closed and drained.
+pub fn drive_shards<T: Send, F: Fn(usize) -> T + Sync>(shards: usize, f: F) -> Vec<T> {
+    let shards = shards.max(1);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..shards)
+            .map(|shard| {
+                let f = &f;
+                scope.spawn(move || {
+                    let _bind = bind_shard(shard);
+                    f(shard)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard driver panicked")).collect()
+    })
+}
+
 // ---------------------------------------------------------------------------
 // The process-wide pool
 // ---------------------------------------------------------------------------
@@ -671,6 +700,29 @@ mod tests {
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::Relaxed), 1, "item {i}");
         }
+    }
+
+    #[test]
+    fn drive_shards_binds_each_driver_and_keeps_order() {
+        use std::sync::atomic::AtomicU64;
+        let touched = AtomicU64::new(0);
+        let out = drive_shards(3, |shard| {
+            assert_eq!(bound_shard(), Some(shard), "driver must be pinned to its shard");
+            touched.fetch_add(1, Ordering::Relaxed);
+            shard * 10
+        });
+        assert_eq!(out, vec![0, 10, 20]);
+        assert_eq!(touched.load(Ordering::Relaxed), 3);
+        // a driver that parks (an empty-but-open queue) does not stop its
+        // siblings from finishing their own work first
+        let out = drive_shards(2, |shard| {
+            if shard == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            shard
+        });
+        assert_eq!(out, vec![0, 1]);
+        assert_eq!(drive_shards(0, |s| s), vec![0], "degenerate count clamps to one driver");
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Wire-protocol and parity regressions for the serving daemon
+//! (ISSUE 5): malformed/oversized/partial NDJSON lines and unknown
+//! message types must reject *per line* while the stream keeps serving;
+//! completion events arrive out of order and must still aggregate; and
+//! the acceptance pin — `daemon --stdio` and `serve --jobs` over the
+//! same job set produce bit-identical per-session digests.
+
+use std::collections::HashMap;
+
+use stencilax::coordinator::daemon::{client, server, DaemonOpts, Event, MAX_LINE_BYTES};
+use stencilax::coordinator::service::{self, JobSpec};
+use stencilax::util::json::Json;
+
+fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps }
+}
+
+fn opts() -> DaemonOpts {
+    DaemonOpts { shards: 2, plans: None, queue_cap: 8 }
+}
+
+/// Parse every emitted line back through the protocol.
+fn parse_events(lines: &[String]) -> Vec<Event> {
+    lines
+        .iter()
+        .map(|l| Event::parse_line(l).unwrap_or_else(|e| panic!("bad event line {l:?}: {e:#}")))
+        .collect()
+}
+
+#[test]
+fn daemon_stdio_and_batch_serve_produce_identical_digests() {
+    let jobs = vec![
+        job("conv1d-r3", &[1024], 2),
+        job("diffusion1d", &[512], 3),
+        job("diffusion2d", &[24, 24], 3),
+        job("mhd", &[8, 8, 8], 2),
+    ];
+    let script: String = jobs.iter().map(|j| j.to_json().to_string_compact() + "\n").collect();
+    // EOF after the last job line is the implicit drain
+    let (daemon_report, lines) = server::serve_script(&script, &opts()).unwrap();
+    let batch_report = service::run_jobs(&jobs, 2, None, true).unwrap();
+
+    assert_eq!(daemon_report.results.len(), jobs.len());
+    assert_eq!(batch_report.results.len(), jobs.len());
+    assert!(daemon_report.rejected.is_empty() && batch_report.rejected.is_empty());
+    for (d, b) in daemon_report.results.iter().zip(&batch_report.results) {
+        assert_eq!(d.id, b.id);
+        assert_eq!(d.workload, b.workload);
+        assert_eq!(
+            d.digest_bits, b.digest_bits,
+            "daemon and batch digests must be bit-identical for job {} ({})",
+            d.id, d.workload
+        );
+    }
+
+    // the event stream is well-formed: per job, accepted -> started ->
+    // done (whatever the cross-job interleaving), then one final report
+    let events = parse_events(&lines);
+    let mut stage: HashMap<usize, u32> = HashMap::new();
+    for ev in &events {
+        match ev {
+            Event::Accepted { id, .. } => {
+                assert_eq!(stage.insert(*id, 1), None, "duplicate accepted for {id}");
+            }
+            Event::Started { id, shard } => {
+                assert_eq!(stage.insert(*id, 2), Some(1), "started before accepted for {id}");
+                assert!(*shard < daemon_report.shards);
+            }
+            Event::Done(r) => {
+                assert_eq!(stage.insert(r.id, 3), Some(2), "done before started for {}", r.id);
+                assert!(r.latency_s > 0.0);
+            }
+            Event::Rejected { id, error } => panic!("unexpected rejection of {id}: {error}"),
+            Event::Report(_) => {}
+        }
+    }
+    assert!(stage.values().all(|&s| s == 3), "every job must reach done: {stage:?}");
+    match events.last() {
+        Some(Event::Report(j)) => {
+            assert_eq!(j.req_str("schema").unwrap(), "stencilax-serve/1");
+            assert_eq!(j.req_u64("jobs").unwrap() as usize, jobs.len());
+            assert_eq!(j.req_arr("sessions").unwrap().len(), jobs.len());
+        }
+        other => panic!("stream must end with the aggregate report, got {other:?}"),
+    }
+}
+
+#[test]
+fn bad_lines_reject_per_line_while_the_stream_keeps_serving() {
+    // ids are assigned per submission attempt, in line order:
+    //   0 valid, 1 malformed JSON, 2 unknown type, 3 oversized,
+    //   4 inadmissible job, 5 valid, 6 partial line at EOF (no newline)
+    let mut script = String::new();
+    script.push_str(&(job("diffusion2d", &[16, 16], 2).to_json().to_string_compact() + "\n"));
+    script.push_str("{\"workload\": \"diffu\n"); // malformed
+    script.push_str("{\"type\":\"restart\"}\n"); // unknown message type
+    let pad = "x".repeat(MAX_LINE_BYTES);
+    script.push_str(&format!("{{\"pad\":\"{pad}\"}}\n")); // oversized
+    // bad shape: non-cubic MHD box fails admission, not parsing
+    script.push_str(&(job("mhd", &[8, 8, 12], 1).to_json().to_string_compact() + "\n"));
+    script.push_str(&(job("diffusion1d", &[256], 2).to_json().to_string_compact() + "\n"));
+    script.push_str("{\"workload\":\"diffusion2d\",\"shape\":[16,"); // partial, truncated at EOF
+
+    let (report, lines) = server::serve_script(&script, &opts()).unwrap();
+    assert_eq!(
+        report.results.iter().map(|r| r.id).collect::<Vec<_>>(),
+        vec![0, 5],
+        "valid jobs around the bad lines must still run"
+    );
+    assert_eq!(report.rejected.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3, 4, 6]);
+    let errors: HashMap<usize, String> =
+        report.rejected.iter().map(|r| (r.id, r.error.clone())).collect();
+    assert!(errors[&1].contains("malformed"), "{:?}", errors[&1]);
+    assert!(errors[&2].contains("unknown message type"), "{:?}", errors[&2]);
+    assert!(errors[&3].contains("exceeds"), "{:?}", errors[&3]);
+    assert!(errors[&4].contains("cannot run at shape"), "{:?}", errors[&4]);
+    assert!(errors[&6].contains("malformed"), "{:?}", errors[&6]);
+
+    // every rejection was also streamed as an event
+    let events = parse_events(&lines);
+    let rejected_ids: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Rejected { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(rejected_ids, vec![1, 2, 3, 4, 6]);
+    // and the final report's rejected array matches
+    match events.last() {
+        Some(Event::Report(j)) => {
+            assert_eq!(j.req_arr("rejected").unwrap().len(), 5);
+            assert_eq!(j.req_u64("jobs").unwrap(), 7);
+        }
+        other => panic!("expected final report, got {other:?}"),
+    }
+}
+
+#[test]
+fn explicit_drain_and_shutdown_controls() {
+    // drain after submissions: everything queued still completes
+    let mut script = String::new();
+    script.push_str(&(job("diffusion2d", &[16, 16], 2).to_json().to_string_compact() + "\n"));
+    script.push_str("{\"type\":\"drain\"}\n");
+    script.push_str("this line is never read\n");
+    let (report, lines) = server::serve_script(&script, &opts()).unwrap();
+    assert_eq!(report.results.len(), 1);
+    assert!(report.rejected.is_empty(), "{:?}", report.rejected);
+    assert!(matches!(parse_events(&lines).last(), Some(Event::Report(_))));
+
+    // shutdown as the first line: no sessions, immediate report
+    let (report, lines) = server::serve_script("{\"type\":\"shutdown\"}\n", &opts()).unwrap();
+    assert!(report.results.is_empty());
+    assert!(report.rejected.is_empty());
+    let events = parse_events(&lines);
+    assert_eq!(events.len(), 1, "only the report: {lines:?}");
+    assert!(matches!(events.last(), Some(Event::Report(_))));
+}
+
+#[test]
+fn daemon_over_unix_socket_serves_submit_client_end_to_end() {
+    let socket =
+        std::env::temp_dir().join(format!("stencilax_daemon_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&socket);
+    let server_path = socket.clone();
+    let server = std::thread::spawn(move || server::serve_socket(&server_path, &opts()));
+
+    let file = Json::obj(vec![
+        ("schema", Json::str("stencilax-jobs/1")),
+        (
+            "jobs",
+            Json::arr(vec![
+                job("diffusion2d", &[16, 16], 2).to_json(),
+                job("no-such-workload", &[8], 1).to_json(),
+                job("diffusion1d", &[256], 2).to_json(),
+            ]),
+        ),
+    ]);
+    let lines = client::job_lines(&file).unwrap();
+    let summary = client::submit_lines(&socket, &lines, true, |_, _| {}).unwrap();
+
+    assert_eq!(summary.submitted, 3);
+    assert_eq!(summary.outcome.done.len(), 2);
+    assert_eq!(summary.outcome.rejected.len(), 1);
+    assert!(summary.outcome.rejected[0].1.contains("unknown workload"));
+    let done = summary.outcome.done_by_id();
+    assert_eq!(done.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    let report_event = summary.outcome.report.as_ref().expect("shutdown returns the report");
+    assert_eq!(report_event.req_u64("jobs").unwrap(), 3);
+
+    // the server side agrees with what the client saw, digest included
+    let report = server.join().unwrap().unwrap();
+    assert_eq!(report.results.len(), 2);
+    assert_eq!(report.rejected.len(), 1);
+    for (srv, cli) in report.results.iter().zip(done) {
+        assert_eq!(srv.id, cli.id);
+        assert_eq!(srv.digest_bits, cli.digest_bits, "wire digest must match server digest");
+    }
+    assert!(!socket.exists(), "daemon must remove its socket file on exit");
+}
