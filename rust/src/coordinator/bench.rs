@@ -193,6 +193,10 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
     // percentiles (p50/p95) alongside throughput
     out.push(crate::coordinator::daemon::bench_case(smoke, plans));
 
+    // head-of-line blocking experiment: one long MHD session in a stream
+    // of cheap jobs, FIFO vs the cost-aware scheduler (DESIGN.md §14)
+    out.push(crate::coordinator::daemon::bench_case_mixed(smoke, plans));
+
     out
 }
 

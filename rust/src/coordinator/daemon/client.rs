@@ -37,7 +37,7 @@ impl EventAccumulator {
             Event::Accepted { .. } => self.accepted += 1,
             Event::Started { .. } => self.started += 1,
             Event::Done(r) => self.done.push(r),
-            Event::Rejected { id, error } => self.rejected.push((id, error)),
+            Event::Rejected { id, error, .. } => self.rejected.push((id, error)),
             Event::Report(j) => self.report = Some(j),
         }
     }
@@ -180,6 +180,7 @@ mod tests {
             stats: Stats::from_samples(vec![1e-4]),
             digest_bits: 7,
             latency_s: 1e-3,
+            preemptions: 0,
         })
     }
 
@@ -190,7 +191,7 @@ mod tests {
         let mut acc = EventAccumulator::default();
         for ev in [
             done(2),
-            Event::Rejected { id: 3, error: "unknown workload".into() },
+            Event::Rejected { id: 3, error: "unknown workload".into(), predicted_wait_s: None },
             done(1),
             done(0),
         ] {

@@ -34,8 +34,9 @@ pub const PROTOCOL_SCHEMA: &str = "stencilax-ndjson/1";
 /// would otherwise buffer unboundedly.
 pub const MAX_LINE_BYTES: usize = 64 * 1024;
 
-/// One client → daemon message.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One client → daemon message. (`Eq` is off the table once jobs carry
+/// an optional float deadline.)
+#[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Submit a job for admission.
     Submit(JobSpec),
@@ -95,11 +96,16 @@ impl Request {
 #[derive(Debug, Clone)]
 pub enum Event {
     /// The job was admitted: workload resolved, shape validated, plan
-    /// fixed (with provenance — `tuned` says it came from the plan cache).
-    Accepted { id: usize, spec: JobSpec, plan: String, tuned: bool },
+    /// fixed (with provenance — `tuned` says it came from the plan
+    /// cache), and cost estimated (`predicted_cost_s`, the scheduler's
+    /// admission-time prediction the queue orders by).
+    Accepted { id: usize, spec: JobSpec, plan: String, tuned: bool, predicted_cost_s: f64 },
     /// The line/job was refused (malformed line, unknown message type,
-    /// admission failure, or a session cancelled by `shutdown`).
-    Rejected { id: usize, error: String },
+    /// admission failure, a blown-deadline rejection, or a session
+    /// cancelled by `shutdown`). Deadline rejections carry the backlog
+    /// estimate the decision was based on (`predicted_wait_s`); other
+    /// rejections omit it.
+    Rejected { id: usize, error: String, predicted_wait_s: Option<f64> },
     /// A shard driver picked the session up.
     Started { id: usize, shard: usize },
     /// The session completed; carries the full per-session record.
@@ -123,7 +129,7 @@ impl Event {
 
     pub fn to_json(&self) -> Json {
         match self {
-            Event::Accepted { id, spec, plan, tuned } => {
+            Event::Accepted { id, spec, plan, tuned, predicted_cost_s } => {
                 let mut obj = match spec.to_json() {
                     Json::Obj(m) => m,
                     _ => unreachable!("JobSpec::to_json returns an object"),
@@ -132,13 +138,20 @@ impl Event {
                 obj.insert("id".into(), Json::num(*id as f64));
                 obj.insert("plan".into(), Json::str(plan.clone()));
                 obj.insert("tuned".into(), Json::Bool(*tuned));
+                obj.insert("predicted_cost_s".into(), Json::num(*predicted_cost_s));
                 Json::Obj(obj)
             }
-            Event::Rejected { id, error } => Json::obj(vec![
-                ("event", Json::str("rejected")),
-                ("id", Json::num(*id as f64)),
-                ("error", Json::str(error.as_str())),
-            ]),
+            Event::Rejected { id, error, predicted_wait_s } => {
+                let mut fields = vec![
+                    ("event", Json::str("rejected")),
+                    ("id", Json::num(*id as f64)),
+                    ("error", Json::str(error.as_str())),
+                ];
+                if let Some(wait) = predicted_wait_s {
+                    fields.push(("predicted_wait_s", Json::num(*wait)));
+                }
+                Json::obj(fields)
+            }
             Event::Started { id, shard } => Json::obj(vec![
                 ("event", Json::str("started")),
                 ("id", Json::num(*id as f64)),
@@ -173,10 +186,17 @@ impl Event {
                 spec: JobSpec::from_json(j)?,
                 plan: j.req_str("plan")?.to_string(),
                 tuned: j.req("tuned")?.as_bool().context("tuned not a bool")?,
+                predicted_cost_s: j.req_f64("predicted_cost_s")?,
             }),
             "rejected" => Ok(Event::Rejected {
                 id: j.req_u64("id")? as usize,
                 error: j.req_str("error")?.to_string(),
+                predicted_wait_s: match j.get("predicted_wait_s") {
+                    None => None,
+                    Some(w) => {
+                        Some(w.as_f64().context("predicted_wait_s must be a number")?)
+                    }
+                },
             }),
             "started" => Ok(Event::Started {
                 id: j.req_u64("id")? as usize,
@@ -199,7 +219,7 @@ mod tests {
     use crate::util::bench::Stats;
 
     fn job() -> JobSpec {
-        JobSpec { workload: "diffusion2d".into(), shape: vec![32, 32], steps: 3 }
+        JobSpec { workload: "diffusion2d".into(), shape: vec![32, 32], steps: 3, deadline_s: None }
     }
 
     #[test]
@@ -212,6 +232,10 @@ mod tests {
         // a bare job object (no "type") is a submit
         let bare = job().to_json().to_string_compact();
         assert_eq!(Request::parse_line(&bare).unwrap(), Request::Submit(job()));
+        // deadline_s rides the submit line through a roundtrip
+        let dl = Request::Submit(JobSpec { deadline_s: Some(2.5), ..job() });
+        assert!(dl.to_line().contains("deadline_s"));
+        assert_eq!(Request::parse_line(&dl.to_line()).unwrap(), dl);
     }
 
     #[test]
@@ -247,10 +271,26 @@ mod tests {
             stats: Stats::from_samples(vec![1e-3, 2e-3]),
             digest_bits: 0xdead_beef_cafe_f00d,
             latency_s: 0.25,
+            preemptions: 2,
         };
         let events = vec![
-            Event::Accepted { id: 0, spec: job(), plan: "ov4 t2".into(), tuned: false },
-            Event::Rejected { id: 1, error: "unknown workload \"nope\"".into() },
+            Event::Accepted {
+                id: 0,
+                spec: job(),
+                plan: "ov4 t2".into(),
+                tuned: false,
+                predicted_cost_s: 0.125,
+            },
+            Event::Rejected {
+                id: 1,
+                error: "unknown workload \"nope\"".into(),
+                predicted_wait_s: None,
+            },
+            Event::Rejected {
+                id: 2,
+                error: "deadline_s 0.1 cannot be met".into(),
+                predicted_wait_s: Some(1.5),
+            },
             Event::Started { id: 0, shard: 1 },
             Event::Done(done.clone()),
             Event::Report(Json::obj(vec![("jobs", Json::num(2.0))])),
@@ -268,10 +308,20 @@ mod tests {
                 assert_eq!(r.digest_bits, done.digest_bits);
                 assert_eq!(r.stats.median_s, done.stats.median_s);
                 assert_eq!(r.latency_s, done.latency_s);
+                assert_eq!(r.preemptions, 2);
                 assert!(r.tuned);
             }
             other => panic!("expected done, got {other:?}"),
         }
+        // deadline rejections carry the wait estimate; plain ones omit it
+        let back = Event::parse_line(&events[2].to_line()).unwrap();
+        match back {
+            Event::Rejected { predicted_wait_s, .. } => {
+                assert_eq!(predicted_wait_s, Some(1.5));
+            }
+            other => panic!("expected rejected, got {other:?}"),
+        }
+        assert!(!events[1].to_line().contains("predicted_wait_s"));
         assert!(Event::parse_line(r#"{"event":"no-such"}"#).is_err());
         assert!(Event::parse_line("{").is_err());
     }

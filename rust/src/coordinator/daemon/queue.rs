@@ -1,7 +1,7 @@
 //! Bounded online job queue + the shared per-shard driver loop.
 //!
-//! This is the serving core both front-ends sit on (DESIGN.md §13): the
-//! batch path (`serve --jobs`, [`crate::coordinator::service::run_loaded`])
+//! This is the serving core both front-ends sit on (DESIGN.md §13-14):
+//! the batch path (`serve --jobs`, [`crate::coordinator::service::run_loaded`])
 //! admits a whole file, pushes it, and closes the queue; the daemon
 //! (`stencilax daemon`, [`super::server`]) keeps the queue open and pushes
 //! sessions as NDJSON requests arrive, *while earlier sessions run*.
@@ -11,6 +11,21 @@
 //! * **Bounded**: [`JobQueue::push`] blocks while the queue is at
 //!   capacity — backpressure propagates to the socket/stdin reader, so a
 //!   firehose client cannot make the daemon buffer unbounded sessions.
+//! * **Scheduled**: the pop order is a [`Policy`]. The batch path keeps
+//!   strict FIFO ([`JobQueue::bounded`]); the daemon defaults to
+//!   [`Policy::cost_aware`] — shortest-predicted-first over the
+//!   admission-time cost estimates ([`Session::predicted_cost_s`]), with
+//!   *aging*: every second a session waits buys it `aging_rate` seconds
+//!   of priority credit, so a long MHD session is delayed by cheap
+//!   arrivals but never starved. This is the head-of-line-blocking fix:
+//!   under FIFO one cache-heavy session inflates every later job's
+//!   latency; under the scheduler cheap jobs overtake it.
+//! * **Preemption points**: a driver running a long session offers the
+//!   queue a chance to interleave between steps
+//!   ([`JobQueue::try_pop_preempting`]) — a queued session runs
+//!   immediately if its predicted cost is well under the active
+//!   session's predicted *remaining* cost. The long session's instance
+//!   stays live (parked, not torn down), so its digest is untouched.
 //! * **Work-conserving**: one driver per shard ([`drive`], on
 //!   [`par::drive_shards`]), each pinned to its shard, pops the next
 //!   session the moment it goes idle. A driver blocked on a momentarily
@@ -28,7 +43,7 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex, MutexGuard};
 
-use crate::coordinator::service::{run_session, Session, SessionResult};
+use crate::coordinator::service::{ActiveSession, Session, SessionResult};
 use crate::util::par;
 
 use super::protocol::Event;
@@ -37,6 +52,40 @@ use super::protocol::Event;
 /// overrides). Sessions are cheap until a shard builds their buffers, so
 /// this bounds admission latency, not memory.
 pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// Aging rate of [`Policy::cost_aware`]: cost-seconds of priority credit
+/// per second waited. At 0.25, a session predicted 1 s more expensive
+/// than the cheapest arrival starts winning the pop after ~4 s of
+/// waiting — long jobs yield to short ones but cannot starve.
+pub const DEFAULT_AGING_RATE: f64 = 0.25;
+
+/// A queued session only preempts an active one when its predicted cost
+/// is under this fraction of the active session's predicted *remaining*
+/// cost — preempting for a near-peer would just thrash buffers.
+const PREEMPT_RATIO: f64 = 0.5;
+
+/// Pop-order policy of a [`JobQueue`] (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Strict arrival order — the batch path's policy, and the daemon's
+    /// `--fifo` opt-out (also the before-side of the
+    /// `daemon-stream-mixed` bench).
+    Fifo,
+    /// Shortest-predicted-first with aging; `preempt` additionally
+    /// enables the between-steps interleave points in [`drive`].
+    CostAware { aging_rate: f64, preempt: bool },
+}
+
+impl Policy {
+    /// The daemon's default: cost-aware with step preemption.
+    pub fn cost_aware() -> Policy {
+        Policy::CostAware { aging_rate: DEFAULT_AGING_RATE, preempt: true }
+    }
+
+    fn preempts(&self) -> bool {
+        matches!(self, Policy::CostAware { preempt: true, .. })
+    }
+}
 
 struct QueueState {
     q: VecDeque<Session>,
@@ -50,6 +99,11 @@ struct QueueState {
     /// "closed and drained" while an accepted session is still in the
     /// doorway.
     waiting_pushers: usize,
+    /// Sum of predicted costs of queued sessions.
+    queued_cost_s: f64,
+    /// Predicted cost popped but not yet retired by driver progress
+    /// notes ([`JobQueue::note_progress`]) — in-flight backlog.
+    running_cost_s: f64,
 }
 
 /// Bounded MPMC session queue (see module docs for semantics).
@@ -58,6 +112,7 @@ pub struct JobQueue {
     not_empty: Condvar,
     not_full: Condvar,
     cap: usize,
+    policy: Policy,
 }
 
 /// Ignore mutex poisoning, as everywhere else in the crate: the critical
@@ -67,22 +122,37 @@ fn lock(q: &JobQueue) -> MutexGuard<'_, QueueState> {
 }
 
 impl JobQueue {
+    /// A FIFO queue — the batch path's constructor. (Capacity 0 is
+    /// clamped to 1 here for internal callers; the daemon rejects a
+    /// user-supplied `--queue-cap 0` explicitly before construction.)
     pub fn bounded(cap: usize) -> JobQueue {
+        JobQueue::with_policy(cap, Policy::Fifo)
+    }
+
+    /// A queue popping under `policy` — the daemon's constructor.
+    pub fn with_policy(cap: usize, policy: Policy) -> JobQueue {
         JobQueue {
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
                 closed: false,
                 aborted: false,
                 waiting_pushers: 0,
+                queued_cost_s: 0.0,
+                running_cost_s: 0.0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cap: cap.max(1),
+            policy,
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
     }
 
     pub fn len(&self) -> usize {
@@ -95,6 +165,26 @@ impl JobQueue {
 
     pub fn is_closed(&self) -> bool {
         lock(self).closed
+    }
+
+    /// Predicted seconds of queued (not yet popped) work.
+    pub fn backlog_s(&self) -> f64 {
+        lock(self).queued_cost_s
+    }
+
+    /// Predicted wait for a new arrival: queued plus in-flight predicted
+    /// cost, spread over the shard drivers — the number admission control
+    /// checks deadlines against and the `rejected` event reports.
+    pub fn predicted_wait_s(&self, shards: usize) -> f64 {
+        let st = lock(self);
+        (st.queued_cost_s + st.running_cost_s) / shards.max(1) as f64
+    }
+
+    /// Retire `delta_s` of predicted in-flight cost — drivers call this
+    /// as steps complete so [`Self::predicted_wait_s`] reflects progress.
+    pub fn note_progress(&self, delta_s: f64) {
+        let mut st = lock(self);
+        st.running_cost_s = (st.running_cost_s - delta_s).max(0.0);
     }
 
     /// Pushes currently parked at capacity (test observability).
@@ -125,6 +215,7 @@ impl JobQueue {
                 return Err(s);
             }
             if st.q.len() < self.cap {
+                st.queued_cost_s += s.predicted_cost_s;
                 st.q.push_back(s);
                 st.waiting_pushers -= 1;
                 self.not_empty.notify_all();
@@ -134,16 +225,51 @@ impl JobQueue {
         }
     }
 
-    /// Dequeue the next session, blocking while the queue is empty but
-    /// still open. `None` only once the queue is closed *and* drained
-    /// (including any push that was mid-block at close time) — the
-    /// driver-loop exit condition.
+    /// The policy's choice among the queued sessions: FIFO takes the
+    /// front; cost-aware takes the minimum of
+    /// `predicted_cost_s - waited_s * aging_rate` (ties to the earliest
+    /// arrival — VecDeque order *is* arrival order).
+    fn pick_index(&self, st: &QueueState) -> Option<usize> {
+        if st.q.is_empty() {
+            return None;
+        }
+        match self.policy {
+            Policy::Fifo => Some(0),
+            Policy::CostAware { aging_rate, .. } => {
+                let mut best = 0usize;
+                let mut best_key = f64::INFINITY;
+                for (i, s) in st.q.iter().enumerate() {
+                    let waited = s.submitted.elapsed().as_secs_f64();
+                    let key = s.predicted_cost_s - waited * aging_rate;
+                    if key < best_key {
+                        best_key = key;
+                        best = i;
+                    }
+                }
+                Some(best)
+            }
+        }
+    }
+
+    /// Remove index `i` with backlog accounting (the popped session's
+    /// predicted cost moves from queued to running).
+    fn take(&self, st: &mut QueueState, i: usize) -> Session {
+        let s = st.q.remove(i).expect("pick_index returned a live index");
+        st.queued_cost_s = (st.queued_cost_s - s.predicted_cost_s).max(0.0);
+        st.running_cost_s += s.predicted_cost_s;
+        self.not_full.notify_one();
+        s
+    }
+
+    /// Dequeue the next session per the policy, blocking while the queue
+    /// is empty but still open. `None` only once the queue is closed
+    /// *and* drained (including any push that was mid-block at close
+    /// time) — the driver-loop exit condition.
     pub fn pop(&self) -> Option<Session> {
         let mut st = lock(self);
         loop {
-            if let Some(s) = st.q.pop_front() {
-                self.not_full.notify_one();
-                return Some(s);
+            if let Some(i) = self.pick_index(&st) {
+                return Some(self.take(&mut st, i));
             }
             if st.closed && st.waiting_pushers == 0 {
                 // cascade: wake sibling poppers so they re-check the
@@ -152,6 +278,23 @@ impl JobQueue {
                 return None;
             }
             st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking preemption probe: pop the policy's next choice only
+    /// if the policy preempts AND that session is much cheaper
+    /// ([`PREEMPT_RATIO`]) than the active session's predicted remaining
+    /// cost. `None` means "keep stepping the active session".
+    pub fn try_pop_preempting(&self, active_remaining_s: f64) -> Option<Session> {
+        if !self.policy.preempts() {
+            return None;
+        }
+        let mut st = lock(self);
+        let i = self.pick_index(&st)?;
+        if st.q[i].predicted_cost_s < active_remaining_s * PREEMPT_RATIO {
+            Some(self.take(&mut st, i))
+        } else {
+            None
         }
     }
 
@@ -171,6 +314,7 @@ impl JobQueue {
         let mut st = lock(self);
         st.closed = true;
         st.aborted = true;
+        st.queued_cost_s = 0.0;
         let cancelled = st.q.drain(..).collect();
         self.not_empty.notify_all();
         self.not_full.notify_all();
@@ -179,25 +323,57 @@ impl JobQueue {
 }
 
 /// The shared driver loop: one driver per shard (each pinned via
-/// [`par::drive_shards`]), popping sessions work-conservingly until the
-/// queue is closed and drained. Emits [`Event::Started`] /
+/// [`par::drive_shards`]), popping sessions per the queue's [`Policy`]
+/// until the queue is closed and drained. Emits [`Event::Started`] /
 /// [`Event::Done`] through `sink` as they happen (the daemon routes them
-/// to the submitting client; the batch path prints them). Returns every
-/// completed session, sorted by job id regardless of completion order.
+/// to the submitting client; the batch path prints them). Under a
+/// preempting policy, a driver stepping a long session checks the queue
+/// between steps and interleaves much-cheaper sessions (the long
+/// session's instance stays live and parked — its digest cannot change).
+/// Returns every completed session, sorted by job id regardless of
+/// completion order.
 pub fn drive(queue: &JobQueue, shards: usize, sink: &(dyn Fn(Event) + Sync)) -> Vec<SessionResult> {
     let per_shard = par::drive_shards(shards, |shard| {
         let mut local = Vec::new();
         while let Some(s) = queue.pop() {
-            sink(Event::Started { id: s.id, shard });
-            let r = run_session(&s, shard);
-            sink(Event::Done(r.clone()));
-            local.push(r);
+            run_one(queue, s, shard, sink, &mut local);
         }
         local
     });
     let mut out: Vec<SessionResult> = per_shard.into_iter().flatten().collect();
     out.sort_by_key(|r| r.id);
     out
+}
+
+/// Run one session to completion on `shard`, yielding to much-cheaper
+/// queued sessions at step boundaries (which recurse here — nesting
+/// depth is bounded because each preemptor costs < [`PREEMPT_RATIO`] of
+/// its host's remaining work, so the chain halves at every level).
+fn run_one(
+    queue: &JobQueue,
+    s: Session,
+    shard: usize,
+    sink: &(dyn Fn(Event) + Sync),
+    out: &mut Vec<SessionResult>,
+) {
+    sink(Event::Started { id: s.id, shard });
+    let mut active = ActiveSession::start(s, shard);
+    loop {
+        active.step();
+        queue.note_progress(active.cost_per_step_s());
+        if active.is_done() {
+            break;
+        }
+        // preemption point: park between steps while substantially
+        // cheaper sessions are queued; the parked instance stays live
+        while let Some(short) = queue.try_pop_preempting(active.remaining_cost_s()) {
+            active.note_preempted();
+            run_one(queue, short, shard, sink, out);
+        }
+    }
+    let r = active.finish();
+    sink(Event::Done(r.clone()));
+    out.push(r);
 }
 
 #[cfg(test)]
@@ -208,8 +384,21 @@ mod tests {
     use std::time::Duration;
 
     fn session(id: usize) -> Session {
-        let spec = JobSpec { workload: "diffusion2d".into(), shape: vec![16, 16], steps: 1 };
+        let spec = JobSpec {
+            workload: "diffusion2d".into(),
+            shape: vec![16, 16],
+            steps: 1,
+            deadline_s: None,
+        };
         admit(id, spec, None, 1).unwrap()
+    }
+
+    /// A session with its admission estimate overridden — scheduling
+    /// tests pin exact costs instead of depending on the seed model.
+    fn costed(id: usize, predicted_cost_s: f64) -> Session {
+        let mut s = session(id);
+        s.predicted_cost_s = predicted_cost_s;
+        s
     }
 
     #[test]
@@ -223,6 +412,95 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 0);
         assert_eq!(q.pop().unwrap().id, 1);
         assert!(q.pop().is_none(), "closed + drained => None");
+    }
+
+    #[test]
+    fn cost_aware_pops_shortest_predicted_first() {
+        let q = JobQueue::with_policy(8, Policy::CostAware { aging_rate: 0.0, preempt: false });
+        q.push(costed(0, 5.0)).ok().unwrap();
+        q.push(costed(1, 0.01)).ok().unwrap();
+        q.push(costed(2, 1.0)).ok().unwrap();
+        q.close();
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|s| s.id).collect();
+        assert_eq!(order, vec![1, 2, 0], "shortest-predicted-first");
+    }
+
+    #[test]
+    fn cost_aware_breaks_cost_ties_by_arrival_order() {
+        let q = JobQueue::with_policy(8, Policy::CostAware { aging_rate: 0.0, preempt: false });
+        for id in 0..3 {
+            q.push(costed(id, 1.0)).ok().unwrap();
+        }
+        q.close();
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|s| s.id).collect();
+        assert_eq!(order, vec![0, 1, 2], "equal costs fall back to FIFO");
+    }
+
+    #[test]
+    fn aging_prevents_starvation_of_long_sessions() {
+        // exaggerated aging rate so a test-scale wait (tens of ms) buys
+        // decisive credit: the long session arrived first and has waited,
+        // so it must win over a cheaper later arrival
+        let q = JobQueue::with_policy(8, Policy::CostAware { aging_rate: 100.0, preempt: false });
+        q.push(costed(0, 1.0)).ok().unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(costed(1, 0.01)).ok().unwrap();
+        assert_eq!(q.pop().unwrap().id, 0, "aged long session must not starve");
+        assert_eq!(q.pop().unwrap().id, 1);
+
+        // sanity: with aging off, the same arrivals pop cheapest-first
+        let q = JobQueue::with_policy(8, Policy::CostAware { aging_rate: 0.0, preempt: false });
+        q.push(costed(0, 1.0)).ok().unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(costed(1, 0.01)).ok().unwrap();
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn preemption_probe_respects_policy_and_threshold() {
+        // non-preempting policies never yield a preemptor
+        let q = JobQueue::with_policy(8, Policy::Fifo);
+        q.push(costed(0, 0.001)).ok().unwrap();
+        assert!(q.try_pop_preempting(100.0).is_none(), "FIFO never preempts");
+        let q = JobQueue::with_policy(8, Policy::CostAware { aging_rate: 0.0, preempt: false });
+        q.push(costed(0, 0.001)).ok().unwrap();
+        assert!(q.try_pop_preempting(100.0).is_none(), "preempt=false never preempts");
+
+        let q = JobQueue::with_policy(8, Policy::cost_aware());
+        q.push(costed(0, 1.0)).ok().unwrap();
+        // a near-peer (>= half the remaining cost) must NOT preempt
+        assert!(q.try_pop_preempting(1.5).is_none(), "near-peer must not preempt");
+        assert_eq!(q.len(), 1, "rejected probe must leave the queue intact");
+        // a much cheaper session preempts
+        assert_eq!(q.try_pop_preempting(10.0).unwrap().id, 0);
+        assert!(q.is_empty());
+        // empty queue: nothing to preempt with
+        assert!(q.try_pop_preempting(10.0).is_none());
+    }
+
+    #[test]
+    fn backlog_and_predicted_wait_track_push_pop_progress() {
+        let q = JobQueue::with_policy(8, Policy::cost_aware());
+        assert_eq!(q.backlog_s(), 0.0);
+        assert_eq!(q.predicted_wait_s(2), 0.0);
+        q.push(costed(0, 2.0)).ok().unwrap();
+        q.push(costed(1, 1.0)).ok().unwrap();
+        assert!((q.backlog_s() - 3.0).abs() < 1e-12);
+        assert!((q.predicted_wait_s(2) - 1.5).abs() < 1e-12, "spread over shards");
+        // popping moves cost from queued to running: the wait estimate
+        // still counts it until the driver notes progress
+        let popped = q.pop().unwrap();
+        assert_eq!(popped.id, 1, "cost-aware pops the cheaper first");
+        assert!((q.backlog_s() - 2.0).abs() < 1e-12);
+        assert!((q.predicted_wait_s(1) - 3.0).abs() < 1e-12);
+        q.note_progress(1.0);
+        assert!((q.predicted_wait_s(1) - 2.0).abs() < 1e-12);
+        // over-retiring clamps at zero instead of going negative
+        q.note_progress(100.0);
+        assert!((q.predicted_wait_s(1) - 2.0).abs() < 1e-12, "only queued cost remains");
+        // abort resets the queued backlog
+        q.abort();
+        assert_eq!(q.backlog_s(), 0.0);
     }
 
     #[test]
@@ -322,6 +600,7 @@ mod tests {
             assert!(r.shard < 2);
             assert!(r.stats.median_s > 0.0);
             assert!(r.latency_s > 0.0);
+            assert_eq!(r.preemptions, 0, "FIFO never preempts");
         }
     }
 

@@ -22,10 +22,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::plans::PlanCache;
-use crate::coordinator::service::{admit, clamp_shards, Rejection, ServiceReport};
+use crate::coordinator::service::{
+    admit_with, clamp_shards, deadline_violation, Rejection, ServiceReport, TransportError,
+};
+use crate::coordinator::tune::PredictionCache;
 
 use super::protocol::{Event, Request, MAX_LINE_BYTES};
-use super::queue::{drive, JobQueue, DEFAULT_QUEUE_CAP};
+use super::queue::{drive, JobQueue, Policy, DEFAULT_QUEUE_CAP};
 
 /// Daemon configuration (the CLI fills this from flags).
 #[derive(Clone)]
@@ -35,13 +38,32 @@ pub struct DaemonOpts {
     /// Tuned plan cache consulted at admission.
     pub plans: Option<PlanCache>,
     /// Queue capacity — [`JobQueue::push`] backpressure threshold.
+    /// Zero is a configuration error, rejected before serving starts.
     pub queue_cap: usize,
+    /// Pop-order policy: [`Policy::cost_aware`] by default, `--fifo`
+    /// opts back into arrival order (the pre-scheduler behavior).
+    pub policy: Policy,
 }
 
 impl Default for DaemonOpts {
     fn default() -> Self {
-        DaemonOpts { shards: 2, plans: None, queue_cap: DEFAULT_QUEUE_CAP }
+        DaemonOpts {
+            shards: 2,
+            plans: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            policy: Policy::cost_aware(),
+        }
     }
+}
+
+/// Reject nonsensical daemon configuration up front — notably
+/// `--queue-cap 0`, which [`JobQueue`] would otherwise silently clamp
+/// to 1 (masking the typo'd flag the user actually passed).
+fn validate(opts: &DaemonOpts) -> Result<()> {
+    if opts.queue_cap == 0 {
+        bail!("--queue-cap must be at least 1 (a zero-capacity queue cannot admit any job)");
+    }
+    Ok(())
 }
 
 /// How a handled request line leaves the read loop.
@@ -107,12 +129,19 @@ struct Core<W: Write + Send> {
     shards: usize,
     threads_per_shard: usize,
     plans: Option<PlanCache>,
+    /// Memoizes admission-time cost predictions across submissions (the
+    /// same workload/shape/plan re-submitted pays the model once).
+    predictions: PredictionCache,
     next_id: AtomicUsize,
     routes: Mutex<HashMap<usize, SharedWriter<W>>>,
     /// Writer of the connection that requested drain/shutdown — receives
     /// the final `report` event.
     controller: Mutex<Option<SharedWriter<W>>>,
     rejected: Mutex<Vec<Rejection>>,
+    /// Transport-layer read/accept failures, surfaced in the final
+    /// report so a flaky client or socket is visible, not just an
+    /// eprintln lost to the daemon's stderr.
+    transport_errors: Mutex<Vec<TransportError>>,
     stop: AtomicBool,
     /// Active window `(first, last)`: first submission attempt → latest
     /// submission or session completion. The report's wall clock is this
@@ -142,17 +171,27 @@ impl<W: Write + Send> Core<W> {
         // shard clamp skips the batch path's job-count term
         let (shards, threads_per_shard) = clamp_shards(opts.shards, usize::MAX);
         Core {
-            queue: JobQueue::bounded(opts.queue_cap),
+            queue: JobQueue::with_policy(opts.queue_cap, opts.policy),
             shards,
             threads_per_shard,
             plans: opts.plans.clone(),
+            predictions: PredictionCache::new(),
             next_id: AtomicUsize::new(0),
             routes: Mutex::new(HashMap::new()),
             controller: Mutex::new(None),
             rejected: Mutex::new(Vec::new()),
+            transport_errors: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
             window: Mutex::new(None),
         }
+    }
+
+    /// Record a transport-layer failure for the final report.
+    fn note_transport_error(&self, kind: &str, error: &std::io::Error) {
+        self.transport_errors
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(TransportError { kind: kind.into(), error: error.to_string() });
     }
 
     /// Extend the active window to now (opening it if this is the first
@@ -179,8 +218,12 @@ impl<W: Write + Send> Core<W> {
         self.stop.load(Ordering::Acquire)
     }
 
-    fn reject(&self, id: usize, error: String, w: &SharedWriter<W>) {
-        emit(w, &Event::Rejected { id, error: error.clone() });
+    /// Refuse job `id`. Deadline-based refusals pass the backlog
+    /// estimate they were decided on as `predicted_wait_s`; it rides the
+    /// `rejected` event so the client can re-plan (retry later, relax
+    /// the deadline, or go elsewhere).
+    fn reject(&self, id: usize, error: String, predicted_wait_s: Option<f64>, w: &SharedWriter<W>) {
+        emit(w, &Event::Rejected { id, error: error.clone(), predicted_wait_s });
         self.rejected.lock().unwrap_or_else(|e| e.into_inner()).push(Rejection { id, error });
     }
 
@@ -223,7 +266,7 @@ impl<W: Write + Send> Core<W> {
             Err(e) => {
                 self.touch();
                 let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                self.reject(id, format!("{e:#}"), w);
+                self.reject(id, format!("{e:#}"), None, w);
                 Flow::Continue
             }
             Ok(Request::Drain) => {
@@ -241,6 +284,7 @@ impl<W: Write + Send> Core<W> {
                     self.reject(
                         s.id,
                         "cancelled by shutdown before starting".into(),
+                        None,
                         route.as_ref().unwrap_or(w),
                     );
                 }
@@ -249,9 +293,25 @@ impl<W: Write + Send> Core<W> {
             Ok(Request::Submit(spec)) => {
                 self.touch();
                 let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                match admit(id, spec, self.plans.as_ref(), self.threads_per_shard) {
-                    Err(e) => self.reject(id, format!("{e:#}"), w),
+                let admitted = admit_with(
+                    id,
+                    spec,
+                    self.plans.as_ref(),
+                    self.threads_per_shard,
+                    Some(&self.predictions),
+                );
+                match admitted {
+                    Err(e) => self.reject(id, format!("{e:#}"), None, w),
                     Ok(session) => {
+                        // admission control: refuse a deadline-bearing
+                        // job the predicted backlog already dooms —
+                        // better a prompt rejection (with the wait
+                        // estimate) than a guaranteed SLO miss
+                        let wait_s = self.queue.predicted_wait_s(self.shards);
+                        if let Some(error) = deadline_violation(&session, wait_s) {
+                            self.reject(id, error, Some(wait_s), w);
+                            return Flow::Continue;
+                        }
                         self.routes
                             .lock()
                             .unwrap_or_else(|e| e.into_inner())
@@ -263,13 +323,19 @@ impl<W: Write + Send> Core<W> {
                                 spec: session.spec.clone(),
                                 plan: session.plan.describe(),
                                 tuned: session.tuned,
+                                predicted_cost_s: session.predicted_cost_s,
                             },
                         );
                         // blocks at capacity: backpressure reaches the
                         // transport reader, hence the submitting client
                         if self.queue.push(session).is_err() {
                             self.routes.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
-                            self.reject(id, "queue closed before the session started".into(), w);
+                            self.reject(
+                                id,
+                                "queue closed before the session started".into(),
+                                None,
+                                w,
+                            );
                         }
                     }
                 }
@@ -287,12 +353,14 @@ impl<W: Write + Send> Core<W> {
     ) -> ServiceReport {
         let mut rejected = self.rejected.into_inner().unwrap_or_else(|e| e.into_inner());
         rejected.sort_by_key(|r| r.id);
+        let transport_errors = self.transport_errors.into_inner().unwrap_or_else(|e| e.into_inner());
         ServiceReport {
             shards: self.shards,
             threads_per_shard: self.threads_per_shard,
             wall_s,
             results,
             rejected,
+            transport_errors,
         }
     }
 }
@@ -307,6 +375,7 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
     output: W,
     opts: &DaemonOpts,
 ) -> Result<(ServiceReport, W)> {
+    validate(opts)?;
     let core: Core<W> = Core::new(opts);
     let writer = Arc::new(Mutex::new(output));
     let results = std::thread::scope(|scope| {
@@ -327,6 +396,7 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
                 }
                 Err(e) => {
                     eprintln!("daemon: read error, draining: {e}");
+                    core.note_transport_error("read", &e);
                     break;
                 }
             }
@@ -351,6 +421,7 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
 /// daemon, whose final `report` event goes to that controller connection.
 /// Returns the aggregate report across every client.
 pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
+    validate(opts)?;
     if path.exists() {
         // only ever unlink a *stale* daemon socket: a live daemon's
         // socket (probe-connect succeeds) or an unrelated file at the
@@ -390,6 +461,7 @@ pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
                     // handlers (which poll `stopped`) wind down too —
                     // the scope join below waits on them
                     eprintln!("daemon: accept error, draining: {e}");
+                    core.note_transport_error("accept", &e);
                     core.stop.store(true, Ordering::Release);
                     break;
                 }
@@ -449,7 +521,10 @@ fn handle_conn(core: &Core<UnixStream>, stream: UnixStream) {
             {
                 // timeout mid-wait (or mid-line: read bytes stay in buf)
             }
-            Err(_) => return,
+            Err(e) => {
+                core.note_transport_error("read", &e);
+                return;
+            }
         }
     }
 }

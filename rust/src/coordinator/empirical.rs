@@ -185,6 +185,47 @@ fn plan_cache_tile(cost: &SweepCost, plan: &LaunchPlan) -> Tile {
     }
 }
 
+/// Admission-time cost estimate for one job: predicted seconds for
+/// `steps` sweeps of `w` at `shape` under `plan`, through the calibrated
+/// (or seed) [`HostModel`]. Deliberately cheap — the per-element
+/// characterization comes from the workload's [`KernelProfile`] and the
+/// element count from the shape product, so no field buffer is built;
+/// this is what lets the daemon price every submission at admission and
+/// schedule/reject on it. Pass `predictions` to memoize repeated
+/// (workload, shape, threads, plan-decomposition) submissions through
+/// the same [`PredictionCache`] the tuner uses.
+pub fn estimate_job_cost_s(
+    w: &dyn Workload,
+    shape: &[usize],
+    steps: usize,
+    plan: &LaunchPlan,
+    threads: usize,
+    model: &HostModel,
+    predictions: Option<&PredictionCache>,
+) -> f64 {
+    let elems: f64 = shape.iter().product::<usize>() as f64;
+    let chunked = w.chunked_1d();
+    let threads = threads.max(1);
+    let prof = w.profile(spec(Gpu::A100), true, Caching::Hwc, profile_tile(w.dims()));
+    let cost = sweep_cost(prof.as_ref(), shape, elems, plan, threads, chunked);
+    let per_sweep = match predictions {
+        Some(cache) => {
+            let key = format!("admit|{}|{shape:?}|t{threads}", w.name());
+            cache
+                .eval(&key, plan_cache_tile(&cost, plan), || {
+                    let t = model.predict(&cost);
+                    Some((t, 0.0, t))
+                })
+                .expect("host predictions are total")
+                .0
+        }
+        None => model.predict(&cost),
+    };
+    // floor keeps downstream backlog arithmetic (sums, divisions by
+    // per-step shares) away from zero even for degenerate tiny jobs
+    (per_sweep * steps.max(1) as f64).max(1e-9)
+}
+
 /// One measured candidate.
 #[derive(Debug, Clone)]
 pub struct PlanMeasurement {
@@ -555,6 +596,30 @@ mod tests {
             false,
         );
         assert_eq!((serial.threads, serial.blocks), (1, 1));
+    }
+
+    #[test]
+    fn job_cost_estimates_scale_with_work_and_memoize() {
+        let model = HostModel::seed();
+        let conv = find("conv1d-r3").unwrap();
+        let mhd = find("mhd").unwrap();
+        let plan_1d = LaunchPlan::default_for(&[4096], 2);
+        let plan_3d = LaunchPlan::default_for(&[16, 16, 16], 2);
+        let cheap = estimate_job_cost_s(conv, &[4096], 1, &plan_1d, 2, &model, None);
+        assert!(cheap > 0.0);
+        // more steps cost proportionally more
+        let ten = estimate_job_cost_s(conv, &[4096], 10, &plan_1d, 2, &model, None);
+        assert!((ten / cheap - 10.0).abs() < 1e-9, "ten={ten} cheap={cheap}");
+        // a cache-heavy MHD box dwarfs a short conv1d at the same steps
+        let heavy = estimate_job_cost_s(mhd, &[16, 16, 16], 1, &plan_3d, 2, &model, None);
+        assert!(heavy > cheap, "heavy={heavy} cheap={cheap}");
+        // memoization: a repeated submission hits the cache
+        let cache = PredictionCache::new();
+        let a = estimate_job_cost_s(conv, &[4096], 1, &plan_1d, 2, &model, Some(&cache));
+        let b = estimate_job_cost_s(conv, &[4096], 1, &plan_1d, 2, &model, Some(&cache));
+        assert_eq!(a, b);
+        assert_eq!(a, cheap);
+        assert!(cache.hits() >= 1, "second estimate must hit the cache");
     }
 
     #[test]

@@ -42,8 +42,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::daemon::protocol::Event;
 use crate::coordinator::daemon::queue::{drive, JobQueue};
+use crate::coordinator::empirical;
 use crate::coordinator::plans::PlanCache;
-use crate::sim::workload::{self, Workload};
+use crate::coordinator::tune::PredictionCache;
+use crate::model::calibrate::HostModel;
+use crate::sim::workload::{self, NativeInstance, Workload};
 use crate::stencil::plan::LaunchPlan;
 use crate::util::bench::{fmt_time, Stats};
 use crate::util::json::Json;
@@ -57,21 +60,30 @@ pub const SERVE_SCHEMA: &str = "stencilax-serve/1";
 pub const SERVE_REPORT_FILE: &str = "serve_report.json";
 
 /// One job request: step `workload` at interior `shape` for `steps`
-/// iterations.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// iterations. `deadline_s` is an optional service-level objective:
+/// "reject me at admission if you predict I cannot finish within this
+/// many seconds of submission" — the daemon checks it against the queue
+/// backlog (see `daemon::server`) and answers with `predicted_wait_s`
+/// instead of silently queueing a job it already knows will be late.
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
     pub workload: String,
     pub shape: Vec<usize>,
     pub steps: usize,
+    pub deadline_s: Option<f64>,
 }
 
 impl JobSpec {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("workload", Json::str(self.workload.as_str())),
             ("shape", Json::arr(self.shape.iter().map(|&n| Json::num(n as f64)).collect())),
             ("steps", Json::num(self.steps as f64)),
-        ])
+        ];
+        if let Some(d) = self.deadline_s {
+            fields.push(("deadline_s", Json::num(d)));
+        }
+        Json::obj(fields)
     }
 
     /// Structural validity, independent of any workload: the checks both
@@ -85,6 +97,11 @@ impl JobSpec {
         if self.shape.is_empty() || self.shape.contains(&0) {
             bail!("job {:?}: shape {:?} has an empty axis", self.workload, self.shape);
         }
+        if let Some(d) = self.deadline_s {
+            if !(d.is_finite() && d > 0.0) {
+                bail!("job {:?}: deadline_s {d} must be a finite positive number", self.workload);
+            }
+        }
         Ok(())
     }
 
@@ -93,6 +110,10 @@ impl JobSpec {
             workload: j.req_str("workload")?.to_string(),
             shape: j.req("shape")?.usize_vec()?,
             steps: j.req_u64("steps")? as usize,
+            deadline_s: match j.get("deadline_s") {
+                None => None,
+                Some(d) => Some(d.as_f64().context("deadline_s must be a number")?),
+            },
         };
         spec.validate()?;
         Ok(spec)
@@ -185,6 +206,12 @@ pub struct Session {
     pub plan: LaunchPlan,
     /// Whether the plan came from the tuned plan cache.
     pub tuned: bool,
+    /// Admission-time cost-model estimate of the whole session (all
+    /// steps), in seconds — the scheduling key the cost-aware queue pops
+    /// by and the backlog unit admission control sums. From the
+    /// calibrated [`HostModel`] when the plan cache carries one for this
+    /// host, else the seed model; either way > 0.
+    pub predicted_cost_s: f64,
     /// Admission instant — the submit→done latency clock the daemon's
     /// streaming metrics report.
     pub submitted: Instant,
@@ -203,6 +230,19 @@ pub fn admit(
     spec: JobSpec,
     plans: Option<&PlanCache>,
     threads_budget: usize,
+) -> Result<Session> {
+    admit_with(id, spec, plans, threads_budget, None)
+}
+
+/// [`admit`] with a [`PredictionCache`] memoizing the admission-time cost
+/// estimate — the daemon admits the same (workload, shape, plan) many
+/// times over its lifetime and should price it once.
+pub fn admit_with(
+    id: usize,
+    spec: JobSpec,
+    plans: Option<&PlanCache>,
+    threads_budget: usize,
+    predictions: Option<&PredictionCache>,
 ) -> Result<Session> {
     spec.validate().with_context(|| format!("job {id}: invalid spec"))?;
     let w = workload::find(&spec.workload).with_context(|| {
@@ -227,7 +267,19 @@ pub fn admit(
     if plan.threads == 0 || plan.threads > threads_budget {
         plan.threads = threads_budget;
     }
-    Ok(Session { id, spec, workload: w, plan, tuned, submitted: Instant::now() })
+    // price the session through the same model the tuner calibrated
+    let model =
+        plans.and_then(|c| c.calibration_for_host()).map(|c| c.model).unwrap_or_else(HostModel::seed);
+    let predicted_cost_s = empirical::estimate_job_cost_s(
+        w,
+        &spec.shape,
+        spec.steps,
+        &plan,
+        plan.threads.max(1),
+        &model,
+        predictions,
+    );
+    Ok(Session { id, spec, workload: w, plan, tuned, predicted_cost_s, submitted: Instant::now() })
 }
 
 /// One completed session's record.
@@ -253,6 +305,9 @@ pub struct SessionResult {
     /// Submit→done latency: admission instant to completion (includes
     /// queue wait — what a daemon client actually experiences).
     pub latency_s: f64,
+    /// Times this session was parked between steps so its shard could
+    /// interleave cheaper queued jobs (0 under FIFO / batch serving).
+    pub preemptions: usize,
 }
 
 impl SessionResult {
@@ -294,6 +349,7 @@ impl SessionResult {
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
         obj.insert("digest_bits".into(), Json::str(format!("{:#018x}", self.digest_bits)));
         obj.insert("latency_s".into(), Json::num(self.latency_s));
+        obj.insert("preemptions".into(), Json::num(self.preemptions as f64));
         Json::Obj(obj)
     }
 
@@ -322,6 +378,35 @@ impl SessionResult {
             },
             digest_bits,
             latency_s: j.req_f64("latency_s")?,
+            preemptions: j.req_u64("preemptions")? as usize,
+        })
+    }
+}
+
+/// One transport-layer failure the daemon survived (a read error on a
+/// stream, a fatal accept error on the socket listener). Recorded so an
+/// error-triggered drain is distinguishable from a clean one in the
+/// final report — previously these only went to stderr and vanished.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportError {
+    /// Where it happened: `"read"` or `"accept"`.
+    pub kind: String,
+    /// The underlying I/O error, formatted.
+    pub error: String,
+}
+
+impl TransportError {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.as_str())),
+            ("error", Json::str(self.error.as_str())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TransportError> {
+        Ok(TransportError {
+            kind: j.req_str("kind")?.to_string(),
+            error: j.req_str("error")?.to_string(),
         })
     }
 }
@@ -339,6 +424,9 @@ pub struct ServiceReport {
     /// Jobs that never executed (parse/admission failures, cancelled
     /// sessions), sorted by job id.
     pub rejected: Vec<Rejection>,
+    /// Transport failures survived while serving (always empty for the
+    /// batch path, which has no transport).
+    pub transport_errors: Vec<TransportError>,
 }
 
 impl ServiceReport {
@@ -373,6 +461,10 @@ impl ServiceReport {
             ("aggregate_melem_per_s", Json::num(self.aggregate_melem_per_s())),
             ("sessions", Json::arr(self.results.iter().map(|r| r.to_json()).collect())),
             ("rejected", Json::arr(self.rejected.iter().map(|r| r.to_json()).collect())),
+            (
+                "transport_errors",
+                Json::arr(self.transport_errors.iter().map(|e| e.to_json()).collect()),
+            ),
         ])
     }
 
@@ -408,37 +500,90 @@ pub fn fnv_bits(xs: &[f64]) -> u64 {
     h
 }
 
-pub(crate) fn run_session(s: &Session, shard: usize) -> SessionResult {
-    // Built here, on the shard that runs it — at most `shards` sessions
-    // hold live buffers at once (the queue is the backpressure).
-    let mut inst =
-        s.workload.native_at(&s.spec.shape).expect("admission validated supports_shape");
-    let mut samples = Vec::with_capacity(s.spec.steps);
-    for _ in 0..s.spec.steps {
+/// A session being executed, one step at a time — the resumable unit the
+/// driver loop advances. Splitting the old all-steps-at-once
+/// `run_session` here is what makes step-granularity preemption possible:
+/// a shard can park a long session *between* steps (the instance and its
+/// buffers stay live), run queued short jobs, and resume. Digest parity
+/// is preserved by construction — each session's state advances through
+/// exactly the same per-step arithmetic on its own private instance, so
+/// pausing between steps cannot change a single output bit (pinned by
+/// the scheduler parity tests).
+pub struct ActiveSession {
+    s: Session,
+    inst: Box<dyn NativeInstance>,
+    samples: Vec<f64>,
+    shard: usize,
+    steps_done: usize,
+    preemptions: usize,
+}
+
+impl ActiveSession {
+    /// Build the session's native instance — on the shard that runs it,
+    /// so at most `shards` (+1 parked per shard under preemption)
+    /// sessions hold live buffers at once.
+    pub fn start(s: Session, shard: usize) -> ActiveSession {
+        let inst = s.workload.native_at(&s.spec.shape).expect("admission validated supports_shape");
+        let samples = Vec::with_capacity(s.spec.steps);
+        ActiveSession { s, inst, samples, shard, steps_done: 0, preemptions: 0 }
+    }
+
+    /// Advance one timed step.
+    pub fn step(&mut self) {
         let t0 = Instant::now();
-        inst.run(&s.plan);
-        samples.push(t0.elapsed().as_secs_f64());
+        self.inst.run(&self.s.plan);
+        self.samples.push(t0.elapsed().as_secs_f64());
+        self.steps_done += 1;
     }
-    // The first step pays one-time costs (lazy shard-worker spawn,
-    // workspace growth); drop its sample so short sessions report
-    // steady-state per-step stats. The step itself still ran — a job's
-    // result is always exactly `steps` state advances — and a 1-step
-    // session keeps its only sample.
-    if samples.len() > 1 {
-        samples.remove(0);
+
+    pub fn is_done(&self) -> bool {
+        self.steps_done >= self.s.spec.steps
     }
-    SessionResult {
-        id: s.id,
-        workload: s.workload.name(),
-        shape: s.spec.shape.clone(),
-        steps: s.spec.steps,
-        shard,
-        plan: s.plan.describe(),
-        tuned: s.tuned,
-        elems_per_step: inst.elems(),
-        stats: Stats::from_samples(samples),
-        digest_bits: fnv_bits(&inst.output()),
-        latency_s: s.submitted.elapsed().as_secs_f64(),
+
+    /// The admission estimate's per-step share — the unit of backlog the
+    /// driver retires against the queue as steps complete.
+    pub fn cost_per_step_s(&self) -> f64 {
+        self.s.predicted_cost_s / self.s.spec.steps.max(1) as f64
+    }
+
+    /// Predicted seconds of work left — the preemption threshold: a
+    /// queued job only interleaves when it is much cheaper than this.
+    pub fn remaining_cost_s(&self) -> f64 {
+        self.cost_per_step_s() * (self.s.spec.steps - self.steps_done) as f64
+    }
+
+    /// Record one park-between-steps (reported in the session's result).
+    pub fn note_preempted(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Finalize into the session's result. Callers must have advanced
+    /// through all steps ([`Self::is_done`]).
+    pub fn finish(self) -> SessionResult {
+        debug_assert!(self.is_done(), "finish before all steps ran");
+        let mut samples = self.samples;
+        // The first step pays one-time costs (lazy shard-worker spawn,
+        // workspace growth); drop its sample so short sessions report
+        // steady-state per-step stats. The step itself still ran — a
+        // job's result is always exactly `steps` state advances — and a
+        // 1-step session keeps its only sample.
+        if samples.len() > 1 {
+            samples.remove(0);
+        }
+        SessionResult {
+            id: self.s.id,
+            workload: self.s.workload.name(),
+            shape: self.s.spec.shape.clone(),
+            steps: self.s.spec.steps,
+            shard: self.shard,
+            plan: self.s.plan.describe(),
+            tuned: self.s.tuned,
+            elems_per_step: self.inst.elems(),
+            stats: Stats::from_samples(samples),
+            digest_bits: fnv_bits(&self.inst.output()),
+            latency_s: self.s.submitted.elapsed().as_secs_f64(),
+            preemptions: self.preemptions,
+        }
     }
 }
 
@@ -487,9 +632,22 @@ pub fn run_loaded(
     let (shards, threads_per_shard) = clamp_shards(shards, loaded.jobs.len());
     let mut rejected = loaded.rejected.clone();
     let mut sessions: Vec<Session> = Vec::with_capacity(loaded.jobs.len());
+    let mut backlog_s = 0.0f64; // predicted cost already admitted ahead
     for (id, spec) in &loaded.jobs {
         match admit(*id, spec.clone(), plans, threads_per_shard) {
-            Ok(s) => sessions.push(s),
+            Ok(s) => {
+                // batch-mode admission control: same SLO rule the daemon
+                // applies, with the backlog being everything admitted so
+                // far (the batch runs all-at-once)
+                let wait_s = backlog_s / shards as f64;
+                match deadline_violation(&s, wait_s) {
+                    Some(error) => rejected.push(Rejection { id: *id, error }),
+                    None => {
+                        backlog_s += s.predicted_cost_s;
+                        sessions.push(s);
+                    }
+                }
+            }
             Err(e) => rejected.push(Rejection { id: *id, error: format!("{e:#}") }),
         }
     }
@@ -508,7 +666,33 @@ pub fn run_loaded(
     });
     let wall_s = t0.elapsed().as_secs_f64();
     rejected.sort_by_key(|r| r.id);
-    Ok(ServiceReport { shards, threads_per_shard, wall_s, results, rejected })
+    Ok(ServiceReport {
+        shards,
+        threads_per_shard,
+        wall_s,
+        results,
+        rejected,
+        transport_errors: Vec::new(),
+    })
+}
+
+/// The shared SLO admission rule: given a session and the predicted
+/// queue wait ahead of it, does its `deadline_s` (if any) already look
+/// blown? Returns the rejection message — which embeds the predicted
+/// wait, the same number the daemon's `rejected` event carries as a
+/// structured `predicted_wait_s` field.
+pub fn deadline_violation(s: &Session, predicted_wait_s: f64) -> Option<String> {
+    let deadline = s.spec.deadline_s?;
+    let eta = predicted_wait_s + s.predicted_cost_s;
+    if eta > deadline {
+        Some(format!(
+            "job {}: deadline_s {deadline} cannot be met: predicted wait {predicted_wait_s:.6} s \
+             + predicted cost {:.6} s = {eta:.6} s",
+            s.id, s.predicted_cost_s,
+        ))
+    } else {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -537,7 +721,12 @@ pub fn bench_cases(
     let mut single_melem = f64::NAN;
     for sessions in [1usize, 2, 4] {
         let jobs: Vec<JobSpec> = (0..sessions)
-            .map(|_| JobSpec { workload: "diffusion2d".into(), shape: vec![n, n], steps })
+            .map(|_| JobSpec {
+                workload: "diffusion2d".into(),
+                shape: vec![n, n],
+                steps,
+                deadline_s: None,
+            })
             .collect();
         let elems = (sessions * steps * n * n) as f64;
         let label = format!("service diffusion2d {n}^2 x{sessions} ({steps} steps/job)");
@@ -583,7 +772,7 @@ mod tests {
     use crate::stencil::plan::BlockShape;
 
     fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
-        JobSpec { workload: workload.into(), shape: shape.to_vec(), steps }
+        JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, deadline_s: None }
     }
 
     #[test]
@@ -776,6 +965,57 @@ mod tests {
         assert_eq!(back.stats.median_s, r.stats.median_s);
         assert_eq!(back.latency_s, r.latency_s);
         assert!(r.latency_s > 0.0, "latency clock must run");
+    }
+
+    #[test]
+    fn deadline_spec_validates_and_roundtrips() {
+        let mut spec = job("diffusion2d", &[16, 16], 2);
+        assert!(!spec.to_json().to_string_compact().contains("deadline_s"));
+        spec.deadline_s = Some(2.5);
+        let back = JobSpec::from_json(&Json::parse(&spec.to_json().to_string_pretty()).unwrap());
+        assert_eq!(back.unwrap(), spec);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            spec.deadline_s = Some(bad);
+            assert!(spec.validate().is_err(), "deadline_s {bad} must be invalid");
+        }
+        let text = r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"deadline_s":"soon"}"#;
+        assert!(JobSpec::from_json(&Json::parse(text).unwrap()).is_err(), "non-numeric deadline");
+    }
+
+    #[test]
+    fn admission_prices_every_session() {
+        let cheap = admit(0, job("conv1d-r3", &[1024], 1), None, 2).unwrap();
+        let dear = admit(1, job("mhd", &[16, 16, 16], 8), None, 2).unwrap();
+        assert!(cheap.predicted_cost_s > 0.0);
+        assert!(dear.predicted_cost_s > cheap.predicted_cost_s, "MHD x8 must price above conv1d");
+    }
+
+    #[test]
+    fn deadline_violation_applies_the_slo_rule() {
+        let mut s = admit(0, job("diffusion2d", &[16, 16], 1), None, 1).unwrap();
+        s.predicted_cost_s = 1.0;
+        assert!(deadline_violation(&s, 100.0).is_none(), "no deadline, no violation");
+        s.spec.deadline_s = Some(5.0);
+        assert!(deadline_violation(&s, 1.0).is_none(), "1 + 1 <= 5 holds");
+        let msg = deadline_violation(&s, 4.5).expect("4.5 + 1 > 5 is blown");
+        assert!(msg.contains("deadline_s 5"), "{msg}");
+        assert!(msg.contains("predicted wait"), "{msg}");
+        // the session's own cost alone can blow the deadline
+        s.spec.deadline_s = Some(0.5);
+        assert!(deadline_violation(&s, 0.0).is_some());
+    }
+
+    #[test]
+    fn batch_rejects_unmeetable_deadlines_and_runs_the_rest() {
+        let mut doomed = job("mhd", &[16, 16, 16], 8);
+        doomed.deadline_s = Some(1e-12); // under any predicted cost
+        let mut relaxed = job("diffusion2d", &[16, 16], 2);
+        relaxed.deadline_s = Some(1e6);
+        let jobs = vec![job("diffusion2d", &[16, 16], 2), doomed, relaxed];
+        let rep = run_jobs(&jobs, 1, None, true).unwrap();
+        assert_eq!(rep.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(rep.rejected.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert!(rep.rejected[0].error.contains("deadline_s"), "{:?}", rep.rejected[0]);
     }
 
     #[test]

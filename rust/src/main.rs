@@ -19,10 +19,12 @@
 //!   serve --jobs <file|-> [--shards N]
 //!                               batched stencil job service on the sharded
 //!                               worker pool -> serve_report.json
-//!   daemon [--socket P|--stdio] [--shards N] [--queue-cap N]
+//!   daemon [--socket P|--stdio] [--shards N] [--queue-cap N] [--fifo]
 //!                               long-lived serving daemon: admit NDJSON
 //!                               job requests while sessions run, stream
 //!                               events, report on drain/shutdown
+//!                               (cost-aware scheduling with preemption by
+//!                               default; --fifo restores arrival order)
 //!   submit --socket P --jobs <file|-> [--shutdown] [--raw]
 //!                               submit a job file to a running daemon and
 //!                               stream its events
@@ -63,6 +65,7 @@ const BOOL_FLAGS: &[&str] = &[
     "stdio",
     "shutdown",
     "raw",
+    "fifo",
 ];
 
 fn main() -> Result<()> {
@@ -488,16 +491,23 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
 /// aggregate report written on drain/shutdown. In `--stdio` mode stdout
 /// carries the event stream, so status lines go to stderr.
 fn cmd_daemon(cfg: &Config, args: &Args) -> Result<()> {
-    use stencilax::coordinator::daemon::{self, DaemonOpts};
+    use stencilax::coordinator::daemon::{self, DaemonOpts, Policy};
+    let queue_cap = args.get_usize("queue-cap", daemon::DEFAULT_QUEUE_CAP)?;
+    if queue_cap == 0 {
+        bail!("--queue-cap must be at least 1 (a zero-capacity queue cannot admit any job)");
+    }
     let opts = DaemonOpts {
         shards: args.get_usize("shards", 2)?,
         plans: PlanCache::load_if_exists(&cfg.output_dir)?,
-        queue_cap: args.get_usize("queue-cap", daemon::DEFAULT_QUEUE_CAP)?,
+        queue_cap,
+        policy: if args.has_flag("fifo") { Policy::Fifo } else { Policy::cost_aware() },
     };
     eprintln!(
-        "=== stencilax daemon: {} shard(s) requested, queue cap {}, host {}, {} tuned plan(s) ===",
+        "=== stencilax daemon: {} shard(s) requested, queue cap {}, {} scheduling, host {}, \
+         {} tuned plan(s) ===",
         opts.shards,
         opts.queue_cap,
+        if args.has_flag("fifo") { "FIFO" } else { "cost-aware" },
         host_fingerprint(),
         opts.plans.as_ref().map_or(0, |c| c.len()),
     );
@@ -544,14 +554,21 @@ fn cmd_submit(args: &Args) -> Result<()> {
                 return;
             }
             match ev {
-                Event::Accepted { id, spec, plan, tuned } => println!(
-                    "accepted job {id:>3} {:<12} {:?} x{} steps (plan {plan}{})",
+                Event::Accepted { id, spec, plan, tuned, predicted_cost_s } => println!(
+                    "accepted job {id:>3} {:<12} {:?} x{} steps (plan {plan}{}, predicted {})",
                     spec.workload,
                     spec.shape,
                     spec.steps,
                     if *tuned { ", tuned" } else { "" },
+                    stencilax::util::bench::fmt_time(*predicted_cost_s),
                 ),
-                Event::Rejected { id, error } => println!("rejected job {id:>3}: {error}"),
+                Event::Rejected { id, error, predicted_wait_s } => match predicted_wait_s {
+                    Some(wait) => println!(
+                        "rejected job {id:>3}: {error} (predicted wait {})",
+                        stencilax::util::bench::fmt_time(*wait),
+                    ),
+                    None => println!("rejected job {id:>3}: {error}"),
+                },
                 Event::Started { id, shard } => println!("started  job {id:>3} on shard {shard}"),
                 Event::Done(r) => println!("{}", r.describe_line()),
                 Event::Report(j) => println!("final report: {}", j.to_string_compact()),
@@ -700,14 +717,20 @@ SUBCOMMANDS:
                              drain sessions onto N disjoint pool shards
                              (default 2), and write serve_report.json
                              under --out
-  daemon [--socket PATH|--stdio] [--shards N] [--queue-cap N]
+  daemon [--socket PATH|--stdio] [--shards N] [--queue-cap N] [--fifo]
                              long-lived serving daemon: admit NDJSON job
-                             lines ({{workload, shape, steps}}, or
-                             {{\"type\": \"drain\"|\"shutdown\"}}) over a Unix
-                             socket or stdin WHILE sessions run, stream
-                             accepted/rejected/started/done events as
-                             NDJSON, and write daemon_report.json under
-                             --out on drain/shutdown (stdin EOF = drain)
+                             lines ({{workload, shape, steps}}, optional
+                             deadline_s, or {{\"type\": \"drain\"|\"shutdown\"}})
+                             over a Unix socket or stdin WHILE sessions
+                             run, stream accepted/rejected/started/done
+                             events as NDJSON, and write
+                             daemon_report.json under --out on
+                             drain/shutdown (stdin EOF = drain); jobs run
+                             shortest-predicted-first with aging and step
+                             preemption unless --fifo restores strict
+                             arrival order, and a deadline_s the predicted
+                             backlog already blows is rejected up front
+                             with predicted_wait_s
   submit --socket PATH --jobs <file|-> [--shutdown] [--raw]
                              submit a job file to a running daemon and
                              stream its events (--raw echoes NDJSON

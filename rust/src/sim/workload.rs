@@ -127,6 +127,16 @@ pub trait Workload: Send + Sync {
         let _ = shape;
         None
     }
+
+    /// Whether this workload's native instances dispatch through the flat
+    /// chunked 1-D path (see [`NativeInstance::chunked_1d`]). Mirrored
+    /// here so admission-time cost estimation
+    /// (`coordinator::empirical::estimate_job_cost_s`) can price a job
+    /// without building its buffers; kept in lockstep with the instance
+    /// flag by a registry test.
+    fn chunked_1d(&self) -> bool {
+        false
+    }
 }
 
 /// Bench-scale problem sizes as `(smoke, full)`: the single source of
@@ -341,6 +351,10 @@ impl Workload for Conv1d {
             _ => None,
         }
     }
+
+    fn chunked_1d(&self) -> bool {
+        true
+    }
 }
 
 /// Wide 1-D cross-correlation (paper §4.1, the Fig. 8 sweep's upper range).
@@ -390,6 +404,10 @@ impl Workload for Xcorr {
             &[n] if n > 0 => Some(Box::new(XcorrNative::new(n, self.radius))),
             _ => None,
         }
+    }
+
+    fn chunked_1d(&self) -> bool {
+        true
     }
 }
 
@@ -643,6 +661,19 @@ mod tests {
             if *ok {
                 assert_eq!(w.native_at(shape).unwrap().shape(), *shape, "{name}");
             }
+        }
+    }
+
+    #[test]
+    fn workload_chunked_1d_matches_its_native_instances() {
+        // the admission-time cost estimator prices jobs from
+        // Workload::chunked_1d without building buffers — it must agree
+        // with what the built instance actually reports
+        for name in ["conv1d-r1", "conv1d-r3", "xcorr", "diffusion1d", "diffusion2d", "diffusion3d", "mhd"]
+        {
+            let w = find(name).unwrap();
+            let inst = w.native(true).expect(name);
+            assert_eq!(w.chunked_1d(), inst.chunked_1d(), "{name}");
         }
     }
 

@@ -12,11 +12,11 @@ use stencilax::coordinator::service::{self, JobSpec};
 use stencilax::util::json::Json;
 
 fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
-    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps }
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, deadline_s: None }
 }
 
 fn opts() -> DaemonOpts {
-    DaemonOpts { shards: 2, plans: None, queue_cap: 8 }
+    DaemonOpts { shards: 2, queue_cap: 8, ..DaemonOpts::default() }
 }
 
 /// Parse every emitted line back through the protocol.
@@ -70,7 +70,7 @@ fn daemon_stdio_and_batch_serve_produce_identical_digests() {
                 assert_eq!(stage.insert(r.id, 3), Some(2), "done before started for {}", r.id);
                 assert!(r.latency_s > 0.0);
             }
-            Event::Rejected { id, error } => panic!("unexpected rejection of {id}: {error}"),
+            Event::Rejected { id, error, .. } => panic!("unexpected rejection of {id}: {error}"),
             Event::Report(_) => {}
         }
     }

@@ -1,0 +1,172 @@
+//! Scheduler regressions for the daemon (ISSUE 6): the cost-aware queue
+//! must fix FIFO head-of-line blocking — cheap jobs complete before a
+//! long session that arrived first, both by pop order and by
+//! step-granularity preemption when they arrive mid-run — while every
+//! session's bit digest stays identical to its FIFO twin; admission
+//! control must reject deadline-bearing jobs the predicted backlog
+//! already dooms, answering with `predicted_wait_s`; and a zero
+//! `--queue-cap` must be a configuration error, not a silent clamp.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use stencilax::coordinator::daemon::{drive, server, DaemonOpts, Event, JobQueue, Policy};
+use stencilax::coordinator::service::{admit, JobSpec, Session, SessionResult};
+
+fn spec(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, deadline_s: None }
+}
+
+fn session(id: usize, workload: &str, shape: &[usize], steps: usize) -> Session {
+    admit(id, spec(workload, shape, steps), None, 1).unwrap()
+}
+
+/// The mixed-traffic job set: one expensive MHD session (id 0) ahead of
+/// `shorts` cheap conv1d sessions (ids 1..).
+fn mixed_sessions(long_steps: usize, shorts: usize) -> Vec<Session> {
+    let mut v = vec![session(0, "mhd", &[8, 8, 8], long_steps)];
+    for id in 1..=shorts {
+        v.push(session(id, "conv1d-r3", &[1024], 1));
+    }
+    v
+}
+
+/// Drive a prefilled, already-closed queue on one shard, recording the
+/// completion order.
+fn drive_prefilled(policy: Policy, sessions: Vec<Session>) -> (Vec<SessionResult>, Vec<usize>) {
+    let queue = JobQueue::with_policy(sessions.len(), policy);
+    for s in sessions {
+        queue.push(s).ok().unwrap();
+    }
+    queue.close();
+    let order = Mutex::new(Vec::new());
+    let results = drive(&queue, 1, &|ev| {
+        if let Event::Done(r) = ev {
+            order.lock().unwrap().push(r.id);
+        }
+    });
+    (results, order.into_inner().unwrap())
+}
+
+#[test]
+fn cost_aware_pop_order_completes_shorts_before_an_earlier_long_job() {
+    // the long job is at the FRONT of the queue in both runs; only the
+    // policy differs, so the completion orders witness the scheduler
+    let (fifo, fifo_order) = drive_prefilled(Policy::Fifo, mixed_sessions(4, 6));
+    let no_preempt = Policy::CostAware { aging_rate: 0.0, preempt: false };
+    let (sched, sched_order) = drive_prefilled(no_preempt, mixed_sessions(4, 6));
+
+    assert_eq!(fifo_order, vec![0, 1, 2, 3, 4, 5, 6], "FIFO runs the long job first");
+    assert_eq!(
+        sched_order.last(),
+        Some(&0),
+        "cost-aware pop must defer the long job behind every short: {sched_order:?}"
+    );
+    assert_eq!(sched_order.len(), 7, "every job still completes exactly once");
+
+    // head-of-line fix must not change a single output bit: results are
+    // id-sorted, so FIFO and scheduled runs pair up positionally
+    assert_eq!(fifo.len(), sched.len());
+    for (f, s) in fifo.iter().zip(&sched) {
+        assert_eq!(f.id, s.id);
+        assert_eq!(f.digest_bits, s.digest_bits, "job {} digest differs across policies", f.id);
+        assert_eq!(f.preemptions, 0, "FIFO never preempts");
+        assert_eq!(s.preemptions, 0, "nothing arrived mid-run, so nothing preempted");
+    }
+}
+
+#[test]
+fn shorts_arriving_mid_long_session_preempt_it_and_finish_first() {
+    // FIFO reference digests for the same specs
+    let (fifo, _) = drive_prefilled(Policy::Fifo, mixed_sessions(600, 6));
+
+    let queue = JobQueue::with_policy(8, Policy::cost_aware());
+    queue.push(session(0, "mhd", &[8, 8, 8], 600)).ok().unwrap();
+    let order = Mutex::new(Vec::new());
+    let long_started = AtomicBool::new(false);
+    let results = std::thread::scope(|scope| {
+        let (queue, order, long_started) = (&queue, &order, &long_started);
+        let driver = scope.spawn(move || {
+            drive(queue, 1, &|ev| match ev {
+                Event::Started { id: 0, .. } => long_started.store(true, Ordering::Release),
+                Event::Done(r) => order.lock().unwrap().push(r.id),
+                _ => {}
+            })
+        });
+        // submit the shorts only once the long session is mid-run, so
+        // completing first REQUIRES step-granularity preemption
+        while !long_started.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        for id in 1..=6 {
+            queue.push(session(id, "conv1d-r3", &[1024], 1)).ok().unwrap();
+        }
+        queue.close();
+        driver.join().unwrap()
+    });
+
+    let order = order.into_inner().unwrap();
+    assert_eq!(order.len(), 7);
+    assert_eq!(
+        order.last(),
+        Some(&0),
+        "shorts must interleave into the running long session: {order:?}"
+    );
+    let long = results.iter().find(|r| r.id == 0).unwrap();
+    assert!(long.preemptions >= 1, "the long session must have been parked at least once");
+
+    // preemption pauses the instance between steps — it must not change
+    // any session's bits relative to the FIFO reference
+    assert_eq!(results.len(), fifo.len());
+    for (s, f) in results.iter().zip(&fifo) {
+        assert_eq!(s.id, f.id);
+        assert_eq!(s.digest_bits, f.digest_bits, "job {} digest changed under preemption", s.id);
+    }
+}
+
+#[test]
+fn daemon_rejects_unmeetable_deadlines_with_predicted_wait() {
+    let mut script = String::new();
+    // id 0: a long job with no deadline fills the backlog
+    script.push_str(&(spec("mhd", &[8, 8, 8], 60).to_json().to_string_compact() + "\n"));
+    // id 1: a deadline no backlog state could meet
+    let mut doomed = spec("conv1d-r3", &[1024], 1);
+    doomed.deadline_s = Some(1e-9);
+    script.push_str(&(doomed.to_json().to_string_compact() + "\n"));
+    // id 2: the same job with a generous deadline is admitted
+    let mut relaxed = spec("conv1d-r3", &[1024], 1);
+    relaxed.deadline_s = Some(1e6);
+    script.push_str(&(relaxed.to_json().to_string_compact() + "\n"));
+
+    let opts = DaemonOpts { shards: 1, queue_cap: 8, ..DaemonOpts::default() };
+    let (report, lines) = server::serve_script(&script, &opts).unwrap();
+    assert_eq!(report.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    assert_eq!(report.rejected.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    assert!(report.rejected[0].error.contains("deadline_s"), "{:?}", report.rejected[0]);
+
+    let events: Vec<Event> = lines.iter().map(|l| Event::parse_line(l).unwrap()).collect();
+    let mut saw_rejection = false;
+    for ev in &events {
+        match ev {
+            Event::Rejected { id, error, predicted_wait_s } => {
+                assert_eq!(*id, 1);
+                let wait = predicted_wait_s.expect("deadline rejection must carry the estimate");
+                assert!(wait >= 0.0, "predicted_wait_s={wait}");
+                assert!(error.contains("cannot be met"), "{error}");
+                saw_rejection = true;
+            }
+            Event::Accepted { id, predicted_cost_s, .. } => {
+                assert!(*predicted_cost_s > 0.0, "job {id} must be priced at admission");
+            }
+            _ => {}
+        }
+    }
+    assert!(saw_rejection, "no rejected event in {lines:?}");
+}
+
+#[test]
+fn zero_queue_cap_is_a_configuration_error() {
+    let opts = DaemonOpts { queue_cap: 0, ..DaemonOpts::default() };
+    let err = server::serve_script("{\"type\":\"drain\"}\n", &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("--queue-cap"), "{err:#}");
+}

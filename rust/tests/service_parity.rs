@@ -66,7 +66,8 @@ the old gate fallback made it serial"
 fn service_session_is_bit_identical_to_direct_stepping() {
     let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let (n, steps) = (40usize, 5usize);
-    let jobs = vec![JobSpec { workload: "diffusion2d".into(), shape: vec![n, n], steps }];
+    let jobs =
+        vec![JobSpec { workload: "diffusion2d".into(), shape: vec![n, n], steps, deadline_s: None }];
     let report = service::run_jobs(&jobs, 2, None, true).unwrap();
     assert_eq!(report.results.len(), 1);
     let served = &report.results[0];
@@ -98,7 +99,12 @@ fn service_saturates_past_its_shard_count_without_loss() {
     // more jobs than shards: the queue drains work-conservingly and every
     // job still completes exactly once
     let jobs: Vec<JobSpec> = (0..5)
-        .map(|_| JobSpec { workload: "diffusion2d".into(), shape: vec![20, 20], steps: 2 })
+        .map(|_| JobSpec {
+            workload: "diffusion2d".into(),
+            shape: vec![20, 20],
+            steps: 2,
+            deadline_s: None,
+        })
         .collect();
     let report = service::run_jobs(&jobs, 2, None, true).unwrap();
     assert_eq!(report.results.len(), 5);
