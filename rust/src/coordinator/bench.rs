@@ -197,6 +197,11 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
     // of cheap jobs, FIFO vs the cost-aware scheduler (DESIGN.md §14)
     out.push(crate::coordinator::daemon::bench_case_mixed(smoke, plans));
 
+    // fault-isolation experiment: golden run vs a pinned fault-injection
+    // run (panic/stall/NaN), asserting digest parity of non-faulted jobs
+    // and a histogram matching the injected spec (DESIGN.md §15)
+    out.push(crate::coordinator::daemon::bench_case_chaos(smoke, plans));
+
     out
 }
 

@@ -14,10 +14,14 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::service::{job_entries, SessionResult};
+use crate::coordinator::service::{job_entries, SessionFailure, SessionResult};
 use crate::util::json::Json;
 
 use super::protocol::{Event, Request};
+
+/// Default patience for [`connect`] — how long `submit` waits out a
+/// daemon that is still starting up (`--connect-timeout` overrides).
+pub const DEFAULT_CONNECT_TIMEOUT_S: f64 = 5.0;
 
 /// Terminal accounting over an event stream: which submissions resolved,
 /// how, and the final report if one arrived. Order-independent — `done`
@@ -28,6 +32,9 @@ pub struct EventAccumulator {
     pub started: usize,
     pub done: Vec<SessionResult>,
     pub rejected: Vec<(usize, String)>,
+    /// Terminal failures only — a `failed` event with `will_retry: true`
+    /// announces a rerun, so the job is still in flight.
+    pub failed: Vec<SessionFailure>,
     pub report: Option<Json>,
 }
 
@@ -38,13 +45,19 @@ impl EventAccumulator {
             Event::Started { .. } => self.started += 1,
             Event::Done(r) => self.done.push(r),
             Event::Rejected { id, error, .. } => self.rejected.push((id, error)),
+            Event::Failed(f) => {
+                if !f.will_retry {
+                    self.failed.push(f);
+                }
+            }
             Event::Report(j) => self.report = Some(j),
         }
     }
 
-    /// Jobs that reached a terminal state (done or rejected).
+    /// Jobs that reached a terminal state (done, rejected, or failed
+    /// with retries exhausted).
     pub fn terminal(&self) -> usize {
-        self.done.len() + self.rejected.len()
+        self.done.len() + self.rejected.len() + self.failed.len()
     }
 
     /// Completed sessions sorted by job id, whatever order they finished.
@@ -70,16 +83,31 @@ pub fn job_lines(file: &Json) -> Result<Vec<String>> {
     Ok(job_entries(file)?.iter().map(|j| j.to_string_compact()).collect())
 }
 
-/// Connect to the daemon socket, retrying briefly — `submit` typically
-/// races the daemon's startup in scripts and CI.
+/// Connect to the daemon socket with bounded exponential backoff —
+/// `submit` typically races the daemon's startup in scripts and CI, so
+/// refusals are retried with growing pauses (25 ms doubling to a 800 ms
+/// cap) until `patience` runs out. The terminal error reports how many
+/// attempts were made over how long, so a dead daemon reads as "tried 9
+/// times over 5.0 s", not a bare ECONNREFUSED.
 pub fn connect(socket: &Path, patience: Duration) -> Result<UnixStream> {
     let t0 = std::time::Instant::now();
+    let mut delay = Duration::from_millis(25);
+    let mut attempts = 0usize;
     loop {
+        attempts += 1;
         match UnixStream::connect(socket) {
             Ok(s) => return Ok(s),
-            Err(_) if t0.elapsed() < patience => std::thread::sleep(Duration::from_millis(50)),
+            Err(_) if t0.elapsed() + delay < patience => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(800));
+            }
             Err(e) => {
-                return Err(e).with_context(|| format!("connecting to daemon at {socket:?}"));
+                return Err(e).with_context(|| {
+                    format!(
+                        "connecting to daemon at {socket:?} ({attempts} attempts over {:.1} s)",
+                        t0.elapsed().as_secs_f64(),
+                    )
+                });
             }
         }
     }
@@ -109,9 +137,10 @@ pub fn submit_lines(
     socket: &Path,
     lines: &[String],
     shutdown: bool,
+    connect_timeout: Duration,
     mut on_event: impl FnMut(&str, &Event),
 ) -> Result<SubmitSummary> {
-    let stream = connect(socket, Duration::from_secs(5))?;
+    let stream = connect(socket, connect_timeout)?;
     let mut writer = stream.try_clone().context("cloning socket stream")?;
     let mut reader = BufReader::new(stream);
     let to_send: Vec<String> = lines.to_vec();
@@ -181,6 +210,22 @@ mod tests {
             digest_bits: 7,
             latency_s: 1e-3,
             preemptions: 0,
+            retries: 0,
+        })
+    }
+
+    fn failed(id: usize, will_retry: bool) -> Event {
+        Event::Failed(SessionFailure {
+            id,
+            workload: "diffusion2d".into(),
+            shape: vec![8, 8],
+            steps: 4,
+            shard: 0,
+            kind: crate::coordinator::daemon::protocol::FailureKind::Panic,
+            error: "injected fault: panic at step 2".into(),
+            step: 2,
+            retries: 0,
+            will_retry,
         })
     }
 
@@ -201,6 +246,22 @@ mod tests {
         assert_eq!(acc.done_by_id().iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(acc.rejected, vec![(3, "unknown workload".to_string())]);
         assert!(acc.report.is_none());
+    }
+
+    #[test]
+    fn accumulator_counts_only_terminal_failures() {
+        // a will-retry failure announces a rerun: the job is still in
+        // flight and must NOT count toward terminal resolution — the
+        // retried job's `done` is what resolves it
+        let mut acc = EventAccumulator::default();
+        acc.observe(failed(0, true));
+        assert_eq!(acc.terminal(), 0, "transient failure is not terminal");
+        acc.observe(done(0));
+        assert_eq!(acc.terminal(), 1);
+        acc.observe(failed(1, false));
+        assert_eq!(acc.terminal(), 2, "retries-exhausted failure is terminal");
+        assert_eq!(acc.failed.len(), 1);
+        assert_eq!(acc.failed[0].id, 1);
     }
 
     #[test]

@@ -19,13 +19,16 @@ pub mod queue;
 pub mod server;
 
 pub use client::{submit_lines, EventAccumulator, SubmitSummary};
-pub use protocol::{Event, Request, MAX_LINE_BYTES, PROTOCOL_SCHEMA};
-pub use queue::{drive, JobQueue, Policy, DEFAULT_AGING_RATE, DEFAULT_QUEUE_CAP};
+pub use protocol::{Event, FailureKind, Request, MAX_LINE_BYTES, PROTOCOL_SCHEMA};
+pub use queue::{
+    drive, drive_with, DriveOutcome, JobQueue, Policy, DEFAULT_AGING_RATE, DEFAULT_QUEUE_CAP,
+};
 pub use server::{serve_socket, serve_stream, DaemonOpts};
 
 use std::time::{Duration, Instant};
 
 use crate::coordinator::bench::BenchResult;
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::plans::PlanCache;
 use crate::coordinator::service::{admit, clamp_shards, JobSpec, SessionResult};
 use crate::util::bench::{percentile_linear, Stats};
@@ -59,7 +62,7 @@ pub fn bench_case(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
                     workload: "diffusion2d".into(),
                     shape: vec![n, n],
                     steps,
-                    deadline_s: None,
+                    ..JobSpec::default()
                 };
                 let session = admit(id, spec, plans, budget).expect("bench job always admits");
                 queue.push(session).ok().expect("bench queue stays open while submitting");
@@ -67,7 +70,7 @@ pub fn bench_case(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
             }
             queue.close();
         });
-        let results = drive(queue, shards, &|_| {});
+        let results = drive(queue, shards, &|_| {}).results;
         submitter.join().expect("bench submitter panicked");
         results
     });
@@ -89,8 +92,8 @@ pub fn bench_case(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
             ("stagger_s".into(), Json::num(stagger.as_secs_f64())),
             ("wall_s".into(), Json::num(wall_s)),
             ("jobs_per_s".into(), Json::num(results.len() as f64 / wall_s)),
-            ("latency_p50_s".into(), Json::num(percentile_linear(&latencies, 0.50))),
-            ("latency_p95_s".into(), Json::num(percentile_linear(&latencies, 0.95))),
+            ("latency_p50_s".into(), Json::num(percentile_linear(&latencies, 0.50).unwrap_or(0.0))),
+            ("latency_p95_s".into(), Json::num(percentile_linear(&latencies, 0.95).unwrap_or(0.0))),
             ("latency_samples".into(), Json::num(latencies.len() as f64)),
             ("aggregate_melem_per_s".into(), Json::num(elems / wall_s / 1e6)),
         ],
@@ -119,7 +122,7 @@ fn run_mixed(
             }
             queue.close();
         });
-        let results = drive(queue, 1, &|_| {});
+        let results = drive(queue, 1, &|_| {}).results;
         submitter.join().expect("mixed bench submitter panicked");
         results
     });
@@ -150,7 +153,7 @@ pub fn bench_case_mixed(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
             workload: "conv1d-r3".into(),
             shape: vec![short_n],
             steps: 2,
-            deadline_s: None,
+            ..JobSpec::default()
         })
         .collect();
     // Late-but-not-last: the blocked jobs must be a MINORITY of the
@@ -163,7 +166,7 @@ pub fn bench_case_mixed(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         workload: "mhd".into(),
         shape: vec![long_n; 3],
         steps: long_steps,
-        deadline_s: None,
+        ..JobSpec::default()
     });
     let (fifo, _) = run_mixed(Policy::Fifo, &specs, stagger, plans, budget);
     let (sched, wall_s) = run_mixed(Policy::cost_aware(), &specs, stagger, plans, budget);
@@ -195,13 +198,139 @@ pub fn bench_case_mixed(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
             ("stagger_s".into(), Json::num(stagger.as_secs_f64())),
             ("wall_s".into(), Json::num(wall_s)),
             ("jobs_per_s".into(), Json::num(sched.len() as f64 / wall_s)),
-            ("latency_p50_s".into(), Json::num(percentile_linear(&latencies, 0.50))),
-            ("latency_p95_s".into(), Json::num(percentile_linear(&latencies, 0.95))),
+            ("latency_p50_s".into(), Json::num(percentile_linear(&latencies, 0.50).unwrap_or(0.0))),
+            ("latency_p95_s".into(), Json::num(percentile_linear(&latencies, 0.95).unwrap_or(0.0))),
             ("latency_samples".into(), Json::num(latencies.len() as f64)),
-            ("fifo_latency_p50_s".into(), Json::num(percentile_linear(&fifo_lat, 0.50))),
-            ("fifo_latency_p95_s".into(), Json::num(percentile_linear(&fifo_lat, 0.95))),
+            (
+                "fifo_latency_p50_s".into(),
+                Json::num(percentile_linear(&fifo_lat, 0.50).unwrap_or(0.0)),
+            ),
+            (
+                "fifo_latency_p95_s".into(),
+                Json::num(percentile_linear(&fifo_lat, 0.95).unwrap_or(0.0)),
+            ),
             ("preemptions".into(), Json::num(preemptions as f64)),
             ("aggregate_melem_per_s".into(), Json::num(elems / wall_s / 1e6)),
+        ],
+    }
+}
+
+/// One run of the chaos scenario's traffic through a FIFO queue on two
+/// shards, under an optional fault plan.
+fn run_chaos(
+    specs: &[JobSpec],
+    faults: Option<&FaultPlan>,
+    plans: Option<&PlanCache>,
+) -> (DriveOutcome, f64) {
+    let (shards, budget) = clamp_shards(2, specs.len());
+    let queue = JobQueue::bounded(specs.len());
+    for (id, spec) in specs.iter().enumerate() {
+        let session =
+            admit(id, spec.clone(), plans, budget).expect("chaos bench job always admits");
+        queue.push(session).ok().expect("chaos bench queue is open and sized for the batch");
+    }
+    queue.close();
+    let t0 = Instant::now();
+    let outcome = drive_with(&queue, shards, &|_| {}, faults);
+    (outcome, t0.elapsed().as_secs_f64())
+}
+
+/// The `stencilax bench` `daemon-chaos` case — the fault-isolation
+/// acceptance experiment (DESIGN.md §15). A mixed batch (conv1d,
+/// diffusion2d with a clean twin, MHD with a clean twin) is served twice:
+/// once fault-free (the golden run) and once under a pinned fault plan
+/// injecting one panic (retryable — absorbed by a retry), one stall
+/// (against a tight explicit `timeout_s` with `max_retries: 0` — a
+/// terminal watchdog timeout), and one NaN poison (terminal divergence).
+/// The case *asserts* the chaos invariants instead of merely recording
+/// them: the drive exits cleanly, every non-faulted job's digest is
+/// bit-identical to its golden twin, the retried job recovers with
+/// `retries >= 1` and the fault-free digest, the two injected terminal
+/// failures land in `failed` with the right kinds, and the failure
+/// histogram matches the injected spec exactly.
+pub fn bench_case_chaos(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
+    let steps = if smoke { 4 } else { 6 };
+    let job = |workload: &str, shape: Vec<usize>| JobSpec {
+        workload: workload.into(),
+        shape,
+        steps,
+        ..JobSpec::default()
+    };
+    let specs = vec![
+        job("conv1d-r3", vec![4096]),   // 0: clean
+        job("diffusion2d", vec![24, 24]), // 1: panic target (retried)
+        job("diffusion2d", vec![24, 24]), // 2: clean twin of 1
+        JobSpec {
+            // 3: stall target; the tight explicit budget + no retries
+            // makes the injected stall a terminal watchdog timeout
+            timeout_s: Some(0.05),
+            max_retries: Some(0),
+            ..job("diffusion2d", vec![24, 24])
+        },
+        job("mhd", vec![8, 8, 8]), // 4: NaN target (terminal divergence)
+        job("mhd", vec![8, 8, 8]), // 5: clean twin of 4
+    ];
+    let plan = FaultPlan::parse("panic@1,stall@3,nan@4,stall_ms=200")
+        .expect("chaos bench fault spec is valid");
+    let (golden, _) = run_chaos(&specs, None, plans);
+    assert_eq!(golden.results.len(), specs.len(), "golden run completes everything");
+    assert_eq!(golden.histogram.total(), 0, "golden run is fault-free");
+    let (chaos, wall_s) = run_chaos(&specs, Some(&plan), plans);
+
+    // chaos invariants (the bench fails loudly rather than recording a
+    // silently-broken failure layer)
+    assert_eq!(
+        chaos.results.iter().map(|r| r.id).collect::<Vec<_>>(),
+        vec![0, 1, 2, 5],
+        "the two terminal targets fail, everything else completes"
+    );
+    for r in &chaos.results {
+        assert_eq!(
+            r.digest_bits, golden.results[r.id].digest_bits,
+            "job {} digest must match its fault-free golden",
+            r.id
+        );
+    }
+    let retried = &chaos.results[1]; // job id 1 (results sorted by id)
+    assert!(retried.retries >= 1, "the panic target must have recovered via retry");
+    assert_eq!(chaos.failed.iter().map(|f| f.id).collect::<Vec<_>>(), vec![3, 4]);
+    assert_eq!(chaos.failed[0].kind, FailureKind::Timeout);
+    assert_eq!(chaos.failed[1].kind, FailureKind::Divergence);
+    assert_eq!(
+        (
+            chaos.histogram.panic,
+            chaos.histogram.timeout,
+            chaos.histogram.divergence,
+            chaos.histogram.transport,
+        ),
+        (1, 1, 1, 0),
+        "histogram must match the injected spec"
+    );
+
+    let latencies: Vec<f64> = chaos.results.iter().map(|r| r.latency_s).collect();
+    let elems =
+        chaos.results.iter().map(|r| r.elems_per_step * r.steps as f64).sum::<f64>();
+    BenchResult {
+        name: "daemon-chaos".into(),
+        shape: vec![24, 24],
+        elems,
+        stats: Stats::from_samples(latencies.clone()),
+        plan: format!("inject {}", plan.describe()),
+        tuned: chaos.results.iter().any(|r| r.tuned),
+        extra: vec![
+            ("sessions".into(), Json::num(specs.len() as f64)),
+            ("completed".into(), Json::num(chaos.results.len() as f64)),
+            ("failed_terminal".into(), Json::num(chaos.failed.len() as f64)),
+            ("retried_jobs".into(), Json::num(
+                chaos.results.iter().filter(|r| r.retries > 0).count() as f64,
+            )),
+            ("injected_panic".into(), Json::num(chaos.histogram.panic as f64)),
+            ("injected_timeout".into(), Json::num(chaos.histogram.timeout as f64)),
+            ("injected_divergence".into(), Json::num(chaos.histogram.divergence as f64)),
+            ("digest_parity".into(), Json::Bool(true)), // asserted above
+            ("wall_s".into(), Json::num(wall_s)),
+            ("latency_p50_s".into(), Json::num(percentile_linear(&latencies, 0.50).unwrap_or(0.0))),
+            ("latency_p95_s".into(), Json::num(percentile_linear(&latencies, 0.95).unwrap_or(0.0))),
         ],
     }
 }
@@ -258,5 +387,29 @@ mod tests {
         // (the p95/p50 ratio improvement itself is asserted by CI on the
         // recorded BENCH_native.json, where the run is not shared with a
         // test harness fighting for the same cores)
+    }
+
+    #[test]
+    fn daemon_chaos_bench_asserts_the_fault_invariants() {
+        // the case itself asserts clean exit, digest parity vs the
+        // golden run, retry recovery, and the histogram — this test
+        // checks the recorded extras are consistent with those asserts
+        let r = bench_case_chaos(true, None);
+        assert_eq!(r.name, "daemon-chaos");
+        let get = |k: &str| {
+            r.extra
+                .iter()
+                .find(|(key, _)| key == k)
+                .and_then(|(_, v)| v.as_f64())
+                .unwrap_or_else(|| panic!("missing extra {k:?}"))
+        };
+        assert_eq!(get("sessions") as usize, 6);
+        assert_eq!(get("completed") as usize, 4);
+        assert_eq!(get("failed_terminal") as usize, 2);
+        assert_eq!(get("retried_jobs") as usize, 1);
+        assert_eq!(get("injected_panic") as usize, 1);
+        assert_eq!(get("injected_timeout") as usize, 1);
+        assert_eq!(get("injected_divergence") as usize, 1);
+        assert!(get("latency_p95_s") >= get("latency_p50_s"));
     }
 }

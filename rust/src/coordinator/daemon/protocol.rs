@@ -23,7 +23,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::service::{JobSpec, SessionResult};
+use crate::coordinator::service::{JobSpec, SessionFailure, SessionResult};
 use crate::util::json::Json;
 
 /// Protocol identifier, carried by the final `report` event envelope.
@@ -92,6 +92,59 @@ impl Request {
     }
 }
 
+/// The failure taxonomy (DESIGN.md §15). Every job-level failure the
+/// serving stack can survive is one of these — the `failed` event, the
+/// report's `failed` array, and the failure histogram all speak it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailureKind {
+    /// The session panicked (in start/step/finish, or a pool worker
+    /// unwound into the dispatcher). Retryable: a fresh instance
+    /// reruns the same deterministic arithmetic.
+    Panic,
+    /// The watchdog budget was exhausted at a step boundary. Retryable:
+    /// a stall is usually environmental (contended host, wedged worker).
+    Timeout,
+    /// A finiteness probe found NaN/Inf in the live field. **Not**
+    /// retryable — deterministic math reproduces the blowup bit for bit.
+    Divergence,
+    /// The request stream died (read error). Handled at the transport
+    /// layer; sessions never fail with this kind, but the taxonomy and
+    /// histogram carry it so chaos runs can count injected read errors.
+    Transport,
+}
+
+impl FailureKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FailureKind::Panic => "panic",
+            FailureKind::Timeout => "timeout",
+            FailureKind::Divergence => "divergence",
+            FailureKind::Transport => "transport",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FailureKind> {
+        match s {
+            "panic" => Ok(FailureKind::Panic),
+            "timeout" => Ok(FailureKind::Timeout),
+            "divergence" => Ok(FailureKind::Divergence),
+            "transport" => Ok(FailureKind::Transport),
+            other => bail!("unknown failure kind {other:?}"),
+        }
+    }
+
+    /// Whether a failure of this kind is worth a fresh attempt.
+    pub fn retryable(&self) -> bool {
+        matches!(self, FailureKind::Panic | FailureKind::Timeout)
+    }
+}
+
+impl std::fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// One daemon → client message.
 #[derive(Debug, Clone)]
 pub enum Event {
@@ -110,6 +163,11 @@ pub enum Event {
     Started { id: usize, shard: usize },
     /// The session completed; carries the full per-session record.
     Done(SessionResult),
+    /// One failed attempt (DESIGN.md §15): the kind, the step it died
+    /// at, and whether the daemon is about to retry. A session that
+    /// exhausts its retries (or fails unretryably) emits this with
+    /// `will_retry: false` as its terminal event.
+    Failed(SessionFailure),
     /// Final aggregate report (the `serve_report.json` object), emitted
     /// once when the daemon drains or shuts down.
     Report(Json),
@@ -123,6 +181,7 @@ impl Event {
                 Some(*id)
             }
             Event::Done(r) => Some(r.id),
+            Event::Failed(f) => Some(f.id),
             Event::Report(_) => None,
         }
     }
@@ -165,6 +224,14 @@ impl Event {
                 obj.insert("event".into(), Json::str("done"));
                 Json::Obj(obj)
             }
+            Event::Failed(f) => {
+                let mut obj = match f.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("SessionFailure::to_json returns an object"),
+                };
+                obj.insert("event".into(), Json::str("failed"));
+                Json::Obj(obj)
+            }
             Event::Report(report) => Json::obj(vec![
                 ("event", Json::str("report")),
                 ("schema", Json::str(PROTOCOL_SCHEMA)),
@@ -203,6 +270,7 @@ impl Event {
                 shard: j.req_u64("shard")? as usize,
             }),
             "done" => Ok(Event::Done(SessionResult::from_json(j)?)),
+            "failed" => Ok(Event::Failed(SessionFailure::from_json(j)?)),
             "report" => Ok(Event::Report(j.req("report")?.clone())),
             other => bail!("unknown event type {other:?}"),
         }
@@ -219,7 +287,12 @@ mod tests {
     use crate::util::bench::Stats;
 
     fn job() -> JobSpec {
-        JobSpec { workload: "diffusion2d".into(), shape: vec![32, 32], steps: 3, deadline_s: None }
+        JobSpec {
+            workload: "diffusion2d".into(),
+            shape: vec![32, 32],
+            steps: 3,
+            ..JobSpec::default()
+        }
     }
 
     #[test]
@@ -236,6 +309,11 @@ mod tests {
         let dl = Request::Submit(JobSpec { deadline_s: Some(2.5), ..job() });
         assert!(dl.to_line().contains("deadline_s"));
         assert_eq!(Request::parse_line(&dl.to_line()).unwrap(), dl);
+        // so do the failure-layer knobs
+        let tw = Request::Submit(JobSpec { timeout_s: Some(0.5), max_retries: Some(1), ..job() });
+        assert!(tw.to_line().contains("timeout_s"));
+        assert!(tw.to_line().contains("max_retries"));
+        assert_eq!(Request::parse_line(&tw.to_line()).unwrap(), tw);
     }
 
     #[test]
@@ -272,6 +350,7 @@ mod tests {
             digest_bits: 0xdead_beef_cafe_f00d,
             latency_s: 0.25,
             preemptions: 2,
+            retries: 1,
         };
         let events = vec![
             Event::Accepted {
@@ -293,6 +372,18 @@ mod tests {
             },
             Event::Started { id: 0, shard: 1 },
             Event::Done(done.clone()),
+            Event::Failed(SessionFailure {
+                id: 4,
+                workload: "mhd".into(),
+                shape: vec![8, 8, 8],
+                steps: 6,
+                shard: 0,
+                kind: FailureKind::Timeout,
+                error: "step 3: busy 2.1 s exceeds budget 0.5 s".into(),
+                step: 3,
+                retries: 2,
+                will_retry: false,
+            }),
             Event::Report(Json::obj(vec![("jobs", Json::num(2.0))])),
         ];
         for ev in &events {
@@ -309,9 +400,22 @@ mod tests {
                 assert_eq!(r.stats.median_s, done.stats.median_s);
                 assert_eq!(r.latency_s, done.latency_s);
                 assert_eq!(r.preemptions, 2);
+                assert_eq!(r.retries, 1);
                 assert!(r.tuned);
             }
             other => panic!("expected done, got {other:?}"),
+        }
+        // the failed event carries the taxonomy + retry provenance
+        let back = Event::parse_line(&events[5].to_line()).unwrap();
+        match back {
+            Event::Failed(f) => {
+                assert_eq!(f.kind, FailureKind::Timeout);
+                assert_eq!(f.step, 3);
+                assert_eq!(f.retries, 2);
+                assert!(!f.will_retry);
+                assert_eq!(f.id, 4);
+            }
+            other => panic!("expected failed, got {other:?}"),
         }
         // deadline rejections carry the wait estimate; plain ones omit it
         let back = Event::parse_line(&events[2].to_line()).unwrap();
@@ -324,5 +428,18 @@ mod tests {
         assert!(!events[1].to_line().contains("predicted_wait_s"));
         assert!(Event::parse_line(r#"{"event":"no-such"}"#).is_err());
         assert!(Event::parse_line("{").is_err());
+    }
+
+    #[test]
+    fn failure_taxonomy_roundtrips_and_classifies_retries() {
+        use FailureKind::*;
+        for kind in [Panic, Timeout, Divergence, Transport] {
+            assert_eq!(FailureKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.as_str());
+        }
+        assert!(FailureKind::parse("melted").is_err());
+        assert!(Panic.retryable() && Timeout.retryable());
+        assert!(!Divergence.retryable(), "deterministic math reproduces a blowup");
+        assert!(!Transport.retryable(), "transport failures are handled at the stream layer");
     }
 }

@@ -40,13 +40,19 @@
 //!   so the caller can reject them (`shutdown` semantics). Both wake
 //!   every parked driver and blocked pusher.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
-use crate::coordinator::service::{ActiveSession, Session, SessionResult};
+use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::service::{
+    ActiveSession, FailureHistogram, Session, SessionFailure, SessionResult, DEFAULT_MAX_RETRIES,
+};
 use crate::util::par;
 
-use super::protocol::Event;
+use super::protocol::{Event, FailureKind};
 
 /// Default capacity of the daemon's queue (`daemon --queue-cap`
 /// overrides). Sessions are cheap until a shard builds their buffers, so
@@ -63,6 +69,18 @@ pub const DEFAULT_AGING_RATE: f64 = 0.25;
 /// is under this fraction of the active session's predicted *remaining*
 /// cost — preempting for a near-peer would just thrash buffers.
 const PREEMPT_RATIO: f64 = 0.5;
+
+/// Base of the exponential backoff between retry attempts of one session
+/// (doubles per attempt, capped at `BASE << 6` = 320 ms) — enough to let
+/// a transient environmental cause clear, small enough that test-scale
+/// retries stay fast.
+const RETRY_BACKOFF_BASE_MS: u64 = 5;
+
+/// A shard driver whose supervision loop escapes (a panic *outside* the
+/// per-attempt containment — e.g. in the event sink) is respawned at most
+/// this many times before the shard gives up; the queue's other drivers
+/// keep draining either way.
+const MAX_DRIVER_RESPAWNS: usize = 4;
 
 /// Pop-order policy of a [`JobQueue`] (DESIGN.md §14).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -298,6 +316,30 @@ impl JobQueue {
         }
     }
 
+    /// Re-admit a session a dying driver had in flight. Unlike
+    /// [`Self::push`] this front-loads the queue (the session already
+    /// waited its turn) and ignores both the capacity bound and the
+    /// `closed` flag — the job was *accepted*, and drain's contract is
+    /// that accepted work finishes. Only an aborted queue refuses,
+    /// handing the session back so the supervisor can fail it terminally.
+    pub fn requeue(&self, s: Session) -> Result<(), Session> {
+        let mut st = lock(self);
+        if st.aborted {
+            return Err(s);
+        }
+        st.queued_cost_s += s.predicted_cost_s;
+        st.q.push_front(s);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Put a retried session's predicted cost back on the in-flight
+    /// ledger — the failed attempt released its remaining share, and the
+    /// rerun starts the whole session over.
+    pub fn note_restarted(&self, cost_s: f64) {
+        lock(self).running_cost_s += cost_s;
+    }
+
     /// Stop admitting; queued sessions — and pushes already blocked at
     /// capacity — still drain (`drain` semantics).
     pub fn close(&self) {
@@ -322,58 +364,221 @@ impl JobQueue {
     }
 }
 
+/// Everything a drained queue produced: completed sessions, terminal
+/// failures (both sorted by job id), and the failure histogram counting
+/// every occurrence — retried-then-recovered attempts included, so a
+/// chaos run's counts match the injected spec.
+#[derive(Default)]
+pub struct DriveOutcome {
+    pub results: Vec<SessionResult>,
+    pub failed: Vec<SessionFailure>,
+    pub histogram: FailureHistogram,
+}
+
+/// The per-shard driver's shared context — what [`run_one`] threads
+/// through its preemption recursion.
+struct DriverCtx<'a> {
+    queue: &'a JobQueue,
+    shard: usize,
+    sink: &'a (dyn Fn(Event) + Sync),
+    faults: Option<&'a FaultPlan>,
+    /// Sessions this driver popped but has not finished (a stack — the
+    /// preemption recursion nests). If a panic escapes the per-attempt
+    /// containment and kills the driver loop, the supervisor drains this
+    /// to release the backlog ledger and requeue the survivors.
+    in_flight: RefCell<Vec<Session>>,
+}
+
 /// The shared driver loop: one driver per shard (each pinned via
 /// [`par::drive_shards`]), popping sessions per the queue's [`Policy`]
 /// until the queue is closed and drained. Emits [`Event::Started`] /
-/// [`Event::Done`] through `sink` as they happen (the daemon routes them
-/// to the submitting client; the batch path prints them). Under a
-/// preempting policy, a driver stepping a long session checks the queue
-/// between steps and interleaves much-cheaper sessions (the long
-/// session's instance stays live and parked — its digest cannot change).
-/// Returns every completed session, sorted by job id regardless of
-/// completion order.
-pub fn drive(queue: &JobQueue, shards: usize, sink: &(dyn Fn(Event) + Sync)) -> Vec<SessionResult> {
+/// [`Event::Done`] / [`Event::Failed`] through `sink` as they happen
+/// (the daemon routes them to the submitting client; the batch path
+/// prints them). Under a preempting policy, a driver stepping a long
+/// session checks the queue between steps and interleaves much-cheaper
+/// sessions (the long session's instance stays live and parked — its
+/// digest cannot change).
+pub fn drive(queue: &JobQueue, shards: usize, sink: &(dyn Fn(Event) + Sync)) -> DriveOutcome {
+    drive_with(queue, shards, sink, None)
+}
+
+/// [`drive`] under an optional fault-injection plan (DESIGN.md §15).
+/// Each driver runs inside a supervision loop: per-attempt failures are
+/// already contained by [`ActiveSession::step_checked`] and the retry
+/// loop in [`run_one`], so a panic that still escapes (an event-sink
+/// bug, a poisoned lock) kills only the loop iteration — the supervisor
+/// releases the dead driver's in-flight ledger share, requeues its
+/// stacked sessions, and respawns the loop (at most
+/// [`MAX_DRIVER_RESPAWNS`] times per shard).
+pub fn drive_with(
+    queue: &JobQueue,
+    shards: usize,
+    sink: &(dyn Fn(Event) + Sync),
+    faults: Option<&FaultPlan>,
+) -> DriveOutcome {
     let per_shard = par::drive_shards(shards, |shard| {
-        let mut local = Vec::new();
-        while let Some(s) = queue.pop() {
-            run_one(queue, s, shard, sink, &mut local);
+        let ctx = DriverCtx { queue, shard, sink, faults, in_flight: RefCell::new(Vec::new()) };
+        let mut local = DriveOutcome::default();
+        let mut respawns = 0usize;
+        loop {
+            let escaped = catch_unwind(AssertUnwindSafe(|| {
+                while let Some(s) = queue.pop() {
+                    run_one(&ctx, s, &mut local);
+                }
+            }));
+            let payload = match escaped {
+                Ok(()) => break, // queue closed and drained: clean exit
+                Err(p) => p,
+            };
+            let msg = par::panic_message(&*payload);
+            eprintln!("stencilax: shard {shard} driver died ({msg}); respawning");
+            // Release the ledger for everything the dead driver had in
+            // flight. The share each session already retired via
+            // note_progress is unknowable here, so release the full
+            // prediction — over-release clamps at zero, and the rerun's
+            // requeue re-adds the full cost, so the estimate heals.
+            let stacked: Vec<Session> = ctx.in_flight.borrow_mut().drain(..).collect();
+            for s in stacked {
+                queue.note_progress(s.predicted_cost_s);
+                if let Err(s) = queue.requeue(s) {
+                    // aborted queue: nothing will pop it again — record a
+                    // terminal failure instead of losing the job silently
+                    local.histogram.note(FailureKind::Panic);
+                    local.failed.push(SessionFailure {
+                        id: s.id,
+                        workload: s.spec.workload.clone(),
+                        shape: s.spec.shape.clone(),
+                        steps: s.spec.steps,
+                        shard,
+                        kind: FailureKind::Panic,
+                        error: format!("driver died ({msg}); queue aborted before rerun"),
+                        step: 0,
+                        retries: 0,
+                        will_retry: false,
+                    });
+                }
+            }
+            respawns += 1;
+            if respawns > MAX_DRIVER_RESPAWNS {
+                eprintln!("stencilax: shard {shard} driver exceeded respawn budget; giving up");
+                break; // sibling drivers keep draining the queue
+            }
         }
         local
     });
-    let mut out: Vec<SessionResult> = per_shard.into_iter().flatten().collect();
-    out.sort_by_key(|r| r.id);
+    let mut out = DriveOutcome::default();
+    for shard_out in per_shard {
+        out.results.extend(shard_out.results);
+        out.failed.extend(shard_out.failed);
+        out.histogram.merge(&shard_out.histogram);
+    }
+    out.results.sort_by_key(|r| r.id);
+    out.failed.sort_by_key(|f| f.id);
     out
 }
 
-/// Run one session to completion on `shard`, yielding to much-cheaper
-/// queued sessions at step boundaries (which recurse here — nesting
-/// depth is bounded because each preemptor costs < [`PREEMPT_RATIO`] of
-/// its host's remaining work, so the chain halves at every level).
-fn run_one(
-    queue: &JobQueue,
-    s: Session,
-    shard: usize,
-    sink: &(dyn Fn(Event) + Sync),
-    out: &mut Vec<SessionResult>,
-) {
-    sink(Event::Started { id: s.id, shard });
-    let mut active = ActiveSession::start(s, shard);
+/// Run one session on this driver's shard — through the bounded retry
+/// loop — yielding to much-cheaper queued sessions at step boundaries
+/// (which recurse here — nesting depth is bounded because each preemptor
+/// costs < [`PREEMPT_RATIO`] of its host's remaining work, so the chain
+/// halves at every level).
+fn run_one(ctx: &DriverCtx, s: Session, out: &mut DriveOutcome) {
+    ctx.in_flight.borrow_mut().push(s.clone());
+    (ctx.sink)(Event::Started { id: s.id, shard: ctx.shard });
+    let max_retries = s.spec.max_retries.unwrap_or(DEFAULT_MAX_RETRIES);
+    let mut attempt = 0usize;
     loop {
-        active.step();
-        queue.note_progress(active.cost_per_step_s());
+        match run_attempt(ctx, &s, attempt, out) {
+            Ok(r) => {
+                (ctx.sink)(Event::Done(r.clone()));
+                out.results.push(r);
+                break;
+            }
+            Err(mut fail) => {
+                // the histogram counts every occurrence — a recovered
+                // retry still happened, and chaos validation compares
+                // these counts against the injected spec
+                out.histogram.note(fail.kind);
+                fail.will_retry = fail.kind.retryable() && attempt < max_retries;
+                (ctx.sink)(Event::Failed(fail.clone()));
+                if !fail.will_retry {
+                    out.failed.push(fail);
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(RETRY_BACKOFF_BASE_MS << attempt.min(6)));
+                // the failed attempt released its remaining ledger share;
+                // the rerun starts the session over, so put it back
+                ctx.queue.note_restarted(s.predicted_cost_s);
+                attempt += 1;
+            }
+        }
+    }
+    ctx.in_flight.borrow_mut().pop();
+}
+
+/// One attempt at a session: build the instance, step it to completion
+/// under the failure layer ([`ActiveSession::step_checked`]), finalize.
+/// Any failure releases the attempt's remaining predicted cost from the
+/// queue's in-flight ledger before returning, so admission control never
+/// counts a dead attempt as backlog (`Err` carries `will_retry: false`;
+/// the caller decides retry policy).
+fn run_attempt(
+    ctx: &DriverCtx,
+    s: &Session,
+    attempt: usize,
+    out: &mut DriveOutcome,
+) -> Result<SessionResult, SessionFailure> {
+    // Instance construction runs user-adjacent workload code — contain a
+    // panic here like a step-0 panic (nothing ran, release everything).
+    let mut active = match catch_unwind(AssertUnwindSafe(|| {
+        ActiveSession::start_with(s.clone(), ctx.shard, attempt, ctx.faults)
+    })) {
+        Ok(a) => a,
+        Err(payload) => {
+            ctx.queue.note_progress(s.predicted_cost_s);
+            return Err(SessionFailure {
+                id: s.id,
+                workload: s.spec.workload.clone(),
+                shape: s.spec.shape.clone(),
+                steps: s.spec.steps,
+                shard: ctx.shard,
+                kind: FailureKind::Panic,
+                error: format!("building instance: {}", par::panic_message(&payload)),
+                step: 0,
+                retries: attempt,
+                will_retry: false,
+            });
+        }
+    };
+    loop {
+        if let Err((kind, error)) = active.step_checked() {
+            // steps_done counts only *successful* steps, so the
+            // remaining predicted cost is exactly the share this attempt
+            // still holds on the ledger
+            ctx.queue.note_progress(active.remaining_cost_s());
+            return Err(active.failure(kind, error));
+        }
+        ctx.queue.note_progress(active.cost_per_step_s());
         if active.is_done() {
             break;
         }
         // preemption point: park between steps while substantially
         // cheaper sessions are queued; the parked instance stays live
-        while let Some(short) = queue.try_pop_preempting(active.remaining_cost_s()) {
+        while let Some(short) = ctx.queue.try_pop_preempting(active.remaining_cost_s()) {
             active.note_preempted();
-            run_one(queue, short, shard, sink, out);
+            run_one(ctx, short, out);
         }
     }
-    let r = active.finish();
-    sink(Event::Done(r.clone()));
-    out.push(r);
+    // finalize (digest + stats) — every step's cost is already retired,
+    // so a panic here releases nothing further
+    let template = active.failure(FailureKind::Panic, String::new());
+    match catch_unwind(AssertUnwindSafe(move || active.finish())) {
+        Ok(r) => Ok(r),
+        Err(payload) => Err(SessionFailure {
+            error: format!("finalizing: {}", par::panic_message(&payload)),
+            ..template
+        }),
+    }
 }
 
 #[cfg(test)]
@@ -388,7 +593,19 @@ mod tests {
             workload: "diffusion2d".into(),
             shape: vec![16, 16],
             steps: 1,
-            deadline_s: None,
+            ..JobSpec::default()
+        };
+        admit(id, spec, None, 1).unwrap()
+    }
+
+    /// A multi-step session (fault plans pin their injection to step
+    /// `steps/2`, so failure tests need room before and after it).
+    fn stepped(id: usize, steps: usize) -> Session {
+        let spec = JobSpec {
+            workload: "diffusion2d".into(),
+            shape: vec![16, 16],
+            steps,
+            ..JobSpec::default()
         };
         admit(id, spec, None, 1).unwrap()
     }
@@ -583,7 +800,7 @@ mod tests {
         q.close();
         let started = AtomicUsize::new(0);
         let done = AtomicUsize::new(0);
-        let results = drive(&q, 2, &|ev| match ev {
+        let outcome = drive(&q, 2, &|ev| match ev {
             Event::Started { .. } => {
                 started.fetch_add(1, Ordering::Relaxed);
             }
@@ -592,15 +809,18 @@ mod tests {
             }
             _ => {}
         });
-        assert_eq!(results.len(), 4);
-        assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(outcome.results.len(), 4);
+        assert_eq!(outcome.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
         assert_eq!(started.load(Ordering::Relaxed), 4);
         assert_eq!(done.load(Ordering::Relaxed), 4);
-        for r in &results {
+        assert!(outcome.failed.is_empty(), "fault-free drive must not fail anything");
+        assert_eq!(outcome.histogram.total(), 0);
+        for r in &outcome.results {
             assert!(r.shard < 2);
             assert!(r.stats.median_s > 0.0);
             assert!(r.latency_s > 0.0);
             assert_eq!(r.preemptions, 0, "FIFO never preempts");
+            assert_eq!(r.retries, 0, "fault-free runs complete on the first attempt");
         }
     }
 
@@ -621,6 +841,122 @@ mod tests {
             submitter.join().unwrap();
             results
         });
-        assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(results.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn retryable_fault_recovers_with_the_fault_free_digest() {
+        // golden: the same spec, no faults
+        let q = JobQueue::bounded(2);
+        q.push(stepped(0, 4)).ok().unwrap();
+        q.close();
+        let golden = drive(&q, 1, &|_| {});
+        assert_eq!(golden.results.len(), 1);
+        let golden_bits = golden.results[0].digest_bits;
+
+        // inject a panic mid-session: attempt 0 dies, the retry runs
+        // fault-free and must reproduce the golden digest bit for bit
+        let plan = FaultPlan::parse("panic@0").unwrap();
+        let q = JobQueue::bounded(2);
+        q.push(stepped(0, 4)).ok().unwrap();
+        q.close();
+        let transient = AtomicUsize::new(0);
+        let outcome = drive_with(
+            &q,
+            1,
+            &|ev| {
+                if let Event::Failed(f) = ev {
+                    assert_eq!(f.kind, FailureKind::Panic);
+                    assert!(f.will_retry, "a panic within the retry budget must retry");
+                    assert_eq!(f.step, 2, "pinned faults fire at steps/2");
+                    assert!(f.error.contains("injected fault"));
+                    transient.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+            Some(&plan),
+        );
+        assert_eq!(transient.load(Ordering::Relaxed), 1);
+        assert!(outcome.failed.is_empty(), "recovered session is not a terminal failure");
+        assert_eq!(outcome.histogram.panic, 1, "the histogram still counts the occurrence");
+        assert_eq!(outcome.results.len(), 1);
+        assert_eq!(outcome.results[0].retries, 1);
+        assert_eq!(outcome.results[0].digest_bits, golden_bits, "retry must be bit-identical");
+        // ledger hygiene: the failed attempt's share was released and the
+        // rerun retired its own — nothing left in flight
+        assert!(q.predicted_wait_s(1) < 1e-9);
+    }
+
+    #[test]
+    fn unretryable_fault_fails_terminally_and_releases_the_ledger() {
+        // NaN poison => divergence, which is not retryable (deterministic
+        // math reproduces the blowup)
+        let plan = FaultPlan::parse("nan@0").unwrap();
+        let q = JobQueue::bounded(2);
+        q.push(stepped(0, 4)).ok().unwrap();
+        q.push(stepped(1, 4)).ok().unwrap(); // healthy neighbour
+        q.close();
+        let outcome = drive_with(&q, 1, &|_| {}, Some(&plan));
+        assert_eq!(outcome.results.len(), 1, "the healthy session still completes");
+        assert_eq!(outcome.results[0].id, 1);
+        assert_eq!(outcome.failed.len(), 1);
+        let f = &outcome.failed[0];
+        assert_eq!(f.id, 0);
+        assert_eq!(f.kind, FailureKind::Divergence);
+        assert_eq!(f.step, 2, "step of first divergence");
+        assert!(!f.will_retry);
+        assert_eq!(outcome.histogram.divergence, 1);
+        // satellite (c): a dead session must release running_cost_s, or
+        // admission control sees phantom backlog forever
+        assert!(q.predicted_wait_s(1) < 1e-9, "failed session must release its ledger share");
+    }
+
+    #[test]
+    fn exhausted_retries_fail_terminally() {
+        // max_retries 0: the first stall-induced timeout is terminal
+        let plan = FaultPlan::parse("stall@0,stall_ms=60").unwrap();
+        let spec = JobSpec {
+            workload: "diffusion2d".into(),
+            shape: vec![16, 16],
+            steps: 4,
+            timeout_s: Some(0.02),
+            max_retries: Some(0),
+            ..JobSpec::default()
+        };
+        let q = JobQueue::bounded(2);
+        q.push(admit(0, spec, None, 1).unwrap()).ok().unwrap();
+        q.close();
+        let outcome = drive_with(&q, 1, &|_| {}, Some(&plan));
+        assert!(outcome.results.is_empty());
+        assert_eq!(outcome.failed.len(), 1);
+        assert_eq!(outcome.failed[0].kind, FailureKind::Timeout);
+        assert!(!outcome.failed[0].will_retry, "max_retries 0 means no second attempt");
+        assert_eq!(outcome.histogram.timeout, 1);
+        assert!(q.predicted_wait_s(1) < 1e-9);
+    }
+
+    #[test]
+    fn driver_respawns_after_an_escaped_panic_and_requeues_in_flight_work() {
+        // a sink that panics exactly once, on the first Done event: the
+        // panic escapes run_one's containment (it is not a step failure),
+        // kills the driver loop, and the supervisor must requeue the
+        // in-flight session and respawn
+        let q = JobQueue::bounded(4);
+        q.push(session(0)).ok().unwrap();
+        q.push(session(1)).ok().unwrap();
+        q.close();
+        let fired = std::sync::atomic::AtomicBool::new(false);
+        let outcome = drive(&q, 1, &|ev| {
+            if matches!(ev, Event::Done(_)) && !fired.swap(true, Ordering::SeqCst) {
+                panic!("sink bug");
+            }
+        });
+        // both sessions complete despite the driver death: the one whose
+        // Done sink panicked is requeued and rerun (same digest, by
+        // determinism), the other was never popped by the dead loop
+        assert_eq!(outcome.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(outcome.failed.is_empty());
+        // the requeue/re-run released and re-retired ledger cost; clamped
+        // arithmetic must leave nothing in flight
+        assert!(q.predicted_wait_s(1) < 1e-9);
     }
 }

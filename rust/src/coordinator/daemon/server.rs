@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::plans::PlanCache;
 use crate::coordinator::service::{
     admit_with, clamp_shards, deadline_violation, Rejection, ServiceReport, TransportError,
@@ -28,7 +29,7 @@ use crate::coordinator::service::{
 use crate::coordinator::tune::PredictionCache;
 
 use super::protocol::{Event, Request, MAX_LINE_BYTES};
-use super::queue::{drive, JobQueue, Policy, DEFAULT_QUEUE_CAP};
+use super::queue::{drive_with, DriveOutcome, JobQueue, Policy, DEFAULT_QUEUE_CAP};
 
 /// Daemon configuration (the CLI fills this from flags).
 #[derive(Clone)]
@@ -43,6 +44,10 @@ pub struct DaemonOpts {
     /// Pop-order policy: [`Policy::cost_aware`] by default, `--fifo`
     /// opts back into arrival order (the pre-scheduler behavior).
     pub policy: Policy,
+    /// Deterministic fault-injection plan (`--inject-faults` /
+    /// `STENCILAX_FAULTS`, DESIGN.md §15). `None` — the default — means
+    /// the failure layer is armed but never provoked.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for DaemonOpts {
@@ -52,6 +57,7 @@ impl Default for DaemonOpts {
             plans: None,
             queue_cap: DEFAULT_QUEUE_CAP,
             policy: Policy::cost_aware(),
+            faults: None,
         }
     }
 }
@@ -142,6 +148,12 @@ struct Core<W: Write + Send> {
     /// report so a flaky client or socket is visible, not just an
     /// eprintln lost to the daemon's stderr.
     transport_errors: Mutex<Vec<TransportError>>,
+    /// Fault-injection plan threaded into the drivers; also consulted
+    /// per request line for transport-read injection.
+    faults: Option<FaultPlan>,
+    /// Request lines read across every connection — the injection index
+    /// [`FaultPlan::transport_at`] is keyed on.
+    lines_read: AtomicUsize,
     stop: AtomicBool,
     /// Active window `(first, last)`: first submission attempt → latest
     /// submission or session completion. The report's wall clock is this
@@ -181,6 +193,8 @@ impl<W: Write + Send> Core<W> {
             controller: Mutex::new(None),
             rejected: Mutex::new(Vec::new()),
             transport_errors: Mutex::new(Vec::new()),
+            faults: opts.faults.clone(),
+            lines_read: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             window: Mutex::new(None),
         }
@@ -192,6 +206,19 @@ impl<W: Write + Send> Core<W> {
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .push(TransportError { kind: kind.into(), error: error.to_string() });
+    }
+
+    /// Transport-fault injection point: counts this request line and
+    /// returns a synthetic read error when the plan pins one here — the
+    /// read loops treat it exactly like a real transport failure.
+    fn injected_read_error(&self) -> Option<std::io::Error> {
+        let plan = self.faults.as_ref()?;
+        let line = self.lines_read.fetch_add(1, Ordering::Relaxed);
+        if plan.transport_at(line) {
+            Some(std::io::Error::other(format!("injected fault: transport read error (line {line})")))
+        } else {
+            None
+        }
     }
 
     /// Extend the active window to now (opening it if this is the first
@@ -227,28 +254,35 @@ impl<W: Write + Send> Core<W> {
         self.rejected.lock().unwrap_or_else(|e| e.into_inner()).push(Rejection { id, error });
     }
 
-    /// Route a driver-loop event ([`Event::Started`]/[`Event::Done`]) to
-    /// the client that submitted the job; `done` retires the route. A
-    /// write that fails (disconnected, or stalled past the socket write
-    /// timeout) evicts the route, so a dead client costs a shard driver
-    /// at most one bounded write — never a permanent stall.
+    /// Route a driver-loop event ([`Event::Started`]/[`Event::Done`]/
+    /// [`Event::Failed`]) to the client that submitted the job; a
+    /// *terminal* event — `done`, or a `failed` that will not retry —
+    /// retires the route (a `failed` with `will_retry: true` keeps it:
+    /// the rerun's events still belong to the submitter). A write that
+    /// fails (disconnected, or stalled past the socket write timeout)
+    /// evicts the route, so a dead client costs a shard driver at most
+    /// one bounded write — never a permanent stall.
     fn route_event(&self, ev: Event) {
         let Some(id) = ev.id() else { return };
-        let done = matches!(ev, Event::Done(_));
-        if done {
+        let terminal = match &ev {
+            Event::Done(_) => true,
+            Event::Failed(f) => !f.will_retry,
+            _ => false,
+        };
+        if terminal {
             // completions extend the active window (see `window`)
             self.touch();
         }
         let w = {
             let mut routes = self.routes.lock().unwrap_or_else(|e| e.into_inner());
-            if done {
+            if terminal {
                 routes.remove(&id)
             } else {
                 routes.get(&id).cloned()
             }
         };
         if let Some(w) = w {
-            if !emit(&w, &ev) && !done {
+            if !emit(&w, &ev) && !terminal {
                 self.routes.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
             }
         }
@@ -345,21 +379,24 @@ impl<W: Write + Send> Core<W> {
     }
 
     /// Consume the core into the aggregate report (drops the routing
-    /// table, so transport writers can be reclaimed by the caller).
-    fn into_report(
-        self,
-        results: Vec<crate::coordinator::service::SessionResult>,
-        wall_s: f64,
-    ) -> ServiceReport {
+    /// table, so transport writers can be reclaimed by the caller). The
+    /// histogram's `transport` bucket counts the transport-error records
+    /// — injected ones and real ones alike — since those never surface
+    /// as per-session failures.
+    fn into_report(self, outcome: DriveOutcome, wall_s: f64) -> ServiceReport {
         let mut rejected = self.rejected.into_inner().unwrap_or_else(|e| e.into_inner());
         rejected.sort_by_key(|r| r.id);
         let transport_errors = self.transport_errors.into_inner().unwrap_or_else(|e| e.into_inner());
+        let mut failure_histogram = outcome.histogram;
+        failure_histogram.transport += transport_errors.len();
         ServiceReport {
             shards: self.shards,
             threads_per_shard: self.threads_per_shard,
             wall_s,
-            results,
+            results: outcome.results,
             rejected,
+            failed: outcome.failed,
+            failure_histogram,
             transport_errors,
         }
     }
@@ -378,10 +415,11 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
     validate(opts)?;
     let core: Core<W> = Core::new(opts);
     let writer = Arc::new(Mutex::new(output));
-    let results = std::thread::scope(|scope| {
+    let outcome = std::thread::scope(|scope| {
         let (core, writer) = (&core, &writer);
-        let driver =
-            scope.spawn(move || drive(&core.queue, core.shards, &|ev| core.route_event(ev)));
+        let driver = scope.spawn(move || {
+            drive_with(&core.queue, core.shards, &|ev| core.route_event(ev), core.faults.as_ref())
+        });
         let mut input = input;
         let mut line: Vec<u8> = Vec::new();
         loop {
@@ -389,6 +427,13 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
             match read_line_capped(&mut input, &mut line, READ_CAP) {
                 Ok(LineRead::Eof) => break, // EOF: implicit drain
                 Ok(LineRead::Line) => {
+                    if let Some(e) = core.injected_read_error() {
+                        // exercised like a real transport failure: the
+                        // line is lost, the daemon drains what it has
+                        eprintln!("daemon: read error, draining: {e}");
+                        core.note_transport_error("read", &e);
+                        break;
+                    }
                     let text = String::from_utf8_lossy(&line);
                     if core.handle_line(&text, writer) == Flow::Stop {
                         break;
@@ -405,7 +450,7 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
         driver.join().expect("daemon driver panicked")
     });
     let wall_s = core.active_wall_s();
-    let report = core.into_report(results, wall_s);
+    let report = core.into_report(outcome, wall_s);
     emit(&writer, &Event::Report(report.to_json()));
     let output = Arc::try_unwrap(writer)
         .ok()
@@ -443,10 +488,11 @@ pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
     // connection handler) without waiting for another client to connect
     listener.set_nonblocking(true).context("setting socket non-blocking")?;
     let core: Core<UnixStream> = Core::new(opts);
-    let results = std::thread::scope(|scope| {
+    let outcome = std::thread::scope(|scope| {
         let core = &core;
-        let driver =
-            scope.spawn(move || drive(&core.queue, core.shards, &|ev| core.route_event(ev)));
+        let driver = scope.spawn(move || {
+            drive_with(&core.queue, core.shards, &|ev| core.route_event(ev), core.faults.as_ref())
+        });
         while !core.stopped() {
             match listener.accept() {
                 Ok((stream, _)) => {
@@ -473,7 +519,7 @@ pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
     let _ = std::fs::remove_file(path);
     let wall_s = core.active_wall_s();
     let controller = core.controller.lock().unwrap_or_else(|e| e.into_inner()).take();
-    let report = core.into_report(results, wall_s);
+    let report = core.into_report(outcome, wall_s);
     if let Some(w) = controller {
         emit(&w, &Event::Report(report.to_json()));
     }
@@ -502,6 +548,12 @@ fn handle_conn(core: &Core<UnixStream>, stream: UnixStream) {
         match read_line_capped(&mut reader, &mut buf, READ_CAP) {
             Ok(LineRead::Eof) => return, // connection done; daemon keeps serving
             Ok(LineRead::Line) => {
+                if let Some(e) = core.injected_read_error() {
+                    // like a real per-connection read failure: this
+                    // client drops, the daemon keeps serving others
+                    core.note_transport_error("read", &e);
+                    return;
+                }
                 let stop = {
                     let text = String::from_utf8_lossy(&buf);
                     core.handle_line(&text, &w) == Flow::Stop

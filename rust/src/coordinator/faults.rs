@@ -1,0 +1,274 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §15).
+//!
+//! A [`FaultPlan`] maps jobs to injected faults — a panic mid-step, a
+//! stall that blows the watchdog budget, a NaN poisoned into the live
+//! field, or a transport read error — so the failure layer (panic
+//! containment, watchdog + retry, divergence detection) is testable with
+//! byte-reproducible runs instead of waiting for production to misbehave.
+//!
+//! Two spec grammars, both comma-separated:
+//!
+//! * **Pinned:** `panic@1,stall@3,nan@4` — job ids hit by exactly one
+//!   fault each (`transport@N` pins a read error to stream line `N`).
+//!   This is what `tools/chaos_smoke` uses: the expected failure
+//!   histogram is knowable in advance.
+//! * **Rate:** `seed=42,p=0.25,kinds=panic|stall|nan` — every job id is
+//!   hashed (splitmix64) against the seed; a fraction `p` of ids draw a
+//!   fault, kind and step chosen by further hashes. Deterministic per
+//!   (seed, id): re-running the same traffic reproduces the same faults.
+//!
+//! `stall_ms=N` tunes the stall duration in either grammar.
+//!
+//! Faults fire **only on a session's first attempt** — a retry runs
+//! fault-free, which is exactly what makes digest-verified retry
+//! assertable: the retried run must reproduce the fault-free golden bit
+//! for bit. Injection is off by default (`FaultPlan` is only constructed
+//! from `--inject-faults` / `STENCILAX_FAULTS`), and the disabled path is
+//! a single `Option` check in the step loop.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable consulted by the daemon when `--inject-faults`
+/// is not given.
+pub const FAULTS_ENV: &str = "STENCILAX_FAULTS";
+
+/// Default injected stall, chosen to overshoot any smoke job's watchdog
+/// budget when the job also carries a small explicit `timeout_s`.
+pub const DEFAULT_STALL_MS: u64 = 400;
+
+/// What to inject. `Panic`/`Stall`/`Nan` are per-job (step-level)
+/// faults; `Transport` is a stream-level read error keyed by line index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` inside the step — exercises containment + retry.
+    Panic,
+    /// Sleep inside the step — exercises the watchdog budget.
+    Stall,
+    /// Overwrite a live field element with NaN — exercises divergence
+    /// detection (not retryable: deterministic math reproduces it).
+    Nan,
+    /// Synthesized read error on the request stream.
+    Transport,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Stall => "stall",
+            FaultKind::Nan => "nan",
+            FaultKind::Transport => "transport",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "stall" => Ok(FaultKind::Stall),
+            "nan" => Ok(FaultKind::Nan),
+            "transport" => Ok(FaultKind::Transport),
+            other => bail!("unknown fault kind {other:?} (want panic, stall, nan, or transport)"),
+        }
+    }
+}
+
+/// Rate-mode parameters: a seeded Bernoulli draw per job id.
+#[derive(Debug, Clone, PartialEq)]
+struct Rate {
+    seed: u64,
+    p: f64,
+    kinds: Vec<FaultKind>,
+}
+
+/// A parsed fault specification. Constructed only when injection is
+/// explicitly requested; everything downstream carries `Option<&FaultPlan>`
+/// and the `None` path costs one branch per step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// `kind@id` pins (first match wins). Transport pins key on the
+    /// stream line index instead of a job id.
+    pinned: Vec<(usize, FaultKind)>,
+    rate: Option<Rate>,
+    stall: Duration,
+    /// The spec string this plan was parsed from (for banners/reports).
+    spec: String,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut pinned = Vec::new();
+        let mut seed: Option<u64> = None;
+        let mut p: Option<f64> = None;
+        let mut kinds: Vec<FaultKind> = Vec::new();
+        let mut stall_ms = DEFAULT_STALL_MS;
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some((kind, id)) = tok.split_once('@') {
+                let kind = FaultKind::parse(kind.trim())?;
+                let id: usize = id
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("fault pin {tok:?}: bad id {id:?}"))?;
+                pinned.push((id, kind));
+            } else if let Some((key, val)) = tok.split_once('=') {
+                let (key, val) = (key.trim(), val.trim());
+                match key {
+                    "seed" => {
+                        seed = Some(
+                            val.parse().with_context(|| format!("bad seed {val:?}"))?,
+                        )
+                    }
+                    "p" => {
+                        let v: f64 =
+                            val.parse().with_context(|| format!("bad rate p {val:?}"))?;
+                        if !(v.is_finite() && (0.0..=1.0).contains(&v)) {
+                            bail!("fault rate p {v} must be in [0, 1]");
+                        }
+                        p = Some(v);
+                    }
+                    "kinds" => {
+                        kinds = val
+                            .split('|')
+                            .map(|k| FaultKind::parse(k.trim()))
+                            .collect::<Result<_>>()?;
+                        if kinds.contains(&FaultKind::Transport) {
+                            bail!("transport faults are pin-only (transport@LINE)");
+                        }
+                    }
+                    "stall_ms" => {
+                        stall_ms = val
+                            .parse()
+                            .with_context(|| format!("bad stall_ms {val:?}"))?
+                    }
+                    other => bail!("unknown fault-spec key {other:?}"),
+                }
+            } else {
+                bail!("bad fault-spec token {tok:?} (want kind@id or key=value)");
+            }
+        }
+        let rate = match (p, seed, kinds.is_empty()) {
+            (None, _, _) => None,
+            (Some(p), _, true) => bail!("rate p={p} given without kinds=..."),
+            (Some(p), seed, false) => Some(Rate { seed: seed.unwrap_or(1), p, kinds }),
+        };
+        if pinned.is_empty() && rate.is_none() {
+            bail!("empty fault spec {spec:?} (nothing to inject)");
+        }
+        Ok(FaultPlan {
+            pinned,
+            rate,
+            stall: Duration::from_millis(stall_ms),
+            spec: spec.to_string(),
+        })
+    }
+
+    /// Consult [`FAULTS_ENV`]; `None` when unset (the common case).
+    pub fn from_env() -> Option<Result<FaultPlan>> {
+        std::env::var(FAULTS_ENV).ok().map(|spec| {
+            FaultPlan::parse(&spec).with_context(|| format!("parsing {FAULTS_ENV}={spec:?}"))
+        })
+    }
+
+    /// The fault (if any) to inject into job `id`'s **first** attempt,
+    /// and the 0-based step at which it fires. Deterministic in
+    /// (plan, id, steps).
+    pub fn fault_for(&self, id: usize, steps: usize) -> Option<(FaultKind, usize)> {
+        debug_assert!(steps >= 1, "admission validates steps >= 1");
+        for &(pin_id, kind) in &self.pinned {
+            if pin_id == id && kind != FaultKind::Transport {
+                // fire mid-session: for steps=1 that is step 0
+                return Some((kind, steps / 2));
+            }
+        }
+        let rate = self.rate.as_ref()?;
+        let h = splitmix64(rate.seed ^ splitmix64(id as u64));
+        // 53 high bits -> uniform in [0, 1)
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        if u >= rate.p {
+            return None;
+        }
+        let kind = rate.kinds[(splitmix64(h) % rate.kinds.len() as u64) as usize];
+        let step = (splitmix64(h ^ 0xa5a5) % steps as u64) as usize;
+        Some((kind, step))
+    }
+
+    /// Whether a transport read error is pinned to stream line `line`.
+    pub fn transport_at(&self, line: usize) -> bool {
+        self.pinned.iter().any(|&(l, k)| k == FaultKind::Transport && l == line)
+    }
+
+    /// Injected stall duration (`stall_ms`).
+    pub fn stall(&self) -> Duration {
+        self.stall
+    }
+
+    /// The spec string, for banners and reports.
+    pub fn describe(&self) -> &str {
+        &self.spec
+    }
+}
+
+/// splitmix64 — the crate's usual cheap deterministic mixer.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_spec_targets_exact_jobs() {
+        let p = FaultPlan::parse("panic@1, stall@3,nan@4,transport@2,stall_ms=250").unwrap();
+        assert_eq!(p.fault_for(1, 4), Some((FaultKind::Panic, 2)));
+        assert_eq!(p.fault_for(3, 1), Some((FaultKind::Stall, 0)));
+        assert_eq!(p.fault_for(4, 5), Some((FaultKind::Nan, 2)));
+        assert_eq!(p.fault_for(0, 4), None, "unpinned job draws nothing");
+        assert_eq!(p.fault_for(2, 4), None, "transport pins never hit sessions");
+        assert!(p.transport_at(2));
+        assert!(!p.transport_at(1));
+        assert_eq!(p.stall(), Duration::from_millis(250));
+    }
+
+    #[test]
+    fn rate_spec_is_deterministic_and_roughly_calibrated() {
+        let p = FaultPlan::parse("seed=42,p=0.25,kinds=panic|stall|nan").unwrap();
+        let draws: Vec<_> = (0..400).map(|id| p.fault_for(id, 8)).collect();
+        // same plan, same ids -> identical draws
+        let again: Vec<_> = (0..400).map(|id| p.fault_for(id, 8)).collect();
+        assert_eq!(draws, again);
+        let hits = draws.iter().flatten().count();
+        assert!((50..=150).contains(&hits), "p=0.25 over 400 ids drew {hits}");
+        for (kind, step) in draws.iter().flatten() {
+            assert_ne!(*kind, FaultKind::Transport);
+            assert!(*step < 8);
+        }
+        // a different seed reshuffles the victims
+        let q = FaultPlan::parse("seed=43,p=0.25,kinds=panic|stall|nan").unwrap();
+        assert_ne!(draws, (0..400).map(|id| q.fault_for(id, 8)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "",
+            "panic@x",
+            "explode@1",
+            "p=0.5",                       // rate without kinds
+            "p=1.5,kinds=panic",           // p out of range
+            "p=nope,kinds=panic",
+            "kinds=panic|transport,p=0.1", // transport is pin-only
+            "wat=7",
+            "justaword",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must be rejected");
+        }
+        // kinds alone (no p) is an empty plan
+        assert!(FaultPlan::parse("kinds=panic").is_err());
+    }
+}

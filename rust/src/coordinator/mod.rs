@@ -6,6 +6,7 @@ pub mod autotune;
 pub mod bench;
 pub mod daemon;
 pub mod empirical;
+pub mod faults;
 pub mod plans;
 pub mod report;
 pub mod service;
@@ -20,6 +21,7 @@ pub use empirical::{
     candidate_plans, run_native_tune, service_budgets, tune_native, tune_native_at,
     NativeTuneOutcome,
 };
+pub use faults::{FaultKind, FaultPlan};
 pub use plans::{host_fingerprint, PlanCache, PlanEntry};
 pub use report::{AsciiPlot, Table};
 pub use service::{

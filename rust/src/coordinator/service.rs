@@ -36,13 +36,14 @@
 //! [`DoubleBuffer`]: crate::stencil::exec::DoubleBuffer
 
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::daemon::protocol::Event;
+use crate::coordinator::daemon::protocol::{Event, FailureKind};
 use crate::coordinator::daemon::queue::{drive, JobQueue};
 use crate::coordinator::empirical;
+use crate::coordinator::faults::{FaultKind, FaultPlan};
 use crate::coordinator::plans::PlanCache;
 use crate::coordinator::tune::PredictionCache;
 use crate::model::calibrate::HostModel;
@@ -59,6 +60,24 @@ pub const SERVE_SCHEMA: &str = "stencilax-serve/1";
 /// Report file name under the output directory.
 pub const SERVE_REPORT_FILE: &str = "serve_report.json";
 
+/// Watchdog budget = `max(TIMEOUT_MULTIPLIER * predicted_cost_s,
+/// TIMEOUT_FLOOR_S)` unless the job carries an explicit `timeout_s`.
+/// Generous on purpose: the budget clocks *busy* step time (parked
+/// preemption time excluded), so an honest job only trips it when a step
+/// genuinely wedges.
+pub const TIMEOUT_MULTIPLIER: f64 = 30.0;
+/// Floor of the derived watchdog budget, in seconds — smoke-sized jobs
+/// predict microseconds and must not flap on scheduler jitter.
+pub const TIMEOUT_FLOOR_S: f64 = 2.0;
+/// Retry budget for retryable failures (panic, timeout) when the job
+/// does not set `max_retries`.
+pub const DEFAULT_MAX_RETRIES: usize = 2;
+/// Points sampled by the per-step finiteness probe (strided over the
+/// live field, rotated each step so consecutive probes cover different
+/// elements — NaN spreads through a stencil, so a blowup is caught
+/// within a step or two of first appearing).
+pub const PROBE_SAMPLES: usize = 64;
+
 /// One job request: step `workload` at interior `shape` for `steps`
 /// iterations. `deadline_s` is an optional service-level objective:
 /// "reject me at admission if you predict I cannot finish within this
@@ -71,6 +90,32 @@ pub struct JobSpec {
     pub shape: Vec<usize>,
     pub steps: usize,
     pub deadline_s: Option<f64>,
+    /// Explicit watchdog budget in *busy* seconds (time actually spent
+    /// stepping — parked preemption time excluded). When absent the
+    /// budget derives from the admission cost estimate:
+    /// `max(TIMEOUT_MULTIPLIER * predicted_cost_s, TIMEOUT_FLOOR_S)`.
+    pub timeout_s: Option<f64>,
+    /// Retry budget for retryable failures (panic, timeout); defaults to
+    /// [`DEFAULT_MAX_RETRIES`]. `Some(0)` means fail terminally on the
+    /// first fault.
+    pub max_retries: Option<usize>,
+}
+
+/// The all-absent default exists so tests and programmatic callers can
+/// spread (`..JobSpec::default()`) instead of tracking every optional
+/// knob; the empty workload/shape it carries fails [`JobSpec::validate`],
+/// so a default spec can never be admitted by accident.
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            workload: String::new(),
+            shape: Vec::new(),
+            steps: 0,
+            deadline_s: None,
+            timeout_s: None,
+            max_retries: None,
+        }
+    }
 }
 
 impl JobSpec {
@@ -82,6 +127,12 @@ impl JobSpec {
         ];
         if let Some(d) = self.deadline_s {
             fields.push(("deadline_s", Json::num(d)));
+        }
+        if let Some(t) = self.timeout_s {
+            fields.push(("timeout_s", Json::num(t)));
+        }
+        if let Some(r) = self.max_retries {
+            fields.push(("max_retries", Json::num(r as f64)));
         }
         Json::obj(fields)
     }
@@ -102,6 +153,11 @@ impl JobSpec {
                 bail!("job {:?}: deadline_s {d} must be a finite positive number", self.workload);
             }
         }
+        if let Some(t) = self.timeout_s {
+            if !(t.is_finite() && t > 0.0) {
+                bail!("job {:?}: timeout_s {t} must be a finite positive number", self.workload);
+            }
+        }
         Ok(())
     }
 
@@ -113,6 +169,18 @@ impl JobSpec {
             deadline_s: match j.get("deadline_s") {
                 None => None,
                 Some(d) => Some(d.as_f64().context("deadline_s must be a number")?),
+            },
+            timeout_s: match j.get("timeout_s") {
+                None => None,
+                Some(t) => Some(t.as_f64().context("timeout_s must be a number")?),
+            },
+            // strict like deadline_s: a negative or fractional retry
+            // count is a rejected line, not a silent clamp
+            max_retries: match j.get("max_retries") {
+                None => None,
+                Some(r) => Some(
+                    r.as_u64().context("max_retries must be a non-negative integer")? as usize,
+                ),
             },
         };
         spec.validate()?;
@@ -198,7 +266,11 @@ pub fn parse_jobs_lenient(j: &Json) -> Result<LoadedJobs> {
 
 /// An admitted session: registry workload resolved, shape validated, and
 /// the launch plan fixed. Admission is cheap on purpose — no field buffer
-/// exists until a shard picks the session up.
+/// exists until a shard picks the session up. `Clone` exists for the
+/// failure layer: a retry (or a supervised driver respawn) rebuilds the
+/// instance from the same admitted session, so the replay reproduces the
+/// fault-free digest bit for bit.
+#[derive(Clone)]
 pub struct Session {
     pub id: usize,
     pub spec: JobSpec,
@@ -308,6 +380,10 @@ pub struct SessionResult {
     /// Times this session was parked between steps so its shard could
     /// interleave cheaper queued jobs (0 under FIFO / batch serving).
     pub preemptions: usize,
+    /// Failed attempts that preceded this result (0 on a clean run). A
+    /// result with `retries >= 1` recovered from a retryable fault — and
+    /// still carries the fault-free digest, by determinism.
+    pub retries: usize,
 }
 
 impl SessionResult {
@@ -350,6 +426,7 @@ impl SessionResult {
         obj.insert("digest_bits".into(), Json::str(format!("{:#018x}", self.digest_bits)));
         obj.insert("latency_s".into(), Json::num(self.latency_s));
         obj.insert("preemptions".into(), Json::num(self.preemptions as f64));
+        obj.insert("retries".into(), Json::num(self.retries as f64));
         Json::Obj(obj)
     }
 
@@ -379,6 +456,128 @@ impl SessionResult {
             digest_bits,
             latency_s: j.req_f64("latency_s")?,
             preemptions: j.req_u64("preemptions")? as usize,
+            retries: j.req_u64("retries")? as usize,
+        })
+    }
+}
+
+/// One failed session attempt (DESIGN.md §15). Emitted as a `failed`
+/// event per attempt; a terminal one (`will_retry: false`) also lands in
+/// the report's `failed` array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionFailure {
+    pub id: usize,
+    /// Canonical registry name (aliases resolved at admission).
+    pub workload: String,
+    pub shape: Vec<usize>,
+    pub steps: usize,
+    /// Shard whose driver ran the failing attempt.
+    pub shard: usize,
+    pub kind: FailureKind,
+    pub error: String,
+    /// 0-based step the attempt died at (step-of-first-divergence for
+    /// [`FailureKind::Divergence`]).
+    pub step: usize,
+    /// Failed attempts before this one (0 = first attempt).
+    pub retries: usize,
+    /// Whether the daemon is about to rerun the session.
+    pub will_retry: bool,
+}
+
+impl SessionFailure {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("workload", Json::str(self.workload.as_str())),
+            ("shape", Json::arr(self.shape.iter().map(|&n| Json::num(n as f64)).collect())),
+            ("steps", Json::num(self.steps as f64)),
+            ("shard", Json::num(self.shard as f64)),
+            ("kind", Json::str(self.kind.as_str())),
+            ("error", Json::str(self.error.as_str())),
+            ("step", Json::num(self.step as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("will_retry", Json::Bool(self.will_retry)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionFailure> {
+        Ok(SessionFailure {
+            id: j.req_u64("id")? as usize,
+            workload: j.req_str("workload")?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            steps: j.req_u64("steps")? as usize,
+            shard: j.req_u64("shard")? as usize,
+            kind: FailureKind::parse(j.req_str("kind")?)?,
+            error: j.req_str("error")?.to_string(),
+            step: j.req_u64("step")? as usize,
+            retries: j.req_u64("retries")? as usize,
+            will_retry: j.req("will_retry")?.as_bool().context("will_retry not a bool")?,
+        })
+    }
+
+    pub fn describe_line(&self) -> String {
+        format!(
+            "serve job {:>3} {:<12} {:?} shard {} FAILED ({}) at step {}: {}{}",
+            self.id,
+            self.workload,
+            self.shape,
+            self.shard,
+            self.kind,
+            self.step,
+            self.error,
+            if self.will_retry { " — retrying" } else { "" },
+        )
+    }
+}
+
+/// Failure *occurrences* by kind — including retried-then-recovered
+/// attempts, so a chaos run's histogram matches the injected spec even
+/// when every retryable fault was absorbed. (`failed` arrays, by
+/// contrast, hold only terminal failures.)
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FailureHistogram {
+    pub panic: usize,
+    pub timeout: usize,
+    pub divergence: usize,
+    pub transport: usize,
+}
+
+impl FailureHistogram {
+    pub fn note(&mut self, kind: FailureKind) {
+        match kind {
+            FailureKind::Panic => self.panic += 1,
+            FailureKind::Timeout => self.timeout += 1,
+            FailureKind::Divergence => self.divergence += 1,
+            FailureKind::Transport => self.transport += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: &FailureHistogram) {
+        self.panic += other.panic;
+        self.timeout += other.timeout;
+        self.divergence += other.divergence;
+        self.transport += other.transport;
+    }
+
+    pub fn total(&self) -> usize {
+        self.panic + self.timeout + self.divergence + self.transport
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("panic", Json::num(self.panic as f64)),
+            ("timeout", Json::num(self.timeout as f64)),
+            ("divergence", Json::num(self.divergence as f64)),
+            ("transport", Json::num(self.transport as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FailureHistogram> {
+        Ok(FailureHistogram {
+            panic: j.req_u64("panic")? as usize,
+            timeout: j.req_u64("timeout")? as usize,
+            divergence: j.req_u64("divergence")? as usize,
+            transport: j.req_u64("transport")? as usize,
         })
     }
 }
@@ -424,6 +623,12 @@ pub struct ServiceReport {
     /// Jobs that never executed (parse/admission failures, cancelled
     /// sessions), sorted by job id.
     pub rejected: Vec<Rejection>,
+    /// Sessions that started but failed terminally (retries exhausted or
+    /// an unretryable failure), sorted by job id.
+    pub failed: Vec<SessionFailure>,
+    /// Failure occurrences by kind, retried-and-recovered attempts
+    /// included (so a chaos run's counts match the injected spec).
+    pub failure_histogram: FailureHistogram,
     /// Transport failures survived while serving (always empty for the
     /// batch path, which has no transport).
     pub transport_errors: Vec<TransportError>,
@@ -455,12 +660,17 @@ impl ServiceReport {
             ("schema", Json::str(SERVE_SCHEMA)),
             ("shards", Json::num(self.shards as f64)),
             ("threads_per_shard", Json::num(self.threads_per_shard as f64)),
-            ("jobs", Json::num((self.results.len() + self.rejected.len()) as f64)),
+            (
+                "jobs",
+                Json::num((self.results.len() + self.rejected.len() + self.failed.len()) as f64),
+            ),
             ("wall_s", Json::num(self.wall_s)),
             ("jobs_per_s", Json::num(self.jobs_per_s())),
             ("aggregate_melem_per_s", Json::num(self.aggregate_melem_per_s())),
             ("sessions", Json::arr(self.results.iter().map(|r| r.to_json()).collect())),
             ("rejected", Json::arr(self.rejected.iter().map(|r| r.to_json()).collect())),
+            ("failed", Json::arr(self.failed.iter().map(|f| f.to_json()).collect())),
+            ("failure_histogram", self.failure_histogram.to_json()),
             (
                 "transport_errors",
                 Json::arr(self.transport_errors.iter().map(|e| e.to_json()).collect()),
@@ -516,6 +726,17 @@ pub struct ActiveSession {
     shard: usize,
     steps_done: usize,
     preemptions: usize,
+    /// Failed attempts before this one (stamped into the result).
+    attempt: usize,
+    /// Busy step time this attempt has consumed (parked time excluded)
+    /// — what the watchdog budget clocks.
+    busy_s: f64,
+    /// The watchdog budget, fixed at start.
+    budget_s: f64,
+    /// Injected fault scheduled for this attempt (first attempts only;
+    /// cleared once fired).
+    fault: Option<(FaultKind, usize)>,
+    stall: Duration,
 }
 
 impl ActiveSession {
@@ -523,21 +744,117 @@ impl ActiveSession {
     /// so at most `shards` (+1 parked per shard under preemption)
     /// sessions hold live buffers at once.
     pub fn start(s: Session, shard: usize) -> ActiveSession {
-        let inst = s.workload.native_at(&s.spec.shape).expect("admission validated supports_shape");
-        let samples = Vec::with_capacity(s.spec.steps);
-        ActiveSession { s, inst, samples, shard, steps_done: 0, preemptions: 0 }
+        ActiveSession::start_with(s, shard, 0, None)
     }
 
-    /// Advance one timed step.
-    pub fn step(&mut self) {
+    /// [`Self::start`] for attempt `attempt` (0 = first) under an
+    /// optional fault plan. Faults fire only on attempt 0, so a retry
+    /// runs fault-free — the digest-verified-retry invariant.
+    pub fn start_with(
+        s: Session,
+        shard: usize,
+        attempt: usize,
+        faults: Option<&FaultPlan>,
+    ) -> ActiveSession {
+        let inst = s.workload.native_at(&s.spec.shape).expect("admission validated supports_shape");
+        let samples = Vec::with_capacity(s.spec.steps);
+        let budget_s = s
+            .spec
+            .timeout_s
+            .unwrap_or_else(|| (TIMEOUT_MULTIPLIER * s.predicted_cost_s).max(TIMEOUT_FLOOR_S));
+        let fault = match (attempt, faults) {
+            (0, Some(f)) => f.fault_for(s.id, s.spec.steps),
+            _ => None,
+        };
+        let stall = faults.map(|f| f.stall()).unwrap_or_default();
+        ActiveSession {
+            s,
+            inst,
+            samples,
+            shard,
+            steps_done: 0,
+            preemptions: 0,
+            attempt,
+            busy_s: 0.0,
+            budget_s,
+            fault,
+            stall,
+        }
+    }
+
+    /// Advance one timed step with the failure layer armed: the step
+    /// body runs under `catch_unwind` (a panic in the kernel or a pool
+    /// worker becomes a per-job failure, not a dead shard), the live
+    /// field is probed for NaN/Inf after the step, and the busy-time
+    /// watchdog is checked at this preemption-point granularity. On
+    /// `Err` the attempt is abandoned; `steps_done` counts only fully
+    /// successful steps (the ledger release math depends on that).
+    pub fn step_checked(&mut self) -> Result<(), (FailureKind, String)> {
+        let step = self.steps_done;
+        let inject = match self.fault {
+            Some((kind, at)) if at == step => {
+                self.fault = None;
+                Some(kind)
+            }
+            _ => None,
+        };
         let t0 = Instant::now();
-        self.inst.run(&self.s.plan);
-        self.samples.push(t0.elapsed().as_secs_f64());
+        {
+            let inst = &mut self.inst;
+            let plan = &self.s.plan;
+            let stall = self.stall;
+            let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match inject {
+                    Some(FaultKind::Panic) => panic!("injected fault: panic at step {step}"),
+                    Some(FaultKind::Stall) => std::thread::sleep(stall),
+                    _ => {}
+                }
+                inst.run(plan);
+                if inject == Some(FaultKind::Nan) {
+                    inst.poison_nan();
+                }
+            }));
+            if let Err(payload) = unwound {
+                return Err((
+                    FailureKind::Panic,
+                    format!("step {step}: {}", par::panic_message(&payload)),
+                ));
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        // sampled probe per step; exhaustive on the last step, so a NaN
+        // the strided samples missed can never reach the digest
+        let samples =
+            if step + 1 >= self.s.spec.steps { usize::MAX } else { PROBE_SAMPLES };
+        if !self.inst.probe_finite(samples, step) {
+            return Err((
+                FailureKind::Divergence,
+                format!("non-finite value in live field after step {step}"),
+            ));
+        }
+        self.busy_s += dt;
+        if self.busy_s > self.budget_s {
+            return Err((
+                FailureKind::Timeout,
+                format!(
+                    "step {step}: busy {:.3} s exceeds watchdog budget {:.3} s \
+                     (predicted {:.6} s)",
+                    self.busy_s, self.budget_s, self.s.predicted_cost_s,
+                ),
+            ));
+        }
+        self.samples.push(dt);
         self.steps_done += 1;
+        Ok(())
     }
 
     pub fn is_done(&self) -> bool {
         self.steps_done >= self.s.spec.steps
+    }
+
+    /// Successfully completed steps of this attempt.
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
     }
 
     /// The admission estimate's per-step share — the unit of backlog the
@@ -583,6 +900,25 @@ impl ActiveSession {
             digest_bits: fnv_bits(&self.inst.output()),
             latency_s: self.s.submitted.elapsed().as_secs_f64(),
             preemptions: self.preemptions,
+            retries: self.attempt,
+        }
+    }
+
+    /// A terminal/transient failure record for this attempt, built where
+    /// the live step state (shard, failing step, attempt) is known. The
+    /// caller decides `will_retry` and fills it in.
+    pub fn failure(&self, kind: FailureKind, error: String) -> SessionFailure {
+        SessionFailure {
+            id: self.s.id,
+            workload: self.s.workload.name(),
+            shape: self.s.spec.shape.clone(),
+            steps: self.s.spec.steps,
+            shard: self.shard,
+            kind,
+            error,
+            step: self.steps_done,
+            retries: self.attempt,
+            will_retry: false,
         }
     }
 }
@@ -657,10 +993,12 @@ pub fn run_loaded(
         queue.push(s).ok().expect("fresh batch queue is open and sized for the batch");
     }
     queue.close();
-    let results = drive(&queue, shards, &|ev| {
+    let outcome = drive(&queue, shards, &|ev| {
         if !quiet {
-            if let Event::Done(r) = &ev {
-                println!("{}", r.describe_line());
+            match &ev {
+                Event::Done(r) => println!("{}", r.describe_line()),
+                Event::Failed(f) => println!("{}", f.describe_line()),
+                _ => {}
             }
         }
     });
@@ -670,8 +1008,10 @@ pub fn run_loaded(
         shards,
         threads_per_shard,
         wall_s,
-        results,
+        results: outcome.results,
         rejected,
+        failed: outcome.failed,
+        failure_histogram: outcome.histogram,
         transport_errors: Vec::new(),
     })
 }
@@ -725,7 +1065,7 @@ pub fn bench_cases(
                 workload: "diffusion2d".into(),
                 shape: vec![n, n],
                 steps,
-                deadline_s: None,
+                ..JobSpec::default()
             })
             .collect();
         let elems = (sessions * steps * n * n) as f64;
@@ -772,7 +1112,12 @@ mod tests {
     use crate::stencil::plan::BlockShape;
 
     fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
-        JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, deadline_s: None }
+        JobSpec {
+            workload: workload.into(),
+            shape: shape.to_vec(),
+            steps,
+            ..JobSpec::default()
+        }
     }
 
     #[test]
@@ -980,6 +1325,138 @@ mod tests {
         }
         let text = r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"deadline_s":"soon"}"#;
         assert!(JobSpec::from_json(&Json::parse(text).unwrap()).is_err(), "non-numeric deadline");
+    }
+
+    #[test]
+    fn timeout_and_retry_knobs_validate_strictly() {
+        // same strict-parse posture as deadline_s: a bad knob is a
+        // rejected line, never a silent clamp
+        let mut spec = job("diffusion2d", &[16, 16], 2);
+        spec.timeout_s = Some(1.5);
+        spec.max_retries = Some(3);
+        let back = JobSpec::from_json(&Json::parse(&spec.to_json().to_string_pretty()).unwrap());
+        assert_eq!(back.unwrap(), spec);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            spec.timeout_s = Some(bad);
+            assert!(spec.validate().is_err(), "timeout_s {bad} must be invalid");
+        }
+        for text in [
+            r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"timeout_s":"fast"}"#,
+            r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"timeout_s":-2.0}"#,
+            r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"max_retries":-1}"#,
+            r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"max_retries":1.5}"#,
+            r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"max_retries":"many"}"#,
+        ] {
+            assert!(
+                JobSpec::from_json(&Json::parse(text).unwrap()).is_err(),
+                "must reject {text}"
+            );
+        }
+        // max_retries 0 is legal: fail terminally on the first fault
+        let text = r#"{"workload":"mhd","shape":[8,8,8],"steps":1,"max_retries":0}"#;
+        assert_eq!(JobSpec::from_json(&Json::parse(text).unwrap()).unwrap().max_retries, Some(0));
+    }
+
+    #[test]
+    fn failure_records_and_histogram_roundtrip() {
+        let f = SessionFailure {
+            id: 7,
+            workload: "diffusion2d".into(),
+            shape: vec![32, 32],
+            steps: 4,
+            shard: 1,
+            kind: FailureKind::Divergence,
+            error: "non-finite value in live field after step 2".into(),
+            step: 2,
+            retries: 0,
+            will_retry: false,
+        };
+        let back =
+            SessionFailure::from_json(&Json::parse(&f.to_json().to_string_pretty()).unwrap());
+        assert_eq!(back.unwrap(), f);
+        let mut h = FailureHistogram::default();
+        h.note(FailureKind::Panic);
+        h.note(FailureKind::Panic);
+        h.note(FailureKind::Timeout);
+        let mut other = FailureHistogram::default();
+        other.note(FailureKind::Divergence);
+        h.merge(&other);
+        assert_eq!(h.total(), 4);
+        assert_eq!((h.panic, h.timeout, h.divergence, h.transport), (2, 1, 1, 0));
+        let back = FailureHistogram::from_json(&Json::parse(&h.to_json().to_string_pretty()).unwrap());
+        assert_eq!(back.unwrap(), h);
+    }
+
+    #[test]
+    fn step_checked_contains_panics_and_flags_divergence() {
+        use crate::coordinator::faults::FaultPlan;
+        // injected panic is contained, not propagated
+        let s = admit(1, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
+        let plan = FaultPlan::parse("panic@1").unwrap();
+        let mut active = ActiveSession::start_with(s, 0, 0, Some(&plan));
+        let mut outcome = Ok(());
+        while outcome.is_ok() && !active.is_done() {
+            outcome = active.step_checked();
+        }
+        let (kind, error) = outcome.expect_err("injected panic must surface as a failure");
+        assert_eq!(kind, FailureKind::Panic);
+        assert!(error.contains("injected fault"), "{error}");
+        assert_eq!(active.steps_done(), 2, "panic fires mid-session (step 4/2)");
+
+        // NaN poison is caught by the finiteness probe with the step index
+        let s = admit(4, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
+        let plan = FaultPlan::parse("nan@4").unwrap();
+        let mut active = ActiveSession::start_with(s, 0, 0, Some(&plan));
+        let mut outcome = Ok(());
+        while outcome.is_ok() && !active.is_done() {
+            outcome = active.step_checked();
+        }
+        let (kind, error) = outcome.expect_err("poisoned field must be detected");
+        assert_eq!(kind, FailureKind::Divergence);
+        assert!(error.contains("step"), "{error}");
+
+        // a later attempt runs fault-free and reproduces the clean digest
+        let golden = {
+            let s = admit(4, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
+            let mut a = ActiveSession::start(s, 0);
+            while !a.is_done() {
+                a.step_checked().unwrap();
+            }
+            a.finish()
+        };
+        let s = admit(4, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
+        let mut retry = ActiveSession::start_with(s, 0, 1, Some(&plan));
+        while !retry.is_done() {
+            retry.step_checked().unwrap();
+        }
+        let r = retry.finish();
+        assert_eq!(r.digest_bits, golden.digest_bits, "retry must be bit-identical");
+        assert_eq!(r.retries, 1);
+    }
+
+    #[test]
+    fn watchdog_trips_on_stall_but_not_honest_work() {
+        use crate::coordinator::faults::FaultPlan;
+        // explicit timeout_s + injected stall longer than it
+        let mut spec = job("diffusion2d", &[16, 16], 2);
+        spec.timeout_s = Some(0.02);
+        let s = admit(3, spec, None, 1).unwrap();
+        let plan = FaultPlan::parse("stall@3,stall_ms=100").unwrap();
+        let mut active = ActiveSession::start_with(s, 0, 0, Some(&plan));
+        let mut outcome = Ok(());
+        while outcome.is_ok() && !active.is_done() {
+            outcome = active.step_checked();
+        }
+        let (kind, error) = outcome.expect_err("stall must blow the budget");
+        assert_eq!(kind, FailureKind::Timeout);
+        assert!(error.contains("watchdog budget"), "{error}");
+        // the derived budget (multiplier + floor) never trips honest work
+        let s = admit(0, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
+        let mut active = ActiveSession::start(s, 0);
+        while !active.is_done() {
+            active.step_checked().expect("honest job under the derived budget");
+        }
+        assert_eq!(active.finish().retries, 0);
     }
 
     #[test]

@@ -20,14 +20,19 @@
 //!                               batched stencil job service on the sharded
 //!                               worker pool -> serve_report.json
 //!   daemon [--socket P|--stdio] [--shards N] [--queue-cap N] [--fifo]
+//!          [--inject-faults SPEC]
 //!                               long-lived serving daemon: admit NDJSON
 //!                               job requests while sessions run, stream
 //!                               events, report on drain/shutdown
 //!                               (cost-aware scheduling with preemption by
-//!                               default; --fifo restores arrival order)
+//!                               default; --fifo restores arrival order;
+//!                               --inject-faults arms the deterministic
+//!                               chaos harness, DESIGN.md §15)
 //!   submit --socket P --jobs <file|-> [--shutdown] [--raw]
+//!          [--connect-timeout SECS]
 //!                               submit a job file to a running daemon and
-//!                               stream its events
+//!                               stream its events (connects with bounded
+//!                               exponential backoff)
 //!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
@@ -492,15 +497,23 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
 /// carries the event stream, so status lines go to stderr.
 fn cmd_daemon(cfg: &Config, args: &Args) -> Result<()> {
     use stencilax::coordinator::daemon::{self, DaemonOpts, Policy};
+    use stencilax::coordinator::FaultPlan;
     let queue_cap = args.get_usize("queue-cap", daemon::DEFAULT_QUEUE_CAP)?;
     if queue_cap == 0 {
         bail!("--queue-cap must be at least 1 (a zero-capacity queue cannot admit any job)");
     }
+    // fault injection (DESIGN.md §15): `--inject-faults SPEC` wins over
+    // the STENCILAX_FAULTS environment variable; both off by default
+    let faults = match args.get("inject-faults") {
+        Some(spec) => Some(FaultPlan::parse(spec).context("parsing --inject-faults")?),
+        None => FaultPlan::from_env().transpose().context("parsing STENCILAX_FAULTS")?,
+    };
     let opts = DaemonOpts {
         shards: args.get_usize("shards", 2)?,
         plans: PlanCache::load_if_exists(&cfg.output_dir)?,
         queue_cap,
         policy: if args.has_flag("fifo") { Policy::Fifo } else { Policy::cost_aware() },
+        faults,
     };
     eprintln!(
         "=== stencilax daemon: {} shard(s) requested, queue cap {}, {} scheduling, host {}, \
@@ -511,6 +524,9 @@ fn cmd_daemon(cfg: &Config, args: &Args) -> Result<()> {
         host_fingerprint(),
         opts.plans.as_ref().map_or(0, |c| c.len()),
     );
+    if let Some(plan) = &opts.faults {
+        eprintln!("daemon: FAULT INJECTION ARMED: {}", plan.describe());
+    }
     let report = if args.has_flag("stdio") {
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
@@ -544,10 +560,15 @@ fn cmd_submit(args: &Args) -> Result<()> {
     let text = read_jobs_arg(src)?;
     let lines = client::job_lines(&Json::parse(&text).context("parsing job file")?)?;
     let raw = args.has_flag("raw");
+    let connect_timeout = args.get_f64("connect-timeout", client::DEFAULT_CONNECT_TIMEOUT_S)?;
+    if !connect_timeout.is_finite() || connect_timeout <= 0.0 {
+        bail!("--connect-timeout must be a finite positive number of seconds");
+    }
     let summary = client::submit_lines(
         std::path::Path::new(socket),
         &lines,
         args.has_flag("shutdown"),
+        std::time::Duration::from_secs_f64(connect_timeout),
         |line, ev| {
             if raw {
                 println!("{line}");
@@ -571,16 +592,18 @@ fn cmd_submit(args: &Args) -> Result<()> {
                 },
                 Event::Started { id, shard } => println!("started  job {id:>3} on shard {shard}"),
                 Event::Done(r) => println!("{}", r.describe_line()),
+                Event::Failed(f) => println!("{}", f.describe_line()),
                 Event::Report(j) => println!("final report: {}", j.to_string_compact()),
             }
         },
     )?;
     if !raw {
         println!(
-            "submitted {}: {} done, {} rejected{}",
+            "submitted {}: {} done, {} rejected, {} failed{}",
             summary.submitted,
             summary.outcome.done.len(),
             summary.outcome.rejected.len(),
+            summary.outcome.failed.len(),
             if summary.outcome.report.is_some() { ", daemon reported + stopped" } else { "" },
         );
     }
@@ -718,25 +741,39 @@ SUBCOMMANDS:
                              (default 2), and write serve_report.json
                              under --out
   daemon [--socket PATH|--stdio] [--shards N] [--queue-cap N] [--fifo]
+         [--inject-faults SPEC]
                              long-lived serving daemon: admit NDJSON job
                              lines ({{workload, shape, steps}}, optional
-                             deadline_s, or {{\"type\": \"drain\"|\"shutdown\"}})
+                             deadline_s / timeout_s / max_retries, or
+                             {{\"type\": \"drain\"|\"shutdown\"}})
                              over a Unix socket or stdin WHILE sessions
-                             run, stream accepted/rejected/started/done
-                             events as NDJSON, and write
+                             run, stream accepted/rejected/started/done/
+                             failed events as NDJSON, and write
                              daemon_report.json under --out on
                              drain/shutdown (stdin EOF = drain); jobs run
                              shortest-predicted-first with aging and step
                              preemption unless --fifo restores strict
                              arrival order, and a deadline_s the predicted
                              backlog already blows is rejected up front
-                             with predicted_wait_s
+                             with predicted_wait_s; a panicking, stalled,
+                             or diverging session fails per-job (taxonomy
+                             panic/timeout/divergence/transport) with
+                             bounded digest-verified retries instead of
+                             killing a shard; --inject-faults (or
+                             STENCILAX_FAULTS) arms the deterministic
+                             chaos harness, e.g.
+                             'panic@1,stall@3,nan@4,stall_ms=250' or
+                             'seed=42,p=0.25,kinds=panic|stall|nan'
+                             (DESIGN.md §15)
   submit --socket PATH --jobs <file|-> [--shutdown] [--raw]
+         [--connect-timeout SECS]
                              submit a job file to a running daemon and
                              stream its events (--raw echoes NDJSON
                              verbatim; --shutdown stops the daemon after
                              this client's jobs finish and prints the
-                             final aggregate report)
+                             final aggregate report; connection retries
+                             with bounded exponential backoff for up to
+                             --connect-timeout seconds, default 5)
   workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance

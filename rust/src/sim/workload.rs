@@ -60,6 +60,46 @@ pub trait NativeInstance {
     /// The job service (`coordinator::service`) digests this for its
     /// service-vs-direct bit-parity guarantees.
     fn output(&self) -> Vec<f64>;
+
+    /// Cheap finiteness probe over the *live* field: check ~`samples`
+    /// strided points, starting at an offset rotated by `phase` so
+    /// successive probes cover different elements (NaN spreads through a
+    /// stencil, so a blowup is caught within a step or two of first
+    /// appearing). `true` = every sampled value finite. The default
+    /// clones the output (fine for model-only instances); native
+    /// instances override with allocation-free direct slice access —
+    /// note the crate's `max_abs` folds through `f64::max`, which
+    /// *ignores* NaN, so this must stay an explicit `is_finite` scan.
+    fn probe_finite(&self, samples: usize, phase: usize) -> bool {
+        probe_slice(&self.output(), samples, phase)
+    }
+
+    /// Fault-injection hook (`coordinator::faults`): overwrite live
+    /// state with NaN so divergence detection is testable. Poisons
+    /// *persistent* state where possible, so the NaN propagates through
+    /// subsequent steps like a real blowup. Returns `false` when the
+    /// instance has no mutable native state (the default).
+    fn poison_nan(&mut self) -> bool {
+        false
+    }
+}
+
+/// Strided `is_finite` scan shared by [`NativeInstance::probe_finite`]
+/// implementations: ~`samples` points, start offset `phase % stride` so
+/// a rotating phase sweeps the whole slice across consecutive calls.
+pub fn probe_slice(xs: &[f64], samples: usize, phase: usize) -> bool {
+    if xs.is_empty() {
+        return true;
+    }
+    let stride = (xs.len() / samples.max(1)).max(1);
+    let mut i = phase % stride;
+    while i < xs.len() {
+        if !xs[i].is_finite() {
+            return false;
+        }
+        i += stride;
+    }
+    true
 }
 
 /// One tunable benchmark of the paper.
@@ -207,6 +247,21 @@ impl NativeInstance for XcorrNative {
     fn output(&self) -> Vec<f64> {
         self.out.clone()
     }
+
+    fn probe_finite(&self, samples: usize, phase: usize) -> bool {
+        probe_slice(&self.out, samples, phase)
+    }
+
+    fn poison_nan(&mut self) -> bool {
+        // poison the padded *input* so the NaN persists across runs
+        // (the output row is recomputed from it every step), and the
+        // current output so the probe sees it this step
+        let mid = self.fpad.len() / 2;
+        self.fpad[mid] = f64::NAN;
+        let mid = self.out.len() / 2;
+        self.out[mid] = f64::NAN;
+        true
+    }
 }
 
 /// Prepared double-buffered diffusion stepper.
@@ -246,6 +301,20 @@ impl NativeInstance for DiffusionNative {
 
     fn output(&self) -> Vec<f64> {
         self.field.cur().interior_to_vec()
+    }
+
+    fn probe_finite(&self, samples: usize, phase: usize) -> bool {
+        // padded data including ghosts — fine for a finiteness scan
+        probe_slice(self.field.cur().data(), samples, phase)
+    }
+
+    fn poison_nan(&mut self) -> bool {
+        // interior coordinates: a ghost cell would be rewritten by the
+        // next periodic ghost fill before the NaN could spread
+        let g = self.field.cur_mut();
+        let (i, j, k) = (g.nx / 2, g.ny / 2, g.nz / 2);
+        g.set(i, j, k, f64::NAN);
+        true
     }
 }
 
@@ -288,6 +357,20 @@ impl NativeInstance for MhdNative {
 
     fn output(&self) -> Vec<f64> {
         self.state.stacked_interior()
+    }
+
+    fn probe_finite(&self, samples: usize, phase: usize) -> bool {
+        let per_field = (samples / self.state.fields.len().max(1)).max(1);
+        self.state.fields.iter().all(|g| probe_slice(g.data(), per_field, phase))
+    }
+
+    fn poison_nan(&mut self) -> bool {
+        // density feeds every RHS contraction, so one interior NaN
+        // floods the whole state within a substep
+        let g = &mut self.state.fields[0];
+        let (i, j, k) = (g.nx / 2, g.ny / 2, g.nz / 2);
+        g.set(i, j, k, f64::NAN);
+        true
     }
 }
 

@@ -33,13 +33,17 @@ pub fn median_upper(xs: &[f64]) -> f64 {
 /// real sample is required (e.g. picking an actual measurement to
 /// re-run): for small sets it is heavily quantized — with n < 20,
 /// p95 is always the sample max. Latency *reporting* uses
-/// [`percentile_linear`] instead.
-pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty sample set");
+/// [`percentile_linear`] instead. `None` on an empty sample set — a
+/// chaos run where every job failed has no latency samples, and that
+/// must read as "no data", not a panic inside report assembly.
+pub fn percentile(xs: &[f64], q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (q.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize;
-    v[rank.clamp(1, v.len()) - 1]
+    Some(v[rank.clamp(1, v.len()) - 1])
 }
 
 /// Linearly-interpolated percentile (the "C = 1" / numpy default
@@ -47,15 +51,18 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// sorted samples, interpolating between the neighbors. Unlike
 /// [`percentile`], small sample sets get a graded tail instead of
 /// snapping to the max — the convention the daemon latency metrics
-/// (`latency_p50_s`/`latency_p95_s`) report.
-pub fn percentile_linear(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty sample set");
+/// (`latency_p50_s`/`latency_p95_s`) report. `None` on an empty set
+/// (see [`percentile`]).
+pub fn percentile_linear(xs: &[f64], q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
-    v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    Some(v[lo] + (v[hi] - v[lo]) * (pos - lo as f64))
 }
 
 /// Sort in place and return the midpoint median.
@@ -199,31 +206,39 @@ mod tests {
     #[test]
     fn percentile_nearest_rank() {
         let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0];
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 0.5), 3.0);
-        assert_eq!(percentile(&xs, 0.8), 4.0);
-        assert_eq!(percentile(&xs, 0.95), 5.0);
-        assert_eq!(percentile(&xs, 1.0), 5.0);
-        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&xs, 0.0).unwrap(), 1.0);
+        assert_eq!(percentile(&xs, 0.5).unwrap(), 3.0);
+        assert_eq!(percentile(&xs, 0.8).unwrap(), 4.0);
+        assert_eq!(percentile(&xs, 0.95).unwrap(), 5.0);
+        assert_eq!(percentile(&xs, 1.0).unwrap(), 5.0);
+        assert_eq!(percentile(&[7.0], 0.5).unwrap(), 7.0);
         // nearest-rank p50 of an even count keeps a real sample (the
         // lower of the central pair), never an interpolated midpoint
-        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.5).unwrap(), 2.0);
     }
 
     #[test]
     fn percentile_linear_interpolates_small_tails() {
         let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0];
-        assert_eq!(percentile_linear(&xs, 0.0), 1.0);
-        assert_eq!(percentile_linear(&xs, 0.5), 3.0);
-        assert_eq!(percentile_linear(&xs, 1.0), 5.0);
+        assert_eq!(percentile_linear(&xs, 0.0).unwrap(), 1.0);
+        assert_eq!(percentile_linear(&xs, 0.5).unwrap(), 3.0);
+        assert_eq!(percentile_linear(&xs, 1.0).unwrap(), 5.0);
         // p95 of 5 samples sits between the 4th and 5th order statistics
         // (nearest-rank would snap to the max — the bug this fixes)
-        let p95 = percentile_linear(&xs, 0.95);
+        let p95 = percentile_linear(&xs, 0.95).unwrap();
         assert!(p95 > 4.0 && p95 < 5.0, "p95={p95}");
-        assert_eq!(percentile(&xs, 0.95), 5.0, "nearest-rank pins to max for n<20");
+        assert_eq!(percentile(&xs, 0.95).unwrap(), 5.0, "nearest-rank pins to max for n<20");
         // even-count p50 is the midpoint, matching Stats::median_s
-        assert_eq!(percentile_linear(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.5);
-        assert_eq!(percentile_linear(&[7.0], 0.95), 7.0);
+        assert_eq!(percentile_linear(&[1.0, 2.0, 3.0, 4.0], 0.5).unwrap(), 2.5);
+        assert_eq!(percentile_linear(&[7.0], 0.95).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn percentiles_of_an_empty_set_are_none() {
+        // a chaos run where every session failed has zero latency
+        // samples — report assembly must see "no data", not a panic
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(percentile_linear(&[], 0.95), None);
     }
 
     #[test]

@@ -122,6 +122,22 @@ struct Shared {
     next: AtomicUsize,
     /// Set when a worker's job item panicked (re-raised by the caller).
     panicked: AtomicBool,
+    /// First panicking worker's payload message, carried back so the
+    /// caller's re-raise (and the serving layer's `failed` events) keep
+    /// the original diagnostic instead of a generic "worker panicked".
+    panic_msg: Mutex<Option<String>>,
+}
+
+/// Best-effort text of a panic payload (`&str` / `String` payloads; the
+/// overwhelmingly common cases from `panic!`, `assert!`, and `expect`).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
 }
 
 /// Ignore mutex poisoning: the pool's own critical sections contain no user
@@ -170,6 +186,7 @@ impl Shard {
                 done: Condvar::new(),
                 next: AtomicUsize::new(0),
                 panicked: AtomicBool::new(false),
+                panic_msg: Mutex::new(None),
             }),
             gate: Mutex::new(()),
             max_workers: workers,
@@ -241,7 +258,14 @@ impl Shard {
         }
         drop(guard); // waits for the workers, then clears the job
         if self.shared.panicked.load(Ordering::Relaxed) {
-            panic!("pool worker panicked");
+            let msg = self
+                .shared
+                .panic_msg
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .unwrap_or_default();
+            panic!("pool worker panicked: {msg}");
         }
         parts
     }
@@ -389,9 +413,13 @@ fn worker_loop(shared: &Shared, id: usize) {
             }
             job(i);
         }));
-        if stole.is_err() {
+        if let Err(payload) = stole {
             // drain the counter so sibling workers stop early, then report
+            // with the original payload (first panicking worker wins)
             shared.next.store(usize::MAX / 2, Ordering::Relaxed);
+            let mut msg = shared.panic_msg.lock().unwrap_or_else(|e| e.into_inner());
+            msg.get_or_insert_with(|| panic_message(&*payload));
+            drop(msg);
             shared.panicked.store(true, Ordering::Relaxed);
         }
         let mut s = lock_slot(shared);
@@ -620,6 +648,29 @@ mod tests {
                 panic!("job 37 panicked");
             }
         });
+    }
+
+    #[test]
+    fn pool_panic_carries_the_original_message() {
+        // the serving layer converts these into per-job failed events, so
+        // the worker's payload must survive the re-raise across threads
+        let p = ThreadPool::new(3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.run(256, 4, &|i| {
+                // many items so a *worker* (not the dispatching caller)
+                // reliably draws the poisoned one at least sometimes;
+                // either path must carry the message through
+                if i == 200 {
+                    panic!("item 200 diverged horribly");
+                }
+                std::thread::sleep(std::time::Duration::from_micros(20));
+            });
+        }));
+        let msg = panic_message(&*caught.expect_err("dispatch must re-raise"));
+        assert!(msg.contains("item 200 diverged horribly"), "lost payload: {msg:?}");
+        // the pool stays serviceable after the contained panic
+        p.run(8, 2, &|_| {});
+        assert_eq!(panic_message(&Box::new(42u32)), "panic with non-string payload");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use stencilax::coordinator::service::{self, JobSpec};
 use stencilax::util::json::Json;
 
 fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
-    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, deadline_s: None }
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, ..JobSpec::default() }
 }
 
 fn opts() -> DaemonOpts {
@@ -71,6 +71,7 @@ fn daemon_stdio_and_batch_serve_produce_identical_digests() {
                 assert!(r.latency_s > 0.0);
             }
             Event::Rejected { id, error, .. } => panic!("unexpected rejection of {id}: {error}"),
+            Event::Failed(f) => panic!("unexpected failure of {}: {}", f.id, f.error),
             Event::Report(_) => {}
         }
     }
@@ -177,7 +178,14 @@ fn daemon_over_unix_socket_serves_submit_client_end_to_end() {
         ),
     ]);
     let lines = client::job_lines(&file).unwrap();
-    let summary = client::submit_lines(&socket, &lines, true, |_, _| {}).unwrap();
+    let summary = client::submit_lines(
+        &socket,
+        &lines,
+        true,
+        std::time::Duration::from_secs(5),
+        |_, _| {},
+    )
+    .unwrap();
 
     assert_eq!(summary.submitted, 3);
     assert_eq!(summary.outcome.done.len(), 2);

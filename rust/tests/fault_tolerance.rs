@@ -1,0 +1,175 @@
+//! Fault-isolation regressions for the serving daemon (ISSUE 7): an
+//! injected panic, stall, or NaN must become a per-job `failed` event —
+//! never a dead shard or a crashed daemon — with retryable classes
+//! recovering to the *fault-free golden digest* and unretryable ones
+//! failing terminally while every co-scheduled job is untouched; a
+//! transport read error must drain the stream instead of killing the
+//! process; and malformed `timeout_s`/`max_retries` knobs must reject
+//! per line at admission.
+//!
+//! Every run here is byte-reproducible: the [`FaultPlan`] grammar pins
+//! faults to job ids, faults fire only on a session's first attempt, and
+//! the golden twin runs the identical script with injection disabled.
+
+use stencilax::coordinator::daemon::{server, DaemonOpts, Event, FailureKind};
+use stencilax::coordinator::service::{FailureHistogram, JobSpec, ServiceReport};
+use stencilax::coordinator::FaultPlan;
+
+fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, ..JobSpec::default() }
+}
+
+fn script_of(jobs: &[JobSpec]) -> String {
+    jobs.iter().map(|j| j.to_json().to_string_compact() + "\n").collect()
+}
+
+fn opts_with(faults: Option<FaultPlan>) -> DaemonOpts {
+    DaemonOpts { shards: 2, queue_cap: 16, faults, ..DaemonOpts::default() }
+}
+
+fn run(jobs: &[JobSpec], faults: Option<&str>) -> (ServiceReport, Vec<Event>) {
+    let faults = faults.map(|spec| FaultPlan::parse(spec).unwrap());
+    let (report, lines) = server::serve_script(&script_of(jobs), &opts_with(faults)).unwrap();
+    let events = lines
+        .iter()
+        .map(|l| Event::parse_line(l).unwrap_or_else(|e| panic!("bad event line {l:?}: {e:#}")))
+        .collect();
+    (report, events)
+}
+
+#[test]
+fn injected_panic_retries_to_the_fault_free_golden_digest() {
+    let jobs = vec![
+        job("conv1d-r3", &[1024], 4),
+        job("diffusion2d", &[16, 16], 4), // panic target
+        job("diffusion1d", &[256], 4),
+    ];
+    let (golden, _) = run(&jobs, None);
+    assert_eq!(golden.results.len(), 3, "golden run must be clean: {:?}", golden.failed);
+    assert_eq!(golden.failure_histogram, FailureHistogram::default());
+
+    let (chaos, events) = run(&jobs, Some("panic@1"));
+    // the panic was contained, retried, and recovered: every job done
+    assert_eq!(chaos.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    assert!(chaos.failed.is_empty(), "recovered jobs are not terminal: {:?}", chaos.failed);
+    assert_eq!(chaos.failure_histogram.panic, 1, "the recovered attempt still counts");
+    assert_eq!(chaos.failure_histogram.total(), 1);
+    for r in &chaos.results {
+        assert_eq!(
+            r.digest_bits, golden.results[r.id].digest_bits,
+            "job {} digest must be bit-identical to the fault-free run",
+            r.id
+        );
+    }
+    assert!(chaos.results[1].retries >= 1, "the faulted job must record its rerun");
+    assert_eq!(chaos.results[0].retries, 0);
+    assert_eq!(chaos.results[2].retries, 0);
+
+    // the transient failure was streamed, flagged as a rerun, and placed
+    let transients: Vec<_> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Failed(f) => Some(f),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(transients.len(), 1);
+    let f = transients[0];
+    assert_eq!((f.id, f.kind, f.will_retry), (1, FailureKind::Panic, true));
+    assert_eq!(f.step, 2, "panic@1 over 4 steps fires mid-session");
+    assert!(f.error.contains("injected fault"), "{:?}", f.error);
+}
+
+#[test]
+fn timeout_and_divergence_fail_terminally_without_collateral() {
+    let mut stall_target = job("diffusion2d", &[16, 16], 4);
+    stall_target.timeout_s = Some(0.05);
+    stall_target.max_retries = Some(0);
+    let jobs = vec![
+        job("diffusion2d", &[16, 16], 4),
+        stall_target, // id 1: stall blows the watchdog, no retries left
+        job("mhd", &[8, 8, 8], 4), // id 2: NaN poison -> divergence, unretryable
+        job("diffusion1d", &[256], 4), // id 3: arrives behind the faulted jobs
+    ];
+    let (golden, _) = run(&jobs, None);
+    assert_eq!(golden.results.len(), 4, "golden run must be clean: {:?}", golden.failed);
+
+    let (chaos, events) = run(&jobs, Some("stall@1,nan@2,stall_ms=100"));
+    assert_eq!(
+        chaos.results.iter().map(|r| r.id).collect::<Vec<_>>(),
+        vec![0, 3],
+        "healthy jobs around the failures must still complete"
+    );
+    for r in &chaos.results {
+        assert_eq!(
+            r.digest_bits, golden.results[r.id].digest_bits,
+            "job {} must be untouched by its neighbors' faults",
+            r.id
+        );
+        assert_eq!(r.retries, 0);
+    }
+    assert_eq!(chaos.failed.iter().map(|f| f.id).collect::<Vec<_>>(), vec![1, 2]);
+    assert_eq!(chaos.failed[0].kind, FailureKind::Timeout);
+    assert_eq!(chaos.failed[1].kind, FailureKind::Divergence);
+    assert_eq!(chaos.failed[1].step, 2, "divergence reports the step of first detection");
+    assert!(chaos.failed.iter().all(|f| !f.will_retry));
+    let h = &chaos.failure_histogram;
+    assert_eq!((h.panic, h.timeout, h.divergence, h.transport), (0, 1, 1, 0));
+
+    // the final report event carries the taxonomy, and it roundtrips
+    match events.last() {
+        Some(Event::Report(j)) => {
+            assert_eq!(j.req_u64("jobs").unwrap(), 4);
+            assert_eq!(j.req_arr("failed").unwrap().len(), 2);
+            let wire = FailureHistogram::from_json(j.req("failure_histogram").unwrap()).unwrap();
+            assert_eq!(&wire, h);
+        }
+        other => panic!("stream must end with the aggregate report, got {other:?}"),
+    }
+}
+
+#[test]
+fn transport_read_error_drains_the_stream_instead_of_crashing() {
+    let jobs = vec![job("diffusion2d", &[16, 16], 2), job("diffusion1d", &[256], 2)];
+    // line 0 is read cleanly; the read of line 1 errors, so job 1 is
+    // never admitted and the daemon drains what it has
+    let (report, events) = run(&jobs, Some("transport@1"));
+    assert_eq!(report.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+    assert!(report.rejected.is_empty(), "{:?}", report.rejected);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+    assert_eq!(report.transport_errors.len(), 1);
+    assert_eq!(report.transport_errors[0].kind, "read");
+    assert!(report.transport_errors[0].error.contains("injected fault"));
+    assert_eq!(report.failure_histogram.transport, 1, "transport errors land in the histogram");
+    assert!(matches!(events.last(), Some(Event::Report(_))), "error-triggered drain still reports");
+}
+
+#[test]
+fn invalid_timeout_and_retry_knobs_reject_per_line() {
+    // ids follow line order: 0 valid, 1-4 malformed knobs, 5 valid
+    let valid = job("diffusion2d", &[16, 16], 2).to_json().to_string_compact();
+    let with_knob = |knob: &str| {
+        format!("{{\"workload\":\"diffusion2d\",\"shape\":[16,16],\"steps\":2,{knob}}}\n")
+    };
+    let mut script = String::new();
+    script.push_str(&(valid.clone() + "\n"));
+    script.push_str(&with_knob("\"timeout_s\":-1"));
+    script.push_str(&with_knob("\"timeout_s\":\"soon\""));
+    script.push_str(&with_knob("\"max_retries\":1.5"));
+    script.push_str(&with_knob("\"max_retries\":-2"));
+    script.push_str(&(valid + "\n"));
+
+    let (report, _) = server::serve_script(&script, &opts_with(None)).unwrap();
+    assert_eq!(
+        report.results.iter().map(|r| r.id).collect::<Vec<_>>(),
+        vec![0, 5],
+        "valid jobs around the bad knobs must still run"
+    );
+    assert_eq!(report.rejected.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+    assert!(report.rejected[0].error.contains("timeout_s"), "{:?}", report.rejected[0]);
+    assert!(report.rejected[1].error.contains("timeout_s"), "{:?}", report.rejected[1]);
+    assert!(report.rejected[2].error.contains("max_retries"), "{:?}", report.rejected[2]);
+    assert!(report.rejected[3].error.contains("max_retries"), "{:?}", report.rejected[3]);
+    // both completions are the same spec: bit-identical results
+    assert_eq!(report.results[0].digest_bits, report.results[1].digest_bits);
+}

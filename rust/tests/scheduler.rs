@@ -14,7 +14,7 @@ use stencilax::coordinator::daemon::{drive, server, DaemonOpts, Event, JobQueue,
 use stencilax::coordinator::service::{admit, JobSpec, Session, SessionResult};
 
 fn spec(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
-    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, deadline_s: None }
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, ..JobSpec::default() }
 }
 
 fn session(id: usize, workload: &str, shape: &[usize], steps: usize) -> Session {
@@ -40,12 +40,13 @@ fn drive_prefilled(policy: Policy, sessions: Vec<Session>) -> (Vec<SessionResult
     }
     queue.close();
     let order = Mutex::new(Vec::new());
-    let results = drive(&queue, 1, &|ev| {
+    let outcome = drive(&queue, 1, &|ev| {
         if let Event::Done(r) = ev {
             order.lock().unwrap().push(r.id);
         }
     });
-    (results, order.into_inner().unwrap())
+    assert!(outcome.failed.is_empty(), "no session may fail here: {:?}", outcome.failed);
+    (outcome.results, order.into_inner().unwrap())
 }
 
 #[test]
@@ -102,7 +103,7 @@ fn shorts_arriving_mid_long_session_preempt_it_and_finish_first() {
             queue.push(session(id, "conv1d-r3", &[1024], 1)).ok().unwrap();
         }
         queue.close();
-        driver.join().unwrap()
+        driver.join().unwrap().results
     });
 
     let order = order.into_inner().unwrap();

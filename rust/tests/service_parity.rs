@@ -66,8 +66,12 @@ the old gate fallback made it serial"
 fn service_session_is_bit_identical_to_direct_stepping() {
     let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let (n, steps) = (40usize, 5usize);
-    let jobs =
-        vec![JobSpec { workload: "diffusion2d".into(), shape: vec![n, n], steps, deadline_s: None }];
+    let jobs = vec![JobSpec {
+        workload: "diffusion2d".into(),
+        shape: vec![n, n],
+        steps,
+        ..JobSpec::default()
+    }];
     let report = service::run_jobs(&jobs, 2, None, true).unwrap();
     assert_eq!(report.results.len(), 1);
     let served = &report.results[0];
@@ -103,7 +107,7 @@ fn service_saturates_past_its_shard_count_without_loss() {
             workload: "diffusion2d".into(),
             shape: vec![20, 20],
             steps: 2,
-            deadline_s: None,
+            ..JobSpec::default()
         })
         .collect();
     let report = service::run_jobs(&jobs, 2, None, true).unwrap();

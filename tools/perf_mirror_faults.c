@@ -1,0 +1,113 @@
+/* Structural mirror of the PR 7 fault-isolation layer's fault-free path
+ * (see rust/src/coordinator/service.rs ActiveSession::step_checked and
+ * DESIGN.md §15): a diffusion2d r=3 step followed by the per-step
+ * divergence probe — 64 strided interior samples on interior steps, the
+ * full field on the final step — plus the retry-recovery arithmetic for
+ * an injected fault at mid-session.
+ *
+ * Measures, per grid size:
+ *   - median step time (the baseline the probe rides on)
+ *   - sampled probe (64 isfinite checks) and its share of a step
+ *   - exhaustive probe (n*n checks) and its share of a step
+ *   - recovered-retry latency multiplier for a panic at step s/2 of s
+ *     steps with the queue's 5 ms base backoff
+ *
+ * Build/run: gcc -O3 -march=native -o /tmp/pmf tools/perf_mirror_faults.c -lm && /tmp/pmf
+ */
+#include <math.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define R 3
+#define PROBE_SAMPLES 64
+#define RETRY_BACKOFF_BASE_MS 5.0
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + 1e-9 * ts.tv_nsec;
+}
+
+static int cmp_d(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static double median(double *xs, int n) {
+    qsort(xs, n, sizeof(double), cmp_d);
+    return n % 2 ? xs[n / 2] : 0.5 * (xs[n / 2 - 1] + xs[n / 2]);
+}
+
+/* one r=3 star-stencil step over the n*n interior of a padded field */
+static void step(const double *src, double *dst, int n) {
+    const int p = n + 2 * R;
+    static const double w[2 * R + 1] = {1. / 90, -3. / 20, 3. / 2, -49. / 18,
+                                        3. / 2,  -3. / 20, 1. / 90};
+    for (int i = R; i < n + R; i++) {
+        for (int j = R; j < n + R; j++) {
+            double acc = 0.0;
+            for (int k = -R; k <= R; k++) {
+                acc += w[k + R] * src[i * p + j + k];
+                acc += w[k + R] * src[(i + k) * p + j];
+            }
+            dst[i * p + j] = src[i * p + j] + 1e-3 * acc;
+        }
+    }
+}
+
+/* sampled probe: `samples` strided interior elements, like
+ * Workload::probe_finite with probe_slice */
+static int probe(const double *f, int n, long samples) {
+    const int p = n + 2 * R;
+    long total = (long)n * n;
+    if (samples > total) samples = total;
+    long stride = total / samples;
+    if (stride < 1) stride = 1;
+    for (long s = 0; s < total; s += stride) {
+        int i = (int)(s / n), j = (int)(s % n);
+        if (!isfinite(f[(i + R) * p + j + R])) return 0;
+    }
+    return 1;
+}
+
+static void bench(int n, int steps) {
+    const int p = n + 2 * R;
+    double *a = calloc((size_t)p * p, sizeof(double));
+    double *b = calloc((size_t)p * p, sizeof(double));
+    for (int i = 0; i < p * p; i++) a[i] = ((i * 31) % 13) * 0.1;
+
+    enum { ITERS = 400 };
+    static double ts[ITERS], tp[ITERS], tf[ITERS];
+    volatile int ok = 1;
+    for (int it = 0; it < ITERS; it++) {
+        double t0 = now_s();
+        step(a, b, n);
+        ts[it] = now_s() - t0;
+        t0 = now_s();
+        ok &= probe(b, n, PROBE_SAMPLES);
+        tp[it] = now_s() - t0;
+        t0 = now_s();
+        ok &= probe(b, n, (long)n * n);
+        tf[it] = now_s() - t0;
+        double *t = a; a = b; b = t;
+    }
+    double ms = median(ts, ITERS), mp = median(tp, ITERS), mf = median(tf, ITERS);
+    /* a panic at step steps/2 wastes those steps, backs off, reruns all */
+    double clean = steps * (ms + mp) + mf - mp;
+    double retried = (steps / 2) * (ms + mp) + RETRY_BACKOFF_BASE_MS * 1e-3 + clean;
+    printf("n=%-4d step %10.3f us | probe64 %8.3f us (%5.2f%% of step) | "
+           "full probe %8.3f us (%5.2f%% of step) | retry@%d/%d latency x%.2f%s\n",
+           n, ms * 1e6, mp * 1e6, 100.0 * mp / ms, mf * 1e6, 100.0 * mf / ms,
+           steps / 2, steps, retried / clean, ok ? "" : " (non-finite?!)");
+    free(a);
+    free(b);
+}
+
+int main(void) {
+    bench(24, 4);   /* the chaos smoke's diffusion2d size */
+    bench(256, 4);  /* a mid-size serving job */
+    bench(1024, 4); /* large: probe64 cost should vanish in the noise */
+    return 0;
+}
