@@ -46,6 +46,11 @@ pub struct BenchResult {
     pub stats: Stats,
     /// The launch plan the case ran under (compact description).
     pub plan: String,
+    /// Effective SIMD lane width the case's inner kernels ran at
+    /// ([`crate::stencil::plan::Lanes::tag`] after clamping to host
+    /// capability and `STENCILAX_FORCE_SCALAR`) — every case carries it
+    /// so bench records are comparable across lane-width tunings.
+    pub lanes: String,
     /// Whether the plan came from the tuned plan cache.
     pub tuned: bool,
     /// Case-specific extra keys merged into the JSON record (the service
@@ -71,12 +76,20 @@ impl BenchResult {
         obj.insert("elems".into(), Json::num(self.elems));
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
         obj.insert("plan".into(), Json::str(self.plan.clone()));
+        obj.insert("lanes".into(), Json::str(self.lanes.clone()));
         obj.insert("tuned".into(), Json::Bool(self.tuned));
         for (k, v) in &self.extra {
             obj.insert(k.clone(), v.clone());
         }
         Json::Obj(obj)
     }
+}
+
+/// Lane tag of the host's effective default lane width — what the
+/// aggregate service/daemon cases run at (their per-job default plans
+/// request the host maximum, clamped by `STENCILAX_FORCE_SCALAR`).
+pub fn effective_lane_tag() -> String {
+    crate::stencil::simd::effective(crate::stencil::simd::max_lanes()).tag().into()
 }
 
 /// Resolve the launch plan for one case: the tuned entry for
@@ -106,6 +119,7 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
                 elems: elems as f64,
                 stats,
                 plan: plan.describe(),
+                lanes: crate::stencil::simd::effective(plan.lanes).tag().into(),
                 tuned,
                 extra: Vec::new(),
             });
@@ -238,6 +252,7 @@ mod tests {
                 elems: 3.0 * 4096.0,
                 stats: Stats::from_samples(vec![0.5, 0.25, 1.0]),
                 plan: LaunchPlan::default().describe(),
+                lanes: "scalar".into(),
                 tuned: false,
                 extra: Vec::new(),
             },
@@ -247,6 +262,7 @@ mod tests {
                 elems: (1 << 20) as f64,
                 stats: Stats::from_samples(vec![2e-3]),
                 plan: "rows16 t4 fused chunk8192".into(),
+                lanes: "l4".into(),
                 tuned: true,
                 extra: vec![("scaling_vs_single".into(), Json::num(1.75))],
             },
@@ -266,6 +282,9 @@ mod tests {
         assert_eq!(cases[1].req_u64("iters").unwrap(), 1);
         assert_eq!(cases[1].req_str("plan").unwrap(), "rows16 t4 fused chunk8192");
         assert_eq!(cases[1].get("tuned").unwrap().as_bool(), Some(true));
+        // every case carries its effective lane width (CI validates this)
+        assert_eq!(cases[0].req_str("lanes").unwrap(), "scalar");
+        assert_eq!(cases[1].req_str("lanes").unwrap(), "l4");
         // case-specific extras are merged into the record
         assert_eq!(cases[1].req_f64("scaling_vs_single").unwrap(), 1.75);
         assert!(cases[0].get("scaling_vs_single").is_none());
@@ -322,6 +341,7 @@ mod tests {
             elems: 4096.0,
             stats: Stats::from_samples(vec![1e-4, 2e-4, 3e-4]),
             plan: LaunchPlan::default().describe(),
+            lanes: "scalar".into(),
             tuned: false,
             extra: Vec::new(),
         }];

@@ -27,7 +27,7 @@ pub use server::{serve_socket, serve_stream, DaemonOpts};
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::bench::BenchResult;
+use crate::coordinator::bench::{effective_lane_tag, BenchResult};
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::plans::PlanCache;
 use crate::coordinator::service::{admit, clamp_shards, JobSpec, SessionResult};
@@ -85,6 +85,9 @@ pub fn bench_case(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         // the midpoint median; the extras carry interpolated p50/p95)
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("shards{shards} t{budget}"),
+        // aggregate case: jobs run under default heuristics, whose lane
+        // width is the effective host maximum
+        lanes: effective_lane_tag(),
         tuned: results.iter().any(|r| r.tuned),
         extra: vec![
             ("sessions".into(), Json::num(results.len() as f64)),
@@ -191,6 +194,7 @@ pub fn bench_case_mixed(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         elems,
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("sched-vs-fifo shards{shards} t{budget}"),
+        lanes: effective_lane_tag(),
         tuned: sched.iter().any(|r| r.tuned),
         extra: vec![
             ("sessions".into(), Json::num(sched.len() as f64)),
@@ -316,6 +320,7 @@ pub fn bench_case_chaos(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         elems,
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("inject {}", plan.describe()),
+        lanes: effective_lane_tag(),
         tuned: chaos.results.iter().any(|r| r.tuned),
         extra: vec![
             ("sessions".into(), Json::num(specs.len() as f64)),

@@ -34,7 +34,8 @@ use crate::model::specs::{spec, Gpu};
 use crate::sim::kernel::{Caching, KernelProfile};
 use crate::sim::workload::{NativeInstance, Workload};
 use crate::sim::workloads::{self, Tile};
-use crate::stencil::plan::{BlockShape, LaunchPlan, WorkspaceStrategy, DEFAULT_CHUNK};
+use crate::stencil::plan::{BlockShape, Lanes, LaunchPlan, WorkspaceStrategy, DEFAULT_CHUNK};
+use crate::stencil::simd;
 use crate::util::bench::{Bencher, Stats};
 use crate::util::json::Json;
 use crate::util::par;
@@ -56,6 +57,11 @@ pub const PRUNE_KEEP: usize = 8;
 /// actually live — enumerating no-op variants would persist a
 /// timing-noise "winner". `include_unfused` adds the fusion-off
 /// candidate (meaningful for MHD, whose unfused reference path exists).
+/// Every lane width ([`Lanes`]) is enumerated on the default
+/// decomposition for every sweep kind — vectorization is intra-row, so
+/// it is live even for the single-row case — except under
+/// `STENCILAX_FORCE_SCALAR`, where dispatch pins every width to the
+/// scalar path and the variants would be timing-noise duplicates.
 /// The default plan is always element 0; the list is deduplicated and
 /// deterministic.
 pub fn candidate_plans(
@@ -88,8 +94,16 @@ pub fn candidate_plans(
         push(LaunchPlan { block: BlockShape::Serial, ..base }, &mut out);
         push(LaunchPlan { workspace: WorkspaceStrategy::Fresh, ..base }, &mut out);
     } else {
-        // single-row sweep: only the workspace strategy is live
+        // single-row sweep: only the workspace strategy is live (plus the
+        // lane width below — vectorization is intra-row)
         push(LaunchPlan { workspace: WorkspaceStrategy::Fresh, ..base }, &mut out);
+    }
+    if !simd::force_scalar() {
+        // lane-width axis on the default decomposition: every width is
+        // portable and bit-identical, so measurement alone decides
+        for lanes in Lanes::ALL {
+            push(LaunchPlan { lanes, ..base }, &mut out);
+        }
     }
     if include_unfused {
         push(LaunchPlan { fused: false, ..base }, &mut out);
@@ -167,21 +181,23 @@ fn sweep_cost(
         blocks,
         threads: threads.min(blocks),
         halo_bytes_per_block: halo,
+        lane_width: plan.lanes.width(),
     }
 }
 
 /// Synthetic tile key for memoizing host predictions in the existing
 /// [`PredictionCache`]. The prediction is a pure function of the
-/// [`SweepCost`] (bytes/flops/halo are fixed per search key; fusion is
-/// the only plan knob that rescales them), so the key is exactly the
-/// cost's decomposition discriminants: plans with identical cost share a
-/// slot (their predictions are equal by construction), distinct costs
-/// get distinct keys.
+/// [`SweepCost`] (bytes/flops/halo are fixed per search key; fusion and
+/// lane width are the only plan knobs that rescale them), so the key is
+/// exactly the cost's decomposition discriminants: plans with identical
+/// cost share a slot (their predictions are equal by construction),
+/// distinct costs get distinct keys. Lane width (1..=8) packs into `tz`
+/// above the fusion bit.
 fn plan_cache_tile(cost: &SweepCost, plan: &LaunchPlan) -> Tile {
     Tile {
         tx: cost.blocks.min(1 << 20) as u32 + 1,
         ty: cost.threads.min(1 << 20) as u32 + 1,
-        tz: plan.fused as u32,
+        tz: plan.fused as u32 | ((cost.lane_width.min(255) as u32) << 1),
     }
 }
 
@@ -564,10 +580,23 @@ mod tests {
         let mhd = candidate_plans(&[48, 48, 48], threads, false, true);
         assert!(mhd.iter().any(|p| !p.fused));
         // a 1-D *grid* sweep (single interior row, not chunked) has no
-        // live decomposition axis: only the workspace knob remains
+        // live decomposition axis: the workspace knob and the intra-row
+        // lane-width axis remain
         let single_row = candidate_plans(&[1 << 20], threads, false, false);
-        assert_eq!(single_row.len(), 2, "{single_row:?}");
+        let lane_variants = if simd::force_scalar() { 0 } else { Lanes::ALL.len() - 1 };
+        assert_eq!(single_row.len(), 2 + lane_variants, "{single_row:?}");
         assert!(single_row.iter().all(|p| p.block == grid[0].block && p.chunk == DEFAULT_CHUNK));
+        // the lane-width axis is searched on every sweep kind (unless
+        // dispatch is pinned scalar, where the variants would be no-ops)
+        for plans in [&grid, &flat, &mhd, &single_row] {
+            if simd::force_scalar() {
+                assert!(plans.iter().all(|p| p.lanes == Lanes::Scalar), "{plans:?}");
+            } else {
+                for lanes in Lanes::ALL {
+                    assert!(plans.iter().any(|p| p.lanes == lanes), "{lanes:?} missing");
+                }
+            }
+        }
         for plans in [&grid, &flat, &mhd, &single_row] {
             let mut seen = plans.clone();
             seen.dedup();

@@ -24,12 +24,23 @@ pub const PLAN_SCHEMA: &str = "stencilax-plans/1";
 pub const PLAN_CACHE_FILE: &str = "plan_cache.json";
 
 /// Coarse host identity: plans tuned on one machine shape must not be
-/// applied on another. OS + ISA + logical CPU count is deliberately
-/// coarse — CI runners of the same class share tuning, heterogeneous
-/// machines do not.
+/// applied on another. OS + ISA + logical CPU count + SIMD feature tag
+/// is deliberately coarse — CI runners of the same class share tuning,
+/// heterogeneous machines do not. The feature tag
+/// ([`crate::stencil::simd::feature_tag`]) matters because the winning
+/// lane width is a plan dimension: a plan tuned at `l8` on an AVX-512
+/// box would mispredict on an SSE2 box of the same core count, and a
+/// forced-scalar run (`STENCILAX_FORCE_SCALAR`) must never reuse — or
+/// pollute — a vector-tuned cache.
 pub fn host_fingerprint() -> String {
     let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    format!("{}-{}-{}cpu", std::env::consts::OS, std::env::consts::ARCH, cpus)
+    format!(
+        "{}-{}-{}cpu-{}",
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+        cpus,
+        crate::stencil::simd::feature_tag()
+    )
 }
 
 /// One tuned winner: the plan plus the throughputs that justified it.
@@ -336,6 +347,35 @@ mod tests {
         assert!(PlanCache::load_if_exists(&std::env::temp_dir().join("nope-nope"))
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn fingerprint_carries_cpu_feature_tag_and_scopes_lookups() {
+        // Regression (ISSUE-8 satellite): the fingerprint must embed the
+        // SIMD feature tag so lane-width winners never cross CPU feature
+        // sets. A cache entry identical in OS/arch/core count but tuned
+        // under a different feature tag must miss.
+        let fp = host_fingerprint();
+        let tag = crate::stencil::simd::feature_tag();
+        assert!(!tag.is_empty());
+        assert!(
+            fp.ends_with(&format!("-{tag}")),
+            "fingerprint {fp:?} must end with feature tag {tag:?}"
+        );
+
+        let mut cache = PlanCache::new();
+        let mut stale = entry("diffusion2d", 4);
+        // same host shape, pre-SIMD-era fingerprint (no feature tag)
+        stale.host = fp.trim_end_matches(&format!("-{tag}")).to_string();
+        assert_ne!(stale.host, fp);
+        cache.insert(stale);
+        assert!(
+            cache.lookup("diffusion2d", &[512, 512], 4).is_none(),
+            "entry tuned under another feature set must not be reused"
+        );
+        // and an entry under the full current fingerprint hits
+        cache.insert(entry("diffusion2d", 4));
+        assert!(cache.lookup("diffusion2d", &[512, 512], 4).is_some());
     }
 
     #[test]

@@ -1050,7 +1050,7 @@ pub fn bench_cases(
     smoke: bool,
     plans: Option<&PlanCache>,
 ) -> Vec<crate::coordinator::bench::BenchResult> {
-    use crate::coordinator::bench::BenchResult;
+    use crate::coordinator::bench::{effective_lane_tag, BenchResult};
     use crate::sim::workload::bench_sizes::{pick, DIFFUSION2D_N};
     use crate::util::bench::{black_box, Bencher};
 
@@ -1093,6 +1093,7 @@ pub fn bench_cases(
             elems,
             stats,
             plan: format!("shards{shards} t{budget}"),
+            lanes: effective_lane_tag(),
             tuned,
             extra: vec![
                 ("sessions".into(), Json::num(sessions as f64)),

@@ -322,13 +322,14 @@ threads/shards for the service budgets)",
             cache.len(),
             host_fingerprint()
         ),
-        &["workload", "shape", "budget", "host", "plan", "default", "tuned", "differs"],
+        &["workload", "shape", "budget", "lanes", "host", "plan", "default", "tuned", "differs"],
     );
     for e in cache.iter() {
         t.row(vec![
             e.workload.clone(),
             format!("{:?}", e.shape),
             format!("t{}", e.threads),
+            e.plan.lanes.tag().to_string(),
             e.host.clone(),
             e.plan.describe(),
             format!("{:.1} Me/s", e.default_melem_per_s),
@@ -339,11 +340,12 @@ threads/shards for the service budgets)",
     println!("{}", t.render());
     if let Some(cal) = &cache.calibration {
         println!(
-            "calibration: bw {:.1} GiB/s, {:.2} GFLOP/s/thread, {:.2} us/block; \
-model error {:.2} -> {:.2} ({} points)",
+            "calibration: bw {:.1} GiB/s, {:.2} GFLOP/s/thread, {:.2} us/block, \
+simd_eff {:.2}; model error {:.2} -> {:.2} ({} points)",
             cal.model.bw_gibs,
             cal.model.gflops_per_thread,
             cal.model.block_overhead_us,
+            cal.model.simd_eff,
             cal.err_before,
             cal.err_after,
             cal.points,

@@ -4,8 +4,9 @@
 //! Table 1 specs; the native engine runs on the *host* CPU, whose
 //! effective bandwidth and dispatch latency no table provides. This module
 //! closes that gap the way the paper closes it for GPUs (§5.2: measure,
-//! then calibrate): a three-coefficient binding-resource [`HostModel`]
-//! predicts a sweep's time from its memory traffic, arithmetic, and block
+//! then calibrate): a four-coefficient binding-resource [`HostModel`]
+//! predicts a sweep's time from its memory traffic, arithmetic, SIMD lane
+//! width, and block
 //! decomposition, and [`fit`] refits the coefficients from the empirical
 //! tuner's measurements (`coordinator::empirical`), reporting
 //! predicted-vs-measured error before and after. The fitted coefficients
@@ -13,7 +14,7 @@
 //! with a model the machine has already corrected — the closed loop the
 //! ISSUE-3 tentpole asks for.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::model::specs::GIB;
 use crate::util::json::Json;
@@ -33,6 +34,10 @@ pub struct SweepCost {
     /// Extra halo bytes re-read per block boundary (consecutive-row
     /// blocks re-load the y/z halo of their first rows).
     pub halo_bytes_per_block: f64,
+    /// SIMD lane width of the plan's inner kernels (1 = scalar reference;
+    /// see [`crate::stencil::plan::Lanes`]). Scales arithmetic throughput
+    /// through the [`HostModel::simd_eff`] coefficient.
+    pub lane_width: usize,
 }
 
 /// Binding-resource host model, the CPU analogue of
@@ -47,6 +52,13 @@ pub struct HostModel {
     /// Per-block dispatch/steal latency, microseconds — the latency
     /// coefficient.
     pub block_overhead_us: f64,
+    /// Vector-throughput coefficient: marginal efficiency of each SIMD
+    /// lane beyond the first, in [0, 1]. A plan at lane width `w`
+    /// multiplies arithmetic throughput by `1 + simd_eff * (w - 1)` —
+    /// `simd_eff = 1` is perfect vector scaling, `0` means lanes buy
+    /// nothing (e.g. a bandwidth-starved host). Refit from lane-width
+    /// sweep measurements like the other coefficients.
+    pub simd_eff: f64,
 }
 
 impl HostModel {
@@ -54,19 +66,21 @@ impl HostModel {
     /// from measurements on the first tune run, and subsequent runs load
     /// the calibrated coefficients from the plan cache.
     pub fn seed() -> HostModel {
-        HostModel { bw_gibs: 16.0, gflops_per_thread: 2.0, block_overhead_us: 2.0 }
+        HostModel { bw_gibs: 16.0, gflops_per_thread: 2.0, block_overhead_us: 2.0, simd_eff: 0.5 }
     }
 
     /// Predicted sweep seconds. Bandwidth is shared across threads;
-    /// arithmetic scales with the threads that can actually be busy; the
-    /// last wave of blocks may be partially filled (load imbalance); every
-    /// block pays a dispatch latency.
+    /// arithmetic scales with the threads that can actually be busy and
+    /// with the plan's SIMD lane width (discounted by [`Self::simd_eff`]);
+    /// the last wave of blocks may be partially filled (load imbalance);
+    /// every block pays a dispatch latency.
     pub fn predict(&self, c: &SweepCost) -> f64 {
         let blocks = c.blocks.max(1) as f64;
         let threads = c.threads.max(1).min(c.blocks.max(1)) as f64;
         let bytes = c.bytes + blocks * c.halo_bytes_per_block;
         let t_mem = bytes / (self.bw_gibs * GIB);
-        let t_flop = c.flops / (self.gflops_per_thread * 1e9 * threads);
+        let lane_boost = 1.0 + self.simd_eff * (c.lane_width.max(1) - 1) as f64;
+        let t_flop = c.flops / (self.gflops_per_thread * 1e9 * threads * lane_boost);
         let waves = (blocks / threads).ceil();
         let imbalance = waves * threads / blocks;
         t_mem.max(t_flop) * imbalance + blocks * self.block_overhead_us * 1e-6
@@ -77,14 +91,24 @@ impl HostModel {
             ("bw_gibs", Json::num(self.bw_gibs)),
             ("gflops_per_thread", Json::num(self.gflops_per_thread)),
             ("block_overhead_us", Json::num(self.block_overhead_us)),
+            ("simd_eff", Json::num(self.simd_eff)),
         ])
     }
 
     pub fn from_json(j: &Json) -> Result<HostModel> {
+        // `simd_eff` is absent from pre-SIMD calibrations: those were fit
+        // against scalar-only measurements (every lane_width = 1, where
+        // the coefficient is inert), so they load with the seed value and
+        // the next lane-width sweep refits it.
+        let simd_eff = match j.get("simd_eff") {
+            None => HostModel::seed().simd_eff,
+            Some(v) => v.as_f64().context("key \"simd_eff\" not a number")?,
+        };
         Ok(HostModel {
             bw_gibs: j.req_f64("bw_gibs")?,
             gflops_per_thread: j.req_f64("gflops_per_thread")?,
             block_overhead_us: j.req_f64("block_overhead_us")?,
+            simd_eff,
         })
     }
 }
@@ -131,9 +155,13 @@ pub fn mean_abs_log_err(m: &HostModel, points: &[(SweepCost, f64)]) -> f64 {
         / points.len() as f64
 }
 
-/// Refit the three coefficients from measurements by cyclic coordinate
+/// Refit the four coefficients from measurements by cyclic coordinate
 /// descent on a shrinking multiplicative grid (deterministic; no RNG).
-/// Non-finite or non-positive measurements are discarded.
+/// Non-finite or non-positive measurements are discarded. `simd_eff` is
+/// only identifiable when the points span more than one lane width (the
+/// empirical tuner always measures the full width sweep); on scalar-only
+/// points it is inert in every prediction and descent leaves it at the
+/// seed.
 pub fn fit(points: &[(SweepCost, f64)], seed: HostModel) -> Calibration {
     let pts: Vec<(SweepCost, f64)> =
         points.iter().copied().filter(|(_, m)| m.is_finite() && *m > 0.0).collect();
@@ -145,14 +173,15 @@ pub fn fit(points: &[(SweepCost, f64)], seed: HostModel) -> Calibration {
     let mut best_err = err_before;
     let mut span = 16.0f64;
     for _round in 0..14 {
-        for coeff in 0..3 {
+        for coeff in 0..4 {
             let base = best;
             for &f in &[1.0 / span, 1.0 / span.sqrt(), span.sqrt(), span] {
                 let mut m = base;
                 match coeff {
                     0 => m.bw_gibs = (base.bw_gibs * f).clamp(0.25, 8192.0),
                     1 => m.gflops_per_thread = (base.gflops_per_thread * f).clamp(0.01, 8192.0),
-                    _ => m.block_overhead_us = (base.block_overhead_us * f).clamp(0.01, 1e5),
+                    2 => m.block_overhead_us = (base.block_overhead_us * f).clamp(0.01, 1e5),
+                    _ => m.simd_eff = (base.simd_eff * f).clamp(0.02, 1.0),
                 }
                 let e = mean_abs_log_err(&m, &pts);
                 if e < best_err {
@@ -172,17 +201,21 @@ mod tests {
 
     fn costs() -> Vec<SweepCost> {
         let mut out = Vec::new();
-        // both regimes, so bandwidth AND throughput are identifiable
+        // both regimes, so bandwidth AND throughput are identifiable;
+        // lane widths 1 and 4, so simd_eff is identifiable too
         for &flops_per_byte in &[0.05, 3.0] {
             for &bytes in &[4e6, 32e6, 256e6] {
                 for &blocks in &[1usize, 8, 64, 512] {
-                    out.push(SweepCost {
-                        bytes,
-                        flops: bytes * flops_per_byte,
-                        blocks,
-                        threads: 4,
-                        halo_bytes_per_block: 4096.0,
-                    });
+                    for &lane_width in &[1usize, 4] {
+                        out.push(SweepCost {
+                            bytes,
+                            flops: bytes * flops_per_byte,
+                            blocks,
+                            threads: 4,
+                            halo_bytes_per_block: 4096.0,
+                            lane_width,
+                        });
+                    }
                 }
             }
         }
@@ -191,8 +224,12 @@ mod tests {
 
     #[test]
     fn fit_recovers_a_synthetic_model() {
-        let truth =
-            HostModel { bw_gibs: 24.0, gflops_per_thread: 4.0, block_overhead_us: 5.0 };
+        let truth = HostModel {
+            bw_gibs: 24.0,
+            gflops_per_thread: 4.0,
+            block_overhead_us: 5.0,
+            simd_eff: 0.7,
+        };
         let pts: Vec<(SweepCost, f64)> =
             costs().into_iter().map(|c| (c, truth.predict(&c))).collect();
         let cal = fit(&pts, HostModel::seed());
@@ -202,6 +239,47 @@ mod tests {
             (cal.model.bw_gibs / truth.bw_gibs).ln().abs() < 0.7,
             "bandwidth off: {cal:?}"
         );
+    }
+
+    #[test]
+    fn wider_lanes_speed_up_compute_bound_sweeps_only() {
+        let m = HostModel::seed();
+        let mk = |lane_width, flops| SweepCost {
+            bytes: 1e6,
+            flops,
+            blocks: 8,
+            threads: 4,
+            halo_bytes_per_block: 0.0,
+            lane_width,
+        };
+        // compute-bound: wider lanes strictly cheaper
+        let c1 = m.predict(&mk(1, 1e9));
+        let c4 = m.predict(&mk(4, 1e9));
+        let c8 = m.predict(&mk(8, 1e9));
+        assert!(c4 < c1 && c8 < c4, "{c1} {c4} {c8}");
+        // the boost factor is 1 + simd_eff * (w - 1) on t_flop
+        // memory-bound: lanes change nothing (t_mem binds)
+        let mb1 = m.predict(&mk(1, 1e3));
+        let mb8 = m.predict(&mk(8, 1e3));
+        assert_eq!(mb1, mb8);
+    }
+
+    #[test]
+    fn model_json_without_simd_eff_loads_seed_coefficient() {
+        // pre-SIMD calibration blobs carry only the three original
+        // coefficients; they must still parse (with the seed simd_eff)
+        let j = Json::parse(
+            r#"{"bw_gibs":20.0,"gflops_per_thread":3.0,"block_overhead_us":1.0}"#,
+        )
+        .unwrap();
+        let m = HostModel::from_json(&j).unwrap();
+        assert_eq!(m.bw_gibs, 20.0);
+        assert_eq!(m.simd_eff, HostModel::seed().simd_eff);
+        // and a full roundtrip preserves the fitted value
+        let m2 = HostModel { simd_eff: 0.9, ..m };
+        let back = HostModel::from_json(&Json::parse(&m2.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, m2);
     }
 
     #[test]
@@ -232,6 +310,7 @@ mod tests {
             blocks,
             threads: 4,
             halo_bytes_per_block: 0.0,
+            lane_width: 1,
         };
         // 5 blocks on 4 threads: two waves, 37.5% idle; 8 blocks: balanced
         assert!(m.predict(&mk(5)) > m.predict(&mk(8)));
@@ -246,6 +325,7 @@ mod tests {
             blocks,
             threads: 4,
             halo_bytes_per_block: 0.0,
+            lane_width: 1,
         };
         assert!(m.predict(&mk(4096)) > m.predict(&mk(16)));
     }
@@ -253,7 +333,12 @@ mod tests {
     #[test]
     fn calibration_json_roundtrips() {
         let cal = Calibration {
-            model: HostModel { bw_gibs: 12.5, gflops_per_thread: 3.25, block_overhead_us: 1.5 },
+            model: HostModel {
+                bw_gibs: 12.5,
+                gflops_per_thread: 3.25,
+                block_overhead_us: 1.5,
+                simd_eff: 0.4,
+            },
             err_before: 0.8,
             err_after: 0.1,
             points: 42,

@@ -9,6 +9,7 @@
 
 use super::grid::Grid;
 use super::plan::LaunchPlan;
+use super::simd;
 
 /// 1-D cross-correlation of a padded input; `taps.len() == 2r+1`.
 ///
@@ -41,19 +42,30 @@ pub fn xcorr1d_plan(plan: &LaunchPlan, fpad: &[f64], taps: &[f64]) -> Vec<f64> {
 /// Chunks are written in place through the persistent pool (§Perf/L3-5):
 /// no per-chunk buffers, no thread spawns per call. The chunk length
 /// (historically a fixed 8192) is now `plan.chunk` — a tunable.
+///
+/// SIMD: `plan.lanes` selects between this scalar reference loop and the
+/// register-blocked microkernel ([`simd::xcorr_row`]), which reproduces
+/// the same tap-major per-element accumulation order bit for bit.
 pub fn xcorr1d_into(plan: &LaunchPlan, fpad: &[f64], taps: &[f64], out: &mut [f64]) {
     assert!(taps.len() % 2 == 1, "tap count must be odd");
     let n = fpad.len() + 1 - taps.len();
     assert_eq!(out.len(), n, "output length mismatch");
     let chunk = plan.chunk.max(1);
+    let lanes = simd::effective(plan.lanes);
     crate::stencil::exec::par_chunks_mut_plan(plan, out, |c, buf| {
         let lo = c * chunk;
-        buf.fill(0.0);
-        for (j, &g) in taps.iter().enumerate() {
-            let src = &fpad[lo + j..lo + buf.len() + j];
-            for (o, &x) in buf.iter_mut().zip(src) {
-                *o += g * x;
+        if lanes.is_scalar() {
+            // reference path: accumulate tap-major into the output chunk
+            buf.fill(0.0);
+            for (j, &g) in taps.iter().enumerate() {
+                let src = &fpad[lo + j..lo + buf.len() + j];
+                for (o, &x) in buf.iter_mut().zip(src) {
+                    *o += g * x;
+                }
             }
+        } else {
+            let win = &fpad[lo..lo + buf.len() + taps.len() - 1];
+            simd::xcorr_row(lanes, buf, win, taps);
         }
     });
 }
@@ -111,7 +123,34 @@ pub fn xcorr_dense_into_plan(
     let data = input.data();
     let nx = input.nx;
 
+    // Zero-pruned kernel taps (prune zeros like Astaroth's codegen), in
+    // the reference's (dz, dy, dx) accumulation order.
+    let nonzero = kernel.iter().filter(|&&g| g != 0.0).count();
+    let lanes = simd::effective(plan.lanes);
+    let vector = !lanes.is_scalar() && nonzero <= simd::MAX_TAPS;
+
     crate::stencil::exec::par_fill_rows_plan(plan, out, |j, k, dst, _ws| {
+        if vector {
+            // absolute row-start offset of each pruned tap
+            let mut taps = simd::TapList::new();
+            for dz in 0..kz {
+                for dy in 0..ky {
+                    for dx in 0..kx {
+                        let g = kernel[dx + kx * (dy + ky * dz)];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        let pi0 = r + 0 - rx + dx;
+                        let pj = r + j - ry + dy;
+                        let pk = r + k - rz + dz;
+                        let ok = taps.push(pi0 + px * (pj + py * pk), g);
+                        debug_assert!(ok);
+                    }
+                }
+            }
+            simd::taps_fill_row(lanes, dst, data, taps.taps());
+            return;
+        }
         dst.fill(0.0);
         for dz in 0..kz {
             for dy in 0..ky {
@@ -170,24 +209,48 @@ mod tests {
 
     #[test]
     fn xcorr1d_plan_chunks_match_default_bitwise() {
-        use crate::stencil::plan::{BlockShape, LaunchPlan};
+        use crate::stencil::plan::{BlockShape, Lanes, LaunchPlan};
         let mut fpad = vec![0.0f64; 5000 + 6];
         for (i, v) in fpad.iter_mut().enumerate() {
             *v = ((i * 37) % 101) as f64 - 50.0;
         }
         let taps = [0.1, -0.2, 0.4, 1.0, 0.4, -0.2, 0.1];
         let want = xcorr1d(&fpad, &taps);
-        for plan in [
+        let mut plans = vec![
             LaunchPlan { chunk: 64, threads: 2, ..LaunchPlan::default() },
             LaunchPlan { chunk: 100_000, ..LaunchPlan::default() },
             LaunchPlan { block: BlockShape::Serial, chunk: 512, ..LaunchPlan::default() },
-        ] {
+        ];
+        // every lane width is bit-identical to the scalar reference,
+        // including odd chunk lengths that exercise the vector tails
+        for lanes in Lanes::ALL {
+            plans.push(LaunchPlan { lanes, ..LaunchPlan::default() });
+            plans.push(LaunchPlan { lanes, chunk: 37, ..LaunchPlan::default() });
+        }
+        for plan in plans {
             assert_eq!(xcorr1d_plan(&plan, &fpad, &taps), want, "{plan:?}");
         }
         // the into-form reuses a dirty buffer and must still agree
         let mut out = vec![7.0f64; want.len()];
         xcorr1d_into(&LaunchPlan { chunk: 333, ..LaunchPlan::default() }, &fpad, &taps, &mut out);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn dense_lane_widths_match_scalar_bitwise() {
+        use crate::stencil::plan::{Lanes, LaunchPlan};
+        let mut g = Grid::from_fn(&[13, 9, 5], 2, |i, j, k| ((i * 7 + j * 5 + k * 3) % 23) as f64);
+        g.fill_ghosts(Boundary::Periodic);
+        let (kern, kx, ky, kz) = laplacian_cross_kernel(3, 2, 0.21);
+        let scalar_plan = LaunchPlan { lanes: Lanes::Scalar, ..LaunchPlan::default() };
+        let mut want = Grid::new(13, 9, 5, 2);
+        xcorr_dense_into_plan(&scalar_plan, &g, &kern, kx, ky, kz, &mut want);
+        for lanes in Lanes::ALL {
+            let plan = LaunchPlan { lanes, ..LaunchPlan::default() };
+            let mut got = Grid::new(13, 9, 5, 2);
+            xcorr_dense_into_plan(&plan, &g, &kern, kx, ky, kz, &mut got);
+            assert_eq!(got.interior_to_vec(), want.interior_to_vec(), "{lanes:?}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::coeffs::central_weights;
 use super::exec::{self, DoubleBuffer};
 use super::grid::{Boundary, Grid};
 use super::plan::LaunchPlan;
+use super::simd;
 
 /// Diffusion stepper configuration.
 #[derive(Debug, Clone)]
@@ -65,10 +66,13 @@ impl Diffusion {
     }
 
     /// [`Self::step_into`] under an explicit [`LaunchPlan`]: the row
-    /// blocking, thread budget, and workspace strategy all come from the
-    /// plan (the empirical tuner's measurement hook). Results are
-    /// bit-identical across plans — blocking only reassigns rows to
-    /// threads (pinned by `rust/tests/plan_parity.rs`).
+    /// blocking, thread budget, workspace strategy, and SIMD lane width
+    /// all come from the plan (the empirical tuner's measurement hook).
+    /// Results are bit-identical across plans — blocking only reassigns
+    /// rows to threads, and the register-blocked vector path
+    /// ([`simd::affine_taps_row`]) reproduces the scalar reference's
+    /// per-element accumulation order exactly (pinned by
+    /// `rust/tests/plan_parity.rs`).
     pub fn step_into_plan(
         &self,
         plan: &LaunchPlan,
@@ -94,6 +98,31 @@ impl Diffusion {
         let c2 = &self.c2;
         // axis strides in padded storage
         let strides = [1usize, px, px * py];
+
+        let lanes = simd::effective(plan.lanes);
+        let pruned = dim * c2.iter().filter(|&&c| c != 0.0).count();
+        if !lanes.is_scalar() && pruned <= simd::MAX_TAPS {
+            // Vector path: the Laplacian lives in register accumulators,
+            // so there is no workspace row and each tap's source row is
+            // streamed exactly once per block.
+            exec::par_fill_rows_plan(plan, dst, |j, k, out, _ws| {
+                let base = r + px * (j + r + py * (k + r));
+                let mut list = simd::TapList::new();
+                for axis in 0..dim {
+                    let st = strides[axis];
+                    for t in 0..taps {
+                        let c = c2[t];
+                        if c == 0.0 {
+                            continue;
+                        }
+                        let ok = list.push(base + t * st - rad * st, c);
+                        debug_assert!(ok);
+                    }
+                }
+                simd::affine_taps_row(lanes, out, &data[base..base + nx], data, list.taps(), s);
+            });
+            return;
+        }
 
         exec::par_fill_rows_plan(plan, dst, |j, k, out, ws| {
             let base = r + px * (j + r + py * (k + r));
@@ -234,7 +263,7 @@ mod tests {
 
     #[test]
     fn plan_variants_match_default_bitwise() {
-        use crate::stencil::plan::{BlockShape, LaunchPlan, WorkspaceStrategy};
+        use crate::stencil::plan::{BlockShape, Lanes, LaunchPlan, WorkspaceStrategy};
         let g0 = Grid::from_fn(&[20, 12], 2, |i, j, _| ((i * 13 + j * 7) % 17) as f64);
         let d = Diffusion::new(2, 0.8, 1.0, Boundary::Periodic);
         let dt = d.stable_dt(2);
@@ -242,11 +271,16 @@ mod tests {
         src.fill_ghosts(Boundary::Periodic);
         let mut want = Grid::new(20, 12, 1, 2);
         d.step_into(&src, &mut want, 2, dt);
-        for plan in [
+        let mut plans = vec![
             LaunchPlan { block: BlockShape::Serial, ..LaunchPlan::default() },
             LaunchPlan { block: BlockShape::Rows(3), threads: 2, ..LaunchPlan::default() },
             LaunchPlan { workspace: WorkspaceStrategy::Fresh, ..LaunchPlan::default() },
-        ] {
+        ];
+        // every lane width is bit-identical to the scalar reference
+        for lanes in Lanes::ALL {
+            plans.push(LaunchPlan { lanes, ..LaunchPlan::default() });
+        }
+        for plan in plans {
             let mut got = Grid::new(20, 12, 1, 2);
             d.step_into_plan(&plan, &src, &mut got, 2, dt);
             assert_eq!(got.interior_to_vec(), want.interior_to_vec(), "{plan:?}");

@@ -24,6 +24,14 @@
 //! * [`DoubleBuffer`] — the two-field storage that `step_into`-style APIs
 //!   ([`crate::stencil::diffusion::Diffusion::step_into`],
 //!   [`crate::stencil::mhd::MhdStepper`]) alternate between.
+//!
+//! The row closures handed to these dispatchers are where the
+//! register-blocked SIMD microkernels ([`crate::stencil::simd`]) run:
+//! rows are x-contiguous by construction, so the lane kernels get the
+//! contiguous loads they need, and a plan's lane width
+//! ([`crate::stencil::plan::Lanes`]) changes only what happens *inside*
+//! one row — the decomposition, workspace, and writer machinery here are
+//! width-agnostic.
 
 use std::cell::RefCell;
 

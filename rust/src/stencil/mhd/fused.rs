@@ -30,7 +30,8 @@
 use super::rhs::MhdRhs;
 use super::{MhdState, AX, LNRHO, NFIELDS, SS, UX};
 use crate::stencil::exec::{self, RowWriter};
-use crate::stencil::plan::LaunchPlan;
+use crate::stencil::plan::{Lanes, LaunchPlan};
+use crate::stencil::simd;
 
 // Row-workspace layout: `B_ROWS` rows of `nx` doubles per thread.
 const B_GLNRHO: usize = 0; // 3 rows: grad lnrho
@@ -169,6 +170,79 @@ fn gdiv_row(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lane-dispatching forms of the row helpers: `Lanes::Scalar` (or a tap
+// count beyond `simd::MAX_TAPS`) takes the scalar reference above; wider
+// plans take the register-blocked kernels in [`crate::stencil::simd`],
+// which reproduce the reference's per-element op order bit for bit (tap
+// sum from literal zero in index order, scale after the sum, Laplacian
+// grouped `(d2x + d2y) + d2z`, grad-div summed in field order). The
+// vector paths keep every accumulator in registers, so `tmp`/`tmp2` go
+// untouched.
+// ---------------------------------------------------------------------------
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn stencil_row_l(
+    lanes: Lanes,
+    dst: &mut [f64],
+    data: &[f64],
+    base: usize,
+    stride: usize,
+    rad: usize,
+    w: &[f64],
+    scale: f64,
+) {
+    if lanes.is_scalar() || w.len() > simd::MAX_TAPS {
+        stencil_row(dst, data, base, stride, rad, w, scale);
+    } else {
+        simd::stencil_row(lanes, dst, data, base, stride, rad, w, scale);
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn laplacian_row_l(
+    lanes: Lanes,
+    dst: &mut [f64],
+    tmp: &mut [f64],
+    data: &[f64],
+    base: usize,
+    strides: &[usize; 3],
+    rad: usize,
+    c2: &[f64],
+    inv_dx2: f64,
+) {
+    if lanes.is_scalar() || c2.len() > simd::MAX_TAPS {
+        laplacian_row(dst, tmp, data, base, strides, rad, c2, inv_dx2);
+    } else {
+        simd::laplacian_row(lanes, dst, data, base, strides, rad, c2, inv_dx2);
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn gdiv_row_l(
+    lanes: Lanes,
+    dst: &mut [f64],
+    tmp: &mut [f64],
+    tmp2: &mut [f64],
+    vec_data: &[&[f64]; 3],
+    i: usize,
+    base: usize,
+    strides: &[usize; 3],
+    rad: usize,
+    c1: &[f64],
+    c2: &[f64],
+    inv_dx: f64,
+) {
+    if lanes.is_scalar() || c1.len() > simd::MAX_TAPS || c2.len() > simd::MAX_TAPS {
+        gdiv_row(dst, tmp, tmp2, vec_data, i, base, strides, rad, c1, c2, inv_dx);
+    } else {
+        simd::gdiv_row(lanes, dst, vec_data, i, base, strides, rad, c1, c2, inv_dx);
+    }
+}
+
 /// One fused RK3 substep: read `src` (ghosts filled) and the scratch
 /// register `w`, write the updated fields into `dst` and the updated
 /// register into `w` in place. `alpha`/`beta` are the substep's 2N
@@ -187,9 +261,11 @@ pub fn substep_fused(
 }
 
 /// [`substep_fused`] under an explicit [`LaunchPlan`]: row blocking,
-/// thread budget, and workspace strategy come from the plan. The sweep is
-/// bit-identical across plans — blocking only reassigns rows to threads
-/// (pinned by `rust/tests/plan_parity.rs`).
+/// thread budget, workspace strategy, and SIMD lane width come from the
+/// plan. The sweep is bit-identical across plans — blocking only
+/// reassigns rows to threads, and the register-blocked vector kernels
+/// reproduce the scalar reference's per-element op order exactly (pinned
+/// by `rust/tests/plan_parity.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn substep_fused_plan(
     plan: &LaunchPlan,
@@ -233,6 +309,7 @@ pub fn substep_fused_plan(
 
     let ln_rho0 = p.rho0.ln();
     let temp0 = p.temp0();
+    let lanes = simd::effective(plan.lanes);
 
     exec::par_rows_plan(plan, ny, nz, |j, k, ws| {
         let base = r + px * ((j + r) + py * (k + r));
@@ -247,20 +324,103 @@ pub fn substep_fused_plan(
 
         // ---- linear part gamma: every stencil contraction, row-local ----
         for ax in 0..3 {
-            stencil_row(rowm!(B_GLNRHO + ax), sd[LNRHO], base, strides[ax], rad, c1, inv_dx);
-            stencil_row(rowm!(B_GSS + ax), sd[SS], base, strides[ax], rad, c1, inv_dx);
+            stencil_row_l(
+                lanes,
+                rowm!(B_GLNRHO + ax),
+                sd[LNRHO],
+                base,
+                strides[ax],
+                rad,
+                c1,
+                inv_dx,
+            );
+            stencil_row_l(lanes, rowm!(B_GSS + ax), sd[SS], base, strides[ax], rad, c1, inv_dx);
         }
-        laplacian_row(rowm!(B_LAP_LNRHO), tmp, sd[LNRHO], base, &strides, rad, c2, inv_dx2);
-        laplacian_row(rowm!(B_LAP_SS), tmp, sd[SS], base, &strides, rad, c2, inv_dx2);
+        laplacian_row_l(
+            lanes,
+            rowm!(B_LAP_LNRHO),
+            tmp,
+            sd[LNRHO],
+            base,
+            &strides,
+            rad,
+            c2,
+            inv_dx2,
+        );
+        laplacian_row_l(lanes, rowm!(B_LAP_SS), tmp, sd[SS], base, &strides, rad, c2, inv_dx2);
         for a in 0..3 {
             for b in 0..3 {
-                stencil_row(rowm!(B_DU + 3 * a + b), ud[a], base, strides[b], rad, c1, inv_dx);
-                stencil_row(rowm!(B_DA + 3 * a + b), ad[a], base, strides[b], rad, c1, inv_dx);
+                stencil_row_l(
+                    lanes,
+                    rowm!(B_DU + 3 * a + b),
+                    ud[a],
+                    base,
+                    strides[b],
+                    rad,
+                    c1,
+                    inv_dx,
+                );
+                stencil_row_l(
+                    lanes,
+                    rowm!(B_DA + 3 * a + b),
+                    ad[a],
+                    base,
+                    strides[b],
+                    rad,
+                    c1,
+                    inv_dx,
+                );
             }
-            laplacian_row(rowm!(B_LAP_U + a), tmp, ud[a], base, &strides, rad, c2, inv_dx2);
-            laplacian_row(rowm!(B_LAP_A + a), tmp, ad[a], base, &strides, rad, c2, inv_dx2);
-            gdiv_row(rowm!(B_GDIVU + a), tmp, tmp2, &ud, a, base, &strides, rad, c1, c2, inv_dx);
-            gdiv_row(rowm!(B_GDIVA + a), tmp, tmp2, &ad, a, base, &strides, rad, c1, c2, inv_dx);
+            laplacian_row_l(
+                lanes,
+                rowm!(B_LAP_U + a),
+                tmp,
+                ud[a],
+                base,
+                &strides,
+                rad,
+                c2,
+                inv_dx2,
+            );
+            laplacian_row_l(
+                lanes,
+                rowm!(B_LAP_A + a),
+                tmp,
+                ad[a],
+                base,
+                &strides,
+                rad,
+                c2,
+                inv_dx2,
+            );
+            gdiv_row_l(
+                lanes,
+                rowm!(B_GDIVU + a),
+                tmp,
+                tmp2,
+                &ud,
+                a,
+                base,
+                &strides,
+                rad,
+                c1,
+                c2,
+                inv_dx,
+            );
+            gdiv_row_l(
+                lanes,
+                rowm!(B_GDIVA + a),
+                tmp,
+                tmp2,
+                &ad,
+                a,
+                base,
+                &strides,
+                rad,
+                c1,
+                c2,
+                inv_dx,
+            );
         }
 
         // ---- nonlinear pointwise part phi + fused 2N update -------------

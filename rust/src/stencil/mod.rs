@@ -19,7 +19,8 @@
 //! zero heap allocation after warmup (EXPERIMENTS.md §Perf/L3-5..L3-8).
 //! Launch parameters are data, not constants: every hot path accepts a
 //! [`plan::LaunchPlan`] (row blocking, thread budget, fusion, chunking,
-//! workspace strategy), with the historical heuristics preserved as
+//! workspace strategy, SIMD lane width — the register-blocked vector
+//! microkernels live in [`simd`]), with the historical heuristics preserved as
 //! [`plan::LaunchPlan::default_for`] and the empirical autotuner
 //! (`coordinator::empirical`) searching the rest (DESIGN.md §11).
 
@@ -30,8 +31,9 @@ pub mod exec;
 pub mod grid;
 pub mod mhd;
 pub mod plan;
+pub mod simd;
 
 pub use coeffs::central_weights;
 pub use exec::DoubleBuffer;
 pub use grid::{Boundary, Grid};
-pub use plan::{BlockShape, LaunchPlan, WorkspaceStrategy};
+pub use plan::{BlockShape, Lanes, LaunchPlan, WorkspaceStrategy};

@@ -35,6 +35,63 @@ pub enum BlockShape {
     Serial,
 }
 
+/// SIMD lane width of the register-blocked inner kernels
+/// ([`super::simd`], DESIGN.md §16).
+///
+/// `Scalar` selects the original reference loops; `L2`/`L4`/`L8` select
+/// the vector microkernels with that many f64 accumulator lanes. Every
+/// width is portable (plain `[f64; N]` blocks — a width the hardware
+/// lacks just lowers to more registers) and bit-identical to the scalar
+/// reference, so lane width is purely a performance axis the empirical
+/// tuner searches; the host fingerprint (`coordinator::plans`) keeps a
+/// width tuned on one CPU from being *reused* on another.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Lanes {
+    /// The scalar reference path (also what `STENCILAX_FORCE_SCALAR=1`
+    /// pins every dispatch to).
+    Scalar,
+    /// 2-lane blocks (128-bit: SSE2 / NEON width).
+    L2,
+    /// 4-lane blocks (256-bit: AVX2 width).
+    L4,
+    /// 8-lane blocks (512-bit: AVX-512 width).
+    L8,
+}
+
+impl Lanes {
+    /// All widths, narrow to wide — the tuner's enumeration order.
+    pub const ALL: [Lanes; 4] = [Lanes::Scalar, Lanes::L2, Lanes::L4, Lanes::L8];
+
+    /// Accumulator lanes per block (1 for the scalar reference).
+    pub fn width(self) -> usize {
+        match self {
+            Lanes::Scalar => 1,
+            Lanes::L2 => 2,
+            Lanes::L4 => 4,
+            Lanes::L8 => 8,
+        }
+    }
+
+    /// Compact tag used in plan descriptions, JSON, and bench output.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Lanes::Scalar => "scalar",
+            Lanes::L2 => "l2",
+            Lanes::L4 => "l4",
+            Lanes::L8 => "l8",
+        }
+    }
+
+    /// Inverse of [`Self::tag`].
+    pub fn from_tag(s: &str) -> Option<Lanes> {
+        Lanes::ALL.into_iter().find(|l| l.tag() == s)
+    }
+
+    pub fn is_scalar(self) -> bool {
+        self == Lanes::Scalar
+    }
+}
+
 /// Scratch-memory policy for the per-row workspaces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkspaceStrategy {
@@ -69,6 +126,8 @@ pub struct LaunchPlan {
     pub chunk: usize,
     /// Scratch-memory policy.
     pub workspace: WorkspaceStrategy,
+    /// SIMD lane width of the inner kernels ([`super::simd`]).
+    pub lanes: Lanes,
 }
 
 impl Default for LaunchPlan {
@@ -80,7 +139,10 @@ impl Default for LaunchPlan {
 impl LaunchPlan {
     /// The engine's historical heuristics re-expressed as data: 4x block
     /// oversubscription, 8192-element 1-D chunks, fusion on, thread-local
-    /// workspaces. `shape` is the interior extents of the target problem
+    /// workspaces, and the host's hardware SIMD width for the inner
+    /// kernels (safe to default because every width is bit-identical to
+    /// the scalar reference; `STENCILAX_FORCE_SCALAR=1` pins it back to
+    /// scalar). `shape` is the interior extents of the target problem
     /// (reserved for shape-aware defaults; every knob is currently
     /// shape-independent, as the seed constants were); `threads` 0 defers
     /// to the environment at dispatch time.
@@ -92,6 +154,7 @@ impl LaunchPlan {
             fused: true,
             chunk: DEFAULT_CHUNK,
             workspace: WorkspaceStrategy::ThreadLocal,
+            lanes: super::simd::max_lanes(),
         }
     }
 
@@ -145,7 +208,7 @@ impl LaunchPlan {
     }
 
     /// Compact human-readable form for tables and reports, e.g.
-    /// `ov4 t0 fused chunk8192`.
+    /// `ov4 t0 fused chunk8192 l4`.
     pub fn describe(&self) -> String {
         let block = match self.block {
             BlockShape::Oversubscribe(f) => format!("ov{f}"),
@@ -157,10 +220,11 @@ impl LaunchPlan {
             WorkspaceStrategy::Fresh => " fresh-ws",
         };
         format!(
-            "{block} t{} {} chunk{}{ws}",
+            "{block} t{} {} chunk{} {}{ws}",
             self.threads,
             if self.fused { "fused" } else { "unfused" },
             self.chunk,
+            self.lanes.tag(),
         )
     }
 
@@ -183,6 +247,7 @@ impl LaunchPlan {
                     WorkspaceStrategy::Fresh => "fresh",
                 }),
             ),
+            ("lanes", Json::str(self.lanes.tag())),
         ])
     }
 
@@ -216,12 +281,26 @@ impl LaunchPlan {
             "fresh" => WorkspaceStrategy::Fresh,
             other => bail!("unknown workspace strategy {other:?}"),
         };
+        // `lanes` is absent from pre-SIMD caches, whose plans were tuned
+        // against the scalar-only engine — so absence *means* scalar, not
+        // "pick a default". A present-but-unknown value is rejected with
+        // the same strictness as the block factors above: no tuner emits
+        // one, so it must be a hand edit or a newer schema.
+        let lanes = match j.get("lanes") {
+            None => Lanes::Scalar,
+            Some(v) => {
+                let s = v.as_str().context("key \"lanes\" not a string")?;
+                Lanes::from_tag(s)
+                    .with_context(|| format!("unknown lane width {s:?} (want scalar|l2|l4|l8)"))?
+            }
+        };
         Ok(LaunchPlan {
             block,
             threads: j.req_u64("threads")? as usize,
             fused,
             chunk: (j.req_u64("chunk")? as usize).max(1),
             workspace,
+            lanes,
         })
     }
 }
@@ -292,11 +371,21 @@ mod tests {
 
     #[test]
     fn json_roundtrips_every_variant() {
-        let plans = [
+        let mut plans = vec![
             LaunchPlan::default(),
-            LaunchPlan { block: BlockShape::Rows(16), threads: 3, fused: false, chunk: 4096, workspace: WorkspaceStrategy::Fresh },
+            LaunchPlan {
+                block: BlockShape::Rows(16),
+                threads: 3,
+                fused: false,
+                chunk: 4096,
+                workspace: WorkspaceStrategy::Fresh,
+                lanes: Lanes::Scalar,
+            },
             LaunchPlan { block: BlockShape::Serial, threads: 1, ..LaunchPlan::default() },
         ];
+        for lanes in Lanes::ALL {
+            plans.push(LaunchPlan { lanes, ..LaunchPlan::default() });
+        }
         for p in plans {
             let j = p.to_json();
             let text = j.to_string_pretty();
@@ -337,10 +426,73 @@ mod tests {
     }
 
     #[test]
+    fn from_json_rejects_unknown_lanes() {
+        // satellite fix: an invalid lane width must fail loudly with a
+        // per-field error, not silently default to scalar
+        for lanes in ["l3", "L4", "wide", "16", ""] {
+            let j = Json::parse(&format!(
+                r#"{{"block":"serial","threads":1,"fused":true,"chunk":64,"workspace":"thread-local","lanes":"{lanes}"}}"#,
+            ))
+            .unwrap();
+            let err = LaunchPlan::from_json(&j).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("lane width"),
+                "lanes={lanes:?} err={err:#}"
+            );
+        }
+        // non-string lanes is a per-field type error
+        let j = Json::parse(
+            r#"{"block":"serial","threads":1,"fused":true,"chunk":64,"workspace":"thread-local","lanes":4}"#,
+        )
+        .unwrap();
+        let err = LaunchPlan::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("lanes"), "{err:#}");
+        // every tag a tuner can emit parses
+        for lanes in Lanes::ALL {
+            let j = Json::parse(&format!(
+                r#"{{"block":"serial","threads":1,"fused":true,"chunk":64,"workspace":"thread-local","lanes":"{}"}}"#,
+                lanes.tag(),
+            ))
+            .unwrap();
+            assert_eq!(LaunchPlan::from_json(&j).unwrap().lanes, lanes);
+        }
+    }
+
+    #[test]
+    fn missing_lanes_means_scalar_era_cache() {
+        // pre-SIMD plan caches carry no "lanes" key: their plans were
+        // tuned against the scalar-only engine, so they load as scalar
+        let j = Json::parse(
+            r#"{"block":"oversubscribe:4","threads":2,"fused":true,"chunk":8192,"workspace":"thread-local"}"#,
+        )
+        .unwrap();
+        assert_eq!(LaunchPlan::from_json(&j).unwrap().lanes, Lanes::Scalar);
+    }
+
+    #[test]
+    fn lanes_tags_roundtrip_and_widths_are_sane() {
+        for lanes in Lanes::ALL {
+            assert_eq!(Lanes::from_tag(lanes.tag()), Some(lanes));
+        }
+        assert_eq!(Lanes::Scalar.width(), 1);
+        assert_eq!(Lanes::L2.width(), 2);
+        assert_eq!(Lanes::L4.width(), 4);
+        assert_eq!(Lanes::L8.width(), 8);
+        assert!(Lanes::Scalar.is_scalar() && !Lanes::L4.is_scalar());
+        assert_eq!(Lanes::from_tag("l16"), None);
+    }
+
+    #[test]
     fn describe_is_compact_and_distinct() {
         let a = LaunchPlan::default().describe();
         let b = LaunchPlan { fused: false, ..LaunchPlan::default() }.describe();
         assert!(a.contains("ov4") && a.contains("fused"), "{a}");
         assert_ne!(a, b);
+        // lane width shows up and distinguishes plans
+        let s = LaunchPlan { lanes: Lanes::Scalar, ..LaunchPlan::default() };
+        let w = LaunchPlan { lanes: Lanes::L8, ..LaunchPlan::default() };
+        assert!(s.describe().contains("scalar"), "{}", s.describe());
+        assert!(w.describe().contains("l8"), "{}", w.describe());
+        assert_ne!(s.describe(), w.describe());
     }
 }

@@ -1,0 +1,810 @@
+//! Register-blocked vector microkernels for the hot inner loops
+//! (DESIGN.md §16).
+//!
+//! Every hot loop of the native engine — the diffusion Laplacian
+//! ([`super::diffusion`]), the xcorr taps ([`super::conv`]), and the ~60
+//! per-row stencil contractions of the fused MHD sweep
+//! ([`super::mhd::fused`]) — is a tap-major accumulation over x-contiguous
+//! rows. The scalar reference paths round-trip the accumulator row through
+//! L1 once per tap (a radius-3 3-D Laplacian makes 21 read-modify-write
+//! passes over the row); the kernels here keep a block of accumulators in
+//! registers, visit each tap once per block, and write the row once.
+//!
+//! ## Portability contract
+//!
+//! The CI toolchain is stable Rust, so `std::simd` (nightly) and
+//! `#[target_feature]`-gated `core::arch` intrinsics are out of reach
+//! without runtime-dispatch `unsafe`. Instead the kernels are written over
+//! fixed-size `[f64; N]` blocks with plain `a * b + c` arithmetic —
+//! exactly the shape LLVM's auto-vectorizer lowers to packed SIMD in
+//! release builds (verified against the compiled C mirror,
+//! `tools/perf_mirror_simd.c`). The same source is correct at any `N` on
+//! any architecture: a width the hardware lacks just lowers to more
+//! registers, so wide plans can never fault — the host fingerprint
+//! (`coordinator::plans`) merely keeps their *tuning* from being reused
+//! across hosts.
+//!
+//! `f64::mul_add` is deliberately **not** used: without a compile-time FMA
+//! target feature it lowers to a libm call (catastrophically slow), and
+//! with one it would change the rounding of every accumulation, breaking
+//! the bit-parity contract below.
+//!
+//! ## Bit-parity contract
+//!
+//! Every kernel reproduces the scalar reference's per-element operation
+//! sequence exactly: accumulators start from literal `0.0`, taps are added
+//! in index order with zero taps pruned identically, and scales apply
+//! after the tap sum. Register blocking only changes *which elements* are
+//! in flight together, never the op order within one element — so the
+//! vector paths are bit-identical to the scalar reference at every lane
+//! width (pinned by `rust/tests/plan_parity.rs`).
+//!
+//! ## Selection
+//!
+//! Lane width is a first-class [`LaunchPlan`](super::plan::LaunchPlan)
+//! axis ([`Lanes`]) searched by the empirical tuner; [`max_lanes`] seeds
+//! the default from CPU feature detection, and
+//! `STENCILAX_FORCE_SCALAR=1` pins every dispatch to the scalar reference
+//! (the CI cross-check configuration).
+
+use std::sync::OnceLock;
+
+use super::plan::Lanes;
+
+/// Capacity of a pruned tap list ([`TapList`]) and the widest tap count
+/// the row kernels accept; callers fall back to the scalar reference
+/// beyond it (radius 15 — far past any configured workload).
+pub const MAX_TAPS: usize = 32;
+
+/// Accumulator blocks per unrolled iteration: each main-loop step keeps
+/// `UNROLL` independent `[f64; N]` accumulators in flight so the FP add
+/// latency chain doesn't serialize the sweep.
+const UNROLL: usize = 4;
+
+// ---------------------------------------------------------------------------
+// CPU feature detection
+// ---------------------------------------------------------------------------
+
+/// Detected SIMD capability of the running host.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuSimd {
+    /// Compact feature tag for the host fingerprint (plan-cache scoping).
+    pub tag: &'static str,
+    /// Hardware f64 SIMD width expressed as the default lane plan.
+    pub max: Lanes,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> CpuSimd {
+    if is_x86_feature_detected!("avx512f") {
+        CpuSimd { tag: "avx512f", max: Lanes::L8 }
+    } else if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        CpuSimd { tag: "avx2fma", max: Lanes::L4 }
+    } else if is_x86_feature_detected!("avx2") {
+        CpuSimd { tag: "avx2", max: Lanes::L4 }
+    } else {
+        // x86_64 baseline always has 128-bit SSE2
+        CpuSimd { tag: "sse2", max: Lanes::L2 }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> CpuSimd {
+    // NEON is baseline on aarch64: 128-bit = 2 f64 lanes.
+    CpuSimd { tag: "neon", max: Lanes::L2 }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> CpuSimd {
+    CpuSimd { tag: "portable", max: Lanes::L2 }
+}
+
+/// Host SIMD capability, detected once per process.
+pub fn cpu() -> &'static CpuSimd {
+    static DETECTED: OnceLock<CpuSimd> = OnceLock::new();
+    DETECTED.get_or_init(detect)
+}
+
+/// `STENCILAX_FORCE_SCALAR=1|true|yes` pins every dispatch to the scalar
+/// reference path regardless of the plan — the CI cross-check
+/// configuration. Read once per process.
+pub fn force_scalar() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        matches!(
+            std::env::var("STENCILAX_FORCE_SCALAR").ok().as_deref(),
+            Some("1") | Some("true") | Some("yes")
+        )
+    })
+}
+
+/// CPU feature tag for the host fingerprint. Forced-scalar mode gets its
+/// own tag so plan caches tuned with live vector units are never reused
+/// under the pinned configuration (and vice versa).
+pub fn feature_tag() -> &'static str {
+    if force_scalar() {
+        "forced-scalar"
+    } else {
+        cpu().tag
+    }
+}
+
+/// The default lane width for this host: the hardware f64 SIMD width
+/// (scalar under [`force_scalar`]). Plans may still carry wider lanes —
+/// the kernels are portable at any width — but defaults and the tuner's
+/// seed start here.
+pub fn max_lanes() -> Lanes {
+    if force_scalar() {
+        Lanes::Scalar
+    } else {
+        cpu().max
+    }
+}
+
+/// The lane width a dispatch site should actually honor for `lanes`:
+/// identity normally, [`Lanes::Scalar`] under [`force_scalar`].
+pub fn effective(lanes: Lanes) -> Lanes {
+    if force_scalar() {
+        Lanes::Scalar
+    } else {
+        lanes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pruned tap lists
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity list of `(offset, coeff)` taps — stack-only, so the
+/// steady-state loops stay allocation-free (`rust/tests/alloc_free.rs`).
+#[derive(Clone, Copy)]
+pub struct TapList {
+    offs: [(usize, f64); MAX_TAPS],
+    len: usize,
+}
+
+impl TapList {
+    pub const fn new() -> TapList {
+        TapList { offs: [(0, 0.0); MAX_TAPS], len: 0 }
+    }
+
+    /// Append a tap; `false` on capacity overflow (caller falls back to
+    /// the scalar reference path).
+    #[inline]
+    pub fn push(&mut self, off: usize, c: f64) -> bool {
+        if self.len == MAX_TAPS {
+            return false;
+        }
+        self.offs[self.len] = (off, c);
+        self.len += 1;
+        true
+    }
+
+    #[inline]
+    pub fn taps(&self) -> &[(usize, f64)] {
+        &self.offs[..self.len]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for TapList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Build the pruned absolute-offset tap list of one stencil pass:
+/// `(base + t*stride - rad*stride, w[t])` for every nonzero tap, in index
+/// order (the reference order). `None` if `w` exceeds [`MAX_TAPS`].
+#[inline]
+fn stencil_taps(base: usize, stride: usize, rad: usize, w: &[f64]) -> Option<TapList> {
+    let mut list = TapList::new();
+    for (t, &c) in w.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        if !list.push(base + t * stride - rad * stride, c) {
+            return None;
+        }
+    }
+    Some(list)
+}
+
+// ---------------------------------------------------------------------------
+// Block primitives
+// ---------------------------------------------------------------------------
+
+/// Load `N` contiguous elements — compiles to a plain packed load.
+#[inline(always)]
+fn ld<const N: usize>(s: &[f64]) -> [f64; N] {
+    let mut v = [0.0f64; N];
+    v.copy_from_slice(&s[..N]);
+    v
+}
+
+/// One tap-major accumulation block: `acc[l] = sum_taps c * data[off + i0 + l]`,
+/// taps in list order from a literal-zero accumulator (the reference
+/// order, so the result is bit-identical to the scalar path).
+#[inline(always)]
+fn taps_block<const N: usize>(data: &[f64], i0: usize, taps: &[(usize, f64)]) -> [f64; N] {
+    let mut acc = [0.0f64; N];
+    for &(off, c) in taps {
+        let x: [f64; N] = ld(&data[off + i0..]);
+        for l in 0..N {
+            acc[l] += c * x[l];
+        }
+    }
+    acc
+}
+
+/// Scaled stencil block: tap sum then scale, matching the reference's
+/// "scale applied after the sum".
+#[inline(always)]
+fn stencil_block<const N: usize>(
+    data: &[f64],
+    i0: usize,
+    taps: &[(usize, f64)],
+    scale: f64,
+) -> [f64; N] {
+    let mut acc = taps_block::<N>(data, i0, taps);
+    for l in 0..N {
+        acc[l] *= scale;
+    }
+    acc
+}
+
+/// Scalar-tail element of the same stencil: identical op order at width 1.
+#[inline(always)]
+fn stencil_elem(data: &[f64], i: usize, taps: &[(usize, f64)], scale: f64) -> f64 {
+    let mut acc = 0.0f64;
+    for &(off, c) in taps {
+        acc += c * data[off + i];
+    }
+    acc * scale
+}
+
+// ---------------------------------------------------------------------------
+// Row kernels
+// ---------------------------------------------------------------------------
+
+/// `dst[i] = sum_j taps[j] * win[i + j]` — the xcorr inner loop.
+///
+/// `win` is the padded input window starting at the row's first tap
+/// (`win.len() >= dst.len() + taps.len() - 1`). Taps are *not*
+/// zero-pruned, matching [`super::conv::xcorr1d_into`]'s reference loop.
+pub fn xcorr_row(lanes: Lanes, dst: &mut [f64], win: &[f64], taps: &[f64]) {
+    match lanes {
+        Lanes::Scalar => xcorr_row_n::<1>(dst, win, taps),
+        Lanes::L2 => xcorr_row_n::<2>(dst, win, taps),
+        Lanes::L4 => xcorr_row_n::<4>(dst, win, taps),
+        Lanes::L8 => xcorr_row_n::<8>(dst, win, taps),
+    }
+}
+
+fn xcorr_row_n<const N: usize>(dst: &mut [f64], win: &[f64], taps: &[f64]) {
+    let n = dst.len();
+    debug_assert!(win.len() + 1 >= n + taps.len());
+    let step = UNROLL * N;
+    let mut i = 0;
+    while i + step <= n {
+        let mut acc = [[0.0f64; N]; UNROLL];
+        for (j, &c) in taps.iter().enumerate() {
+            let s = &win[i + j..];
+            for (u, a) in acc.iter_mut().enumerate() {
+                let x: [f64; N] = ld(&s[u * N..]);
+                for l in 0..N {
+                    a[l] += c * x[l];
+                }
+            }
+        }
+        for (u, a) in acc.iter().enumerate() {
+            dst[i + u * N..i + (u + 1) * N].copy_from_slice(a);
+        }
+        i += step;
+    }
+    while i + N <= n {
+        let mut acc = [0.0f64; N];
+        for (j, &c) in taps.iter().enumerate() {
+            let x: [f64; N] = ld(&win[i + j..]);
+            for l in 0..N {
+                acc[l] += c * x[l];
+            }
+        }
+        dst[i..i + N].copy_from_slice(&acc);
+        i += N;
+    }
+    while i < n {
+        let mut acc = 0.0f64;
+        for (j, &c) in taps.iter().enumerate() {
+            acc += c * win[i + j];
+        }
+        dst[i] = acc;
+        i += 1;
+    }
+}
+
+/// `dst[i] = sum_taps c * data[off + i]` — the dense-kernel xcorr inner
+/// loop ([`super::conv::xcorr_dense_into_plan`]) with the pruned kernel
+/// taps accumulated in registers. No trailing scale (the reference has
+/// none).
+pub fn taps_fill_row(lanes: Lanes, dst: &mut [f64], data: &[f64], taps: &[(usize, f64)]) {
+    match lanes {
+        Lanes::Scalar => taps_fill_row_n::<1>(dst, data, taps),
+        Lanes::L2 => taps_fill_row_n::<2>(dst, data, taps),
+        Lanes::L4 => taps_fill_row_n::<4>(dst, data, taps),
+        Lanes::L8 => taps_fill_row_n::<8>(dst, data, taps),
+    }
+}
+
+fn taps_fill_row_n<const N: usize>(dst: &mut [f64], data: &[f64], taps: &[(usize, f64)]) {
+    let n = dst.len();
+    let step = UNROLL * N;
+    let mut i = 0;
+    while i + step <= n {
+        let mut acc = [[0.0f64; N]; UNROLL];
+        for &(off, c) in taps {
+            let src = &data[off + i..];
+            for (u, a) in acc.iter_mut().enumerate() {
+                let x: [f64; N] = ld(&src[u * N..]);
+                for l in 0..N {
+                    a[l] += c * x[l];
+                }
+            }
+        }
+        for (u, a) in acc.iter().enumerate() {
+            dst[i + u * N..i + (u + 1) * N].copy_from_slice(a);
+        }
+        i += step;
+    }
+    while i + N <= n {
+        let acc = taps_block::<N>(data, i, taps);
+        dst[i..i + N].copy_from_slice(&acc);
+        i += N;
+    }
+    while i < n {
+        let mut acc = 0.0f64;
+        for &(off, c) in taps {
+            acc += c * data[off + i];
+        }
+        dst[i] = acc;
+        i += 1;
+    }
+}
+
+/// `out[i] = center[i] + s * sum_taps c * data[off + i]` — the diffusion
+/// update with the Laplacian accumulated in registers instead of a
+/// workspace row. `taps` is the pruned absolute-offset list across all
+/// axes in reference order.
+pub fn affine_taps_row(
+    lanes: Lanes,
+    out: &mut [f64],
+    center: &[f64],
+    data: &[f64],
+    taps: &[(usize, f64)],
+    s: f64,
+) {
+    match lanes {
+        Lanes::Scalar => affine_taps_row_n::<1>(out, center, data, taps, s),
+        Lanes::L2 => affine_taps_row_n::<2>(out, center, data, taps, s),
+        Lanes::L4 => affine_taps_row_n::<4>(out, center, data, taps, s),
+        Lanes::L8 => affine_taps_row_n::<8>(out, center, data, taps, s),
+    }
+}
+
+fn affine_taps_row_n<const N: usize>(
+    out: &mut [f64],
+    center: &[f64],
+    data: &[f64],
+    taps: &[(usize, f64)],
+    s: f64,
+) {
+    let n = out.len();
+    let step = UNROLL * N;
+    let mut i = 0;
+    while i + step <= n {
+        let mut acc = [[0.0f64; N]; UNROLL];
+        for &(off, c) in taps {
+            let src = &data[off + i..];
+            for (u, a) in acc.iter_mut().enumerate() {
+                let x: [f64; N] = ld(&src[u * N..]);
+                for l in 0..N {
+                    a[l] += c * x[l];
+                }
+            }
+        }
+        for (u, a) in acc.iter().enumerate() {
+            let cb: [f64; N] = ld(&center[i + u * N..]);
+            let o = &mut out[i + u * N..i + (u + 1) * N];
+            for l in 0..N {
+                o[l] = cb[l] + s * a[l];
+            }
+        }
+        i += step;
+    }
+    while i + N <= n {
+        let acc = taps_block::<N>(data, i, taps);
+        let cb: [f64; N] = ld(&center[i..]);
+        for l in 0..N {
+            out[i + l] = cb[l] + s * acc[l];
+        }
+        i += N;
+    }
+    while i < n {
+        let mut acc = 0.0f64;
+        for &(off, c) in taps {
+            acc += c * data[off + i];
+        }
+        out[i] = center[i] + s * acc;
+        i += 1;
+    }
+}
+
+/// Vector form of the fused sweep's shared tap loop
+/// (`mhd::fused::stencil_row`): `dst[i] = scale * sum_t w[t] *
+/// data[base + (t - rad)*stride + i]`, zero taps pruned, scale after the
+/// sum. Caller guarantees `w.len() <= MAX_TAPS`.
+pub fn stencil_row(
+    lanes: Lanes,
+    dst: &mut [f64],
+    data: &[f64],
+    base: usize,
+    stride: usize,
+    rad: usize,
+    w: &[f64],
+    scale: f64,
+) {
+    let taps = stencil_taps(base, stride, rad, w).expect("tap count exceeds MAX_TAPS");
+    match lanes {
+        Lanes::Scalar => stencil_fill_row_n::<1>(dst, data, taps.taps(), scale),
+        Lanes::L2 => stencil_fill_row_n::<2>(dst, data, taps.taps(), scale),
+        Lanes::L4 => stencil_fill_row_n::<4>(dst, data, taps.taps(), scale),
+        Lanes::L8 => stencil_fill_row_n::<8>(dst, data, taps.taps(), scale),
+    }
+}
+
+fn stencil_fill_row_n<const N: usize>(
+    dst: &mut [f64],
+    data: &[f64],
+    taps: &[(usize, f64)],
+    scale: f64,
+) {
+    let n = dst.len();
+    let step = UNROLL * N;
+    let mut i = 0;
+    while i + step <= n {
+        let mut acc = [[0.0f64; N]; UNROLL];
+        for &(off, c) in taps {
+            let src = &data[off + i..];
+            for (u, a) in acc.iter_mut().enumerate() {
+                let x: [f64; N] = ld(&src[u * N..]);
+                for l in 0..N {
+                    a[l] += c * x[l];
+                }
+            }
+        }
+        for (u, a) in acc.iter_mut().enumerate() {
+            for l in 0..N {
+                a[l] *= scale;
+            }
+            dst[i + u * N..i + (u + 1) * N].copy_from_slice(a);
+        }
+        i += step;
+    }
+    while i + N <= n {
+        let acc = stencil_block::<N>(data, i, taps, scale);
+        dst[i..i + N].copy_from_slice(&acc);
+        i += N;
+    }
+    while i < n {
+        dst[i] = stencil_elem(data, i, taps, scale);
+        i += 1;
+    }
+}
+
+/// Vector Laplacian row, grouped `(d2x + d2y) + d2z` like the reference
+/// (`mhd::fused::laplacian_row` / `ops::DiffOps::laplacian`): per-axis
+/// scaled sums added axis-major, all in registers.
+#[allow(clippy::too_many_arguments)]
+pub fn laplacian_row(
+    lanes: Lanes,
+    dst: &mut [f64],
+    data: &[f64],
+    base: usize,
+    strides: &[usize; 3],
+    rad: usize,
+    c2: &[f64],
+    inv_dx2: f64,
+) {
+    let ax: [TapList; 3] = [
+        stencil_taps(base, strides[0], rad, c2).expect("tap count exceeds MAX_TAPS"),
+        stencil_taps(base, strides[1], rad, c2).expect("tap count exceeds MAX_TAPS"),
+        stencil_taps(base, strides[2], rad, c2).expect("tap count exceeds MAX_TAPS"),
+    ];
+    match lanes {
+        Lanes::Scalar => laplacian_row_n::<1>(dst, data, &ax, inv_dx2),
+        Lanes::L2 => laplacian_row_n::<2>(dst, data, &ax, inv_dx2),
+        Lanes::L4 => laplacian_row_n::<4>(dst, data, &ax, inv_dx2),
+        Lanes::L8 => laplacian_row_n::<8>(dst, data, &ax, inv_dx2),
+    }
+}
+
+fn laplacian_row_n<const N: usize>(
+    dst: &mut [f64],
+    data: &[f64],
+    ax: &[TapList; 3],
+    inv_dx2: f64,
+) {
+    let n = dst.len();
+    let mut i = 0;
+    while i + N <= n {
+        let mut acc = stencil_block::<N>(data, i, ax[0].taps(), inv_dx2);
+        for a in &ax[1..] {
+            let t = stencil_block::<N>(data, i, a.taps(), inv_dx2);
+            for l in 0..N {
+                acc[l] += t[l];
+            }
+        }
+        dst[i..i + N].copy_from_slice(&acc);
+        i += N;
+    }
+    while i < n {
+        let mut acc = stencil_elem(data, i, ax[0].taps(), inv_dx2);
+        for a in &ax[1..] {
+            acc += stencil_elem(data, i, a.taps(), inv_dx2);
+        }
+        dst[i] = acc;
+        i += 1;
+    }
+}
+
+/// One element-block of the composed mixed derivative
+/// `d1(d1(f, ax1), ax2)`: for each outer tap, the inner scaled d1 block is
+/// evaluated at the shifted base and folded in — the register form of
+/// `mhd::fused::d1d1_row`, same op order (inner scale, outer accumulate,
+/// outer scale), no `tmp` row.
+#[inline(always)]
+fn d1d1_block<const N: usize>(
+    data: &[f64],
+    i0: usize,
+    outer: &[(usize, f64)],
+    inner_rel: &[(usize, f64)],
+    back1: usize,
+    inv_dx: f64,
+) -> [f64; N] {
+    let mut acc = [0.0f64; N];
+    for &(mbase, cb) in outer {
+        let mut m = [0.0f64; N];
+        for &(t1s1, c) in inner_rel {
+            let off = mbase + t1s1 - back1;
+            let x: [f64; N] = ld(&data[off + i0..]);
+            for l in 0..N {
+                m[l] += c * x[l];
+            }
+        }
+        for l in 0..N {
+            acc[l] += cb * (m[l] * inv_dx);
+        }
+    }
+    for l in 0..N {
+        acc[l] *= inv_dx;
+    }
+    acc
+}
+
+#[inline(always)]
+fn d1d1_elem(
+    data: &[f64],
+    i: usize,
+    outer: &[(usize, f64)],
+    inner_rel: &[(usize, f64)],
+    back1: usize,
+    inv_dx: f64,
+) -> f64 {
+    let mut acc = 0.0f64;
+    for &(mbase, cb) in outer {
+        let mut m = 0.0f64;
+        for &(t1s1, c) in inner_rel {
+            m += c * data[mbase + t1s1 - back1 + i];
+        }
+        acc += cb * (m * inv_dx);
+    }
+    acc * inv_dx
+}
+
+/// Vector `grad(div v)` component row (`mhd::fused::gdiv_row`): per
+/// source field, the diagonal term is a plain second derivative and the
+/// off-diagonal ones are composed mixed derivatives; terms are summed in
+/// field order from a literal-zero accumulator, all in registers.
+#[allow(clippy::too_many_arguments)]
+pub fn gdiv_row(
+    lanes: Lanes,
+    dst: &mut [f64],
+    vec_data: &[&[f64]; 3],
+    comp: usize,
+    base: usize,
+    strides: &[usize; 3],
+    rad: usize,
+    c1: &[f64],
+    c2: &[f64],
+    inv_dx: f64,
+) {
+    // Per-field term descriptors, pruned once per row.
+    let diag =
+        stencil_taps(base, strides[comp], rad, c2).expect("tap count exceeds MAX_TAPS");
+    // Outer (ax2 = comp) absolute bases and per-field inner relative taps.
+    let outer =
+        stencil_taps(base, strides[comp], rad, c1).expect("tap count exceeds MAX_TAPS");
+    let inner: [TapList; 3] = std::array::from_fn(|jf| {
+        // relative offsets t1 * strides[jf]; back1 subtracted in-kernel
+        let mut list = TapList::new();
+        for (t, &c) in c1.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            assert!(list.push(t * strides[jf], c), "tap count exceeds MAX_TAPS");
+        }
+        list
+    });
+    let backs = [rad * strides[0], rad * strides[1], rad * strides[2]];
+    match lanes {
+        Lanes::Scalar => {
+            gdiv_row_n::<1>(dst, vec_data, comp, &diag, &outer, &inner, &backs, inv_dx)
+        }
+        Lanes::L2 => gdiv_row_n::<2>(dst, vec_data, comp, &diag, &outer, &inner, &backs, inv_dx),
+        Lanes::L4 => gdiv_row_n::<4>(dst, vec_data, comp, &diag, &outer, &inner, &backs, inv_dx),
+        Lanes::L8 => gdiv_row_n::<8>(dst, vec_data, comp, &diag, &outer, &inner, &backs, inv_dx),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gdiv_row_n<const N: usize>(
+    dst: &mut [f64],
+    vec_data: &[&[f64]; 3],
+    comp: usize,
+    diag: &TapList,
+    outer: &TapList,
+    inner: &[TapList; 3],
+    backs: &[usize; 3],
+    inv_dx: f64,
+) {
+    let n = dst.len();
+    let inv_dx2 = inv_dx * inv_dx;
+    let mut i = 0;
+    while i + N <= n {
+        let mut acc = [0.0f64; N];
+        for (jf, data) in vec_data.iter().enumerate() {
+            let t = if comp == jf {
+                stencil_block::<N>(data, i, diag.taps(), inv_dx2)
+            } else {
+                d1d1_block::<N>(data, i, outer.taps(), inner[jf].taps(), backs[jf], inv_dx)
+            };
+            for l in 0..N {
+                acc[l] += t[l];
+            }
+        }
+        dst[i..i + N].copy_from_slice(&acc);
+        i += N;
+    }
+    while i < n {
+        let mut acc = 0.0f64;
+        for (jf, data) in vec_data.iter().enumerate() {
+            acc += if comp == jf {
+                stencil_elem(data, i, diag.taps(), inv_dx2)
+            } else {
+                d1d1_elem(data, i, outer.taps(), inner[jf].taps(), backs[jf], inv_dx)
+            };
+        }
+        dst[i] = acc;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIDTHS: [Lanes; 4] = [Lanes::Scalar, Lanes::L2, Lanes::L4, Lanes::L8];
+
+    fn row(n: usize, seed: usize) -> Vec<f64> {
+        (0..n).map(|i| ((i * 37 + seed * 13) % 101) as f64 / 7.0 - 5.0).collect()
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        let c = cpu();
+        assert!(!c.tag.is_empty());
+        assert!(c.max.width() >= 1);
+        // effective() can only narrow, never widen
+        assert!(effective(Lanes::L8).width() <= Lanes::L8.width());
+        if force_scalar() {
+            assert_eq!(max_lanes(), Lanes::Scalar);
+            assert_eq!(feature_tag(), "forced-scalar");
+        }
+    }
+
+    #[test]
+    fn taplist_overflow_reports() {
+        let mut l = TapList::new();
+        for i in 0..MAX_TAPS {
+            assert!(l.push(i, 1.0));
+        }
+        assert!(!l.push(99, 1.0));
+        assert_eq!(l.len(), MAX_TAPS);
+    }
+
+    #[test]
+    fn xcorr_row_matches_reference_bitwise_at_every_width() {
+        for n in [0usize, 1, 5, 31, 32, 33, 64, 257] {
+            let taps = [0.1, -0.2, 0.4, 1.0, 0.4, -0.2, 0.1];
+            let win = row(n + taps.len() - 1, n);
+            let mut want = vec![0.0f64; n];
+            for (j, &c) in taps.iter().enumerate() {
+                for i in 0..n {
+                    want[i] += c * win[i + j];
+                }
+            }
+            for lanes in WIDTHS {
+                let mut got = vec![7.0f64; n];
+                xcorr_row(lanes, &mut got, &win, &taps);
+                assert_eq!(got, want, "n={n} lanes={lanes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_row_matches_reference_bitwise_at_every_width() {
+        let rad = 3;
+        let w = [0.3, 0.0, -1.5, 2.0, -1.5, 0.0, 0.3];
+        for n in [1usize, 7, 33, 64] {
+            let data = row(n + 2 * rad, n);
+            let mut want = vec![0.0f64; n];
+            for (t, &c) in w.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                for i in 0..n {
+                    want[i] += c * data[t + i];
+                }
+            }
+            for v in want.iter_mut() {
+                *v *= 0.25;
+            }
+            for lanes in WIDTHS {
+                let mut got = vec![9.0f64; n];
+                stencil_row(lanes, &mut got, &data, rad, 1, rad, &w, 0.25);
+                assert_eq!(got, want, "n={n} lanes={lanes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn affine_taps_row_matches_reference_bitwise() {
+        let n = 50;
+        let data = row(n + 8, 3);
+        let center = row(n, 5);
+        let taps: Vec<(usize, f64)> = vec![(0, 1.0), (2, -2.0), (4, 1.0), (7, 0.5)];
+        let s = 0.125;
+        let mut want = vec![0.0f64; n];
+        for i in 0..n {
+            let mut acc = 0.0;
+            for &(off, c) in &taps {
+                acc += c * data[off + i];
+            }
+            want[i] = center[i] + s * acc;
+        }
+        for lanes in WIDTHS {
+            let mut got = vec![-1.0f64; n];
+            affine_taps_row(lanes, &mut got, &center, &data, &taps, s);
+            assert_eq!(got, want, "lanes={lanes:?}");
+        }
+    }
+}

@@ -1,0 +1,404 @@
+/* Structural perf mirror of the ISSUE-8 SIMD register-blocked inner
+ * kernels (rust/src/stencil/simd.rs).
+ *
+ * "scalar" mirrors the reference per-element loops the Rust scalar path
+ * keeps (one accumulator, taps in index order, scale after the sum).
+ * "blocked N" mirrors the vector microkernels: 4 independent blocks of N
+ * register accumulators per main-loop step (UNROLL=4), then single
+ * N-blocks, then a scalar tail — the exact shape LLVM auto-vectorizes in
+ * the Rust release build. Per-element operation order is preserved, so
+ * every blocked result must be BIT-IDENTICAL to scalar; this mirror
+ * asserts that (memcmp) before timing anything.
+ *
+ * -ffp-contract=off is load-bearing: rustc does not contract a*b+c into
+ * fma, gcc does by default, and a contracted mirror would overstate the
+ * vector win AND break the bitwise check.
+ *
+ * The `omp simd` pragmas on the lane loops (with -fopenmp-simd) stand in
+ * for LLVM's SLP vectorizer: rustc turns the [f64; N] lane loops into
+ * packed ops without annotation, while gcc 10's SLP leaves the same
+ * straight-line lane code scalar (verified on the generated assembly).
+ * The pragma only asserts lane independence — identical FP semantics,
+ * same per-element order, so the bitwise check still must pass.
+ *
+ * Cases (single-threaded — these kernels are the per-thread row work):
+ *   diffusion2d  4096^2 r=3 affine-taps row kernel   (BENCH diffusion2d)
+ *   mhd-row      64^3 linear-gamma contraction set    (BENCH mhd-substep)
+ *   crossover    diffusion row kernel at tiny row lengths
+ *
+ * Build/run:
+ *   gcc -O3 -march=native -ffp-contract=off -fopenmp-simd -o /tmp/pms \
+ *       tools/perf_mirror_simd.c -lm && /tmp/pms
+ */
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + 1e-9 * ts.tv_nsec;
+}
+
+static uint64_t rng_state = 0x9e3779b97f4a7c15ull;
+static double rng_norm(void) {
+    rng_state ^= rng_state << 13;
+    rng_state ^= rng_state >> 7;
+    rng_state ^= rng_state << 17;
+    return (double)(int64_t)rng_state * 5.421e-20;
+}
+
+typedef struct {
+    long off;
+    double c;
+} tap_t;
+
+/* ---------- scalar references (the Rust scalar path, verbatim) -------- */
+
+/* diffusion: dst[i] = center[i] + s * sum_t c_t * data[off_t + i] */
+/* restrict throughout mirrors Rust's &mut noalias guarantee — LLVM sees
+ * it on every Rust kernel, so a mirror without it would handicap gcc */
+static void affine_row_scalar(double *restrict dst, const double *restrict center,
+                              const double *restrict data, const tap_t *taps,
+                              int ntaps, double s, long n) {
+    for (long i = 0; i < n; i++) {
+        double acc = 0.0;
+        for (int t = 0; t < ntaps; t++) acc += taps[t].c * data[taps[t].off + i];
+        dst[i] = center[i] + s * acc;
+    }
+}
+
+/* mhd: dst[i] = scale * sum_t w_t * data[base + i + t*stride - rad*stride] */
+static void stencil_row_scalar(double *restrict dst, const double *restrict data,
+                               long base, long stride, int rad, const double *w,
+                               int nw, double scale, long n) {
+    for (long i = 0; i < n; i++) {
+        double acc = 0.0;
+        for (int t = 0; t < nw; t++)
+            acc += w[t] * data[base + i + (long)(t - rad) * stride];
+        dst[i] = scale * acc;
+    }
+}
+
+/* mhd grad-div off-diagonal: d/dx1 of d/dx2, inner-scaled then summed */
+static void d1d1_row_scalar(double *restrict dst, const double *restrict data,
+                            long base, long s1, long s2, int rad, const double *w1,
+                            const double *w2, double inv_dx, long n) {
+    for (long i = 0; i < n; i++) {
+        double acc = 0.0;
+        for (int t2 = 0; t2 < 2 * rad + 1; t2++) {
+            double cb = w2[t2];
+            if (cb == 0.0) continue;
+            long mbase = base + i + (long)(t2 - rad) * s2;
+            double m = 0.0;
+            for (int t1 = 0; t1 < 2 * rad + 1; t1++) {
+                double c = w1[t1];
+                if (c == 0.0) continue;
+                m += c * data[mbase + (long)(t1 - rad) * s1];
+            }
+            acc += cb * (m * inv_dx);
+        }
+        dst[i] = acc * inv_dx;
+    }
+}
+
+/* ---------- register-blocked microkernels (simd.rs shape) ------------- */
+
+#define UNROLL 4
+
+#define DEF_BLOCKED(N)                                                         \
+    static void affine_row_blocked##N(double *restrict dst,                    \
+                                      const double *restrict center,           \
+                                      const double *restrict data,             \
+                                      const tap_t *taps,                       \
+                                      int ntaps, double s, long n) {           \
+        long i = 0;                                                            \
+        for (; i + UNROLL * N <= n; i += UNROLL * N) {                         \
+            double acc[UNROLL][N];                                             \
+            for (int u = 0; u < UNROLL; u++)                                   \
+                for (int l = 0; l < N; l++) acc[u][l] = 0.0;                   \
+            for (int t = 0; t < ntaps; t++) {                                  \
+                const double *p = data + taps[t].off + i;                      \
+                double c = taps[t].c;                                          \
+                for (int u = 0; u < UNROLL; u++) {                             \
+                    _Pragma("omp simd")                                        \
+                    for (int l = 0; l < N; l++) acc[u][l] += c * p[u * N + l]; \
+                }                                                              \
+            }                                                                  \
+            for (int u = 0; u < UNROLL; u++) {                                 \
+                _Pragma("omp simd")                                            \
+                for (int l = 0; l < N; l++)                                    \
+                    dst[i + u * N + l] = center[i + u * N + l] + s * acc[u][l];\
+            }                                                                  \
+        }                                                                      \
+        for (; i + N <= n; i += N) {                                           \
+            double acc[N];                                                     \
+            for (int l = 0; l < N; l++) acc[l] = 0.0;                          \
+            for (int t = 0; t < ntaps; t++) {                                  \
+                const double *p = data + taps[t].off + i;                      \
+                double c = taps[t].c;                                          \
+                _Pragma("omp simd")                                            \
+                for (int l = 0; l < N; l++) acc[l] += c * p[l];                \
+            }                                                                  \
+            _Pragma("omp simd")                                                \
+            for (int l = 0; l < N; l++) dst[i + l] = center[i + l] + s * acc[l];\
+        }                                                                      \
+        affine_row_scalar(dst + i, center + i, data + i, taps, ntaps, s, n - i);\
+    }                                                                          \
+    static void stencil_row_blocked##N(double *restrict dst,                   \
+                                       const double *restrict data, long base, \
+                                       long stride, int rad, const double *w,  \
+                                       int nw, double scale, long n) {         \
+        long i = 0;                                                            \
+        for (; i + UNROLL * N <= n; i += UNROLL * N) {                         \
+            double acc[UNROLL][N];                                             \
+            for (int u = 0; u < UNROLL; u++)                                   \
+                for (int l = 0; l < N; l++) acc[u][l] = 0.0;                   \
+            for (int t = 0; t < nw; t++) {                                     \
+                const double *p = data + base + i + (long)(t - rad) * stride;  \
+                double c = w[t];                                               \
+                for (int u = 0; u < UNROLL; u++) {                             \
+                    _Pragma("omp simd")                                        \
+                    for (int l = 0; l < N; l++) acc[u][l] += c * p[u * N + l]; \
+                }                                                              \
+            }                                                                  \
+            for (int u = 0; u < UNROLL; u++) {                                 \
+                _Pragma("omp simd")                                            \
+                for (int l = 0; l < N; l++)                                    \
+                    dst[i + u * N + l] = scale * acc[u][l];                    \
+            }                                                                  \
+        }                                                                      \
+        for (; i + N <= n; i += N) {                                           \
+            double acc[N];                                                     \
+            for (int l = 0; l < N; l++) acc[l] = 0.0;                          \
+            for (int t = 0; t < nw; t++) {                                     \
+                const double *p = data + base + i + (long)(t - rad) * stride;  \
+                double c = w[t];                                               \
+                _Pragma("omp simd")                                            \
+                for (int l = 0; l < N; l++) acc[l] += c * p[l];                \
+            }                                                                  \
+            _Pragma("omp simd")                                                \
+            for (int l = 0; l < N; l++) dst[i + l] = scale * acc[l];           \
+        }                                                                      \
+        stencil_row_scalar(dst + i, data, base + i, stride, rad, w, nw, scale, \
+                           n - i);                                             \
+    }                                                                          \
+    static void d1d1_row_blocked##N(double *restrict dst,                      \
+                                    const double *restrict data, long base,    \
+                                    long s1, long s2, int rad, const double *w1,\
+                                    const double *w2, double inv_dx, long n) { \
+        long i = 0;                                                            \
+        for (; i + N <= n; i += N) {                                           \
+            double acc[N];                                                     \
+            for (int l = 0; l < N; l++) acc[l] = 0.0;                          \
+            for (int t2 = 0; t2 < 2 * rad + 1; t2++) {                         \
+                double cb = w2[t2];                                            \
+                if (cb == 0.0) continue;                                       \
+                const double *pb = data + base + i + (long)(t2 - rad) * s2;    \
+                _Pragma("omp simd")                                            \
+                for (int l = 0; l < N; l++) {                                  \
+                    double m = 0.0;                                            \
+                    for (int t1 = 0; t1 < 2 * rad + 1; t1++) {                 \
+                        double c = w1[t1];                                     \
+                        if (c == 0.0) continue;                                \
+                        m += c * pb[l + (long)(t1 - rad) * s1];                \
+                    }                                                          \
+                    acc[l] += cb * (m * inv_dx);                               \
+                }                                                              \
+            }                                                                  \
+            for (int l = 0; l < N; l++) dst[i + l] = acc[l] * inv_dx;          \
+        }                                                                      \
+        d1d1_row_scalar(dst + i, data, base + i, s1, s2, rad, w1, w2, inv_dx,  \
+                        n - i);                                                \
+    }
+
+DEF_BLOCKED(2)
+DEF_BLOCKED(4)
+DEF_BLOCKED(8)
+
+/* ---------- timing ----------------------------------------------------- */
+
+static double median3(double a, double b, double c) {
+    if (a > b) { double t = a; a = b; b = t; }
+    if (b > c) { double t = b; b = c; c = t; }
+    if (a > b) { double t = a; a = b; b = t; }
+    return b;
+}
+
+#define TIME_MEDIAN(out_s, reps, body)                                         \
+    do {                                                                       \
+        double samp_[3];                                                       \
+        for (int s_ = 0; s_ < 3; s_++) {                                       \
+            double t0_ = now_s();                                              \
+            for (int r_ = 0; r_ < (reps); r_++) { body; }                      \
+            samp_[s_] = (now_s() - t0_) / (reps);                              \
+        }                                                                      \
+        (out_s) = median3(samp_[0], samp_[1], samp_[2]);                       \
+    } while (0)
+
+static int bits_equal(const double *a, const double *b, long n) {
+    return memcmp(a, b, (size_t)n * sizeof(double)) == 0;
+}
+
+/* second-derivative weights, radius 3 (rust Diffusion order-3 table) */
+static const double C2[7] = {1.0 / 90, -3.0 / 20, 3.0 / 2, -49.0 / 18,
+                             3.0 / 2,  -3.0 / 20, 1.0 / 90};
+/* first-derivative weights, radius 3 (center weight 0 -> pruned) */
+static const double C1[7] = {-1.0 / 60, 3.0 / 20, -3.0 / 4, 0.0,
+                             3.0 / 4,   -3.0 / 20, 1.0 / 60};
+
+int main(void) {
+    /* -------- diffusion2d 4096^2 r=3 (BENCH diffusion2d) -------------- */
+    {
+        const long n = 4096, rad = 3;
+        const long px = n + 2 * rad;
+        double *data = malloc((size_t)(px * px) * sizeof(double));
+        double *dst = malloc((size_t)n * sizeof(double));
+        double *ref = malloc((size_t)n * sizeof(double));
+        for (long i = 0; i < px * px; i++) data[i] = rng_norm();
+        tap_t taps[14];
+        int nt = 0;
+        long strides[2] = {1, px};
+        for (int ax = 0; ax < 2; ax++)
+            for (int t = 0; t < 7; t++)
+                taps[nt++] = (tap_t){(long)(t - 3) * strides[ax], C2[t]};
+        const double s = 0.1;
+        long row0 = rad * px + rad;
+
+        affine_row_scalar(ref, data + row0, data + row0, taps, nt, s, n);
+        affine_row_blocked4(dst, data + row0, data + row0, taps, nt, s, n);
+        if (!bits_equal(ref, dst, n)) { puts("FAIL diffusion blocked4 parity"); return 1; }
+        affine_row_blocked8(dst, data + row0, data + row0, taps, nt, s, n);
+        if (!bits_equal(ref, dst, n)) { puts("FAIL diffusion blocked8 parity"); return 1; }
+        affine_row_blocked2(dst, data + row0, data + row0, taps, nt, s, n);
+        if (!bits_equal(ref, dst, n)) { puts("FAIL diffusion blocked2 parity"); return 1; }
+        puts("diffusion2d row kernel: blocked{2,4,8} bit-identical to scalar");
+
+        /* time a full sweep: n interior rows */
+        double t_sc, t_b2, t_b4, t_b8;
+        TIME_MEDIAN(t_sc, 3, for (long j = 0; j < n; j++) {
+            long b = row0 + j * px;
+            affine_row_scalar(dst, data + b, data + b, taps, nt, s, n);
+        });
+        TIME_MEDIAN(t_b2, 3, for (long j = 0; j < n; j++) {
+            long b = row0 + j * px;
+            affine_row_blocked2(dst, data + b, data + b, taps, nt, s, n);
+        });
+        TIME_MEDIAN(t_b4, 3, for (long j = 0; j < n; j++) {
+            long b = row0 + j * px;
+            affine_row_blocked4(dst, data + b, data + b, taps, nt, s, n);
+        });
+        TIME_MEDIAN(t_b8, 3, for (long j = 0; j < n; j++) {
+            long b = row0 + j * px;
+            affine_row_blocked8(dst, data + b, data + b, taps, nt, s, n);
+        });
+        double e = (double)n * n / 1e6;
+        printf("diffusion2d 4096^2 r=3 sweep (1 thread):\n");
+        printf("  scalar   %7.2f ms  %7.1f Melem/s\n", t_sc * 1e3, e / t_sc);
+        printf("  blocked2 %7.2f ms  %7.1f Melem/s  x%.2f\n", t_b2 * 1e3, e / t_b2, t_sc / t_b2);
+        printf("  blocked4 %7.2f ms  %7.1f Melem/s  x%.2f\n", t_b4 * 1e3, e / t_b4, t_sc / t_b4);
+        printf("  blocked8 %7.2f ms  %7.1f Melem/s  x%.2f\n", t_b8 * 1e3, e / t_b8, t_sc / t_b8);
+        free(data); free(dst); free(ref);
+    }
+
+    /* -------- mhd 64^3 linear-gamma contraction set (BENCH mhd) ------- */
+    {
+        const long n = 64, rad = 3;
+        const long px = n + 2 * rad, pxy = px * px;
+        double *data = malloc((size_t)(px * px * px) * sizeof(double));
+        double *dst = malloc((size_t)n * sizeof(double));
+        double *acc = malloc((size_t)n * sizeof(double));
+        double *ref = malloc((size_t)n * sizeof(double));
+        for (long i = 0; i < px * px * px; i++) data[i] = rng_norm();
+        long strides[3] = {1, px, pxy};
+        const double inv_dx2 = 104.187, inv_dx = 10.2;
+        long row0 = rad + px * (rad + px * rad);
+
+        /* the fused substep's per-row linear part, one field row at a
+         * time: 8 Laplacians (3 axis contractions each) + 3 grad-div
+         * components (1 diagonal + 2 off-diagonal d1d1 each) = 33
+         * stencil contractions/row; with the Laplacian's per-axis taps
+         * that is ~60 weighted 7-tap reductions per row. */
+#define MHD_ROW(STENCIL, D1D1, base)                                           \
+        do {                                                                   \
+            for (int f = 0; f < 8; f++) {                                      \
+                for (int ax = 0; ax < 3; ax++) {                               \
+                    STENCIL(f == 0 && ax == 0 ? acc : dst, data, (base),       \
+                            strides[ax], rad, C2, 7, inv_dx2, n);              \
+                    if (!(f == 0 && ax == 0))                                  \
+                        for (long i = 0; i < n; i++) acc[i] += dst[i];         \
+                }                                                              \
+            }                                                                  \
+            for (int c = 0; c < 3; c++) {                                      \
+                STENCIL(dst, data, (base), strides[c], rad, C2, 7, inv_dx2, n);\
+                for (long i = 0; i < n; i++) acc[i] += dst[i];                 \
+                for (int o = 0; o < 3; o++) {                                  \
+                    if (o == c) continue;                                      \
+                    D1D1(dst, data, (base), strides[c], strides[o], rad, C1,   \
+                         C1, inv_dx, n);                                       \
+                    for (long i = 0; i < n; i++) acc[i] += dst[i];             \
+                }                                                              \
+            }                                                                  \
+        } while (0)
+
+        MHD_ROW(stencil_row_scalar, d1d1_row_scalar, row0);
+        memcpy(ref, acc, (size_t)n * sizeof(double));
+        MHD_ROW(stencil_row_blocked4, d1d1_row_blocked4, row0);
+        if (!bits_equal(ref, acc, n)) { puts("FAIL mhd blocked4 parity"); return 1; }
+        MHD_ROW(stencil_row_blocked8, d1d1_row_blocked8, row0);
+        if (!bits_equal(ref, acc, n)) { puts("FAIL mhd blocked8 parity"); return 1; }
+        puts("mhd row contractions: blocked{4,8} bit-identical to scalar");
+
+        double t_sc, t_b2, t_b4, t_b8;
+        TIME_MEDIAN(t_sc, 2, for (long k = 0; k < n; k++) for (long j = 0; j < n; j++)
+            MHD_ROW(stencil_row_scalar, d1d1_row_scalar, row0 + j * px + k * pxy));
+        TIME_MEDIAN(t_b2, 2, for (long k = 0; k < n; k++) for (long j = 0; j < n; j++)
+            MHD_ROW(stencil_row_blocked2, d1d1_row_blocked2, row0 + j * px + k * pxy));
+        TIME_MEDIAN(t_b4, 2, for (long k = 0; k < n; k++) for (long j = 0; j < n; j++)
+            MHD_ROW(stencil_row_blocked4, d1d1_row_blocked4, row0 + j * px + k * pxy));
+        TIME_MEDIAN(t_b8, 2, for (long k = 0; k < n; k++) for (long j = 0; j < n; j++)
+            MHD_ROW(stencil_row_blocked8, d1d1_row_blocked8, row0 + j * px + k * pxy));
+        double e = (double)n * n * n / 1e6;
+        printf("mhd 64^3 linear-gamma contractions (1 thread):\n");
+        printf("  scalar   %7.2f ms  %7.1f Melem/s\n", t_sc * 1e3, e / t_sc);
+        printf("  blocked2 %7.2f ms  %7.1f Melem/s  x%.2f\n", t_b2 * 1e3, e / t_b2, t_sc / t_b2);
+        printf("  blocked4 %7.2f ms  %7.1f Melem/s  x%.2f\n", t_b4 * 1e3, e / t_b4, t_sc / t_b4);
+        printf("  blocked8 %7.2f ms  %7.1f Melem/s  x%.2f\n", t_b8 * 1e3, e / t_b8, t_sc / t_b8);
+        free(data); free(dst); free(acc); free(ref);
+    }
+
+    /* -------- scalar-vs-blocked crossover at small row lengths -------- */
+    {
+        const long rad = 3, px = 4096 + 2 * rad;
+        double *data = malloc((size_t)(px * 16) * sizeof(double));
+        double *dst = malloc((size_t)4096 * sizeof(double));
+        for (long i = 0; i < px * 16; i++) data[i] = rng_norm();
+        tap_t taps[14];
+        int nt = 0;
+        long strides[2] = {1, px};
+        for (int ax = 0; ax < 2; ax++)
+            for (int t = 0; t < 7; t++)
+                taps[nt++] = (tap_t){(long)(t - 3) * strides[ax], C2[t]};
+        const double s = 0.1;
+        long row0 = rad * px + rad;
+        printf("crossover: diffusion row kernel, scalar vs blocked8, per row length\n");
+        printf("  %6s %12s %12s %8s\n", "n", "scalar ns", "blocked8 ns", "speedup");
+        long lens[] = {8, 16, 32, 48, 64, 128, 256, 1024, 4096};
+        for (unsigned li = 0; li < sizeof(lens) / sizeof(lens[0]); li++) {
+            long n = lens[li];
+            int reps = (int)(40000000 / (n + 64));
+            double t_sc, t_b8;
+            TIME_MEDIAN(t_sc, reps,
+                        affine_row_scalar(dst, data + row0, data + row0, taps, nt, s, n));
+            TIME_MEDIAN(t_b8, reps,
+                        affine_row_blocked8(dst, data + row0, data + row0, taps, nt, s, n));
+            printf("  %6ld %12.1f %12.1f %7.2fx\n", n, t_sc * 1e9, t_b8 * 1e9,
+                   t_sc / t_b8);
+        }
+        free(data); free(dst);
+    }
+    return 0;
+}
