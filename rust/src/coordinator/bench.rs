@@ -51,6 +51,13 @@ pub struct BenchResult {
     /// capability and `STENCILAX_FORCE_SCALAR`) — every case carries it
     /// so bench records are comparable across lane-width tunings.
     pub lanes: String,
+    /// Effective temporal-blocking depth the case actually advanced per
+    /// iteration ([`LaunchPlan::effective_depth`] where the case runs the
+    /// temporal chunk path, 1 for per-sweep loops and aggregate cases) —
+    /// every case carries it so bench records are comparable across depth
+    /// tunings, and because a depth-`d` case's `median_s` covers `d`
+    /// steps (its `elems` scales accordingly). CI validates the tag.
+    pub depth: usize,
     /// Whether the plan came from the tuned plan cache.
     pub tuned: bool,
     /// Case-specific extra keys merged into the JSON record (the service
@@ -77,6 +84,7 @@ impl BenchResult {
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
         obj.insert("plan".into(), Json::str(self.plan.clone()));
         obj.insert("lanes".into(), Json::str(self.lanes.clone()));
+        obj.insert("depth".into(), Json::num(self.depth as f64));
         obj.insert("tuned".into(), Json::Bool(self.tuned));
         for (k, v) in &self.extra {
             obj.insert(k.clone(), v.clone());
@@ -111,19 +119,25 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
     let b = if smoke { Bencher::smoke() } else { Bencher::paper() };
     let mut rng = Rng::new(1);
     let mut out = Vec::new();
-    let mut push =
-        |name: &str, shape: Vec<usize>, elems: usize, stats: Stats, plan: &LaunchPlan, tuned: bool| {
-            out.push(BenchResult {
-                name: name.into(),
-                shape,
-                elems: elems as f64,
-                stats,
-                plan: plan.describe(),
-                lanes: crate::stencil::simd::effective(plan.lanes).tag().into(),
-                tuned,
-                extra: Vec::new(),
-            });
-        };
+    let mut push = |name: &str,
+                    shape: Vec<usize>,
+                    elems: usize,
+                    stats: Stats,
+                    plan: &LaunchPlan,
+                    depth: usize,
+                    tuned: bool| {
+        out.push(BenchResult {
+            name: name.into(),
+            shape,
+            elems: elems as f64,
+            stats,
+            plan: plan.describe(),
+            lanes: crate::stencil::simd::effective(plan.lanes).tag().into(),
+            depth,
+            tuned,
+            extra: Vec::new(),
+        });
+    };
 
     // 1-D cross-correlation at the paper's FP64 problem size (tuned as
     // the registry's conv1d-r3 workload; sizes shared via bench_sizes)
@@ -141,37 +155,45 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
             conv::xcorr1d_into(&plan, &fpad, &taps, &mut out);
             black_box(&out);
         });
-        push("xcorr1d", vec![n], n, stats, &plan, tuned);
+        push("xcorr1d", vec![n], n, stats, &plan, 1, tuned);
     }
 
-    // 2-D diffusion (the nz == 1 decomposition regression target)
+    // 2-D diffusion (the nz == 1 decomposition regression target) — runs
+    // the temporal chunk path, so a depth-tuned plan from the cache
+    // replays its tuned schedule; at depth 1 the scheduler degenerates to
+    // the classic per-sweep loop. One iteration advances `depth` steps
+    // and updates `n * n * depth` elements.
     {
         let n = pick(DIFFUSION2D_N, smoke);
         let (plan, tuned) = case_plan(plans, "diffusion2d", &[n, n]);
+        let depth = plan.effective_depth();
         let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n], 3, |i, j, _| {
             ((i * 31 + j * 17) % 13) as f64
         }));
         let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
         let dt = d.stable_dt(2);
-        let stats = b.report(&format!("diffusion2d {n}^2 r=3 (buffered)"), || {
-            d.step_buffered_plan(&plan, &mut field, 2, dt);
+        let mut sched = crate::stencil::temporal::TemporalScheduler::new();
+        let stats = b.report(&format!("diffusion2d {n}^2 r=3 (chunked d{depth})"), || {
+            sched.advance_chunk(&d, &plan, &mut field, 2, dt, depth);
         });
-        push("diffusion2d", vec![n, n], n * n, stats, &plan, tuned);
+        push("diffusion2d", vec![n, n], n * n * depth, stats, &plan, depth, tuned);
     }
 
-    // 3-D diffusion step
+    // 3-D diffusion step (temporal chunk path, as above)
     {
         let n = pick(DIFFUSION3D_N, smoke);
         let (plan, tuned) = case_plan(plans, "diffusion3d", &[n, n, n]);
+        let depth = plan.effective_depth();
         let mut field = DoubleBuffer::new(Grid::from_fn(&[n, n, n], 3, |i, j, k| {
             ((i * 7 + j * 5 + k * 3) % 11) as f64
         }));
         let d = Diffusion::new(3, 1.0, 1.0, Boundary::Periodic);
         let dt = d.stable_dt(3);
-        let stats = b.report(&format!("diffusion3d {n}^3 r=3 (buffered)"), || {
-            d.step_buffered_plan(&plan, &mut field, 3, dt);
+        let mut sched = crate::stencil::temporal::TemporalScheduler::new();
+        let stats = b.report(&format!("diffusion3d {n}^3 r=3 (chunked d{depth})"), || {
+            sched.advance_chunk(&d, &plan, &mut field, 3, dt, depth);
         });
-        push("diffusion3d", vec![n, n, n], n * n * n, stats, &plan, tuned);
+        push("diffusion3d", vec![n, n, n], n * n * n * depth, stats, &plan, depth, tuned);
     }
 
     // full MHD RK3 step (three fused substeps) — the headline fusion case
@@ -185,18 +207,18 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
         let stats = b.report(&format!("mhd rk3 step {n}^3 (fused)"), || {
             stepper.step_plan(&plan, &mut st, dt);
         });
-        push("mhd-step", vec![n, n, n], 3 * n * n * n, stats, &plan, tuned);
+        push("mhd-step", vec![n, n, n], 3 * n * n * n, stats, &plan, 1, tuned);
 
         let stats = b.report(&format!("mhd substep {n}^3 (fused)"), || {
             stepper.substep_plan(&plan, &mut st, dt, 0);
         });
-        push("mhd-substep", vec![n, n, n], n * n * n, stats, &plan, tuned);
+        push("mhd-substep", vec![n, n, n], n * n * n, stats, &plan, 1, tuned);
 
         let default = LaunchPlan::default_for(&[n, n, n], 0);
         let stats = b.report(&format!("mhd fill_ghosts 8x{n}^3"), || {
             st.fill_ghosts();
         });
-        push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats, &default, false);
+        push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats, &default, 1, false);
     }
 
     // sharded job service at 1/2/4 concurrent sessions — the concurrent
@@ -253,6 +275,7 @@ mod tests {
                 stats: Stats::from_samples(vec![0.5, 0.25, 1.0]),
                 plan: LaunchPlan::default().describe(),
                 lanes: "scalar".into(),
+                depth: 1,
                 tuned: false,
                 extra: Vec::new(),
             },
@@ -263,6 +286,7 @@ mod tests {
                 stats: Stats::from_samples(vec![2e-3]),
                 plan: "rows16 t4 fused chunk8192".into(),
                 lanes: "l4".into(),
+                depth: 3,
                 tuned: true,
                 extra: vec![("scaling_vs_single".into(), Json::num(1.75))],
             },
@@ -285,6 +309,9 @@ mod tests {
         // every case carries its effective lane width (CI validates this)
         assert_eq!(cases[0].req_str("lanes").unwrap(), "scalar");
         assert_eq!(cases[1].req_str("lanes").unwrap(), "l4");
+        // ... and its effective temporal depth (CI validates this too)
+        assert_eq!(cases[0].req_u64("depth").unwrap(), 1);
+        assert_eq!(cases[1].req_u64("depth").unwrap(), 3);
         // case-specific extras are merged into the record
         assert_eq!(cases[1].req_f64("scaling_vs_single").unwrap(), 1.75);
         assert!(cases[0].get("scaling_vs_single").is_none());
@@ -342,6 +369,7 @@ mod tests {
             stats: Stats::from_samples(vec![1e-4, 2e-4, 3e-4]),
             plan: LaunchPlan::default().describe(),
             lanes: "scalar".into(),
+            depth: 1,
             tuned: false,
             extra: Vec::new(),
         }];

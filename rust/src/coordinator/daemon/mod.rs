@@ -86,8 +86,10 @@ pub fn bench_case(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("shards{shards} t{budget}"),
         // aggregate case: jobs run under default heuristics, whose lane
-        // width is the effective host maximum
+        // width is the effective host maximum and whose temporal depth
+        // is 1 (depth > 1 only arrives via tuned cache entries)
         lanes: effective_lane_tag(),
+        depth: 1,
         tuned: results.iter().any(|r| r.tuned),
         extra: vec![
             ("sessions".into(), Json::num(results.len() as f64)),
@@ -195,6 +197,7 @@ pub fn bench_case_mixed(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("sched-vs-fifo shards{shards} t{budget}"),
         lanes: effective_lane_tag(),
+        depth: 1,
         tuned: sched.iter().any(|r| r.tuned),
         extra: vec![
             ("sessions".into(), Json::num(sched.len() as f64)),
@@ -321,6 +324,7 @@ pub fn bench_case_chaos(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("inject {}", plan.describe()),
         lanes: effective_lane_tag(),
+        depth: 1,
         tuned: chaos.results.iter().any(|r| r.tuned),
         extra: vec![
             ("sessions".into(), Json::num(specs.len() as f64)),

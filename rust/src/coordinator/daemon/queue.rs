@@ -21,11 +21,13 @@
 //!   under FIFO one cache-heavy session inflates every later job's
 //!   latency; under the scheduler cheap jobs overtake it.
 //! * **Preemption points**: a driver running a long session offers the
-//!   queue a chance to interleave between steps
+//!   queue a chance to interleave between depth-chunks
 //!   ([`JobQueue::try_pop_preempting`]) — a queued session runs
 //!   immediately if its predicted cost is well under the active
 //!   session's predicted *remaining* cost. The long session's instance
-//!   stays live (parked, not torn down), so its digest is untouched.
+//!   stays live (parked, not torn down), so its digest is untouched. A
+//!   chunk is one [`ActiveSession::step_checked`] call: up to the plan's
+//!   temporal depth steps, exactly one under depth-1 plans.
 //! * **Work-conserving**: one driver per shard ([`drive`], on
 //!   [`par::drive_shards`]), each pinned to its shard, pops the next
 //!   session the moment it goes idle. A driver blocked on a momentarily
@@ -395,7 +397,7 @@ struct DriverCtx<'a> {
 /// [`Event::Done`] / [`Event::Failed`] through `sink` as they happen
 /// (the daemon routes them to the submitting client; the batch path
 /// prints them). Under a preempting policy, a driver stepping a long
-/// session checks the queue between steps and interleaves much-cheaper
+/// session checks the queue between depth-chunks and interleaves much-cheaper
 /// sessions (the long session's instance stays live and parked — its
 /// digest cannot change).
 pub fn drive(queue: &JobQueue, shards: usize, sink: &(dyn Fn(Event) + Sync)) -> DriveOutcome {
@@ -478,7 +480,7 @@ pub fn drive_with(
 }
 
 /// Run one session on this driver's shard — through the bounded retry
-/// loop — yielding to much-cheaper queued sessions at step boundaries
+/// loop — yielding to much-cheaper queued sessions at chunk boundaries
 /// (which recurse here — nesting depth is bounded because each preemptor
 /// costs < [`PREEMPT_RATIO`] of its host's remaining work, so the chain
 /// halves at every level).
@@ -551,18 +553,23 @@ fn run_attempt(
         }
     };
     loop {
-        if let Err((kind, error)) = active.step_checked() {
-            // steps_done counts only *successful* steps, so the
-            // remaining predicted cost is exactly the share this attempt
-            // still holds on the ledger
-            ctx.queue.note_progress(active.remaining_cost_s());
-            return Err(active.failure(kind, error));
-        }
-        ctx.queue.note_progress(active.cost_per_step_s());
+        let advanced = match active.step_checked() {
+            Ok(advanced) => advanced,
+            Err((kind, error)) => {
+                // steps_done counts only *successful* steps, so the
+                // remaining predicted cost is exactly the share this
+                // attempt still holds on the ledger
+                ctx.queue.note_progress(active.remaining_cost_s());
+                return Err(active.failure(kind, error));
+            }
+        };
+        // retire one per-step share for every step the chunk advanced —
+        // a depth-4 chunk is 4 backlog units, not 1
+        ctx.queue.note_progress(active.cost_per_step_s() * advanced as f64);
         if active.is_done() {
             break;
         }
-        // preemption point: park between steps while substantially
+        // preemption point: park between chunks while substantially
         // cheaper sessions are queued; the parked instance stays live
         while let Some(short) = ctx.queue.try_pop_preempting(active.remaining_cost_s()) {
             active.note_preempted();

@@ -34,8 +34,9 @@ use crate::model::specs::{spec, Gpu};
 use crate::sim::kernel::{Caching, KernelProfile};
 use crate::sim::workload::{NativeInstance, Workload};
 use crate::sim::workloads::{self, Tile};
-use crate::stencil::plan::{BlockShape, Lanes, LaunchPlan, WorkspaceStrategy, DEFAULT_CHUNK};
+use crate::stencil::plan::{BlockShape, Lanes, LaunchPlan, WorkspaceStrategy, DEFAULT_CHUNK, MAX_DEPTH};
 use crate::stencil::simd;
+use crate::stencil::temporal;
 use crate::util::bench::{Bencher, Stats};
 use crate::util::json::Json;
 use crate::util::par;
@@ -62,13 +63,20 @@ pub const PRUNE_KEEP: usize = 8;
 /// it is live even for the single-row case — except under
 /// `STENCILAX_FORCE_SCALAR`, where dispatch pins every width to the
 /// scalar path and the variants would be timing-noise duplicates.
-/// The default plan is always element 0; the list is deduplicated and
-/// deterministic.
+/// `include_depth` adds the temporal-depth axis (2..=[`MAX_DEPTH`]),
+/// crossed with the lane widths — depth trades halo recompute for cache
+/// residency and lane width changes the arithmetic density, so the two
+/// interact; it is only enumerated when the instance has a genuine
+/// temporal path ([`NativeInstance::has_temporal_path`]) and not under
+/// `STENCILAX_FORCE_DEPTH1`, where every depth pins to 1 and the
+/// variants would be duplicates. The default plan is always element 0;
+/// the list is deduplicated and deterministic.
 pub fn candidate_plans(
     shape: &[usize],
     threads: usize,
     chunked: bool,
     include_unfused: bool,
+    include_depth: bool,
 ) -> Vec<LaunchPlan> {
     let base = LaunchPlan::default_for(shape, threads);
     let mut out: Vec<LaunchPlan> = Vec::new();
@@ -105,6 +113,21 @@ pub fn candidate_plans(
             push(LaunchPlan { lanes, ..base }, &mut out);
         }
     }
+    if include_depth && !temporal::force_depth1() {
+        // temporal-depth axis, crossed with the lane widths: deeper
+        // tiles amortize memory traffic over more sweeps per residency
+        // while the halo recompute grows, and lane width shifts the
+        // compute/memory balance — bit-identical either way, so
+        // measurement alone decides
+        for depth in 2..=MAX_DEPTH {
+            push(LaunchPlan { depth, ..base }, &mut out);
+            if !simd::force_scalar() {
+                for lanes in Lanes::ALL {
+                    push(LaunchPlan { depth, lanes, ..base }, &mut out);
+                }
+            }
+        }
+    }
     if include_unfused {
         push(LaunchPlan { fused: false, ..base }, &mut out);
     }
@@ -130,7 +153,11 @@ fn profile_tile(dims: usize) -> Tile {
 /// the per-core L2 lose the EXPERIMENTS.md §Perf/L3-1 blocking benefit
 /// and stream the input once per tap — modeled as `(taps+1)/2` extra
 /// passes, so oversized chunks rank behind the resident plateau instead
-/// of (wrongly) winning on block-overhead alone.
+/// of (wrongly) winning on block-overhead alone. `temporal` says the
+/// workload has a genuine temporal-reuse path, so the plan's effective
+/// depth enters the cost (the model discounts per-step memory traffic by
+/// its fitted reuse efficiency); without one, depth is priced as 1 — the
+/// default run_chunk loop reuses nothing.
 fn sweep_cost(
     prof: Option<&KernelProfile>,
     shape: &[usize],
@@ -138,6 +165,7 @@ fn sweep_cost(
     plan: &LaunchPlan,
     threads: usize,
     chunked: bool,
+    temporal: bool,
 ) -> SweepCost {
     let (bytes_per_elem, flops_per_elem) = match prof {
         Some(p) if p.elems > 0.0 => (p.hbm_bytes / p.elems, p.flops_per_elem),
@@ -182,6 +210,7 @@ fn sweep_cost(
         threads: threads.min(blocks),
         halo_bytes_per_block: halo,
         lane_width: plan.lanes.width(),
+        depth: if temporal { plan.effective_depth() } else { 1 },
     }
 }
 
@@ -192,12 +221,16 @@ fn sweep_cost(
 /// exactly the cost's decomposition discriminants: plans with identical
 /// cost share a slot (their predictions are equal by construction),
 /// distinct costs get distinct keys. Lane width (1..=8) packs into `tz`
-/// above the fusion bit.
+/// above the fusion bit, and the effective temporal depth (1..=4) above
+/// the lane byte — a depth-4 plan must never share a memoized prediction
+/// with its depth-1 twin, whose traffic the model prices differently.
 fn plan_cache_tile(cost: &SweepCost, plan: &LaunchPlan) -> Tile {
     Tile {
         tx: cost.blocks.min(1 << 20) as u32 + 1,
         ty: cost.threads.min(1 << 20) as u32 + 1,
-        tz: plan.fused as u32 | ((cost.lane_width.min(255) as u32) << 1),
+        tz: plan.fused as u32
+            | ((cost.lane_width.min(255) as u32) << 1)
+            | ((cost.depth.min(15) as u32) << 9),
     }
 }
 
@@ -223,7 +256,8 @@ pub fn estimate_job_cost_s(
     let chunked = w.chunked_1d();
     let threads = threads.max(1);
     let prof = w.profile(spec(Gpu::A100), true, Caching::Hwc, profile_tile(w.dims()));
-    let cost = sweep_cost(prof.as_ref(), shape, elems, plan, threads, chunked);
+    let cost =
+        sweep_cost(prof.as_ref(), shape, elems, plan, threads, chunked, w.has_temporal_path());
     let per_sweep = match predictions {
         Some(cache) => {
             let key = format!("admit|{}|{shape:?}|t{threads}", w.name());
@@ -349,7 +383,8 @@ pub fn tune_native_at(
     let chunked = inst.chunked_1d();
     let threads = threads.max(1);
     let include_unfused = inst.has_unfused_path();
-    let candidates = candidate_plans(&shape, threads, chunked, include_unfused);
+    let include_depth = inst.has_temporal_path();
+    let candidates = candidate_plans(&shape, threads, chunked, include_unfused, include_depth);
     let enumerated = candidates.len();
     let default_plan = LaunchPlan::default_for(&shape, threads);
 
@@ -359,7 +394,8 @@ pub fn tune_native_at(
     let mut ranked: Vec<(LaunchPlan, SweepCost, f64)> = candidates
         .into_iter()
         .map(|plan| {
-            let cost = sweep_cost(prof.as_ref(), &shape, elems, &plan, threads, chunked);
+            let cost =
+                sweep_cost(prof.as_ref(), &shape, elems, &plan, threads, chunked, include_depth);
             let (t, _, _) = cache
                 .eval(&key, plan_cache_tile(&cost, &plan), || {
                     let t = model.predict(&cost);
@@ -386,7 +422,20 @@ pub fn tune_native_at(
     let mut measured: Vec<PlanMeasurement> = keep
         .into_iter()
         .map(|(plan, cost, predicted_s)| {
-            let stats = bencher.run(|| inst.run(&plan));
+            // a depth-d plan advances d steps per timed chunk (its
+            // actual serving granularity); normalize the timing to
+            // per-step so every candidate ranks on equal work
+            let depth = plan.effective_depth();
+            let mut stats = bencher.run(|| {
+                inst.run_chunk(&plan, depth);
+            });
+            if depth > 1 {
+                let d = depth as f64;
+                stats.median_s /= d;
+                stats.mean_s /= d;
+                stats.min_s /= d;
+                stats.max_s /= d;
+            }
             PlanMeasurement { plan, predicted_s, stats, cost }
         })
         .collect();
@@ -569,23 +618,43 @@ mod tests {
     #[test]
     fn candidate_plans_cover_the_knobs_and_dedupe() {
         let threads = 4;
-        let grid = candidate_plans(&[512, 512], threads, false, false);
+        let grid = candidate_plans(&[512, 512], threads, false, false, false);
         assert_eq!(grid[0], LaunchPlan::default_for(&[512, 512], threads));
         assert!(grid.iter().any(|p| matches!(p.block, BlockShape::Rows(_))));
         assert!(grid.iter().any(|p| p.block == BlockShape::Serial));
         assert!(grid.iter().any(|p| p.workspace == WorkspaceStrategy::Fresh));
         assert!(grid.iter().all(|p| p.fused));
-        let flat = candidate_plans(&[1 << 20], threads, true, false);
+        assert!(grid.iter().all(|p| p.depth == 1), "depth off => no depth variants");
+        let flat = candidate_plans(&[1 << 20], threads, true, false, false);
         assert!(flat.iter().any(|p| p.chunk != DEFAULT_CHUNK));
-        let mhd = candidate_plans(&[48, 48, 48], threads, false, true);
+        let mhd = candidate_plans(&[48, 48, 48], threads, false, true, false);
         assert!(mhd.iter().any(|p| !p.fused));
         // a 1-D *grid* sweep (single interior row, not chunked) has no
         // live decomposition axis: the workspace knob and the intra-row
         // lane-width axis remain
-        let single_row = candidate_plans(&[1 << 20], threads, false, false);
+        let single_row = candidate_plans(&[1 << 20], threads, false, false, false);
         let lane_variants = if simd::force_scalar() { 0 } else { Lanes::ALL.len() - 1 };
         assert_eq!(single_row.len(), 2 + lane_variants, "{single_row:?}");
         assert!(single_row.iter().all(|p| p.block == grid[0].block && p.chunk == DEFAULT_CHUNK));
+        // the temporal-depth axis is enumerated only for workloads with a
+        // genuine temporal path, crossed with the lane widths — and pins
+        // to depth-1 duplicates (hence absent) under the env pin
+        let deep = candidate_plans(&[512, 512], threads, false, false, true);
+        if temporal::force_depth1() {
+            assert_eq!(deep, grid, "the env pin must suppress depth variants");
+        } else {
+            for depth in 2..=MAX_DEPTH {
+                assert!(deep.iter().any(|p| p.depth == depth), "depth {depth} missing");
+            }
+            if !simd::force_scalar() {
+                for lanes in Lanes::ALL {
+                    assert!(
+                        deep.iter().any(|p| p.depth == MAX_DEPTH && p.lanes == lanes),
+                        "depth x lanes cross missing {lanes:?}"
+                    );
+                }
+            }
+        }
         // the lane-width axis is searched on every sweep kind (unless
         // dispatch is pinned scalar, where the variants would be no-ops)
         for plans in [&grid, &flat, &mhd, &single_row] {
@@ -597,7 +666,7 @@ mod tests {
                 }
             }
         }
-        for plans in [&grid, &flat, &mhd, &single_row] {
+        for plans in [&grid, &flat, &mhd, &single_row, &deep] {
             let mut seen = plans.clone();
             seen.dedup();
             assert_eq!(seen.len(), plans.len(), "duplicate candidates");
@@ -610,7 +679,7 @@ mod tests {
         let base = LaunchPlan::default_for(&shape, 4);
         let model = HostModel::seed();
         let mk = |p: &LaunchPlan| {
-            model.predict(&sweep_cost(None, &shape, 48.0 * 48.0 * 48.0, p, 4, false))
+            model.predict(&sweep_cost(None, &shape, 48.0 * 48.0 * 48.0, p, 4, false, false))
         };
         let fused = mk(&base);
         // unfused multiplies traffic ~20x; both decompose identically
@@ -623,8 +692,43 @@ mod tests {
             &LaunchPlan { block: BlockShape::Serial, ..base },
             4,
             false,
+            false,
         );
         assert_eq!((serial.threads, serial.blocks), (1, 1));
+    }
+
+    #[test]
+    fn temporal_depth_discounts_cost_only_on_temporal_paths() {
+        let shape = [512usize, 512];
+        let elems = 512.0 * 512.0;
+        let base = LaunchPlan::default_for(&shape, 4);
+        let deep = LaunchPlan { depth: MAX_DEPTH, ..base };
+        let model = HostModel::seed();
+        // without a temporal path, depth prices as 1 (the default
+        // run_chunk loop reuses nothing)
+        let flat = sweep_cost(None, &shape, elems, &deep, 4, false, false);
+        assert_eq!(flat.depth, 1);
+        // with one, the effective depth enters the cost and the seed
+        // model discounts per-step memory traffic — unless the env pin
+        // collapses every depth to 1
+        let tiled = sweep_cost(None, &shape, elems, &deep, 4, false, true);
+        if temporal::force_depth1() {
+            assert_eq!(tiled.depth, 1);
+            assert_eq!(model.predict(&tiled), model.predict(&flat));
+        } else {
+            assert_eq!(tiled.depth, MAX_DEPTH);
+            assert!(
+                model.predict(&tiled) < model.predict(&flat),
+                "temporal reuse must discount the prediction"
+            );
+        }
+        // distinct depths must never share a memoized prediction slot
+        let t1 = plan_cache_tile(&flat, &deep);
+        let t4 = plan_cache_tile(&tiled, &deep);
+        if !temporal::force_depth1() {
+            assert_ne!(t1, t4, "depth must key the prediction cache");
+        }
+        assert_eq!(t1, plan_cache_tile(&flat, &deep), "tile key is deterministic");
     }
 
     #[test]

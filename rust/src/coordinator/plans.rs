@@ -379,6 +379,44 @@ mod tests {
     }
 
     #[test]
+    fn pre_temporal_cache_entries_load_at_depth_one_and_deep_winners_roundtrip() {
+        // Regression (ISSUE-9 satellite): plan_cache.json blobs written
+        // before temporal blocking carry plans with no "depth" key. They
+        // were tuned under classic one-step-per-residency execution, so
+        // they must load at depth 1 — NOT be rejected, and NOT silently
+        // acquire a deeper schedule the measurement never covered.
+        let pre_temporal = r#"{
+            "workload": "diffusion2d", "shape": [512, 512], "threads": 4,
+            "host": "HOST",
+            "plan": {"threads": 4, "block": "rows:16", "chunk": 4096,
+                     "fused": true, "workspace": "thread-local", "lanes": "l4"},
+            "tuned_melem_per_s": 123.4, "default_melem_per_s": 100.0
+        }"#
+        .replace("HOST", &host_fingerprint());
+        let e = PlanEntry::from_json(&Json::parse(&pre_temporal).unwrap()).unwrap();
+        assert_eq!(e.plan.depth, 1, "pre-temporal entry must load at depth 1");
+
+        // a depth-only winner counts as differing from the default plan
+        // (depth is a tuned axis, same as lanes or block shape) ...
+        let mut deep = entry("diffusion2d", 4);
+        deep.plan = LaunchPlan {
+            depth: crate::stencil::plan::MAX_DEPTH,
+            ..LaunchPlan::default_for(&deep.shape, 4)
+        };
+        assert!(deep.differs_from_default());
+        // ... and the depth survives a cache roundtrip so the next bench
+        // run replays the tuned schedule
+        let mut cache = PlanCache::new();
+        cache.insert(deep.clone());
+        let back = PlanCache::from_json(&Json::parse(&cache.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(
+            back.lookup("diffusion2d", &[512, 512], 4).unwrap().plan.depth,
+            crate::stencil::plan::MAX_DEPTH
+        );
+    }
+
+    #[test]
     fn rejects_foreign_schema() {
         let j = Json::parse(r#"{"schema":"stencilax-plans/999","entries":[]}"#).unwrap();
         assert!(PlanCache::from_json(&j).is_err());

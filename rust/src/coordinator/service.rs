@@ -710,15 +710,19 @@ pub fn fnv_bits(xs: &[f64]) -> u64 {
     h
 }
 
-/// A session being executed, one step at a time — the resumable unit the
-/// driver loop advances. Splitting the old all-steps-at-once
-/// `run_session` here is what makes step-granularity preemption possible:
-/// a shard can park a long session *between* steps (the instance and its
-/// buffers stay live), run queued short jobs, and resume. Digest parity
-/// is preserved by construction — each session's state advances through
-/// exactly the same per-step arithmetic on its own private instance, so
-/// pausing between steps cannot change a single output bit (pinned by
-/// the scheduler parity tests).
+/// A session being executed, one depth-chunk at a time — the resumable
+/// unit the driver loop advances. Splitting the old all-steps-at-once
+/// `run_session` here is what makes chunk-granularity preemption
+/// possible: a shard can park a long session *between* chunks (the
+/// instance and its buffers stay live), run queued short jobs, and
+/// resume. A chunk is up to `plan.effective_depth()` steps advanced in
+/// one [`NativeInstance::run_chunk`] call (temporal tiles for diffusion,
+/// a plain loop otherwise; exactly one step under depth-1 plans, which
+/// keeps the pre-temporal serving behavior byte-identical). Digest
+/// parity is preserved by construction — each session's state advances
+/// through arithmetic bit-identical to single stepping on its own
+/// private instance, so pausing between chunks cannot change a single
+/// output bit (pinned by the scheduler parity tests).
 pub struct ActiveSession {
     s: Session,
     inst: Box<dyn NativeInstance>,
@@ -782,24 +786,38 @@ impl ActiveSession {
         }
     }
 
-    /// Advance one timed step with the failure layer armed: the step
-    /// body runs under `catch_unwind` (a panic in the kernel or a pool
-    /// worker becomes a per-job failure, not a dead shard), the live
-    /// field is probed for NaN/Inf after the step, and the busy-time
-    /// watchdog is checked at this preemption-point granularity. On
-    /// `Err` the attempt is abandoned; `steps_done` counts only fully
-    /// successful steps (the ledger release math depends on that).
-    pub fn step_checked(&mut self) -> Result<(), (FailureKind, String)> {
+    /// Advance one timed depth-chunk (up to `plan.effective_depth()`
+    /// steps, clamped to the steps remaining) with the failure layer
+    /// armed: the chunk body runs under `catch_unwind` (a panic in the
+    /// kernel or a pool worker becomes a per-job failure, not a dead
+    /// shard), the live field is probed for NaN/Inf after the chunk, and
+    /// the busy-time watchdog is checked at this preemption-point
+    /// granularity. An armed injected fault clamps the chunk so the
+    /// fault fires at *exactly* its scheduled step index (the faulted
+    /// step advances alone), preserving the per-step fault semantics the
+    /// chaos suite pins. Returns the number of steps advanced (the
+    /// backlog units the driver retires); on `Err` the attempt is
+    /// abandoned and `steps_done` counts only fully successful steps
+    /// (the ledger release math depends on that).
+    pub fn step_checked(&mut self) -> Result<usize, (FailureKind, String)> {
         let step = self.steps_done;
+        let mut max_steps = self.s.spec.steps - step;
         let inject = match self.fault {
             Some((kind, at)) if at == step => {
                 self.fault = None;
+                max_steps = 1; // the faulted step advances alone
                 Some(kind)
+            }
+            Some((_, at)) if at > step => {
+                // stop the chunk at the fault's doorstep so the next
+                // call injects at precisely step `at`
+                max_steps = max_steps.min(at - step);
+                None
             }
             _ => None,
         };
         let t0 = Instant::now();
-        {
+        let advanced = {
             let inst = &mut self.inst;
             let plan = &self.s.plan;
             let stall = self.stall;
@@ -809,27 +827,36 @@ impl ActiveSession {
                     Some(FaultKind::Stall) => std::thread::sleep(stall),
                     _ => {}
                 }
-                inst.run(plan);
+                let advanced = inst.run_chunk(plan, max_steps);
                 if inject == Some(FaultKind::Nan) {
                     inst.poison_nan();
                 }
+                advanced
             }));
-            if let Err(payload) = unwound {
-                return Err((
-                    FailureKind::Panic,
-                    format!("step {step}: {}", par::panic_message(&payload)),
-                ));
+            match unwound {
+                Ok(advanced) => advanced,
+                Err(payload) => {
+                    return Err((
+                        FailureKind::Panic,
+                        format!("step {step}: {}", par::panic_message(&payload)),
+                    ));
+                }
             }
-        }
+        };
+        debug_assert!(advanced >= 1 && advanced <= max_steps, "run_chunk contract: {advanced}");
+        let advanced = advanced.clamp(1, max_steps);
         let dt = t0.elapsed().as_secs_f64();
-        // sampled probe per step; exhaustive on the last step, so a NaN
+        let last = step + advanced - 1; // 0-based index of the last step taken
+        // sampled probe per chunk, phased by the last step taken so the
+        // rotation matches single stepping under depth-1 plans;
+        // exhaustive when the chunk contains the final step, so a NaN
         // the strided samples missed can never reach the digest
         let samples =
-            if step + 1 >= self.s.spec.steps { usize::MAX } else { PROBE_SAMPLES };
-        if !self.inst.probe_finite(samples, step) {
+            if last + 1 >= self.s.spec.steps { usize::MAX } else { PROBE_SAMPLES };
+        if !self.inst.probe_finite(samples, last) {
             return Err((
                 FailureKind::Divergence,
-                format!("non-finite value in live field after step {step}"),
+                format!("non-finite value in live field after step {last}"),
             ));
         }
         self.busy_s += dt;
@@ -843,9 +870,15 @@ impl ActiveSession {
                 ),
             ));
         }
-        self.samples.push(dt);
-        self.steps_done += 1;
-        Ok(())
+        // per-step samples: a chunk's wall time is split evenly over the
+        // steps it advanced, so `Stats` (median/iters) keeps its
+        // steps-granularity meaning regardless of temporal depth
+        let per_step = dt / advanced as f64;
+        for _ in 0..advanced {
+            self.samples.push(per_step);
+        }
+        self.steps_done += advanced;
+        Ok(advanced)
     }
 
     pub fn is_done(&self) -> bool {
@@ -1094,6 +1127,7 @@ pub fn bench_cases(
             stats,
             plan: format!("shards{shards} t{budget}"),
             lanes: effective_lane_tag(),
+            depth: 1,
             tuned,
             extra: vec![
                 ("sessions".into(), Json::num(sessions as f64)),
@@ -1395,7 +1429,7 @@ mod tests {
         let s = admit(1, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
         let plan = FaultPlan::parse("panic@1").unwrap();
         let mut active = ActiveSession::start_with(s, 0, 0, Some(&plan));
-        let mut outcome = Ok(());
+        let mut outcome = Ok(1);
         while outcome.is_ok() && !active.is_done() {
             outcome = active.step_checked();
         }
@@ -1408,7 +1442,7 @@ mod tests {
         let s = admit(4, job("diffusion2d", &[16, 16], 4), None, 1).unwrap();
         let plan = FaultPlan::parse("nan@4").unwrap();
         let mut active = ActiveSession::start_with(s, 0, 0, Some(&plan));
-        let mut outcome = Ok(());
+        let mut outcome = Ok(1);
         while outcome.is_ok() && !active.is_done() {
             outcome = active.step_checked();
         }
@@ -1444,7 +1478,7 @@ mod tests {
         let s = admit(3, spec, None, 1).unwrap();
         let plan = FaultPlan::parse("stall@3,stall_ms=100").unwrap();
         let mut active = ActiveSession::start_with(s, 0, 0, Some(&plan));
-        let mut outcome = Ok(());
+        let mut outcome = Ok(1);
         while outcome.is_ok() && !active.is_done() {
             outcome = active.step_checked();
         }
@@ -1458,6 +1492,63 @@ mod tests {
             active.step_checked().expect("honest job under the derived budget");
         }
         assert_eq!(active.finish().retries, 0);
+    }
+
+    #[test]
+    fn depth_chunked_sessions_keep_digest_parity_and_fault_steps() {
+        use crate::coordinator::faults::FaultPlan;
+        use crate::stencil::plan::MAX_DEPTH;
+        let mut cache = PlanCache::new();
+        let deep = LaunchPlan { depth: MAX_DEPTH, ..LaunchPlan::default_for(&[16, 16], 1) };
+        cache.insert(PlanEntry {
+            workload: "diffusion2d".into(),
+            shape: vec![16, 16],
+            threads: 1,
+            host: host_fingerprint(),
+            plan: deep,
+            tuned_melem_per_s: 2.0,
+            default_melem_per_s: 1.0,
+        });
+        // golden depth-1 run
+        let golden = {
+            let s = admit(0, job("diffusion2d", &[16, 16], 7), None, 1).unwrap();
+            let mut a = ActiveSession::start(s, 0);
+            while !a.is_done() {
+                a.step_checked().unwrap();
+            }
+            a.finish()
+        };
+        // the depth-MAX session advances in chunks but lands on the same bits
+        let s = admit(0, job("diffusion2d", &[16, 16], 7), Some(&cache), 1).unwrap();
+        assert!(s.tuned);
+        assert_eq!(s.plan.depth, MAX_DEPTH);
+        let mut a = ActiveSession::start(s, 0);
+        let mut calls = 0usize;
+        while !a.is_done() {
+            let adv = a.step_checked().unwrap();
+            assert!(adv >= 1 && adv <= MAX_DEPTH, "chunk of {adv}");
+            calls += 1;
+        }
+        let r = a.finish();
+        assert_eq!(r.digest_bits, golden.digest_bits, "depth chunks must not change a bit");
+        assert_eq!(r.stats.iters, 7 - 1, "per-step samples survive chunking");
+        if crate::stencil::temporal::force_depth1() {
+            assert_eq!(calls, 7, "the env pin forces single stepping");
+        } else {
+            assert_eq!(calls, 2, "7 steps at depth 4 is a 4-chunk and a 3-chunk");
+        }
+        // an injected fault still fires at its exact scheduled step: the
+        // chunk preceding it is clamped to stop at the fault's doorstep
+        let fp = FaultPlan::parse("panic@0").unwrap();
+        let s = admit(0, job("diffusion2d", &[16, 16], 8), Some(&cache), 1).unwrap();
+        let mut a = ActiveSession::start_with(s, 0, 0, Some(&fp));
+        let mut outcome = Ok(1);
+        while outcome.is_ok() && !a.is_done() {
+            outcome = a.step_checked();
+        }
+        let (kind, _) = outcome.expect_err("injected panic must surface");
+        assert_eq!(kind, FailureKind::Panic);
+        assert_eq!(a.steps_done(), 4, "fault fires at exactly step 8/2 despite chunking");
     }
 
     #[test]

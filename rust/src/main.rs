@@ -322,7 +322,10 @@ threads/shards for the service budgets)",
             cache.len(),
             host_fingerprint()
         ),
-        &["workload", "shape", "budget", "lanes", "host", "plan", "default", "tuned", "differs"],
+        &[
+            "workload", "shape", "budget", "lanes", "depth", "host", "plan", "default", "tuned",
+            "differs",
+        ],
     );
     for e in cache.iter() {
         t.row(vec![
@@ -330,6 +333,7 @@ threads/shards for the service budgets)",
             format!("{:?}", e.shape),
             format!("t{}", e.threads),
             e.plan.lanes.tag().to_string(),
+            format!("d{}", e.plan.depth),
             e.host.clone(),
             e.plan.describe(),
             format!("{:.1} Me/s", e.default_melem_per_s),
@@ -341,11 +345,12 @@ threads/shards for the service budgets)",
     if let Some(cal) = &cache.calibration {
         println!(
             "calibration: bw {:.1} GiB/s, {:.2} GFLOP/s/thread, {:.2} us/block, \
-simd_eff {:.2}; model error {:.2} -> {:.2} ({} points)",
+simd_eff {:.2}, temporal_reuse {:.2}; model error {:.2} -> {:.2} ({} points)",
             cal.model.bw_gibs,
             cal.model.gflops_per_thread,
             cal.model.block_overhead_us,
             cal.model.simd_eff,
+            cal.model.temporal_reuse,
             cal.err_before,
             cal.err_after,
             cal.points,

@@ -4,9 +4,9 @@
 //! Table 1 specs; the native engine runs on the *host* CPU, whose
 //! effective bandwidth and dispatch latency no table provides. This module
 //! closes that gap the way the paper closes it for GPUs (§5.2: measure,
-//! then calibrate): a four-coefficient binding-resource [`HostModel`]
+//! then calibrate): a five-coefficient binding-resource [`HostModel`]
 //! predicts a sweep's time from its memory traffic, arithmetic, SIMD lane
-//! width, and block
+//! width, temporal-blocking depth, and block
 //! decomposition, and [`fit`] refits the coefficients from the empirical
 //! tuner's measurements (`coordinator::empirical`), reporting
 //! predicted-vs-measured error before and after. The fitted coefficients
@@ -38,6 +38,15 @@ pub struct SweepCost {
     /// see [`crate::stencil::plan::Lanes`]). Scales arithmetic throughput
     /// through the [`HostModel::simd_eff`] coefficient.
     pub lane_width: usize,
+    /// Temporal-blocking depth: steps advanced per cache residency
+    /// (1 = classic one-sweep-per-residency execution; see
+    /// [`crate::stencil::plan::LaunchPlan::depth`]). Depths above 1
+    /// amortise off-chip traffic across steps, discounted through the
+    /// [`HostModel::temporal_reuse`] coefficient. Callers whose workload
+    /// has no temporal path must pass 1 — the per-step traffic of a
+    /// plain repeated sweep is undiscounted regardless of the plan's
+    /// depth field.
+    pub depth: usize,
 }
 
 /// Binding-resource host model, the CPU analogue of
@@ -59,6 +68,15 @@ pub struct HostModel {
     /// nothing (e.g. a bandwidth-starved host). Refit from lane-width
     /// sweep measurements like the other coefficients.
     pub simd_eff: f64,
+    /// Temporal-reuse coefficient in [0, 1]: the fraction of per-step
+    /// off-chip traffic a temporal tile at depth `d` saves, applied as
+    /// `t_mem *= 1 - temporal_reuse * (1 - 1/d)`. `1` means a depth-`d`
+    /// chunk streams the field once for `d` steps (perfect reuse); `0`
+    /// means deeper tiles buy nothing (working set already resident, or
+    /// halo re-reads eat the savings). Depth-1 costs are unchanged for
+    /// any value, so pre-temporal calibrations stay valid. Refit from
+    /// depth-sweep measurements like the other coefficients.
+    pub temporal_reuse: f64,
 }
 
 impl HostModel {
@@ -66,19 +84,29 @@ impl HostModel {
     /// from measurements on the first tune run, and subsequent runs load
     /// the calibrated coefficients from the plan cache.
     pub fn seed() -> HostModel {
-        HostModel { bw_gibs: 16.0, gflops_per_thread: 2.0, block_overhead_us: 2.0, simd_eff: 0.5 }
+        HostModel {
+            bw_gibs: 16.0,
+            gflops_per_thread: 2.0,
+            block_overhead_us: 2.0,
+            simd_eff: 0.5,
+            temporal_reuse: 0.3,
+        }
     }
 
     /// Predicted sweep seconds. Bandwidth is shared across threads;
     /// arithmetic scales with the threads that can actually be busy and
     /// with the plan's SIMD lane width (discounted by [`Self::simd_eff`]);
-    /// the last wave of blocks may be partially filled (load imbalance);
-    /// every block pays a dispatch latency.
+    /// temporal tiles at depth > 1 amortise off-chip traffic (discounted
+    /// by [`Self::temporal_reuse`]); the last wave of blocks may be
+    /// partially filled (load imbalance); every block pays a dispatch
+    /// latency.
     pub fn predict(&self, c: &SweepCost) -> f64 {
         let blocks = c.blocks.max(1) as f64;
         let threads = c.threads.max(1).min(c.blocks.max(1)) as f64;
         let bytes = c.bytes + blocks * c.halo_bytes_per_block;
-        let t_mem = bytes / (self.bw_gibs * GIB);
+        let depth = c.depth.max(1) as f64;
+        let reuse = 1.0 - self.temporal_reuse * (1.0 - 1.0 / depth);
+        let t_mem = bytes * reuse / (self.bw_gibs * GIB);
         let lane_boost = 1.0 + self.simd_eff * (c.lane_width.max(1) - 1) as f64;
         let t_flop = c.flops / (self.gflops_per_thread * 1e9 * threads * lane_boost);
         let waves = (blocks / threads).ceil();
@@ -92,23 +120,30 @@ impl HostModel {
             ("gflops_per_thread", Json::num(self.gflops_per_thread)),
             ("block_overhead_us", Json::num(self.block_overhead_us)),
             ("simd_eff", Json::num(self.simd_eff)),
+            ("temporal_reuse", Json::num(self.temporal_reuse)),
         ])
     }
 
     pub fn from_json(j: &Json) -> Result<HostModel> {
-        // `simd_eff` is absent from pre-SIMD calibrations: those were fit
-        // against scalar-only measurements (every lane_width = 1, where
-        // the coefficient is inert), so they load with the seed value and
-        // the next lane-width sweep refits it.
+        // `simd_eff` is absent from pre-SIMD calibrations and
+        // `temporal_reuse` from pre-temporal ones: those were fit against
+        // measurements where the coefficient is inert (every lane_width,
+        // resp. depth, = 1), so they load with the seed value and the
+        // next lane-width / depth sweep refits it.
         let simd_eff = match j.get("simd_eff") {
             None => HostModel::seed().simd_eff,
             Some(v) => v.as_f64().context("key \"simd_eff\" not a number")?,
+        };
+        let temporal_reuse = match j.get("temporal_reuse") {
+            None => HostModel::seed().temporal_reuse,
+            Some(v) => v.as_f64().context("key \"temporal_reuse\" not a number")?,
         };
         Ok(HostModel {
             bw_gibs: j.req_f64("bw_gibs")?,
             gflops_per_thread: j.req_f64("gflops_per_thread")?,
             block_overhead_us: j.req_f64("block_overhead_us")?,
             simd_eff,
+            temporal_reuse,
         })
     }
 }
@@ -155,13 +190,14 @@ pub fn mean_abs_log_err(m: &HostModel, points: &[(SweepCost, f64)]) -> f64 {
         / points.len() as f64
 }
 
-/// Refit the four coefficients from measurements by cyclic coordinate
+/// Refit the five coefficients from measurements by cyclic coordinate
 /// descent on a shrinking multiplicative grid (deterministic; no RNG).
 /// Non-finite or non-positive measurements are discarded. `simd_eff` is
 /// only identifiable when the points span more than one lane width (the
 /// empirical tuner always measures the full width sweep); on scalar-only
 /// points it is inert in every prediction and descent leaves it at the
-/// seed.
+/// seed. `temporal_reuse` behaves the same way with respect to depth:
+/// on depth-1-only points it is inert and stays at the seed.
 pub fn fit(points: &[(SweepCost, f64)], seed: HostModel) -> Calibration {
     let pts: Vec<(SweepCost, f64)> =
         points.iter().copied().filter(|(_, m)| m.is_finite() && *m > 0.0).collect();
@@ -173,7 +209,7 @@ pub fn fit(points: &[(SweepCost, f64)], seed: HostModel) -> Calibration {
     let mut best_err = err_before;
     let mut span = 16.0f64;
     for _round in 0..14 {
-        for coeff in 0..4 {
+        for coeff in 0..5 {
             let base = best;
             for &f in &[1.0 / span, 1.0 / span.sqrt(), span.sqrt(), span] {
                 let mut m = base;
@@ -181,7 +217,8 @@ pub fn fit(points: &[(SweepCost, f64)], seed: HostModel) -> Calibration {
                     0 => m.bw_gibs = (base.bw_gibs * f).clamp(0.25, 8192.0),
                     1 => m.gflops_per_thread = (base.gflops_per_thread * f).clamp(0.01, 8192.0),
                     2 => m.block_overhead_us = (base.block_overhead_us * f).clamp(0.01, 1e5),
-                    _ => m.simd_eff = (base.simd_eff * f).clamp(0.02, 1.0),
+                    3 => m.simd_eff = (base.simd_eff * f).clamp(0.02, 1.0),
+                    _ => m.temporal_reuse = (base.temporal_reuse * f).clamp(0.02, 1.0),
                 }
                 let e = mean_abs_log_err(&m, &pts);
                 if e < best_err {
@@ -202,19 +239,23 @@ mod tests {
     fn costs() -> Vec<SweepCost> {
         let mut out = Vec::new();
         // both regimes, so bandwidth AND throughput are identifiable;
-        // lane widths 1 and 4, so simd_eff is identifiable too
+        // lane widths 1 and 4, so simd_eff is identifiable too;
+        // depths 1 and 4, so temporal_reuse is identifiable too
         for &flops_per_byte in &[0.05, 3.0] {
             for &bytes in &[4e6, 32e6, 256e6] {
                 for &blocks in &[1usize, 8, 64, 512] {
                     for &lane_width in &[1usize, 4] {
-                        out.push(SweepCost {
-                            bytes,
-                            flops: bytes * flops_per_byte,
-                            blocks,
-                            threads: 4,
-                            halo_bytes_per_block: 4096.0,
-                            lane_width,
-                        });
+                        for &depth in &[1usize, 4] {
+                            out.push(SweepCost {
+                                bytes,
+                                flops: bytes * flops_per_byte,
+                                blocks,
+                                threads: 4,
+                                halo_bytes_per_block: 4096.0,
+                                lane_width,
+                                depth,
+                            });
+                        }
                     }
                 }
             }
@@ -229,6 +270,7 @@ mod tests {
             gflops_per_thread: 4.0,
             block_overhead_us: 5.0,
             simd_eff: 0.7,
+            temporal_reuse: 0.6,
         };
         let pts: Vec<(SweepCost, f64)> =
             costs().into_iter().map(|c| (c, truth.predict(&c))).collect();
@@ -251,6 +293,7 @@ mod tests {
             threads: 4,
             halo_bytes_per_block: 0.0,
             lane_width,
+            depth: 1,
         };
         // compute-bound: wider lanes strictly cheaper
         let c1 = m.predict(&mk(1, 1e9));
@@ -283,6 +326,55 @@ mod tests {
     }
 
     #[test]
+    fn model_json_without_temporal_reuse_loads_seed_coefficient() {
+        // pre-temporal calibration blobs carry only the first four
+        // coefficients; they were fit against depth-1 measurements where
+        // temporal_reuse is inert, so they load with the seed value and
+        // the next depth sweep refits it
+        let j = Json::parse(
+            r#"{"bw_gibs":20.0,"gflops_per_thread":3.0,"block_overhead_us":1.0,"simd_eff":0.6}"#,
+        )
+        .unwrap();
+        let m = HostModel::from_json(&j).unwrap();
+        assert_eq!(m.simd_eff, 0.6);
+        assert_eq!(m.temporal_reuse, HostModel::seed().temporal_reuse);
+        // and a full roundtrip preserves the fitted value
+        let m2 = HostModel { temporal_reuse: 0.85, ..m };
+        let back = HostModel::from_json(&Json::parse(&m2.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, m2);
+    }
+
+    #[test]
+    fn deeper_tiles_discount_memory_bound_sweeps_only() {
+        let m = HostModel::seed();
+        let mk = |depth, flops| SweepCost {
+            bytes: 256e6,
+            flops,
+            blocks: 8,
+            threads: 4,
+            halo_bytes_per_block: 0.0,
+            lane_width: 1,
+            depth,
+        };
+        // memory-bound: deeper residency strictly cheaper per step, with
+        // diminishing returns that never exceed the full reuse fraction
+        let d1 = m.predict(&mk(1, 1e3));
+        let d2 = m.predict(&mk(2, 1e3));
+        let d4 = m.predict(&mk(4, 1e3));
+        assert!(d2 < d1 && d4 < d2, "{d1} {d2} {d4}");
+        assert!(d4 > d1 * (1.0 - m.temporal_reuse), "{d4} vs floor of {d1}");
+        // compute-bound: depth changes nothing (t_flop binds)
+        let cb1 = m.predict(&mk(1, 1e12));
+        let cb4 = m.predict(&mk(4, 1e12));
+        assert_eq!(cb1, cb4);
+        // depth-1 predictions are invariant to the coefficient, so
+        // pre-temporal calibrations keep their meaning
+        let hot = HostModel { temporal_reuse: 1.0, ..m };
+        assert_eq!(hot.predict(&mk(1, 1e3)), d1);
+    }
+
+    #[test]
     fn fit_discards_degenerate_measurements() {
         let truth = HostModel::seed();
         let c = costs()[0];
@@ -311,6 +403,7 @@ mod tests {
             threads: 4,
             halo_bytes_per_block: 0.0,
             lane_width: 1,
+            depth: 1,
         };
         // 5 blocks on 4 threads: two waves, 37.5% idle; 8 blocks: balanced
         assert!(m.predict(&mk(5)) > m.predict(&mk(8)));
@@ -326,6 +419,7 @@ mod tests {
             threads: 4,
             halo_bytes_per_block: 0.0,
             lane_width: 1,
+            depth: 1,
         };
         assert!(m.predict(&mk(4096)) > m.predict(&mk(16)));
     }
@@ -338,6 +432,7 @@ mod tests {
                 gflops_per_thread: 3.25,
                 block_overhead_us: 1.5,
                 simd_eff: 0.4,
+                temporal_reuse: 0.2,
             },
             err_before: 0.8,
             err_after: 0.1,

@@ -18,6 +18,7 @@ use crate::stencil::exec::DoubleBuffer;
 use crate::stencil::grid::{Boundary, Grid};
 use crate::stencil::mhd::{MhdParams, MhdState, MhdStepper};
 use crate::stencil::plan::LaunchPlan;
+use crate::stencil::temporal::TemporalScheduler;
 use crate::util::rng::Rng;
 
 use super::kernel::{Caching, KernelProfile, Unroll};
@@ -52,8 +53,35 @@ pub trait NativeInstance {
         false
     }
 
+    /// Whether `plan.depth > 1` selects a genuine temporal-reuse path in
+    /// [`Self::run_chunk`] (trapezoidal time tiles, `stencil::temporal`)
+    /// rather than the default single-step loop — tells the tuner the
+    /// depth axis is live, so depth variants are enumerated and measured
+    /// instead of duplicating the depth-1 timing.
+    fn has_temporal_path(&self) -> bool {
+        false
+    }
+
     /// Execute one iteration under `plan`.
     fn run(&mut self, plan: &LaunchPlan);
+
+    /// Advance up to `plan.effective_depth()` iterations (capped at
+    /// `max_steps`) in one call, returning how many were taken — always
+    /// at least 1. This is the job service's stepping granularity
+    /// (`coordinator::service`): preemption parking, watchdog budget
+    /// accounting, and finiteness probes all land on chunk boundaries.
+    /// The default just loops [`Self::run`], which is bit-identical to
+    /// single stepping for any instance (and a no-op optimization for
+    /// xcorr, whose `run` recomputes the same output from an unchanged
+    /// input). Instances with a genuine temporal-reuse path (diffusion's
+    /// trapezoidal tiles) override this.
+    fn run_chunk(&mut self, plan: &LaunchPlan, max_steps: usize) -> usize {
+        let c = plan.effective_depth().min(max_steps).max(1);
+        for _ in 0..c {
+            self.run(plan);
+        }
+        c
+    }
 
     /// Canonical flattened output of the instance's current state (the
     /// xcorr output row, a grid's interior, the MHD stacked interior).
@@ -177,6 +205,15 @@ pub trait Workload: Send + Sync {
     fn chunked_1d(&self) -> bool {
         false
     }
+
+    /// Whether this workload's native instances carry a genuine
+    /// temporal-reuse path (see [`NativeInstance::has_temporal_path`]).
+    /// Mirrored here, like [`Self::chunked_1d`], so admission-time cost
+    /// estimation can price a depth>1 plan's traffic discount without
+    /// building buffers; kept in lockstep by a registry test.
+    fn has_temporal_path(&self) -> bool {
+        false
+    }
 }
 
 /// Bench-scale problem sizes as `(smoke, full)`: the single source of
@@ -264,12 +301,15 @@ impl NativeInstance for XcorrNative {
     }
 }
 
-/// Prepared double-buffered diffusion stepper.
+/// Prepared double-buffered diffusion stepper, with a temporal-tile
+/// scheduler so depth>1 plans advance several steps per cache residency
+/// (`stencil::temporal`, DESIGN.md §17).
 struct DiffusionNative {
     d: Diffusion,
     field: DoubleBuffer,
     dim: usize,
     dt: f64,
+    temporal: TemporalScheduler,
 }
 
 impl DiffusionNative {
@@ -280,7 +320,7 @@ impl DiffusionNative {
         let d = Diffusion::new(radius, 1.0, 1.0, Boundary::Periodic);
         let dim = shape.len();
         let dt = d.stable_dt(dim);
-        Self { d, field, dim, dt }
+        Self { d, field, dim, dt, temporal: TemporalScheduler::new() }
     }
 }
 
@@ -295,8 +335,25 @@ impl NativeInstance for DiffusionNative {
         (g.nx * g.ny * g.nz) as f64
     }
 
+    fn has_temporal_path(&self) -> bool {
+        true // run_chunk advances through trapezoidal temporal tiles
+    }
+
     fn run(&mut self, plan: &LaunchPlan) {
         self.d.step_buffered_plan(plan, &mut self.field, self.dim, self.dt);
+    }
+
+    fn run_chunk(&mut self, plan: &LaunchPlan, max_steps: usize) -> usize {
+        let taken = self.temporal.advance_chunk(
+            &self.d,
+            plan,
+            &mut self.field,
+            self.dim,
+            self.dt,
+            max_steps.max(1),
+        );
+        debug_assert!(taken >= 1);
+        taken
     }
 
     fn output(&self) -> Vec<f64> {
@@ -569,6 +626,10 @@ impl Workload for DiffusionStep {
         }
         Some(Box::new(DiffusionNative::new(shape, self.radius)))
     }
+
+    fn has_temporal_path(&self) -> bool {
+        true
+    }
 }
 
 /// Fused MHD RK3 substep (paper §3.3/§4.4, Figs. 13-14) on the 128^3 box.
@@ -750,14 +811,19 @@ mod tests {
     #[test]
     fn workload_chunked_1d_matches_its_native_instances() {
         // the admission-time cost estimator prices jobs from
-        // Workload::chunked_1d without building buffers — it must agree
-        // with what the built instance actually reports
+        // Workload::chunked_1d / has_temporal_path without building
+        // buffers — they must agree with what the built instance
+        // actually reports
         for name in ["conv1d-r1", "conv1d-r3", "xcorr", "diffusion1d", "diffusion2d", "diffusion3d", "mhd"]
         {
             let w = find(name).unwrap();
             let inst = w.native(true).expect(name);
             assert_eq!(w.chunked_1d(), inst.chunked_1d(), "{name}");
+            assert_eq!(w.has_temporal_path(), inst.has_temporal_path(), "{name}");
         }
+        assert!(find("diffusion2d").unwrap().has_temporal_path());
+        assert!(!find("mhd").unwrap().has_temporal_path());
+        assert!(!find("xcorr").unwrap().has_temporal_path());
     }
 
     #[test]
@@ -772,6 +838,40 @@ mod tests {
             let after = inst.output();
             assert_eq!(before.len(), after.len(), "{name}");
             assert_ne!(before, after, "{name}: stepping must change the output");
+        }
+    }
+
+    #[test]
+    fn run_chunk_matches_repeated_single_steps_bitwise() {
+        // the job service steps every session through run_chunk, so a
+        // depth>1 chunk must reproduce single stepping exactly — for
+        // diffusion that exercises the trapezoidal temporal tiles, for
+        // the others the default loop
+        let cases: &[(&str, Vec<usize>)] = &[
+            ("conv1d-r3", vec![512]),
+            ("diffusion1d", vec![96]),
+            ("diffusion2d", vec![17, 13]),
+            ("diffusion3d", vec![9, 8, 7]),
+            ("mhd", vec![8, 8, 8]),
+        ];
+        let steps = 7usize;
+        for (name, shape) in cases {
+            let w = find(name).unwrap();
+            let mut plan = LaunchPlan::default_for(shape, 2);
+            plan.depth = 3;
+            let mut chunked = w.native_at(shape).expect(name);
+            let mut done = 0usize;
+            while done < steps {
+                let taken = chunked.run_chunk(&plan, steps - done);
+                assert!(taken >= 1 && done + taken <= steps, "{name}: took {taken}");
+                done += taken;
+            }
+            let mut single = w.native_at(shape).expect(name);
+            let ref_plan = LaunchPlan { depth: 1, ..plan };
+            for _ in 0..steps {
+                single.run(&ref_plan);
+            }
+            assert_eq!(chunked.output(), single.output(), "{name}: chunked stepping diverged");
         }
     }
 

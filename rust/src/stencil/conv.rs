@@ -70,6 +70,82 @@ pub fn xcorr1d_into(plan: &LaunchPlan, fpad: &[f64], taps: &[f64], out: &mut [f6
     });
 }
 
+/// Iterated 1-D cross-correlation — `stages` successive applications of
+/// the same tap vector, the 1-D stencil-chain workload of temporal
+/// blocking ([`super::temporal`]). Reference form: each stage consumes
+/// `taps.len() - 1` samples of padding, so `fpad` must hold
+/// `n + stages * (taps.len() - 1)` elements to produce `n` outputs.
+pub fn xcorr1d_chain(fpad: &[f64], taps: &[f64], stages: usize) -> Vec<f64> {
+    assert!(stages >= 1, "chain needs at least one stage");
+    let mut cur = fpad.to_vec();
+    for _ in 0..stages {
+        cur = xcorr1d(&cur, taps);
+    }
+    cur
+}
+
+/// [`xcorr1d_chain`] under a [`LaunchPlan`], temporally blocked: each
+/// output chunk (`plan.chunk` elements) advances through **all** `stages`
+/// while cache-resident, reading `fpad` once, instead of streaming the
+/// whole array once per stage. Stage `s` of a chunk computes
+/// `(stages - 1 - s) * (taps.len() - 1)` extra elements on each side —
+/// the 1-D trapezoid — so per-chunk results are bit-identical to the
+/// whole-array reference (per-element values depend only on the input
+/// window, and every lane width preserves the reference accumulation
+/// order). Stage buffers live in the per-thread workspace: allocation-free
+/// after warmup.
+pub fn xcorr1d_chain_plan(
+    plan: &LaunchPlan,
+    fpad: &[f64],
+    taps: &[f64],
+    stages: usize,
+    out: &mut [f64],
+) {
+    assert!(stages >= 1, "chain needs at least one stage");
+    assert!(taps.len() % 2 == 1, "tap count must be odd");
+    let r2 = taps.len() - 1;
+    let n = fpad.len() - stages * r2;
+    assert_eq!(out.len(), n, "output length mismatch");
+    let chunk = plan.chunk.max(1);
+    let lanes = simd::effective(plan.lanes);
+
+    let stage = |dst: &mut [f64], win: &[f64]| {
+        if lanes.is_scalar() {
+            // reference path: accumulate tap-major into the stage buffer
+            dst.fill(0.0);
+            for (j, &g) in taps.iter().enumerate() {
+                let src = &win[j..j + dst.len()];
+                for (o, &x) in dst.iter_mut().zip(src) {
+                    *o += g * x;
+                }
+            }
+        } else {
+            simd::xcorr_row(lanes, dst, &win[..dst.len() + r2], taps);
+        }
+    };
+
+    crate::stencil::exec::par_chunks_mut_plan(plan, out, |c, buf| {
+        let lo = c * chunk;
+        if stages == 1 {
+            stage(buf, &fpad[lo..lo + buf.len() + r2]);
+            return;
+        }
+        crate::stencil::exec::with_thread_workspace(|ws| {
+            // two ping-pong stage buffers, widest stage first
+            let wmax = buf.len() + (stages - 1) * r2;
+            let (a, b) = ws.scratch(2 * wmax).split_at_mut(wmax);
+            stage(&mut a[..wmax], &fpad[lo..lo + wmax + r2]);
+            let (mut cur, mut spare) = (a, b);
+            for s in 1..stages - 1 {
+                let w = buf.len() + (stages - 1 - s) * r2;
+                stage(&mut spare[..w], &cur[..w + r2]);
+                std::mem::swap(&mut cur, &mut spare);
+            }
+            stage(buf, &cur[..buf.len() + r2]);
+        });
+    });
+}
+
 /// Dense cross-correlation with explicit kernel extents `(kx, ky, kz)`.
 ///
 /// Kernel is centered: extent must be odd or 1 per axis. The grid's ghost
@@ -251,6 +327,41 @@ mod tests {
             xcorr_dense_into_plan(&plan, &g, &kern, kx, ky, kz, &mut got);
             assert_eq!(got.interior_to_vec(), want.interior_to_vec(), "{lanes:?}");
         }
+    }
+
+    #[test]
+    fn xcorr1d_chain_plan_matches_reference_bitwise() {
+        use crate::stencil::plan::{BlockShape, Lanes, LaunchPlan};
+        let mut fpad = vec![0.0f64; 2000];
+        for (i, v) in fpad.iter_mut().enumerate() {
+            *v = ((i * 53) % 97) as f64 / 9.0 - 5.0;
+        }
+        let taps = [0.1, -0.2, 0.4, 1.0, 0.4, -0.2, 0.1];
+        for stages in [1usize, 2, 3, 4] {
+            let want = xcorr1d_chain(&fpad, &taps, stages);
+            assert_eq!(want.len(), fpad.len() - stages * (taps.len() - 1));
+            let mut plans = vec![
+                LaunchPlan { chunk: 64, threads: 2, ..LaunchPlan::default() },
+                LaunchPlan { chunk: 37, ..LaunchPlan::default() },
+                LaunchPlan { block: BlockShape::Serial, chunk: 512, ..LaunchPlan::default() },
+                LaunchPlan { chunk: 100_000, ..LaunchPlan::default() },
+            ];
+            for lanes in Lanes::ALL {
+                plans.push(LaunchPlan { lanes, chunk: 129, ..LaunchPlan::default() });
+            }
+            for plan in plans {
+                let mut out = vec![7.0f64; want.len()];
+                xcorr1d_chain_plan(&plan, &fpad, &taps, stages, &mut out);
+                assert_eq!(out, want, "stages={stages} {plan:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn xcorr1d_chain_one_stage_is_plain_xcorr() {
+        let fpad: Vec<f64> = (0..40).map(|i| (i as f64).sin()).collect();
+        let taps = [0.25, 0.5, 0.25];
+        assert_eq!(xcorr1d_chain(&fpad, &taps, 1), xcorr1d(&fpad, &taps));
     }
 
     #[test]

@@ -6,9 +6,9 @@
 //! uses the dense combined kernel from [`super::conv::laplacian_cross_kernel`].
 
 use super::coeffs::central_weights;
-use super::exec::{self, DoubleBuffer};
+use super::exec::{self, DoubleBuffer, Workspace};
 use super::grid::{Boundary, Grid};
-use super::plan::LaunchPlan;
+use super::plan::{Lanes, LaunchPlan};
 use super::simd;
 
 /// Diffusion stepper configuration.
@@ -88,66 +88,43 @@ impl Diffusion {
             (dst.nx, dst.ny, dst.nz, dst.r),
             "src/dst shape mismatch"
         );
-        let s = dt * self.alpha / (self.dx * self.dx);
         let r = src.r;
-        let rad = self.radius;
-        let taps = 2 * rad + 1;
         let (px, py, _) = src.padded();
-        let nx = src.nx;
         let data = src.data();
-        let c2 = &self.c2;
         // axis strides in padded storage
-        let strides = [1usize, px, px * py];
-
-        let lanes = simd::effective(plan.lanes);
-        let pruned = dim * c2.iter().filter(|&&c| c != 0.0).count();
-        if !lanes.is_scalar() && pruned <= simd::MAX_TAPS {
-            // Vector path: the Laplacian lives in register accumulators,
-            // so there is no workspace row and each tap's source row is
-            // streamed exactly once per block.
-            exec::par_fill_rows_plan(plan, dst, |j, k, out, _ws| {
-                let base = r + px * (j + r + py * (k + r));
-                let mut list = simd::TapList::new();
-                for axis in 0..dim {
-                    let st = strides[axis];
-                    for t in 0..taps {
-                        let c = c2[t];
-                        if c == 0.0 {
-                            continue;
-                        }
-                        let ok = list.push(base + t * st - rad * st, c);
-                        debug_assert!(ok);
-                    }
-                }
-                simd::affine_taps_row(lanes, out, &data[base..base + nx], data, list.taps(), s);
-            });
-            return;
-        }
-
+        let kern = self.row_kernel(plan, dim, [1usize, px, px * py], dt);
         exec::par_fill_rows_plan(plan, dst, |j, k, out, ws| {
             let base = r + px * (j + r + py * (k + r));
-            // start from the centre value (identity tap)
-            out.copy_from_slice(&data[base..base + nx]);
-            let lap = ws.scratch(nx);
-            lap.fill(0.0);
-            for axis in 0..dim {
-                let st = strides[axis];
-                for t in 0..taps {
-                    let c = c2[t];
-                    if c == 0.0 {
-                        continue;
-                    }
-                    let off = base + t * st - rad * st;
-                    let srcrow = &data[off..off + nx];
-                    for (l, &x) in lap.iter_mut().zip(srcrow) {
-                        *l += c * x;
-                    }
-                }
-            }
-            for (o, &l) in out.iter_mut().zip(lap.iter()) {
-                *o += s * l;
-            }
+            kern.apply(data, base, out, ws);
         });
+    }
+
+    /// The per-row diffusion update as a reusable kernel over raw padded
+    /// storage with explicit axis `strides` — the single definition of the
+    /// update arithmetic, shared by [`Self::step_into_plan`] (interior
+    /// rows) and the trapezoidal temporal sweep ([`super::temporal`],
+    /// expanded-band rows of the widened scratch field). One definition
+    /// means temporal chunks cannot drift from the one-sweep-per-step
+    /// reference: both paths run the same branch (vector vs scalar) with
+    /// the same per-element op order, so results are bit-identical.
+    pub(crate) fn row_kernel(
+        &self,
+        plan: &LaunchPlan,
+        dim: usize,
+        strides: [usize; 3],
+        dt: f64,
+    ) -> RowKernel<'_> {
+        let lanes = simd::effective(plan.lanes);
+        let pruned = dim * self.c2.iter().filter(|&&c| c != 0.0).count();
+        RowKernel {
+            lanes,
+            vector: !lanes.is_scalar() && pruned <= simd::MAX_TAPS,
+            dim,
+            rad: self.radius,
+            c2: &self.c2,
+            s: dt * self.alpha / (self.dx * self.dx),
+            strides,
+        }
     }
 
     /// Advance a double-buffered field one step: fill ghosts in place, sweep
@@ -175,6 +152,75 @@ impl Diffusion {
     /// kernels (whose Laplacian weights are dimensionless).
     pub fn kernel_scalar(&self, dt: f64) -> f64 {
         dt * self.alpha / (self.dx * self.dx)
+    }
+}
+
+/// One diffusion row update bound to a storage layout (axis strides) and a
+/// step size — see [`Diffusion::row_kernel`]. `apply` computes
+/// `out[i] = data[base + i] + s * laplacian(data)[base + i]` for a row of
+/// `out.len()` x-contiguous elements starting at linear index `base`.
+pub(crate) struct RowKernel<'a> {
+    lanes: Lanes,
+    vector: bool,
+    dim: usize,
+    rad: usize,
+    c2: &'a [f64],
+    s: f64,
+    strides: [usize; 3],
+}
+
+impl RowKernel<'_> {
+    #[inline]
+    pub(crate) fn apply(&self, data: &[f64], base: usize, out: &mut [f64], ws: &mut Workspace) {
+        let nx = out.len();
+        let taps = 2 * self.rad + 1;
+        if self.vector {
+            // Vector path: the Laplacian lives in register accumulators,
+            // so there is no workspace row and each tap's source row is
+            // streamed exactly once per block.
+            let mut list = simd::TapList::new();
+            for axis in 0..self.dim {
+                let st = self.strides[axis];
+                for t in 0..taps {
+                    let c = self.c2[t];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let ok = list.push(base + t * st - self.rad * st, c);
+                    debug_assert!(ok);
+                }
+            }
+            simd::affine_taps_row(
+                self.lanes,
+                out,
+                &data[base..base + nx],
+                data,
+                list.taps(),
+                self.s,
+            );
+            return;
+        }
+        // start from the centre value (identity tap)
+        out.copy_from_slice(&data[base..base + nx]);
+        let lap = ws.scratch(nx);
+        lap.fill(0.0);
+        for axis in 0..self.dim {
+            let st = self.strides[axis];
+            for t in 0..taps {
+                let c = self.c2[t];
+                if c == 0.0 {
+                    continue;
+                }
+                let off = base + t * st - self.rad * st;
+                let srcrow = &data[off..off + nx];
+                for (l, &x) in lap.iter_mut().zip(srcrow) {
+                    *l += c * x;
+                }
+            }
+        }
+        for (o, &l) in out.iter_mut().zip(lap.iter()) {
+            *o += self.s * l;
+        }
     }
 }
 

@@ -86,6 +86,14 @@ fn with_workspace_mode<R>(mode: WorkspaceStrategy, f: impl FnOnce(&mut Workspace
     }
 }
 
+/// Run `f` with the calling thread's reusable workspace — the hook for
+/// kernels dispatched through [`par_chunks_mut_plan`], which hands out
+/// chunks without a workspace argument (the temporal xcorr chain keeps its
+/// stage buffers here so the steady state stays allocation-free).
+pub(crate) fn with_thread_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    with_workspace(f)
+}
+
 // ---------------------------------------------------------------------------
 // Row-block decomposition
 // ---------------------------------------------------------------------------
@@ -150,34 +158,62 @@ pub fn par_rows<F: Fn(usize, usize, &mut Workspace) + Sync>(ny: usize, nz: usize
 // Disjoint parallel writes
 // ---------------------------------------------------------------------------
 
-/// Hands out mutable interior rows of one grid to concurrent threads.
+/// Hands out disjoint mutable spans of one flat slice to concurrent
+/// threads — the primitive under [`RowWriter`] (interior rows of a grid)
+/// and the temporal tile sweeps (`super::temporal`), whose expanded-band
+/// rows are *not* interior rows and need arbitrary x-contiguous spans of
+/// padded storage.
 ///
-/// The borrow of the grid is held for the writer's lifetime, so no safe
-/// alias can exist; soundness across threads rests on the [`Self::row`]
-/// contract (each `(j, k)` visited by at most one thread at a time), which
-/// the row partition of [`par_rows`] provides.
-pub struct RowWriter<'a> {
+/// The borrow of the slice is held for the writer's lifetime, so no safe
+/// alias can exist; soundness across threads rests on the [`Self::span`]
+/// contract (spans handed to concurrent callers never overlap).
+pub struct SpanWriter<'a> {
     ptr: *mut f64,
     len: usize,
+    _data: std::marker::PhantomData<&'a mut [f64]>,
+}
+
+// SAFETY: the only dereference path is `span`, whose disjointness contract
+// makes the handed-out slices non-overlapping across threads.
+unsafe impl Sync for SpanWriter<'_> {}
+unsafe impl Send for SpanWriter<'_> {}
+
+impl<'a> SpanWriter<'a> {
+    pub fn new(data: &'a mut [f64]) -> Self {
+        let len = data.len();
+        Self { ptr: data.as_mut_ptr(), len, _data: std::marker::PhantomData }
+    }
+
+    /// The span `data[base..base + len]` as a mutable slice.
+    ///
+    /// # Safety
+    /// Spans handed to concurrent callers must be disjoint, and each span
+    /// must be dropped before the same range is handed out again (the
+    /// block partitions of [`par_rows_plan`] guarantee this when every
+    /// closure call touches only its own rows' spans).
+    #[inline]
+    pub unsafe fn span(&self, base: usize, len: usize) -> &mut [f64] {
+        debug_assert!(base + len <= self.len, "span out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(base), len)
+    }
+}
+
+/// Hands out mutable interior rows of one grid to concurrent threads: a
+/// grid-aware veneer over [`SpanWriter`] that maps interior `(j, k)` row
+/// coordinates to padded-storage spans.
+pub struct RowWriter<'a> {
+    spans: SpanWriter<'a>,
     nx: usize,
     px: usize,
     py: usize,
     r: usize,
-    _grid: std::marker::PhantomData<&'a mut Grid>,
 }
-
-// SAFETY: the only dereference path is `row`, whose disjointness contract
-// makes the handed-out slices non-overlapping across threads.
-unsafe impl Sync for RowWriter<'_> {}
-unsafe impl Send for RowWriter<'_> {}
 
 impl<'a> RowWriter<'a> {
     pub fn new(g: &'a mut Grid) -> Self {
         let (px, py, _) = g.padded();
         let (nx, r) = (g.nx, g.r);
-        let data = g.data_mut();
-        let len = data.len();
-        Self { ptr: data.as_mut_ptr(), len, nx, px, py, r, _grid: std::marker::PhantomData }
+        Self { spans: SpanWriter::new(g.data_mut()), nx, px, py, r }
     }
 
     /// Interior row `(0..nx, j, k)` as a mutable slice.
@@ -189,8 +225,7 @@ impl<'a> RowWriter<'a> {
     #[inline]
     pub unsafe fn row(&self, j: usize, k: usize) -> &mut [f64] {
         let base = self.r + self.px * ((j + self.r) + self.py * (k + self.r));
-        debug_assert!(base + self.nx <= self.len, "row out of bounds");
-        std::slice::from_raw_parts_mut(self.ptr.add(base), self.nx)
+        self.spans.span(base, self.nx)
     }
 }
 
@@ -442,6 +477,23 @@ mod tests {
         });
         for (i, &x) in v.iter().enumerate() {
             assert_eq!(x, 1.0 + (i / 64) as f64, "index {i}");
+        }
+    }
+
+    #[test]
+    fn span_writer_hands_out_disjoint_spans() {
+        let mut v = vec![0.0f64; 40];
+        let w = SpanWriter::new(&mut v);
+        par_rows(4, 1, |j, _k, _ws| {
+            // SAFETY: each j owns the disjoint span [10j, 10j + 10)
+            let s = unsafe { w.span(10 * j, 10) };
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (10 * j + i) as f64;
+            }
+        });
+        drop(w);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as f64);
         }
     }
 

@@ -20,7 +20,9 @@
 //! Launch parameters are data, not constants: every hot path accepts a
 //! [`plan::LaunchPlan`] (row blocking, thread budget, fusion, chunking,
 //! workspace strategy, SIMD lane width — the register-blocked vector
-//! microkernels live in [`simd`]), with the historical heuristics preserved as
+//! microkernels live in [`simd`] — and temporal depth — the trapezoidal
+//! time-tile scheduler lives in [`temporal`]), with the historical heuristics
+//! preserved as
 //! [`plan::LaunchPlan::default_for`] and the empirical autotuner
 //! (`coordinator::empirical`) searching the rest (DESIGN.md §11).
 
@@ -32,6 +34,7 @@ pub mod grid;
 pub mod mhd;
 pub mod plan;
 pub mod simd;
+pub mod temporal;
 
 pub use coeffs::central_weights;
 pub use exec::DoubleBuffer;

@@ -107,6 +107,12 @@ pub enum WorkspaceStrategy {
 pub const DEFAULT_OVERSUB: usize = 4;
 /// The seed engine's 1-D chunk length (`conv::xcorr1d`'s old `BLOCK`).
 pub const DEFAULT_CHUNK: usize = 8192;
+/// Largest temporal-blocking depth a plan may carry (steps advanced per
+/// cache residency, [`super::temporal`]). Beyond 4 the widened halo
+/// (`depth * radius` per side) makes the redundant edge recompute eat the
+/// reuse win on every shape the bench suite tracks, so the tuner's search
+/// space stops here and the strict loader rejects anything larger.
+pub const MAX_DEPTH: usize = 4;
 
 /// One launch configuration for a native-engine sweep. Plain old data:
 /// `Copy`, no heap, `Eq + Hash` so plans can key caches and be compared
@@ -128,6 +134,13 @@ pub struct LaunchPlan {
     pub workspace: WorkspaceStrategy,
     /// SIMD lane width of the inner kernels ([`super::simd`]).
     pub lanes: Lanes,
+    /// Temporal-blocking depth: time steps advanced per cache residency
+    /// by the trapezoidal tile scheduler ([`super::temporal`]). 1 is the
+    /// classic one-sweep-per-step engine; 2..=[`MAX_DEPTH`] trade
+    /// redundant tile-edge recompute for `depth`-fold reuse of
+    /// cache-resident rows. Results are bit-identical to depth 1 at every
+    /// setting, so — like [`Lanes`] — this is purely a performance axis.
+    pub depth: usize,
 }
 
 impl Default for LaunchPlan {
@@ -155,6 +168,19 @@ impl LaunchPlan {
             chunk: DEFAULT_CHUNK,
             workspace: WorkspaceStrategy::ThreadLocal,
             lanes: super::simd::max_lanes(),
+            depth: 1,
+        }
+    }
+
+    /// The temporal depth dispatch sites should actually honor: the
+    /// plan's value clamped to [`MAX_DEPTH`] and pinned to 1 under
+    /// `STENCILAX_FORCE_DEPTH1=1` ([`super::temporal::force_depth1`], the
+    /// CI cross-check configuration, mirroring `STENCILAX_FORCE_SCALAR`).
+    pub fn effective_depth(&self) -> usize {
+        if super::temporal::force_depth1() {
+            1
+        } else {
+            self.depth.clamp(1, MAX_DEPTH)
         }
     }
 
@@ -208,7 +234,7 @@ impl LaunchPlan {
     }
 
     /// Compact human-readable form for tables and reports, e.g.
-    /// `ov4 t0 fused chunk8192 l4`.
+    /// `ov4 t0 fused chunk8192 l4 d1`.
     pub fn describe(&self) -> String {
         let block = match self.block {
             BlockShape::Oversubscribe(f) => format!("ov{f}"),
@@ -220,11 +246,12 @@ impl LaunchPlan {
             WorkspaceStrategy::Fresh => " fresh-ws",
         };
         format!(
-            "{block} t{} {} chunk{} {}{ws}",
+            "{block} t{} {} chunk{} {} d{}{ws}",
             self.threads,
             if self.fused { "fused" } else { "unfused" },
             self.chunk,
             self.lanes.tag(),
+            self.depth,
         )
     }
 
@@ -248,6 +275,7 @@ impl LaunchPlan {
                 }),
             ),
             ("lanes", Json::str(self.lanes.tag())),
+            ("depth", Json::num(self.depth as f64)),
         ])
     }
 
@@ -294,6 +322,21 @@ impl LaunchPlan {
                     .with_context(|| format!("unknown lane width {s:?} (want scalar|l2|l4|l8)"))?
             }
         };
+        // `depth` is absent from pre-temporal caches, whose plans were
+        // tuned against the one-sweep-per-step engine — so absence *means*
+        // depth 1, not "pick a default". Present values outside
+        // 1..=MAX_DEPTH are rejected with the same strictness as the
+        // block factors: no tuner emits them.
+        let depth = match j.get("depth") {
+            None => 1usize,
+            Some(v) => {
+                let d = v.as_f64().context("key \"depth\" not a number")?;
+                if d.fract() != 0.0 || !(1.0..=MAX_DEPTH as f64).contains(&d) {
+                    bail!("invalid temporal depth {d} (want an integer in 1..={MAX_DEPTH})");
+                }
+                d as usize
+            }
+        };
         Ok(LaunchPlan {
             block,
             threads: j.req_u64("threads")? as usize,
@@ -301,6 +344,7 @@ impl LaunchPlan {
             chunk: (j.req_u64("chunk")? as usize).max(1),
             workspace,
             lanes,
+            depth,
         })
     }
 }
@@ -316,6 +360,7 @@ mod tests {
         assert_eq!(p.chunk, DEFAULT_CHUNK);
         assert!(p.fused);
         assert_eq!(p.workspace, WorkspaceStrategy::ThreadLocal);
+        assert_eq!(p.depth, 1, "the seed engine steps one sweep per step");
         // the seed's plan_blocks(4096, 4): 16 blocks of 256 rows
         assert_eq!(p.blocks(4096), (16, 256));
     }
@@ -380,11 +425,15 @@ mod tests {
                 chunk: 4096,
                 workspace: WorkspaceStrategy::Fresh,
                 lanes: Lanes::Scalar,
+                depth: 3,
             },
             LaunchPlan { block: BlockShape::Serial, threads: 1, ..LaunchPlan::default() },
         ];
         for lanes in Lanes::ALL {
             plans.push(LaunchPlan { lanes, ..LaunchPlan::default() });
+        }
+        for depth in 1..=MAX_DEPTH {
+            plans.push(LaunchPlan { depth, ..LaunchPlan::default() });
         }
         for p in plans {
             let j = p.to_json();
@@ -459,6 +508,56 @@ mod tests {
     }
 
     #[test]
+    fn from_json_rejects_invalid_depths() {
+        // the strict-loader contract, extended to the temporal axis: a
+        // depth no tuner emits (0, > MAX_DEPTH, fractional, non-numeric)
+        // must fail loudly, not clamp into an unmeasured configuration
+        for depth in ["0", "5", "17", "2.5", "-1", "\"two\"", "true"] {
+            let j = Json::parse(&format!(
+                r#"{{"block":"serial","threads":1,"fused":true,"chunk":64,"workspace":"thread-local","depth":{depth}}}"#,
+            ))
+            .unwrap();
+            let err = LaunchPlan::from_json(&j).unwrap_err();
+            assert!(format!("{err:#}").contains("depth"), "depth={depth} err={err:#}");
+        }
+        // every depth the tuner can emit parses
+        for depth in 1..=MAX_DEPTH {
+            let j = Json::parse(&format!(
+                r#"{{"block":"serial","threads":1,"fused":true,"chunk":64,"workspace":"thread-local","depth":{depth}}}"#,
+            ))
+            .unwrap();
+            assert_eq!(LaunchPlan::from_json(&j).unwrap().depth, depth);
+        }
+    }
+
+    #[test]
+    fn missing_depth_means_pre_temporal_cache() {
+        // pre-temporal plan caches carry no "depth" key: their plans were
+        // tuned against the one-sweep-per-step engine, so they load at
+        // depth 1 (satellite: backward-compat for cached winners)
+        let j = Json::parse(
+            r#"{"block":"oversubscribe:4","threads":2,"fused":true,"chunk":8192,"workspace":"thread-local","lanes":"l4"}"#,
+        )
+        .unwrap();
+        assert_eq!(LaunchPlan::from_json(&j).unwrap().depth, 1);
+    }
+
+    #[test]
+    fn effective_depth_clamps_and_honors_the_env_pin() {
+        let p = LaunchPlan { depth: 3, ..LaunchPlan::default() };
+        let eff = p.effective_depth();
+        if super::super::temporal::force_depth1() {
+            assert_eq!(eff, 1, "STENCILAX_FORCE_DEPTH1 must pin dispatch to depth 1");
+        } else {
+            assert_eq!(eff, 3);
+            // out-of-range carried values clamp at dispatch time (the
+            // strict loader rejects them; this guards hand-built plans)
+            assert_eq!(LaunchPlan { depth: 0, ..p }.effective_depth(), 1);
+            assert_eq!(LaunchPlan { depth: 99, ..p }.effective_depth(), MAX_DEPTH);
+        }
+    }
+
+    #[test]
     fn missing_lanes_means_scalar_era_cache() {
         // pre-SIMD plan caches carry no "lanes" key: their plans were
         // tuned against the scalar-only engine, so they load as scalar
@@ -494,5 +593,11 @@ mod tests {
         assert!(s.describe().contains("scalar"), "{}", s.describe());
         assert!(w.describe().contains("l8"), "{}", w.describe());
         assert_ne!(s.describe(), w.describe());
+        // temporal depth shows up and distinguishes plans
+        let d1 = LaunchPlan { depth: 1, ..LaunchPlan::default() };
+        let d4 = LaunchPlan { depth: 4, ..LaunchPlan::default() };
+        assert!(d1.describe().contains("d1"), "{}", d1.describe());
+        assert!(d4.describe().contains("d4"), "{}", d4.describe());
+        assert_ne!(d1.describe(), d4.describe());
     }
 }

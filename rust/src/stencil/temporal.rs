@@ -1,0 +1,405 @@
+//! Trapezoidal temporal blocking: several time steps per cache residency
+//! (DESIGN.md §17).
+//!
+//! The classic engine streams the whole grid once per step — every sweep
+//! re-loads the field from memory, so the memory-bound diffusion cases pay
+//! full DRAM bandwidth `steps` times. Temporal blocking advances a
+//! cache-resident tile `depth` steps before moving on, cutting the traffic
+//! per step by up to `depth`; the price is a wider halo (each extra step
+//! needs `radius` more ghost cells) and redundant recompute at tile edges.
+//! `depth` is a first-class [`LaunchPlan`](super::plan::LaunchPlan) axis
+//! searched by the empirical tuner, capped at
+//! [`MAX_DEPTH`](super::plan::MAX_DEPTH).
+//!
+//! ## Tile geometry and halo math
+//!
+//! A chunk of `c` steps runs on a **widened scratch field**: the interior
+//! is copied in, the ghost region is filled once out to per-axis width
+//! `g = c * radius` (one ghost exchange per chunk instead of per step),
+//! and then `c` sweeps run over a *shrinking* sequence of expanded bands —
+//! sweep `s` writes every cell within `e_s = (c - 1 - s) * radius` of the
+//! interior on the stepped axes. Each sweep reads at most `radius` beyond
+//! the band it writes, i.e. `e_s + radius = e_{s-1}`: exactly the band the
+//! previous sweep produced (sweep 0 reads the freshly exchanged ghosts,
+//! since `e_0 + radius = c * radius = g`). The shrinking band *is* the
+//! trapezoid: the cells outside the interior are the redundant edge
+//! recompute that buys halo-exchange elision. Unused axes (interior extent
+//! 1 when `dim` < 3) carry no ghosts at all — the widened field pads
+//! per-axis, unlike [`Grid`], so a 1-D chunk does not square up `(2g+1)²`
+//! phantom planes.
+//!
+//! ## Bit-identity
+//!
+//! For periodic boundaries the ghost fill is an exact copy of interior
+//! cells, so the widened field is the periodic extension of the true
+//! field; the update rule is shift-invariant, so every band cell evolves
+//! bit-identically to the interior cell it wraps to, and after `c` sweeps
+//! the interior equals `c` classic steps **bit for bit** — the sweeps run
+//! the same per-row kernel ([`Diffusion::row_kernel`]) as the classic
+//! path, and longer band rows only change which elements share a register
+//! block, never the per-element op order. Fixed-value boundaries clamp
+//! ghosts to a constant every step — there is no evolved extension to
+//! reuse — so chunks degenerate to the classic per-step loop (still one
+//! call, still bit-identical). Both claims are pinned by
+//! `rust/tests/plan_parity.rs`.
+//!
+//! Unfilled scratch cells are initialized to NaN, so a sweep that ever
+//! read outside the contract above would poison the result and fail every
+//! parity assertion — the halo math is self-checking.
+//!
+//! `STENCILAX_FORCE_DEPTH1=1` pins every dispatch back to depth 1 (the CI
+//! cross-check configuration, mirroring `STENCILAX_FORCE_SCALAR`).
+
+use std::sync::OnceLock;
+
+use super::diffusion::Diffusion;
+use super::exec::{self, DoubleBuffer, SpanWriter};
+use super::grid::{Boundary, Grid};
+use super::plan::LaunchPlan;
+
+/// `STENCILAX_FORCE_DEPTH1=1|true|yes` pins every dispatch to classic
+/// depth-1 stepping regardless of the plan — the CI cross-check
+/// configuration. Read once per process.
+pub fn force_depth1() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        matches!(
+            std::env::var("STENCILAX_FORCE_DEPTH1").ok().as_deref(),
+            Some("1") | Some("true") | Some("yes")
+        )
+    })
+}
+
+/// The widened scratch field of one temporal chunk: interior
+/// `(nx, ny, nz)` with **per-axis** ghost widths `(gx, gy, gz)` in the
+/// same x-fastest scan layout as [`Grid`]. Per-axis padding matters: a
+/// 1-D chunk at depth 4 and radius 3 needs 12 ghost cells in x and *none*
+/// in y/z, where a uniform [`Grid`] ghost would multiply storage by
+/// `(2g+1)²`.
+#[derive(Debug, Clone)]
+struct WideField {
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    gx: usize,
+    gy: usize,
+    gz: usize,
+    data: Vec<f64>,
+}
+
+impl WideField {
+    /// NaN-initialized storage: any cell the sweeps read without having
+    /// filled poisons the output (see module docs).
+    fn new(nx: usize, ny: usize, nz: usize, gx: usize, gy: usize, gz: usize) -> Self {
+        let len = (nx + 2 * gx) * (ny + 2 * gy) * (nz + 2 * gz);
+        Self { nx, ny, nz, gx, gy, gz, data: vec![f64::NAN; len] }
+    }
+
+    #[inline]
+    fn padded(&self) -> (usize, usize, usize) {
+        (self.nx + 2 * self.gx, self.ny + 2 * self.gy, self.nz + 2 * self.gz)
+    }
+
+    /// Linear index of interior cell `(0, j, k)`'s row start.
+    #[inline]
+    fn row_base(&self, j: usize, k: usize) -> usize {
+        let (px, py, _) = self.padded();
+        self.gx + px * ((j + self.gy) + py * (k + self.gz))
+    }
+
+    /// Copy a grid's interior in (ghosts untouched).
+    fn load_interior(&mut self, g: &Grid) {
+        assert_eq!((g.nx, g.ny, g.nz), (self.nx, self.ny, self.nz));
+        let nx = self.nx;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                let base = self.row_base(j, k);
+                self.data[base..base + nx].copy_from_slice(g.row(j, k));
+            }
+        }
+    }
+
+    /// Copy the interior back out to a grid (its ghosts left stale —
+    /// every consumer refills ghosts before reading them).
+    fn store_interior(&self, g: &mut Grid) {
+        assert_eq!((g.nx, g.ny, g.nz), (self.nx, self.ny, self.nz));
+        let nx = self.nx;
+        for k in 0..self.nz {
+            for j in 0..self.ny {
+                let base = self.row_base(j, k);
+                g.row_mut(j, k).copy_from_slice(&self.data[base..base + nx]);
+            }
+        }
+    }
+
+    /// Fill every ghost cell with the periodic extension of the interior
+    /// — the chunk's single ghost exchange. Exact copies of interior
+    /// values (same `rem_euclid` wrap as [`Grid::fill_ghosts`]), so the
+    /// widened field *is* the periodic extension bit for bit.
+    fn fill_ghosts_periodic(&mut self) {
+        let (px, py, pz) = self.padded();
+        let (gx, gy, gz) = (self.gx as i64, self.gy as i64, self.gz as i64);
+        let (nx, ny, nz) = (self.nx as i64, self.ny as i64, self.nz as i64);
+        for pk in 0..pz {
+            let k_interior = (gz..gz + nz).contains(&(pk as i64));
+            for pj in 0..py {
+                let j_interior = (gy..gy + ny).contains(&(pj as i64));
+                let fill = |s: &mut Self, pi: usize| {
+                    let wi = (pi as i64 - gx).rem_euclid(nx) as usize;
+                    let wj = (pj as i64 - gy).rem_euclid(ny) as usize;
+                    let wk = (pk as i64 - gz).rem_euclid(nz) as usize;
+                    let v = s.data[s.row_base(wj, wk) + wi];
+                    s.data[pi + px * (pj + py * pk)] = v;
+                };
+                if k_interior && j_interior {
+                    // interior row: only the two x-ghost segments
+                    for pi in (0..self.gx).chain(px - self.gx..px) {
+                        fill(self, pi);
+                    }
+                } else {
+                    for pi in 0..px {
+                        fill(self, pi);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Ghost-exchange-aware temporal tile scheduler for the diffusion chain:
+/// owns the widened scratch double buffer (allocated once, reused every
+/// chunk — the steady-state loop stays allocation-free after warmup) and
+/// advances a field several steps per ghost exchange.
+#[derive(Debug, Default)]
+pub struct TemporalScheduler {
+    wide: Option<(WideField, WideField)>,
+}
+
+impl TemporalScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance `field` by up to `max_steps` steps of size `dt` as **one**
+    /// temporally blocked chunk of `min(plan.effective_depth(),
+    /// max_steps)` steps; returns the number of steps actually advanced.
+    /// Results are bit-identical to that many
+    /// [`Diffusion::step_buffered_plan`] calls (see module docs).
+    pub fn advance_chunk(
+        &mut self,
+        d: &Diffusion,
+        plan: &LaunchPlan,
+        field: &mut DoubleBuffer,
+        dim: usize,
+        dt: f64,
+        max_steps: usize,
+    ) -> usize {
+        let c = plan.effective_depth().min(max_steps);
+        if c == 0 {
+            return 0;
+        }
+        // Fixed boundaries clamp every ghost to a constant on every step:
+        // there is no evolved extension for the trapezoid to reuse, so the
+        // chunk degenerates to the classic loop (correct by construction).
+        if c == 1 || matches!(d.boundary, Boundary::Fixed(_)) {
+            for _ in 0..c {
+                d.step_buffered_plan(plan, field, dim, dt);
+            }
+            return c;
+        }
+
+        let (nx, ny, nz) = {
+            let g = field.cur();
+            (g.nx, g.ny, g.nz)
+        };
+        // Allocate ghosts for the plan's full depth once; a shorter final
+        // chunk reuses the same buffers (over-wide ghosts are harmless —
+        // the exchange still fills exactly what sweep 0 can read).
+        let g = plan.effective_depth() * d.radius;
+        let (gx, gy, gz) = (g, if dim >= 2 { g } else { 0 }, if dim >= 3 { g } else { 0 });
+        let fresh = match &self.wide {
+            Some((w, _)) => {
+                (w.nx, w.ny, w.nz) != (nx, ny, nz) || (w.gx, w.gy, w.gz) != (gx, gy, gz)
+            }
+            None => true,
+        };
+        if fresh {
+            self.wide = Some((
+                WideField::new(nx, ny, nz, gx, gy, gz),
+                WideField::new(nx, ny, nz, gx, gy, gz),
+            ));
+        }
+        let (cur, next) = self.wide.as_mut().unwrap();
+
+        // One ghost exchange for the whole chunk.
+        cur.load_interior(field.cur());
+        cur.fill_ghosts_periodic();
+
+        let rad = d.radius;
+        for s in 0..c {
+            // band expansion of this sweep on the stepped axes
+            let e = (c - 1 - s) * rad;
+            let (ex, ey, ez) =
+                (e, if dim >= 2 { e } else { 0 }, if dim >= 3 { e } else { 0 });
+            let (px, py, _) = cur.padded();
+            let kern = d.row_kernel(plan, dim, [1usize, px, px * py], dt);
+            let data = &cur.data;
+            let row_len = nx + 2 * ex;
+            let x0 = cur.gx - ex;
+            let (j0, k0) = (cur.gy - ey, cur.gz - ez);
+            let w = SpanWriter::new(&mut next.data);
+            exec::par_rows_plan(plan, ny + 2 * ey, nz + 2 * ez, |jb, kb, ws| {
+                let base = x0 + px * ((j0 + jb) + py * (k0 + kb));
+                // SAFETY: each (jb, kb) band row is handed to exactly one
+                // closure call and band-row spans are disjoint.
+                let out = unsafe { w.span(base, row_len) };
+                kern.apply(data, base, out, ws);
+            });
+            std::mem::swap(cur, next);
+        }
+
+        cur.store_interior(field.cur_mut());
+        c
+    }
+
+    /// Advance exactly `steps` steps, chunking by the plan's depth —
+    /// the convenience loop over [`Self::advance_chunk`].
+    pub fn advance(
+        &mut self,
+        d: &Diffusion,
+        plan: &LaunchPlan,
+        field: &mut DoubleBuffer,
+        dim: usize,
+        dt: f64,
+        steps: usize,
+    ) {
+        let mut done = 0;
+        while done < steps {
+            done += self.advance_chunk(d, plan, field, dim, dt, steps - done);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::plan::MAX_DEPTH;
+
+    fn seeded(shape: &[usize], r: usize) -> Grid {
+        Grid::from_fn(shape, r, |i, j, k| ((i * 31 + j * 17 + k * 7) % 13) as f64 - 6.0)
+    }
+
+    #[test]
+    fn chunks_match_classic_stepping_bitwise_across_dims_and_depths() {
+        for (dim, shape) in [
+            (1usize, vec![64usize]),
+            (2, vec![21, 17]),
+            (3, vec![11, 9, 7]),
+        ] {
+            for radius in [1usize, 3] {
+                let d = Diffusion::new(radius, 0.9, 1.0, Boundary::Periodic);
+                let dt = d.stable_dt(dim);
+                for depth in 1..=MAX_DEPTH {
+                    let plan = LaunchPlan { depth, ..LaunchPlan::default() };
+                    let steps = 2 * MAX_DEPTH + 1; // exercises a partial tail chunk
+                    let mut want = DoubleBuffer::new(seeded(&shape, radius));
+                    for _ in 0..steps {
+                        d.step_buffered_plan(&plan, &mut want, dim, dt);
+                    }
+                    let mut got = DoubleBuffer::new(seeded(&shape, radius));
+                    let mut sched = TemporalScheduler::new();
+                    sched.advance(&d, &plan, &mut got, dim, dt, steps);
+                    assert_eq!(
+                        got.cur().interior_to_vec(),
+                        want.cur().interior_to_vec(),
+                        "dim={dim} radius={radius} depth={depth}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_domains_wrap_wider_than_the_interior() {
+        // expansion bands wider than the domain itself: the periodic
+        // extension wraps several times and must still be exact
+        let d = Diffusion::new(3, 0.8, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(1);
+        let plan = LaunchPlan { depth: MAX_DEPTH, ..LaunchPlan::default() };
+        let mut want = DoubleBuffer::new(seeded(&[5], 3));
+        let mut got = DoubleBuffer::new(seeded(&[5], 3));
+        for _ in 0..MAX_DEPTH {
+            d.step_buffered_plan(&plan, &mut want, 1, dt);
+        }
+        let mut sched = TemporalScheduler::new();
+        sched.advance(&d, &plan, &mut got, 1, dt, MAX_DEPTH);
+        assert_eq!(got.cur().interior_to_vec(), want.cur().interior_to_vec());
+    }
+
+    #[test]
+    fn fixed_boundaries_degenerate_to_the_classic_loop() {
+        let d = Diffusion::new(2, 0.7, 1.0, Boundary::Fixed(1.5));
+        let dt = d.stable_dt(2);
+        let plan = LaunchPlan { depth: 3, ..LaunchPlan::default() };
+        let mut want = DoubleBuffer::new(seeded(&[13, 11], 2));
+        let mut got = DoubleBuffer::new(seeded(&[13, 11], 2));
+        for _ in 0..3 {
+            d.step_buffered_plan(&plan, &mut want, 2, dt);
+        }
+        let mut sched = TemporalScheduler::new();
+        let adv = sched.advance_chunk(&d, &plan, &mut got, 2, dt, 3);
+        if force_depth1() {
+            assert_eq!(adv, 1);
+            sched.advance(&d, &plan, &mut got, 2, dt, 2);
+        } else {
+            assert_eq!(adv, 3);
+        }
+        assert_eq!(got.cur().interior_to_vec(), want.cur().interior_to_vec());
+    }
+
+    #[test]
+    fn chunk_length_is_clamped_by_depth_and_remaining_steps() {
+        let d = Diffusion::new(1, 1.0, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(1);
+        let plan = LaunchPlan { depth: 4, ..LaunchPlan::default() };
+        let mut f = DoubleBuffer::new(seeded(&[32], 1));
+        let mut sched = TemporalScheduler::new();
+        let full = sched.advance_chunk(&d, &plan, &mut f, 1, dt, 100);
+        assert_eq!(full, plan.effective_depth());
+        // a remaining budget below depth clamps the chunk
+        assert_eq!(sched.advance_chunk(&d, &plan, &mut f, 1, dt, 2), 2.min(full));
+        assert_eq!(sched.advance_chunk(&d, &plan, &mut f, 1, dt, 0), 0);
+    }
+
+    #[test]
+    fn scratch_buffers_are_reused_across_chunks() {
+        if force_depth1() {
+            return; // pinned configuration never allocates scratch
+        }
+        let d = Diffusion::new(2, 0.9, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(2);
+        let plan = LaunchPlan { depth: 3, ..LaunchPlan::default() };
+        let mut f = DoubleBuffer::new(seeded(&[19, 15], 2));
+        let mut sched = TemporalScheduler::new();
+        sched.advance_chunk(&d, &plan, &mut f, 2, dt, 3);
+        let p0 = sched.wide.as_ref().unwrap().0.data.as_ptr();
+        let p1 = sched.wide.as_ref().unwrap().1.data.as_ptr();
+        sched.advance_chunk(&d, &plan, &mut f, 2, dt, 3);
+        let q0 = sched.wide.as_ref().unwrap().0.data.as_ptr();
+        let q1 = sched.wide.as_ref().unwrap().1.data.as_ptr();
+        // buffers may have swapped roles but no reallocation happened
+        assert!(
+            (q0 == p0 && q1 == p1) || (q0 == p1 && q1 == p0),
+            "steady-state chunks must not reallocate scratch"
+        );
+    }
+
+    #[test]
+    fn wide_field_pads_per_axis_only_where_stepped() {
+        let w = WideField::new(64, 1, 1, 12, 0, 0);
+        assert_eq!(w.padded(), (88, 1, 1));
+        assert_eq!(w.data.len(), 88);
+        // every cell of a fresh field is the NaN sentinel
+        assert!(w.data.iter().all(|v| v.is_nan()));
+    }
+}

@@ -12,8 +12,10 @@
 //! the golden twin runs the identical script with injection disabled.
 
 use stencilax::coordinator::daemon::{server, DaemonOpts, Event, FailureKind};
+use stencilax::coordinator::plans::{host_fingerprint, PlanCache, PlanEntry};
 use stencilax::coordinator::service::{FailureHistogram, JobSpec, ServiceReport};
 use stencilax::coordinator::FaultPlan;
+use stencilax::stencil::plan::{LaunchPlan, MAX_DEPTH};
 
 fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
     JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, ..JobSpec::default() }
@@ -126,6 +128,82 @@ fn timeout_and_divergence_fail_terminally_without_collateral() {
         }
         other => panic!("stream must end with the aggregate report, got {other:?}"),
     }
+}
+
+/// A plan cache whose diffusion2d 16x16 entry carries the maximum
+/// temporal depth, inserted at every plausible per-shard thread budget so
+/// the host-scoped lookup hits regardless of how the daemon splits its
+/// cores across shards.
+fn depth_tuned_cache() -> PlanCache {
+    let mut cache = PlanCache::new();
+    for threads in 1..=64 {
+        cache.insert(PlanEntry {
+            workload: "diffusion2d".into(),
+            shape: vec![16, 16],
+            threads,
+            host: host_fingerprint(),
+            plan: LaunchPlan { depth: MAX_DEPTH, ..LaunchPlan::default_for(&[16, 16], threads) },
+            tuned_melem_per_s: 1.0,
+            default_melem_per_s: 1.0,
+        });
+    }
+    cache
+}
+
+#[test]
+fn depth_chunked_sessions_honor_the_watchdog_and_keep_digest_parity() {
+    // ISSUE 9 satellite: serving advances depth-tuned sessions one
+    // multi-step chunk per step_checked call, so the watchdog's busy-time
+    // accounting must charge each chunk for the steps it actually
+    // advanced. If a chunk were charged as one step (or judged against a
+    // one-step budget), honest depth-4 work would either dodge or trip
+    // the timeout — both pinned here, against the same daemon path the
+    // chaos suite exercises.
+    let jobs = vec![
+        job("diffusion2d", &[16, 16], 2 * MAX_DEPTH + 1), // partial tail chunk
+        job("diffusion2d", &[16, 16], 4),
+        job("diffusion1d", &[256], 4), // no tuned entry: classic stepping
+    ];
+    let (golden, _) = run(&jobs, None);
+    assert_eq!(golden.results.len(), 3, "golden run must be clean: {:?}", golden.failed);
+
+    // fault-free depth-4 serving: nothing times out (honest chunk work
+    // fits the whole-attempt budget) and every digest is bit-identical
+    // to the depth-1 golden run
+    let opts = DaemonOpts { plans: Some(depth_tuned_cache()), ..opts_with(None) };
+    let (deep, _) = server::serve_script(&script_of(&jobs), &opts).unwrap();
+    assert_eq!(deep.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    assert!(deep.failed.is_empty(), "depth-chunked runs must not trip the watchdog: {:?}", deep.failed);
+    assert_eq!(deep.failure_histogram, FailureHistogram::default());
+    assert!(
+        deep.results.iter().take(2).all(|r| r.tuned),
+        "diffusion2d jobs must run under the depth-tuned cache entry"
+    );
+    for r in &deep.results {
+        assert_eq!(
+            r.digest_bits, golden.results[r.id].digest_bits,
+            "job {} at depth {MAX_DEPTH} must match the depth-1 digest bit for bit",
+            r.id
+        );
+    }
+
+    // an injected stall inside a depth-chunked session still blows the
+    // per-job watchdog — chunking must not launder a hang into "busy"
+    let mut stall_target = job("diffusion2d", &[16, 16], 4);
+    stall_target.timeout_s = Some(0.05);
+    stall_target.max_retries = Some(0);
+    let jobs = vec![job("diffusion2d", &[16, 16], 4), stall_target];
+    let faults = Some(FaultPlan::parse("stall@1,stall_ms=100").unwrap());
+    let opts = DaemonOpts { plans: Some(depth_tuned_cache()), ..opts_with(faults) };
+    let (chaos, _) = server::serve_script(&script_of(&jobs), &opts).unwrap();
+    assert_eq!(chaos.results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+    assert_eq!(chaos.failed.iter().map(|f| (f.id, f.kind)).collect::<Vec<_>>(), vec![
+        (1, FailureKind::Timeout)
+    ]);
+    assert_eq!(
+        chaos.results[0].digest_bits, golden.results[0].digest_bits,
+        "the healthy depth-chunked neighbor must be untouched"
+    );
 }
 
 #[test]

@@ -1,36 +1,46 @@
-//! Plan invariance (ISSUE 3 satellite, extended by ISSUE 8): every
+//! Plan invariance (ISSUE 3 satellite, extended by ISSUEs 8 and 9): every
 //! candidate [`LaunchPlan`] must produce results identical to the default
 //! plan — row blocking, thread budget, chunk length, workspace strategy,
-//! and SIMD lane width only reassign work to threads and registers, never
-//! change arithmetic. Plans sharing a fusion mode must match **bit for
-//! bit** at EVERY lane width (the vector microkernels in `stencil::simd`
-//! preserve the scalar per-element reduction order by construction); the
-//! unfused MHD candidate evaluates a genuinely different (reference) path
-//! and is held to the established fused-parity tolerance (<= 1e-12,
-//! `rust/tests/fused_parity.rs`) instead. The tolerance class is asserted
-//! per workload, not globally.
+//! SIMD lane width, and temporal-blocking depth only reassign work to
+//! threads, registers, and cache residencies, never change arithmetic.
+//! Plans sharing a fusion mode must match **bit for bit** at EVERY lane
+//! width and EVERY depth (the vector microkernels in `stencil::simd`
+//! preserve the scalar per-element reduction order by construction, and
+//! the trapezoidal tiles in `stencil::temporal` compute every
+//! intermediate cell from the same periodic extension the classic loop
+//! sees); the unfused MHD candidate evaluates a genuinely different
+//! (reference) path and is held to the established fused-parity tolerance
+//! (<= 1e-12, `rust/tests/fused_parity.rs`) instead. The tolerance class
+//! is asserted per workload, not globally.
 //!
 //! Candidates come from the real enumerator
 //! (`coordinator::empirical::candidate_plans`), swept across thread
 //! budgets {1, 2, 4} and explicitly crossed with every
-//! [`Lanes`] width, so exactly the plans the tuner can pick are the
-//! plans pinned here.
+//! [`Lanes`] width and every depth up to [`MAX_DEPTH`], so exactly the
+//! plans the tuner can pick are the plans pinned here.
 
 use stencilax::coordinator::empirical::candidate_plans;
 use stencilax::prop_assert;
 use stencilax::stencil::conv;
 use stencilax::stencil::diffusion::Diffusion;
+use stencilax::stencil::exec::DoubleBuffer;
 use stencilax::stencil::grid::{Boundary, Grid};
 use stencilax::stencil::mhd::{MhdParams, MhdState, MhdStepper};
-use stencilax::stencil::plan::{Lanes, LaunchPlan};
+use stencilax::stencil::plan::{Lanes, LaunchPlan, MAX_DEPTH};
+use stencilax::stencil::temporal::TemporalScheduler;
 use stencilax::util::prop::check;
 use stencilax::util::rng::Rng;
 
 /// The tuner's candidate set, swept over explicit thread budgets.
-fn plans_for(shape: &[usize], chunked: bool, include_unfused: bool) -> Vec<LaunchPlan> {
+fn plans_for(
+    shape: &[usize],
+    chunked: bool,
+    include_unfused: bool,
+    include_depth: bool,
+) -> Vec<LaunchPlan> {
     let mut plans = Vec::new();
     for threads in [1usize, 2, 4] {
-        for p in candidate_plans(shape, threads, chunked, include_unfused) {
+        for p in candidate_plans(shape, threads, chunked, include_unfused, include_depth) {
             if !plans.contains(&p) {
                 plans.push(p);
             }
@@ -47,9 +57,28 @@ fn plans_for(shape: &[usize], chunked: bool, include_unfused: bool) -> Vec<Launc
 /// any block/chunk/workspace choice with any width.
 fn lane_cross(shape: &[usize], chunked: bool, include_unfused: bool) -> Vec<LaunchPlan> {
     let mut out = Vec::new();
-    for base in plans_for(shape, chunked, include_unfused) {
+    for base in plans_for(shape, chunked, include_unfused, false) {
         for lanes in Lanes::ALL {
             let p = LaunchPlan { lanes, ..base };
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// The depth × lane cross product over the candidate set: every candidate
+/// at every depth up to [`MAX_DEPTH`] at every [`Lanes`] width. As with
+/// `lane_cross`, the enumerator only emits depth variants of the base
+/// plan, but a cached plan from an earlier tuning can combine any depth
+/// with any block/chunk/workspace/lane choice — the full product must be
+/// invariant.
+fn depth_lane_cross(shape: &[usize], chunked: bool) -> Vec<LaunchPlan> {
+    let mut out = Vec::new();
+    for base in lane_cross(shape, chunked, false) {
+        for depth in 1..=MAX_DEPTH {
+            let p = LaunchPlan { depth, ..base };
             if !out.contains(&p) {
                 out.push(p);
             }
@@ -152,7 +181,7 @@ fn prop_random_2d_shapes_are_plan_invariant() {
         let mut want = Grid::new(nx, ny, 1, radius);
         d.step_into(&src, &mut want, 2, dt);
         let want = want.interior_to_vec();
-        for plan in candidate_plans(&[nx, ny], 4, false, false) {
+        for plan in candidate_plans(&[nx, ny], 4, false, false, false) {
             let mut got = Grid::new(nx, ny, 1, radius);
             d.step_into_plan(&plan, &src, &mut got, 2, dt);
             prop_assert!(
@@ -160,6 +189,101 @@ fn prop_random_2d_shapes_are_plan_invariant() {
                 "plan {plan:?} diverged on {nx}x{ny} r={radius}"
             );
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn diffusion_temporal_chunks_bit_identical_across_depth_lane_and_candidate_plans() {
+    // ISSUE 9 satellite: the trapezoidal temporal tiles must be invisible
+    // to the numbers — any candidate plan at any depth and lane width
+    // advances a multi-step run to the exact bits the classic
+    // one-sweep-per-residency loop produces. Tolerance class:
+    // bit-identical (same fused diffusion kernels, same reduction order,
+    // periodic extension is shift-invariant).
+    for (dim, shape) in [
+        (1usize, vec![97usize]),
+        (2, vec![23, 19]),
+        (3, vec![11, 9, 7]),
+    ] {
+        let mut rng = Rng::new(29 + dim as u64);
+        let radius = 2;
+        let seed = Grid::from_fn(&shape, radius, |_, _, _| rng.normal());
+        let d = Diffusion::new(radius, 0.9, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(dim);
+        let steps = 2 * MAX_DEPTH + 1; // exercises a partial tail chunk
+        let mut want = DoubleBuffer::new(seed.clone());
+        for _ in 0..steps {
+            d.step_buffered(&mut want, dim, dt);
+        }
+        let want = want.cur().interior_to_vec();
+        for plan in depth_lane_cross(&shape, false) {
+            let mut got = DoubleBuffer::new(seed.clone());
+            let mut sched = TemporalScheduler::new();
+            sched.advance(&d, &plan, &mut got, dim, dt, steps);
+            assert_eq!(got.cur().interior_to_vec(), want, "dim={dim} plan={plan:?}");
+        }
+    }
+}
+
+#[test]
+fn xcorr_chain_bit_identical_across_depth_lane_and_chunk_plans() {
+    // the 1-D stencil chain: per-chunk trapezoids advance every output
+    // chunk through all stages while cache-resident. Tolerance class:
+    // bit-identical at every lane width and depth (per-element values
+    // depend only on the input window; the vector tap loop preserves the
+    // reference accumulation order).
+    let mut rng = Rng::new(41);
+    let (n, r, stages) = (2_048usize, 3usize, 3usize);
+    let fpad = rng.normal_vec(n + stages * 2 * r);
+    let taps = rng.normal_vec(2 * r + 1);
+    let want = conv::xcorr1d_chain(&fpad, &taps, stages);
+    for plan in depth_lane_cross(&[n], true) {
+        let mut out = vec![0.0f64; n];
+        conv::xcorr1d_chain_plan(&plan, &fpad, &taps, stages, &mut out);
+        assert_eq!(out, want, "{plan:?}");
+    }
+}
+
+#[test]
+fn prop_temporal_tiles_never_read_unfilled_ghosts() {
+    // the temporal scratch field NaN-fills its ghost pads and only
+    // overwrites them out to the per-axis widened halo (depth * radius);
+    // a sweep band that reached past what `fill_ghosts_periodic` filled
+    // would pull the NaN sentinel straight into the interior. Random
+    // shapes (including domains smaller than the widened halo, where the
+    // periodic extension wraps multiple times), radii, depths, and step
+    // counts must therefore stay finite AND bit-equal to the classic loop.
+    check("temporal halo widening on random shapes", 12, |rng| {
+        let dim = 1 + (rng.uniform() * 3.0) as usize;
+        let radius = 1 + (rng.uniform() * 3.0) as usize;
+        let depth = 1 + (rng.uniform() * MAX_DEPTH as f64) as usize;
+        let mut shape = Vec::new();
+        for _ in 0..dim.min(3) {
+            shape.push(3 + (rng.uniform() * 20.0) as usize);
+        }
+        let dim = shape.len();
+        let seed = Grid::from_fn(&shape, radius, |_, _, _| rng.normal());
+        let d = Diffusion::new(radius, 0.8, 1.0, Boundary::Periodic);
+        let dt = d.stable_dt(dim);
+        let steps = depth + (rng.uniform() * 3.0) as usize;
+        let plan = LaunchPlan { depth: depth.min(MAX_DEPTH), ..LaunchPlan::default_for(&shape, 2) };
+        let mut want = DoubleBuffer::new(seed.clone());
+        for _ in 0..steps {
+            d.step_buffered(&mut want, dim, dt);
+        }
+        let mut got = DoubleBuffer::new(seed);
+        let mut sched = TemporalScheduler::new();
+        sched.advance(&d, &plan, &mut got, dim, dt, steps);
+        let got = got.cur().interior_to_vec();
+        prop_assert!(
+            got.iter().all(|v| v.is_finite()),
+            "NaN ghost sentinel leaked: shape={shape:?} r={radius} depth={depth}"
+        );
+        prop_assert!(
+            got == want.cur().interior_to_vec(),
+            "temporal tiles diverged: shape={shape:?} r={radius} depth={depth} steps={steps}"
+        );
         Ok(())
     });
 }

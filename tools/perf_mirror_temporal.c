@@ -1,0 +1,310 @@
+/* Structural perf mirror of the ISSUE-9 trapezoidal temporal tiling
+ * (rust/src/stencil/temporal.rs, rust/src/stencil/conv.rs chain path).
+ *
+ * Two cases, mirroring the two temporal paths the Rust engine grew:
+ *
+ * 1. xcorr-chain: `stages` successive radius-r cross-correlations of one
+ *    1-D signal. "staged" mirrors the reference chain (each stage streams
+ *    the whole array once: `stages` full memory passes). "chunked"
+ *    mirrors xcorr1d_chain_plan: each 8192-element output chunk advances
+ *    through ALL stages while cache-resident — stage s computes
+ *    (stages-1-s)*2r extra elements per side (the 1-D trapezoid), the
+ *    input is read once per chunk. This is the steps-per-residency win
+ *    temporal blocking exists for.
+ *
+ * 2. diffusion2d-chunk: the full-domain widened-scratch chunk of
+ *    TemporalScheduler::advance_chunk — copy the interior into a scratch
+ *    pair with ghost width depth*r, periodic-fill the ghosts ONCE, run
+ *    `depth` sweeps over shrinking bands (sweep s writes every cell
+ *    within (depth-1-s)*r of the interior), copy back. The scratch is
+ *    the same size as the field, so per-step traffic is 2 + 4/depth
+ *    passes against the classic loop's 2 + ghost fill: the chunk
+ *    amortizes ghost fills and loop launches but PAYS copy-in/out. The
+ *    mirror measures where that trades (small cache-resident fields)
+ *    and where it loses (streaming-sized fields) — the reason depth is
+ *    a TUNED LaunchPlan axis with depth 1 kept in the candidate set,
+ *    not an always-on transform.
+ *
+ * Both paths are gated on bitwise parity with their reference before any
+ * timing is taken (memcmp): the trapezoid computes every intermediate
+ * cell from the same periodic extension the classic loop sees, and
+ * -ffp-contract=off matches rustc's no-contraction FP semantics.
+ *
+ * Build/run:
+ *   gcc -O3 -march=native -ffp-contract=off -o /tmp/pmt \
+ *       tools/perf_mirror_temporal.c -lm && /tmp/pmt
+ */
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + 1e-9 * (double)ts.tv_nsec;
+}
+
+/* deterministic input, matches the Rust mirrors' idiom */
+static void seed_fill(double *a, size_t n, uint64_t salt) {
+    uint64_t s = 0x243F6A8885A308D3ull ^ salt;
+    for (size_t i = 0; i < n; i++) {
+        s = s * 6364136223846793005ull + 1442695040888963407ull;
+        a[i] = (double)((s >> 33) % 4096) / 2048.0 - 1.0;
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* case 1: 1-D xcorr chain — staged whole-array vs chunked trapezoid   */
+/* ------------------------------------------------------------------ */
+
+#define R 3
+#define TAPS (2 * R + 1)
+#define CHUNK 8192
+
+/* one stage over [0, len): out[i] = sum_j taps[j] * in[i + j]
+ * (tap-major accumulation order preserved in both paths) */
+static void xcorr_span(double *out, const double *in, const double *taps,
+                       size_t len) {
+    for (size_t i = 0; i < len; i++) {
+        double acc = 0.0;
+        for (int j = 0; j < TAPS; j++)
+            acc += taps[j] * in[i + (size_t)j];
+        out[i] = acc;
+    }
+}
+
+/* reference: each stage streams the whole array once */
+static void chain_staged(double *out, const double *fpad, const double *taps,
+                         size_t n, int stages, double *work) {
+    size_t len = n + (size_t)(stages) * 2 * R; /* padded input length */
+    const double *src = fpad;
+    double *a = work, *b = work + len;
+    for (int s = 0; s < stages; s++) {
+        len -= 2 * R;
+        double *dst = (s == stages - 1) ? out : a;
+        xcorr_span(dst, src, taps, len);
+        src = dst;
+        double *t = a; a = b; b = t;
+    }
+}
+
+/* temporal: every output chunk runs all stages while cache-resident;
+ * stage s computes (stages-1-s)*2R extra elements per side */
+static void chain_chunked(double *out, const double *fpad, const double *taps,
+                          size_t n, int stages, double *work) {
+    size_t maxw = CHUNK + (size_t)(stages) * 2 * R;
+    double *a = work, *b = work + maxw;
+    for (size_t lo = 0; lo < n; lo += CHUNK) {
+        size_t len = (lo + CHUNK <= n) ? CHUNK : n - lo;
+        const double *src = fpad + lo;
+        size_t w = len + (size_t)(stages - 1) * 2 * R; /* stage-0 output width */
+        for (int s = 0; s < stages; s++) {
+            double *dst = (s == stages - 1) ? out + lo : a;
+            xcorr_span(dst, src, taps, w);
+            src = dst;
+            w -= 2 * R;
+            double *t = a; a = b; b = t;
+        }
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* case 2: diffusion2d — classic per-step loop vs widened-ghost chunk  */
+/* ------------------------------------------------------------------ */
+
+/* padded 2-D field, ghost width g; idx(i,j) for i,j in [-g, n+g) */
+static inline size_t gidx(size_t stride, int g, int i, int j) {
+    return (size_t)(i + g) * stride + (size_t)(j + g);
+}
+
+static void fill_ghosts(double *f, int n, int g) {
+    size_t stride = (size_t)n + 2 * (size_t)g;
+    /* x (column) wrap inside every interior row, then whole-row y wrap:
+     * same order as Grid::fill_ghosts — corners come from the y pass */
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < g; j++) {
+            f[gidx(stride, g, i, -1 - j)] = f[gidx(stride, g, i, n - 1 - j)];
+            f[gidx(stride, g, i, n + j)] = f[gidx(stride, g, i, j)];
+        }
+    for (int i = 0; i < g; i++) {
+        memcpy(&f[gidx(stride, g, -1 - i, -g)], &f[gidx(stride, g, n - 1 - i, -g)],
+               stride * sizeof(double));
+        memcpy(&f[gidx(stride, g, n + i, -g)], &f[gidx(stride, g, i, -g)],
+               stride * sizeof(double));
+    }
+}
+
+/* one sweep of the radius-R star over the band [-e, n+e)^2 — the exact
+ * affine-taps op order of the Rust row kernel: x taps in index order,
+ * then y taps, scale after the sum */
+static void diff_sweep(double *dst, const double *src, int n, int g, int e,
+                       const double *ctaps, double w0) {
+    size_t stride = (size_t)n + 2 * (size_t)g;
+    for (int i = -e; i < n + e; i++)
+        for (int j = -e; j < n + e; j++) {
+            double acc = 0.0;
+            for (int t = -R; t <= R; t++)
+                acc += ctaps[t + R] * src[gidx(stride, g, i, j + t)];
+            for (int t = -R; t <= R; t++)
+                acc += ctaps[t + R] * src[gidx(stride, g, i + t, j)];
+            dst[gidx(stride, g, i, j)] = w0 * src[gidx(stride, g, i, j)] + acc;
+        }
+}
+
+/* classic: ghost fill + full-interior sweep, once per step */
+static void diff_classic(double **cur, double **next, int n, int steps,
+                         const double *ctaps, double w0) {
+    for (int s = 0; s < steps; s++) {
+        fill_ghosts(*cur, n, R);
+        diff_sweep(*next, *cur, n, R, 0, ctaps, w0);
+        double *t = *cur; *cur = *next; *next = t;
+    }
+}
+
+/* temporal chunk: copy into depth*R-wide scratch, fill ghosts once,
+ * depth sweeps over shrinking bands, copy back */
+static void diff_chunked(double **cur, double **next, int n, int steps,
+                         int depth, const double *ctaps, double w0,
+                         double *sa, double *sb) {
+    size_t fstride = (size_t)n + 2 * R;
+    for (int done = 0; done < steps;) {
+        int c = steps - done < depth ? steps - done : depth;
+        if (c == 1) { /* degenerate chunk: classic step (as in Rust) */
+            diff_classic(cur, next, n, 1, ctaps, w0);
+            done += 1;
+            continue;
+        }
+        /* the scratch layout follows THIS chunk's ghost width (a tail
+         * chunk shorter than `depth` gets a narrower halo, as in Rust) */
+        int g = c * R;
+        size_t stride = (size_t)n + 2 * (size_t)g;
+        for (int i = 0; i < n; i++)
+            memcpy(&sa[gidx(stride, g, i, 0)], &(*cur)[gidx(fstride, R, i, 0)],
+                   (size_t)n * sizeof(double));
+        fill_ghosts(sa, n, g);
+        double *a = sa, *b = sb;
+        for (int s = 0; s < c; s++) {
+            int e = (c - 1 - s) * R;
+            diff_sweep(b, a, n, g, e, ctaps, w0);
+            double *t = a; a = b; b = t;
+        }
+        for (int i = 0; i < n; i++)
+            memcpy(&(*cur)[gidx(fstride, R, i, 0)], &a[gidx(stride, g, i, 0)],
+                   (size_t)n * sizeof(double));
+        done += c;
+    }
+}
+
+/* ------------------------------------------------------------------ */
+
+int main(void) {
+    /* -------- case 1: xcorr chain ---------------------------------- */
+    {
+        size_t n = (size_t)1 << 22;
+        int stages = 4;
+        size_t npad = n + (size_t)(stages) * 2 * R;
+        double *fpad = malloc(npad * sizeof(double));
+        double *want = malloc(n * sizeof(double));
+        double *got = malloc(n * sizeof(double));
+        double *work = malloc(2 * npad * sizeof(double));
+        double taps[TAPS];
+        seed_fill(fpad, npad, 1);
+        seed_fill(taps, TAPS, 2);
+
+        chain_staged(want, fpad, taps, n, stages, work);
+        chain_chunked(got, fpad, taps, n, stages, work);
+        if (memcmp(want, got, n * sizeof(double)) != 0) {
+            fprintf(stderr, "FATAL: chunked xcorr chain is not bit-identical\n");
+            return 1;
+        }
+
+        printf("xcorr-chain n=2^22 r=%d stages=%d (per full chain):\n", R, stages);
+        int reps = 9;
+        double best_staged = 1e30, best_chunked = 1e30;
+        for (int i = 0; i < reps; i++) {
+            double t0 = now_s();
+            chain_staged(want, fpad, taps, n, stages, work);
+            double t1 = now_s();
+            chain_chunked(got, fpad, taps, n, stages, work);
+            double t2 = now_s();
+            if (t1 - t0 < best_staged) best_staged = t1 - t0;
+            if (t2 - t1 < best_chunked) best_chunked = t2 - t1;
+        }
+        printf("  staged   %8.2f ms  %7.1f Melem/s  1.00x\n",
+               best_staged * 1e3, (double)n * stages / best_staged / 1e6);
+        printf("  chunked  %8.2f ms  %7.1f Melem/s  %.2fx\n",
+               best_chunked * 1e3, (double)n * stages / best_chunked / 1e6,
+               best_staged / best_chunked);
+    }
+
+    /* -------- case 2: diffusion2d chunk ---------------------------- */
+    {
+        double ctaps[TAPS];
+        seed_fill(ctaps, TAPS, 3);
+        for (int t = 0; t < TAPS; t++) ctaps[t] *= 1e-2; /* keep it stable */
+        double w0 = 0.75;
+        int sizes[] = {96, 384, 1536};
+        int steps = 8;
+        for (size_t si = 0; si < sizeof(sizes) / sizeof(sizes[0]); si++) {
+            int n = sizes[si];
+            int maxg = 4 * R;
+            size_t fbytes = ((size_t)n + 2 * R) * ((size_t)n + 2 * R) * sizeof(double);
+            size_t sbytes =
+                ((size_t)n + 2 * maxg) * ((size_t)n + 2 * maxg) * sizeof(double);
+            double *cur = malloc(fbytes), *next = malloc(fbytes);
+            double *ref = malloc(fbytes), *refn = malloc(fbytes);
+            double *sa = malloc(sbytes), *sb = malloc(sbytes);
+            seed_fill(cur, fbytes / sizeof(double), 4 + (uint64_t)n);
+            memcpy(ref, cur, fbytes);
+            memcpy(next, cur, fbytes);
+            memcpy(refn, cur, fbytes);
+            memset(sa, 0, sbytes);
+            memset(sb, 0, sbytes);
+
+            double *rc = ref, *rn = refn;
+            diff_classic(&rc, &rn, n, steps, ctaps, w0);
+            printf("diffusion2d %d^2 r=%d, %d steps (per-step ns/elem):\n", n, R,
+                   steps);
+            for (int depth = 1; depth <= 4; depth++) {
+                double *cc = malloc(fbytes), *cn = malloc(fbytes);
+                memcpy(cc, cur, fbytes);
+                memcpy(cn, cur, fbytes);
+                double *pc = cc, *pn = cn;
+                diff_chunked(&pc, &pn, n, steps, depth, ctaps, w0, sa, sb);
+                /* compare interiors bit for bit */
+                size_t fstride = (size_t)n + 2 * R;
+                for (int i = 0; i < n; i++)
+                    if (memcmp(&pc[gidx(fstride, R, i, 0)],
+                               &rc[gidx(fstride, R, i, 0)],
+                               (size_t)n * sizeof(double)) != 0) {
+                        fprintf(stderr,
+                                "FATAL: depth %d diverged at n=%d row %d\n",
+                                depth, n, i);
+                        return 1;
+                    }
+                int reps = n <= 400 ? 40 : 6;
+                double best = 1e30;
+                for (int rep = 0; rep < reps; rep++) {
+                    memcpy(cc, cur, fbytes);
+                    memcpy(cn, cur, fbytes);
+                    pc = cc; pn = cn;
+                    double t0 = now_s();
+                    diff_chunked(&pc, &pn, n, steps, depth, ctaps, w0, sa, sb);
+                    double t1 = now_s();
+                    if (t1 - t0 < best) best = t1 - t0;
+                }
+                static double d1;
+                if (depth == 1) d1 = best;
+                printf("  depth %d  %8.2f ns/elem  %.2fx\n", depth,
+                       best / steps / ((double)n * n) * 1e9, d1 / best);
+                free(cc);
+                free(cn);
+            }
+            free(cur); free(next); free(ref); free(refn); free(sa); free(sb);
+        }
+    }
+    return 0;
+}
