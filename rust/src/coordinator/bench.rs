@@ -43,6 +43,13 @@ pub struct BenchResult {
     pub shape: Vec<usize>,
     /// Elements updated per iteration (for Melem/s rates).
     pub elems: f64,
+    /// Achieved effective bandwidth (GB/s) at the median iteration time,
+    /// priced by the workload's per-element byte budget
+    /// ([`crate::coordinator::obs::bench_rates`]).
+    pub gb_per_s: f64,
+    /// Achieved fraction of the binding host-model ceiling (memory or
+    /// compute) at the median iteration time.
+    pub roofline_frac: f64,
     pub stats: Stats,
     /// The launch plan the case ran under (compact description).
     pub plan: String,
@@ -82,6 +89,8 @@ impl BenchResult {
         );
         obj.insert("elems".into(), Json::num(self.elems));
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
+        obj.insert("gb_per_s".into(), Json::num(self.gb_per_s));
+        obj.insert("roofline_frac".into(), Json::num(self.roofline_frac));
         obj.insert("plan".into(), Json::str(self.plan.clone()));
         obj.insert("lanes".into(), Json::str(self.lanes.clone()));
         obj.insert("depth".into(), Json::num(self.depth as f64));
@@ -98,6 +107,13 @@ impl BenchResult {
 /// request the host maximum, clamped by `STENCILAX_FORCE_SCALAR`).
 pub fn effective_lane_tag() -> String {
     crate::stencil::simd::effective(crate::stencil::simd::max_lanes()).tag().into()
+}
+
+/// Lane *width* of the host's effective default — the compute-ceiling
+/// input for aggregate cases' roofline accounting (see
+/// [`crate::coordinator::obs`]).
+pub fn effective_lane_width() -> usize {
+    crate::stencil::simd::effective(crate::stencil::simd::max_lanes()).width()
 }
 
 /// Resolve the launch plan for one case: the tuned entry for
@@ -119,17 +135,33 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
     let b = if smoke { Bencher::smoke() } else { Bencher::paper() };
     let mut rng = Rng::new(1);
     let mut out = Vec::new();
+    // `workload` is the registry name the case's byte/FLOP budget is
+    // priced under (the kernel cases map to their tuning key; names the
+    // registry doesn't know fall back to the coarse default budget)
     let mut push = |name: &str,
+                    workload: &str,
                     shape: Vec<usize>,
                     elems: usize,
                     stats: Stats,
                     plan: &LaunchPlan,
                     depth: usize,
                     tuned: bool| {
+        let threads = if plan.threads > 0 { plan.threads } else { par::num_threads() };
+        let lane_width = crate::stencil::simd::effective(plan.lanes).width();
+        let roof = crate::coordinator::obs::bench_rates(
+            workload,
+            elems as f64,
+            stats.median_s,
+            threads,
+            lane_width,
+            plans,
+        );
         out.push(BenchResult {
             name: name.into(),
             shape,
             elems: elems as f64,
+            gb_per_s: roof.gb_per_s,
+            roofline_frac: roof.roofline_frac,
             stats,
             plan: plan.describe(),
             lanes: crate::stencil::simd::effective(plan.lanes).tag().into(),
@@ -155,7 +187,7 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
             conv::xcorr1d_into(&plan, &fpad, &taps, &mut out);
             black_box(&out);
         });
-        push("xcorr1d", vec![n], n, stats, &plan, 1, tuned);
+        push("xcorr1d", "conv1d-r3", vec![n], n, stats, &plan, 1, tuned);
     }
 
     // 2-D diffusion (the nz == 1 decomposition regression target) — runs
@@ -176,7 +208,7 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
         let stats = b.report(&format!("diffusion2d {n}^2 r=3 (chunked d{depth})"), || {
             sched.advance_chunk(&d, &plan, &mut field, 2, dt, depth);
         });
-        push("diffusion2d", vec![n, n], n * n * depth, stats, &plan, depth, tuned);
+        push("diffusion2d", "diffusion2d", vec![n, n], n * n * depth, stats, &plan, depth, tuned);
     }
 
     // 3-D diffusion step (temporal chunk path, as above)
@@ -193,7 +225,16 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
         let stats = b.report(&format!("diffusion3d {n}^3 r=3 (chunked d{depth})"), || {
             sched.advance_chunk(&d, &plan, &mut field, 3, dt, depth);
         });
-        push("diffusion3d", vec![n, n, n], n * n * n * depth, stats, &plan, depth, tuned);
+        push(
+            "diffusion3d",
+            "diffusion3d",
+            vec![n, n, n],
+            n * n * n * depth,
+            stats,
+            &plan,
+            depth,
+            tuned,
+        );
     }
 
     // full MHD RK3 step (three fused substeps) — the headline fusion case
@@ -207,18 +248,20 @@ pub fn run_suite(smoke: bool, plans: Option<&PlanCache>) -> Vec<BenchResult> {
         let stats = b.report(&format!("mhd rk3 step {n}^3 (fused)"), || {
             stepper.step_plan(&plan, &mut st, dt);
         });
-        push("mhd-step", vec![n, n, n], 3 * n * n * n, stats, &plan, 1, tuned);
+        push("mhd-step", "mhd", vec![n, n, n], 3 * n * n * n, stats, &plan, 1, tuned);
 
         let stats = b.report(&format!("mhd substep {n}^3 (fused)"), || {
             stepper.substep_plan(&plan, &mut st, dt, 0);
         });
-        push("mhd-substep", vec![n, n, n], n * n * n, stats, &plan, 1, tuned);
+        push("mhd-substep", "mhd", vec![n, n, n], n * n * n, stats, &plan, 1, tuned);
 
         let default = LaunchPlan::default_for(&[n, n, n], 0);
         let stats = b.report(&format!("mhd fill_ghosts 8x{n}^3"), || {
             st.fill_ghosts();
         });
-        push("fill-ghosts", vec![n, n, n], 8 * n * n * n, stats, &default, 1, false);
+        // not a registry workload: the ghost fill prices under the
+        // coarse fallback budget
+        push("fill-ghosts", "fill-ghosts", vec![n, n, n], 8 * n * n * n, stats, &default, 1, false);
     }
 
     // sharded job service at 1/2/4 concurrent sessions — the concurrent
@@ -272,6 +315,8 @@ mod tests {
                 name: "mhd-step".into(),
                 shape: vec![16, 16, 16],
                 elems: 3.0 * 4096.0,
+                gb_per_s: 2.5,
+                roofline_frac: 0.125,
                 stats: Stats::from_samples(vec![0.5, 0.25, 1.0]),
                 plan: LaunchPlan::default().describe(),
                 lanes: "scalar".into(),
@@ -283,6 +328,8 @@ mod tests {
                 name: "xcorr1d".into(),
                 shape: vec![1 << 20],
                 elems: (1 << 20) as f64,
+                gb_per_s: 8.0,
+                roofline_frac: 0.4,
                 stats: Stats::from_samples(vec![2e-3]),
                 plan: "rows16 t4 fused chunk8192".into(),
                 lanes: "l4".into(),
@@ -302,6 +349,10 @@ mod tests {
         assert_eq!(cases[0].req_f64("median_s").unwrap(), 0.5);
         assert_eq!(cases[0].get("shape").unwrap().usize_vec().unwrap(), vec![16, 16, 16]);
         assert!(cases[0].req_f64("melem_per_s").unwrap() > 0.0);
+        // every case carries its achieved bandwidth and roofline share
+        assert_eq!(cases[0].req_f64("gb_per_s").unwrap(), 2.5);
+        assert_eq!(cases[0].req_f64("roofline_frac").unwrap(), 0.125);
+        assert_eq!(cases[1].req_f64("gb_per_s").unwrap(), 8.0);
         assert_eq!(cases[0].get("tuned").unwrap().as_bool(), Some(false));
         assert_eq!(cases[1].req_u64("iters").unwrap(), 1);
         assert_eq!(cases[1].req_str("plan").unwrap(), "rows16 t4 fused chunk8192");
@@ -366,6 +417,8 @@ mod tests {
             name: "diffusion2d".into(),
             shape: vec![64, 64],
             elems: 4096.0,
+            gb_per_s: 1.0,
+            roofline_frac: 0.05,
             stats: Stats::from_samples(vec![1e-4, 2e-4, 3e-4]),
             plan: LaunchPlan::default().describe(),
             lanes: "scalar".into(),

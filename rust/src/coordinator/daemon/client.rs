@@ -36,6 +36,9 @@ pub struct EventAccumulator {
     /// announces a rerun, so the job is still in flight.
     pub failed: Vec<SessionFailure>,
     pub report: Option<Json>,
+    /// Latest stats/metrics snapshot seen on the stream (a `stats` reply
+    /// or an unsolicited `--metrics-every` heartbeat — same schema).
+    pub stats: Option<Json>,
 }
 
 impl EventAccumulator {
@@ -50,6 +53,7 @@ impl EventAccumulator {
                     self.failed.push(f);
                 }
             }
+            Event::Stats(j) | Event::Metrics(j) => self.stats = Some(j),
             Event::Report(j) => self.report = Some(j),
         }
     }
@@ -191,6 +195,33 @@ pub fn submit_lines(
     Ok(SubmitSummary { submitted: lines.len(), outcome })
 }
 
+/// `stencilax stats`: ask a running daemon for one live snapshot (see
+/// `server::STATS_SCHEMA`) and return it. Skips any unsolicited events
+/// interleaved on the stream (e.g. `--metrics-every` heartbeats racing
+/// the reply) and waits specifically for the `stats` reply.
+pub fn fetch_stats(socket: &Path, connect_timeout: Duration) -> Result<Json> {
+    let stream = connect(socket, connect_timeout)?;
+    let mut writer = stream.try_clone().context("cloning socket stream")?;
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{}", Request::Stats.to_line()).context("writing stats request")?;
+    writer.flush().context("flushing stats request")?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => bail!("daemon closed the connection before replying to stats"),
+            Ok(_) => {
+                let ev = Event::parse_line(&line)
+                    .with_context(|| format!("unparseable event line {line:?}"))?;
+                if let Event::Stats(snapshot) = ev {
+                    return Ok(snapshot);
+                }
+            }
+            Err(e) => return Err(e).context("reading stats reply"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +242,13 @@ mod tests {
             latency_s: 1e-3,
             preemptions: 0,
             retries: 0,
+            busy_s: 1e-4,
+            queue_wait_s: 0.0,
+            bytes_per_step: 1024.0,
+            flops_per_step: 640.0,
+            gb_per_s: 1.0,
+            gflop_per_s: 0.64,
+            roofline_frac: 0.05,
         })
     }
 

@@ -27,8 +27,9 @@ pub use server::{serve_socket, serve_stream, DaemonOpts};
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::bench::{effective_lane_tag, BenchResult};
+use crate::coordinator::bench::{effective_lane_tag, effective_lane_width, BenchResult};
 use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::obs::{self, Achieved};
 use crate::coordinator::plans::PlanCache;
 use crate::coordinator::service::{admit, clamp_shards, JobSpec, SessionResult};
 use crate::util::bench::{percentile_linear, Stats};
@@ -38,6 +39,30 @@ use crate::util::json::Json;
 /// schema as the batch `serve_report.json`, kept separate so CI can diff
 /// the two modes against each other.
 pub const DAEMON_REPORT_FILE: &str = "daemon_report.json";
+
+/// Aggregate achieved rates across a run's completed sessions: total
+/// bytes/FLOPs from each session's admission-stamped [`PerfBudget`]
+/// (exact even for mixed traffic) over the run's wall clock, against
+/// the same host-model ceilings admission priced with.
+///
+/// [`PerfBudget`]: crate::coordinator::obs::PerfBudget
+fn aggregate_rates(
+    results: &[SessionResult],
+    wall_s: f64,
+    threads: usize,
+    plans: Option<&PlanCache>,
+) -> Achieved {
+    let bytes: f64 = results.iter().map(|r| r.bytes_per_step * r.steps as f64).sum();
+    let flops: f64 = results.iter().map(|r| r.flops_per_step * r.steps as f64).sum();
+    let model = obs::model_for(plans);
+    obs::rates(
+        bytes,
+        flops,
+        wall_s,
+        model.peak_bytes_per_s(),
+        model.peak_flops_per_s(threads.max(1), effective_lane_width()),
+    )
+}
 
 /// The `stencilax bench` `daemon-stream` case: jobs submitted with
 /// *staggered arrivals* through the online queue (the daemon's serving
@@ -77,10 +102,13 @@ pub fn bench_case(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
     let wall_s = t0.elapsed().as_secs_f64();
     let latencies: Vec<f64> = results.iter().map(|r| r.latency_s).collect();
     let elems = results.iter().map(|r| r.elems_per_step * r.steps as f64).sum::<f64>();
+    let agg = aggregate_rates(&results, wall_s, shards * budget, plans);
     BenchResult {
         name: "daemon-stream".into(),
         shape: vec![n, n],
         elems,
+        gb_per_s: agg.gb_per_s,
+        roofline_frac: agg.roofline_frac,
         // stats summarize the per-job latency distribution (median_s is
         // the midpoint median; the extras carry interpolated p50/p95)
         stats: Stats::from_samples(latencies.clone()),
@@ -190,10 +218,13 @@ pub fn bench_case_mixed(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
     let latencies: Vec<f64> = sched.iter().map(|r| r.latency_s).collect();
     let preemptions: usize = sched.iter().map(|r| r.preemptions).sum();
     let elems = sched.iter().map(|r| r.elems_per_step * r.steps as f64).sum::<f64>();
+    let agg = aggregate_rates(&sched, wall_s, shards * budget, plans);
     BenchResult {
         name: "daemon-stream-mixed".into(),
         shape: vec![long_n; 3],
         elems,
+        gb_per_s: agg.gb_per_s,
+        roofline_frac: agg.roofline_frac,
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("sched-vs-fifo shards{shards} t{budget}"),
         lanes: effective_lane_tag(),
@@ -317,10 +348,14 @@ pub fn bench_case_chaos(smoke: bool, plans: Option<&PlanCache>) -> BenchResult {
     let latencies: Vec<f64> = chaos.results.iter().map(|r| r.latency_s).collect();
     let elems =
         chaos.results.iter().map(|r| r.elems_per_step * r.steps as f64).sum::<f64>();
+    let (shards, budget) = clamp_shards(2, specs.len());
+    let agg = aggregate_rates(&chaos.results, wall_s, shards * budget, plans);
     BenchResult {
         name: "daemon-chaos".into(),
         shape: vec![24, 24],
         elems,
+        gb_per_s: agg.gb_per_s,
+        roofline_frac: agg.roofline_frac,
         stats: Stats::from_samples(latencies.clone()),
         plan: format!("inject {}", plan.describe()),
         lanes: effective_lane_tag(),

@@ -40,6 +40,10 @@ pub const MAX_LINE_BYTES: usize = 64 * 1024;
 pub enum Request {
     /// Submit a job for admission.
     Submit(JobSpec),
+    /// Point-in-time introspection: answer with an [`Event::Stats`]
+    /// snapshot (queue depth, cost ledger, counters, per-shard busy
+    /// fractions) without disturbing the serving loop.
+    Stats,
     /// Stop admitting; finish every queued session, then report and exit.
     Drain,
     /// Stop admitting; cancel queued sessions, finish in-flight ones,
@@ -61,10 +65,11 @@ impl Request {
             None => Ok(Request::Submit(JobSpec::from_json(&j)?)),
             Some(t) => match t.as_str() {
                 Some("submit") => Ok(Request::Submit(JobSpec::from_json(&j)?)),
+                Some("stats") => Ok(Request::Stats),
                 Some("drain") => Ok(Request::Drain),
                 Some("shutdown") => Ok(Request::Shutdown),
                 Some(other) => bail!(
-                    "unknown message type {other:?} (want submit, drain, or shutdown)"
+                    "unknown message type {other:?} (want submit, stats, drain, or shutdown)"
                 ),
                 None => bail!("\"type\" must be a string"),
             },
@@ -81,6 +86,7 @@ impl Request {
                 obj.insert("type".into(), Json::str("submit"));
                 Json::Obj(obj)
             }
+            Request::Stats => Json::obj(vec![("type", Json::str("stats"))]),
             Request::Drain => Json::obj(vec![("type", Json::str("drain"))]),
             Request::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
         }
@@ -159,8 +165,10 @@ pub enum Event {
     /// estimate the decision was based on (`predicted_wait_s`); other
     /// rejections omit it.
     Rejected { id: usize, error: String, predicted_wait_s: Option<f64> },
-    /// A shard driver picked the session up.
-    Started { id: usize, shard: usize },
+    /// A shard driver picked the session up; `queue_wait_s` is the
+    /// admission→pop wait the driver observed (what the session's queue
+    /// time actually was, as opposed to the admission-time prediction).
+    Started { id: usize, shard: usize, queue_wait_s: f64 },
     /// The session completed; carries the full per-session record.
     Done(SessionResult),
     /// One failed attempt (DESIGN.md §15): the kind, the step it died
@@ -168,6 +176,12 @@ pub enum Event {
     /// exhausts its retries (or fails unretryably) emits this with
     /// `will_retry: false` as its terminal event.
     Failed(SessionFailure),
+    /// Point-in-time stats snapshot (schema `stencilax-stats/1`),
+    /// answering a [`Request::Stats`] control line.
+    Stats(Json),
+    /// Unsolicited periodic stats heartbeat (`daemon --metrics-every`),
+    /// carrying the same snapshot object as [`Event::Stats`].
+    Metrics(Json),
     /// Final aggregate report (the `serve_report.json` object), emitted
     /// once when the daemon drains or shuts down.
     Report(Json),
@@ -182,7 +196,7 @@ impl Event {
             }
             Event::Done(r) => Some(r.id),
             Event::Failed(f) => Some(f.id),
-            Event::Report(_) => None,
+            Event::Stats(_) | Event::Metrics(_) | Event::Report(_) => None,
         }
     }
 
@@ -211,10 +225,11 @@ impl Event {
                 }
                 Json::obj(fields)
             }
-            Event::Started { id, shard } => Json::obj(vec![
+            Event::Started { id, shard, queue_wait_s } => Json::obj(vec![
                 ("event", Json::str("started")),
                 ("id", Json::num(*id as f64)),
                 ("shard", Json::num(*shard as f64)),
+                ("queue_wait_s", Json::num(*queue_wait_s)),
             ]),
             Event::Done(r) => {
                 let mut obj = match r.to_json() {
@@ -232,6 +247,14 @@ impl Event {
                 obj.insert("event".into(), Json::str("failed"));
                 Json::Obj(obj)
             }
+            Event::Stats(snapshot) => Json::obj(vec![
+                ("event", Json::str("stats")),
+                ("snapshot", snapshot.clone()),
+            ]),
+            Event::Metrics(snapshot) => Json::obj(vec![
+                ("event", Json::str("metrics")),
+                ("snapshot", snapshot.clone()),
+            ]),
             Event::Report(report) => Json::obj(vec![
                 ("event", Json::str("report")),
                 ("schema", Json::str(PROTOCOL_SCHEMA)),
@@ -268,9 +291,12 @@ impl Event {
             "started" => Ok(Event::Started {
                 id: j.req_u64("id")? as usize,
                 shard: j.req_u64("shard")? as usize,
+                queue_wait_s: j.req_f64("queue_wait_s")?,
             }),
             "done" => Ok(Event::Done(SessionResult::from_json(j)?)),
             "failed" => Ok(Event::Failed(SessionFailure::from_json(j)?)),
+            "stats" => Ok(Event::Stats(j.req("snapshot")?.clone())),
+            "metrics" => Ok(Event::Metrics(j.req("snapshot")?.clone())),
             "report" => Ok(Event::Report(j.req("report")?.clone())),
             other => bail!("unknown event type {other:?}"),
         }
@@ -297,7 +323,7 @@ mod tests {
 
     #[test]
     fn request_lines_roundtrip() {
-        for req in [Request::Submit(job()), Request::Drain, Request::Shutdown] {
+        for req in [Request::Submit(job()), Request::Stats, Request::Drain, Request::Shutdown] {
             let line = req.to_line();
             assert!(!line.contains('\n'), "NDJSON lines must be single-line: {line:?}");
             assert_eq!(Request::parse_line(&line).unwrap(), req);
@@ -349,6 +375,13 @@ mod tests {
             stats: Stats::from_samples(vec![1e-3, 2e-3]),
             digest_bits: 0xdead_beef_cafe_f00d,
             latency_s: 0.25,
+            busy_s: 0.125,
+            queue_wait_s: 0.0625,
+            bytes_per_step: 8192.0,
+            flops_per_step: 40960.0,
+            gb_per_s: 5.5,
+            gflop_per_s: 27.5,
+            roofline_frac: 0.32,
             preemptions: 2,
             retries: 1,
         };
@@ -370,7 +403,7 @@ mod tests {
                 error: "deadline_s 0.1 cannot be met".into(),
                 predicted_wait_s: Some(1.5),
             },
-            Event::Started { id: 0, shard: 1 },
+            Event::Started { id: 0, shard: 1, queue_wait_s: 0.125 },
             Event::Done(done.clone()),
             Event::Failed(SessionFailure {
                 id: 4,
@@ -384,6 +417,8 @@ mod tests {
                 retries: 2,
                 will_retry: false,
             }),
+            Event::Stats(Json::obj(vec![("queue", Json::num(3.0))])),
+            Event::Metrics(Json::obj(vec![("uptime_s", Json::num(1.5))])),
             Event::Report(Json::obj(vec![("jobs", Json::num(2.0))])),
         ];
         for ev in &events {

@@ -53,6 +53,7 @@ use crate::coordinator::service::{
     ActiveSession, FailureHistogram, Session, SessionFailure, SessionResult, DEFAULT_MAX_RETRIES,
 };
 use crate::util::par;
+use crate::util::telemetry::{Counters, SpanKind, Telemetry};
 
 use super::protocol::{Event, FailureKind};
 
@@ -190,6 +191,13 @@ impl JobQueue {
     /// Predicted seconds of queued (not yet popped) work.
     pub fn backlog_s(&self) -> f64 {
         lock(self).queued_cost_s
+    }
+
+    /// Predicted cost popped but not yet retired by driver progress
+    /// notes — the in-flight half of the ledger the `stats` endpoint
+    /// reports next to [`Self::backlog_s`].
+    pub fn running_cost_s(&self) -> f64 {
+        lock(self).running_cost_s
     }
 
     /// Predicted wait for a new arrival: queued plus in-flight predicted
@@ -384,6 +392,8 @@ struct DriverCtx<'a> {
     shard: usize,
     sink: &'a (dyn Fn(Event) + Sync),
     faults: Option<&'a FaultPlan>,
+    /// Span/counter sink (DESIGN.md §18); `None` costs one branch.
+    tel: Option<&'a Telemetry>,
     /// Sessions this driver popped but has not finished (a stack — the
     /// preemption recursion nests). If a panic escapes the per-attempt
     /// containment and kills the driver loop, the supervisor drains this
@@ -401,7 +411,7 @@ struct DriverCtx<'a> {
 /// sessions (the long session's instance stays live and parked — its
 /// digest cannot change).
 pub fn drive(queue: &JobQueue, shards: usize, sink: &(dyn Fn(Event) + Sync)) -> DriveOutcome {
-    drive_with(queue, shards, sink, None)
+    drive_observed(queue, shards, sink, None, None)
 }
 
 /// [`drive`] under an optional fault-injection plan (DESIGN.md §15).
@@ -418,8 +428,24 @@ pub fn drive_with(
     sink: &(dyn Fn(Event) + Sync),
     faults: Option<&FaultPlan>,
 ) -> DriveOutcome {
+    drive_observed(queue, shards, sink, faults, None)
+}
+
+/// [`drive_with`] with a telemetry sink: queue-wait and depth-chunk
+/// spans land on each shard's ring, faults/preemptions/respawns become
+/// instant events, and the live counters accrue. Every hook is a relaxed
+/// atomic bump or a preallocated ring-slot write, and none touches the
+/// stepping arithmetic — session digests are bit-identical with
+/// telemetry on or off.
+pub fn drive_observed(
+    queue: &JobQueue,
+    shards: usize,
+    sink: &(dyn Fn(Event) + Sync),
+    faults: Option<&FaultPlan>,
+    tel: Option<&Telemetry>,
+) -> DriveOutcome {
     let per_shard = par::drive_shards(shards, |shard| {
-        let ctx = DriverCtx { queue, shard, sink, faults, in_flight: RefCell::new(Vec::new()) };
+        let ctx = DriverCtx { queue, shard, sink, faults, tel, in_flight: RefCell::new(Vec::new()) };
         let mut local = DriveOutcome::default();
         let mut respawns = 0usize;
         loop {
@@ -434,6 +460,10 @@ pub fn drive_with(
             };
             let msg = par::panic_message(&*payload);
             eprintln!("stencilax: shard {shard} driver died ({msg}); respawning");
+            if let Some(t) = tel {
+                t.instant(shard, SpanKind::Respawn, 0);
+                Counters::bump(&t.counters.respawns);
+            }
             // Release the ledger for everything the dead driver had in
             // flight. The share each session already retired via
             // note_progress is unknowable here, so release the full
@@ -485,13 +515,24 @@ pub fn drive_with(
 /// costs < [`PREEMPT_RATIO`] of its host's remaining work, so the chain
 /// halves at every level).
 fn run_one(ctx: &DriverCtx, s: Session, out: &mut DriveOutcome) {
+    // Queue wait observed at pop: admission instant to this driver
+    // picking the session up. Recorded as an async span (it overlaps
+    // whatever this shard was running when the session was submitted).
+    let queue_wait_s = s.submitted.elapsed().as_secs_f64();
+    if let Some(t) = ctx.tel {
+        let wait_us = (queue_wait_s * 1e6) as u64;
+        t.span_since(ctx.shard, SpanKind::QueueWait, s.id, t.now_us().saturating_sub(wait_us));
+    }
     ctx.in_flight.borrow_mut().push(s.clone());
-    (ctx.sink)(Event::Started { id: s.id, shard: ctx.shard });
+    (ctx.sink)(Event::Started { id: s.id, shard: ctx.shard, queue_wait_s });
     let max_retries = s.spec.max_retries.unwrap_or(DEFAULT_MAX_RETRIES);
     let mut attempt = 0usize;
     loop {
-        match run_attempt(ctx, &s, attempt, out) {
+        match run_attempt(ctx, &s, attempt, queue_wait_s, out) {
             Ok(r) => {
+                if let Some(t) = ctx.tel {
+                    Counters::bump(&t.counters.completed);
+                }
                 (ctx.sink)(Event::Done(r.clone()));
                 out.results.push(r);
                 break;
@@ -501,13 +542,30 @@ fn run_one(ctx: &DriverCtx, s: Session, out: &mut DriveOutcome) {
                 // retry still happened, and chaos validation compares
                 // these counts against the injected spec
                 out.histogram.note(fail.kind);
+                if let Some(t) = ctx.tel {
+                    t.instant(ctx.shard, SpanKind::Fault, s.id);
+                    match fail.kind {
+                        FailureKind::Panic => Counters::bump(&t.counters.faults_panic),
+                        FailureKind::Timeout => Counters::bump(&t.counters.faults_timeout),
+                        FailureKind::Divergence => Counters::bump(&t.counters.faults_divergence),
+                        FailureKind::Transport => {}
+                    }
+                }
                 fail.will_retry = fail.kind.retryable() && attempt < max_retries;
                 (ctx.sink)(Event::Failed(fail.clone()));
                 if !fail.will_retry {
+                    if let Some(t) = ctx.tel {
+                        Counters::bump(&t.counters.failed);
+                    }
                     out.failed.push(fail);
                     break;
                 }
+                let backoff0 = ctx.tel.map(|t| t.now_us());
                 std::thread::sleep(Duration::from_millis(RETRY_BACKOFF_BASE_MS << attempt.min(6)));
+                if let (Some(t), Some(b0)) = (ctx.tel, backoff0) {
+                    t.span_since(ctx.shard, SpanKind::Backoff, s.id, b0);
+                    Counters::bump(&t.counters.retries);
+                }
                 // the failed attempt released its remaining ledger share;
                 // the rerun starts the session over, so put it back
                 ctx.queue.note_restarted(s.predicted_cost_s);
@@ -528,12 +586,16 @@ fn run_attempt(
     ctx: &DriverCtx,
     s: &Session,
     attempt: usize,
+    queue_wait_s: f64,
     out: &mut DriveOutcome,
 ) -> Result<SessionResult, SessionFailure> {
     // Instance construction runs user-adjacent workload code — contain a
     // panic here like a step-0 panic (nothing ran, release everything).
     let mut active = match catch_unwind(AssertUnwindSafe(|| {
-        ActiveSession::start_with(s.clone(), ctx.shard, attempt, ctx.faults)
+        let mut a =
+            ActiveSession::start_observed(s.clone(), ctx.shard, attempt, ctx.faults, ctx.tel);
+        a.note_queue_wait(queue_wait_s);
+        a
     })) {
         Ok(a) => a,
         Err(payload) => {
@@ -573,7 +635,15 @@ fn run_attempt(
         // cheaper sessions are queued; the parked instance stays live
         while let Some(short) = ctx.queue.try_pop_preempting(active.remaining_cost_s()) {
             active.note_preempted();
+            let park0 = ctx.tel.map(|t| t.now_us());
+            if let Some(t) = ctx.tel {
+                t.instant(ctx.shard, SpanKind::Preempt, s.id);
+                Counters::bump(&t.counters.preemptions);
+            }
             run_one(ctx, short, out);
+            if let (Some(t), Some(p0)) = (ctx.tel, park0) {
+                t.span_since(ctx.shard, SpanKind::Park, s.id, p0);
+            }
         }
     }
     // finalize (digest + stats) — every step's cost is already retired,

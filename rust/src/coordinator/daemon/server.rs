@@ -14,8 +14,8 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -27,9 +27,15 @@ use crate::coordinator::service::{
     admit_with, clamp_shards, deadline_violation, Rejection, ServiceReport, TransportError,
 };
 use crate::coordinator::tune::PredictionCache;
+use crate::util::json::Json;
+use crate::util::par;
+use crate::util::telemetry::{Counters, SpanKind, Telemetry};
 
 use super::protocol::{Event, Request, MAX_LINE_BYTES};
-use super::queue::{drive_with, DriveOutcome, JobQueue, Policy, DEFAULT_QUEUE_CAP};
+use super::queue::{drive_observed, DriveOutcome, JobQueue, Policy, DEFAULT_QUEUE_CAP};
+
+/// Schema tag of the `stats` snapshot object.
+pub const STATS_SCHEMA: &str = "stencilax-stats/1";
 
 /// Daemon configuration (the CLI fills this from flags).
 #[derive(Clone)]
@@ -48,6 +54,14 @@ pub struct DaemonOpts {
     /// `STENCILAX_FAULTS`, DESIGN.md §15). `None` — the default — means
     /// the failure layer is armed but never provoked.
     pub faults: Option<FaultPlan>,
+    /// Write a Chrome trace-event JSON of the serving run here on exit
+    /// (`--trace PATH`, DESIGN.md §18) — one track per shard plus a
+    /// control track, loadable in Perfetto / `chrome://tracing`.
+    pub trace: Option<PathBuf>,
+    /// Emit an unsolicited [`Event::Metrics`] heartbeat to every
+    /// connected client this often (`--metrics-every SECS`; socket
+    /// transport only — the stdio read loop has no idle tick).
+    pub metrics_every_s: Option<f64>,
 }
 
 impl Default for DaemonOpts {
@@ -58,6 +72,8 @@ impl Default for DaemonOpts {
             queue_cap: DEFAULT_QUEUE_CAP,
             policy: Policy::cost_aware(),
             faults: None,
+            trace: None,
+            metrics_every_s: None,
         }
     }
 }
@@ -68,6 +84,11 @@ impl Default for DaemonOpts {
 fn validate(opts: &DaemonOpts) -> Result<()> {
     if opts.queue_cap == 0 {
         bail!("--queue-cap must be at least 1 (a zero-capacity queue cannot admit any job)");
+    }
+    if let Some(every) = opts.metrics_every_s {
+        if !(every.is_finite() && every > 0.0) {
+            bail!("--metrics-every must be a finite positive number of seconds (got {every})");
+        }
     }
     Ok(())
 }
@@ -164,6 +185,9 @@ struct Core<W: Write + Send> {
     /// (Idle gaps *between* jobs inside the window still count, exactly
     /// as they would in a batch run's wall clock.)
     window: Mutex<Option<(Instant, Instant)>>,
+    /// Span rings + live counters (DESIGN.md §18). `Arc` so the trace
+    /// writer can outlive [`Core::into_report`] consuming the core.
+    telemetry: Arc<Telemetry>,
 }
 
 /// Write one event line, best-effort: a client that disconnected (or, on
@@ -197,6 +221,7 @@ impl<W: Write + Send> Core<W> {
             lines_read: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             window: Mutex::new(None),
+            telemetry: Arc::new(Telemetry::new(shards)),
         }
     }
 
@@ -250,6 +275,7 @@ impl<W: Write + Send> Core<W> {
     /// `rejected` event so the client can re-plan (retry later, relax
     /// the deadline, or go elsewhere).
     fn reject(&self, id: usize, error: String, predicted_wait_s: Option<f64>, w: &SharedWriter<W>) {
+        Counters::bump(&self.telemetry.counters.rejected);
         emit(w, &Event::Rejected { id, error: error.clone(), predicted_wait_s });
         self.rejected.lock().unwrap_or_else(|e| e.into_inner()).push(Rejection { id, error });
     }
@@ -324,15 +350,26 @@ impl<W: Write + Send> Core<W> {
                 }
                 Flow::Stop
             }
+            Ok(Request::Stats) => {
+                emit(w, &Event::Stats(self.snapshot()));
+                Flow::Continue
+            }
             Ok(Request::Submit(spec)) => {
                 self.touch();
                 let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let admit0 = self.telemetry.now_us();
                 let admitted = admit_with(
                     id,
                     spec,
                     self.plans.as_ref(),
                     self.threads_per_shard,
                     Some(&self.predictions),
+                );
+                self.telemetry.span_since(
+                    self.telemetry.control_track(),
+                    SpanKind::Admit,
+                    id,
+                    admit0,
                 );
                 match admitted {
                     Err(e) => self.reject(id, format!("{e:#}"), None, w),
@@ -346,6 +383,7 @@ impl<W: Write + Send> Core<W> {
                             self.reject(id, error, Some(wait_s), w);
                             return Flow::Continue;
                         }
+                        Counters::bump(&self.telemetry.counters.accepted);
                         self.routes
                             .lock()
                             .unwrap_or_else(|e| e.into_inner())
@@ -378,6 +416,101 @@ impl<W: Write + Send> Core<W> {
         }
     }
 
+    /// Point-in-time stats snapshot (schema [`STATS_SCHEMA`]): queue
+    /// depth and cost ledger, cumulative counters, the failure
+    /// histogram, plan-cache lookup outcomes, and per-shard busy/steal
+    /// figures. Reads only relaxed atomics and the queue's mutex —
+    /// never blocks a shard driver.
+    fn snapshot(&self) -> Json {
+        fn n(v: &AtomicU64) -> Json {
+            Json::num(v.load(Ordering::Relaxed) as f64)
+        }
+        let tel = &self.telemetry;
+        let c = &tel.counters;
+        let uptime_s = tel.uptime_s();
+        let pool = par::pool();
+        let mut shards = Vec::with_capacity(self.shards);
+        for shard in 0..self.shards {
+            let st = pool.shard_stats(shard);
+            let busy_s = tel.busy_s(shard);
+            shards.push(Json::obj(vec![
+                ("shard", Json::num(shard as f64)),
+                ("busy_s", Json::num(busy_s)),
+                ("busy_frac", Json::num(if uptime_s > 0.0 { busy_s / uptime_s } else { 0.0 })),
+                ("dispatches", Json::num(st.dispatches as f64)),
+                ("participants", Json::num(st.participants as f64)),
+                ("caller_items", Json::num(st.caller_items as f64)),
+                ("stolen_items", Json::num(st.stolen_items as f64)),
+            ]));
+        }
+        let transport = self.transport_errors.lock().unwrap_or_else(|e| e.into_inner()).len();
+        let mut fields = vec![
+            ("schema", Json::str(STATS_SCHEMA)),
+            ("uptime_s", Json::num(uptime_s)),
+            ("jobs_submitted", Json::num(self.next_id.load(Ordering::Relaxed) as f64)),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("depth", Json::num(self.queue.len() as f64)),
+                    ("queued_cost_s", Json::num(self.queue.backlog_s())),
+                    ("running_cost_s", Json::num(self.queue.running_cost_s())),
+                    ("predicted_wait_s", Json::num(self.queue.predicted_wait_s(self.shards))),
+                ]),
+            ),
+            (
+                "counters",
+                Json::obj(vec![
+                    ("accepted", n(&c.accepted)),
+                    ("rejected", n(&c.rejected)),
+                    ("completed", n(&c.completed)),
+                    ("failed", n(&c.failed)),
+                    ("retries", n(&c.retries)),
+                    ("preemptions", n(&c.preemptions)),
+                    ("respawns", n(&c.respawns)),
+                ]),
+            ),
+            (
+                "failure_histogram",
+                Json::obj(vec![
+                    ("panic", n(&c.faults_panic)),
+                    ("timeout", n(&c.faults_timeout)),
+                    ("divergence", n(&c.faults_divergence)),
+                    ("transport", Json::num(transport as f64)),
+                ]),
+            ),
+            ("spans_recorded", Json::num(tel.spans_recorded() as f64)),
+            ("shards", Json::arr(shards)),
+        ];
+        if let Some(plans) = &self.plans {
+            fields.push(("plan_cache", plans.lookup_counts().to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Push one [`Event::Metrics`] heartbeat carrying the current
+    /// snapshot to every distinct connected writer (each client at most
+    /// once, however many jobs it has routed).
+    fn broadcast_metrics(&self) {
+        let ev = Event::Metrics(self.snapshot());
+        let mut writers: Vec<SharedWriter<W>> = Vec::new();
+        {
+            let routes = self.routes.lock().unwrap_or_else(|e| e.into_inner());
+            for w in routes.values() {
+                if !writers.iter().any(|seen| Arc::ptr_eq(seen, w)) {
+                    writers.push(w.clone());
+                }
+            }
+        }
+        if let Some(w) = self.controller.lock().unwrap_or_else(|e| e.into_inner()).as_ref() {
+            if !writers.iter().any(|seen| Arc::ptr_eq(seen, w)) {
+                writers.push(w.clone());
+            }
+        }
+        for w in writers {
+            emit(&w, &ev);
+        }
+    }
+
     /// Consume the core into the aggregate report (drops the routing
     /// table, so transport writers can be reclaimed by the caller). The
     /// histogram's `transport` bucket counts the transport-error records
@@ -398,6 +531,7 @@ impl<W: Write + Send> Core<W> {
             failed: outcome.failed,
             failure_histogram,
             transport_errors,
+            plan_lookups: self.plans.as_ref().map(|c| c.lookup_counts()),
         }
     }
 }
@@ -418,7 +552,13 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
     let outcome = std::thread::scope(|scope| {
         let (core, writer) = (&core, &writer);
         let driver = scope.spawn(move || {
-            drive_with(&core.queue, core.shards, &|ev| core.route_event(ev), core.faults.as_ref())
+            drive_observed(
+                &core.queue,
+                core.shards,
+                &|ev| core.route_event(ev),
+                core.faults.as_ref(),
+                Some(&core.telemetry),
+            )
         });
         let mut input = input;
         let mut line: Vec<u8> = Vec::new();
@@ -450,8 +590,14 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
         driver.join().expect("daemon driver panicked")
     });
     let wall_s = core.active_wall_s();
+    let telemetry = core.telemetry.clone();
     let report = core.into_report(outcome, wall_s);
     emit(&writer, &Event::Report(report.to_json()));
+    if let Some(path) = &opts.trace {
+        if let Err(e) = telemetry.write_chrome_trace(path) {
+            eprintln!("daemon: writing trace {path:?} failed: {e:#}");
+        }
+    }
     let output = Arc::try_unwrap(writer)
         .ok()
         .expect("all writer clones retired with the core")
@@ -491,9 +637,22 @@ pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
     let outcome = std::thread::scope(|scope| {
         let core = &core;
         let driver = scope.spawn(move || {
-            drive_with(&core.queue, core.shards, &|ev| core.route_event(ev), core.faults.as_ref())
+            drive_observed(
+                &core.queue,
+                core.shards,
+                &|ev| core.route_event(ev),
+                core.faults.as_ref(),
+                Some(&core.telemetry),
+            )
         });
+        let mut last_beat = Instant::now();
         while !core.stopped() {
+            if let Some(every) = opts.metrics_every_s {
+                if last_beat.elapsed().as_secs_f64() >= every {
+                    core.broadcast_metrics();
+                    last_beat = Instant::now();
+                }
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
                     scope.spawn(move || handle_conn(core, stream));
@@ -519,9 +678,15 @@ pub fn serve_socket(path: &Path, opts: &DaemonOpts) -> Result<ServiceReport> {
     let _ = std::fs::remove_file(path);
     let wall_s = core.active_wall_s();
     let controller = core.controller.lock().unwrap_or_else(|e| e.into_inner()).take();
+    let telemetry = core.telemetry.clone();
     let report = core.into_report(outcome, wall_s);
     if let Some(w) = controller {
         emit(&w, &Event::Report(report.to_json()));
+    }
+    if let Some(path) = &opts.trace {
+        if let Err(e) = telemetry.write_chrome_trace(path) {
+            eprintln!("daemon: writing trace {path:?} failed: {e:#}");
+        }
     }
     Ok(report)
 }

@@ -276,6 +276,31 @@ pub fn estimate_job_cost_s(
     (per_sweep * steps.max(1) as f64).max(1e-9)
 }
 
+/// Per-element byte/FLOP characterization of a workload, pulled from the
+/// same [`KernelProfile`] builder [`sweep_cost`] prices admission with
+/// (compulsory traffic only — halo re-reads and decomposition effects are
+/// plan-dependent and excluded, so the figure is a deterministic property
+/// of the workload alone). Falls back to the same coarse
+/// 16 bytes / 10 flops default when a workload carries no profile.
+pub fn per_elem_budget(w: &dyn Workload) -> (f64, f64) {
+    let prof = w.profile(spec(Gpu::A100), true, Caching::Hwc, profile_tile(w.dims()));
+    match prof.as_ref() {
+        Some(p) if p.elems > 0.0 => (p.hbm_bytes / p.elems, p.flops_per_elem),
+        _ => (16.0, 10.0),
+    }
+}
+
+/// Per-*step* bytes-moved and FLOP budget of one job at `shape` — the
+/// numerators of every achieved-GB/s / GFLOP/s / roofline figure the
+/// telemetry layer reports (DESIGN.md §18). Purely a function of
+/// (workload, shape): bit-identical across runs, so bandwidth records
+/// stay comparable while only the measured seconds vary.
+pub fn step_budget(w: &dyn Workload, shape: &[usize]) -> (f64, f64) {
+    let elems: f64 = shape.iter().product::<usize>() as f64;
+    let (bytes_per_elem, flops_per_elem) = per_elem_budget(w);
+    (bytes_per_elem * elems, flops_per_elem * elems)
+}
+
 /// One measured candidate.
 #[derive(Debug, Clone)]
 pub struct PlanMeasurement {

@@ -7,6 +7,7 @@ pub mod bench;
 pub mod daemon;
 pub mod empirical;
 pub mod faults;
+pub mod obs;
 pub mod plans;
 pub mod report;
 pub mod service;
@@ -22,11 +23,12 @@ pub use empirical::{
     NativeTuneOutcome,
 };
 pub use faults::{FaultKind, FaultPlan};
-pub use plans::{host_fingerprint, PlanCache, PlanEntry};
+pub use obs::{Achieved, PerfBudget};
+pub use plans::{host_fingerprint, LookupCounts, PlanCache, PlanEntry};
 pub use report::{AsciiPlot, Table};
 pub use service::{
-    job_entries, parse_jobs, parse_jobs_lenient, run_jobs, run_loaded, JobSpec, LoadedJobs,
-    Rejection, ServiceReport, SessionResult,
+    job_entries, parse_jobs, parse_jobs_lenient, run_jobs, run_loaded, run_loaded_observed,
+    JobSpec, LoadedJobs, Rejection, ServiceReport, SessionResult,
 };
 pub use sweep::Sweep;
 pub use tune::{autotune_cached, tune_batch, PredictionCache, TuneReport};

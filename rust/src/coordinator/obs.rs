@@ -1,0 +1,248 @@
+//! Roofline accounting for the serving stack (DESIGN.md §18).
+//!
+//! The paper frames every tuning claim as *effective bandwidth* against
+//! the machine peak; this module gives the reproduction the same
+//! vocabulary on the host engine. A [`PerfBudget`] is stamped onto every
+//! admitted session: the per-step bytes-moved and FLOP budget (a pure
+//! function of (workload, shape) via
+//! [`crate::coordinator::empirical::step_budget`], bit-identical across
+//! runs) plus the calibrated [`HostModel`] peak figures for the plan's
+//! thread count and lane width. Dividing the budget by a measured
+//! per-step time yields achieved GB/s, GFLOP/s, and the roofline
+//! fraction — the achieved share of whichever ceiling binds — reported
+//! in `SessionResult`, `ServiceReport`, `BENCH_native.json`, and the
+//! `stencilax plans` / `bench` tables.
+
+use crate::coordinator::empirical::{per_elem_budget, step_budget};
+use crate::coordinator::plans::PlanCache;
+use crate::model::calibrate::HostModel;
+use crate::sim::workload::Workload;
+use crate::stencil::plan::LaunchPlan;
+
+/// Per-step work budget and machine ceilings for one admitted session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfBudget {
+    /// Compulsory off-chip bytes moved per step (read + write once).
+    pub bytes_per_step: f64,
+    /// Floating-point work per step.
+    pub flops_per_step: f64,
+    /// Machine peak memory bandwidth, bytes/s ([`HostModel::peak_bytes_per_s`]).
+    pub peak_bytes_per_s: f64,
+    /// Machine peak arithmetic throughput for this plan's threads and
+    /// lane width, FLOP/s ([`HostModel::peak_flops_per_s`]).
+    pub peak_flops_per_s: f64,
+}
+
+/// Achieved rates derived from a budget and a measured per-step time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Achieved {
+    pub gb_per_s: f64,
+    pub gflop_per_s: f64,
+    /// Fraction of the *binding* ceiling actually achieved:
+    /// `max(bytes_rate / peak_bytes, flop_rate / peak_flops)`, in [0, ~1]
+    /// (values above 1 mean the calibration underestimates the machine).
+    pub roofline_frac: f64,
+}
+
+impl PerfBudget {
+    /// Budget for one admitted job: work per step from the workload's
+    /// kernel characterization, ceilings from the calibrated (or seed)
+    /// host model at the plan's effective thread count and lane width.
+    pub fn for_job(
+        w: &dyn Workload,
+        shape: &[usize],
+        plan: &LaunchPlan,
+        threads: usize,
+        model: &HostModel,
+    ) -> PerfBudget {
+        let (bytes_per_step, flops_per_step) = step_budget(w, shape);
+        let lanes = crate::stencil::simd::effective(plan.lanes).width();
+        PerfBudget {
+            bytes_per_step,
+            flops_per_step,
+            peak_bytes_per_s: model.peak_bytes_per_s(),
+            peak_flops_per_s: model.peak_flops_per_s(threads.max(1), lanes),
+        }
+    }
+
+    /// Zero budget (unknown workloads, degenerate sessions): every
+    /// derived rate is 0 and no division can produce a NaN.
+    pub fn zero() -> PerfBudget {
+        PerfBudget {
+            bytes_per_step: 0.0,
+            flops_per_step: 0.0,
+            peak_bytes_per_s: 0.0,
+            peak_flops_per_s: 0.0,
+        }
+    }
+
+    /// Achieved rates for a measured per-step time. Degenerate inputs
+    /// (non-positive or non-finite seconds, zero peaks) yield zeros, so
+    /// every reported figure is finite.
+    pub fn achieved(&self, per_step_s: f64) -> Achieved {
+        rates(
+            self.bytes_per_step,
+            self.flops_per_step,
+            per_step_s,
+            self.peak_bytes_per_s,
+            self.peak_flops_per_s,
+        )
+    }
+}
+
+/// Achieved GB/s, GFLOP/s, and roofline fraction for `bytes`/`flops` of
+/// work done in `seconds` against the given ceilings. Total-work form:
+/// callers pass per-step work with per-step seconds, or whole-run work
+/// with wall seconds, and get the same units out.
+pub fn rates(
+    bytes: f64,
+    flops: f64,
+    seconds: f64,
+    peak_bytes_per_s: f64,
+    peak_flops_per_s: f64,
+) -> Achieved {
+    if !(seconds.is_finite() && seconds > 0.0) {
+        return Achieved { gb_per_s: 0.0, gflop_per_s: 0.0, roofline_frac: 0.0 };
+    }
+    let bytes_per_s = (bytes / seconds).max(0.0);
+    let flops_per_s = (flops / seconds).max(0.0);
+    let frac_mem =
+        if peak_bytes_per_s > 0.0 { bytes_per_s / peak_bytes_per_s } else { 0.0 };
+    let frac_flop =
+        if peak_flops_per_s > 0.0 { flops_per_s / peak_flops_per_s } else { 0.0 };
+    let mut out = Achieved {
+        gb_per_s: bytes_per_s / 1e9,
+        gflop_per_s: flops_per_s / 1e9,
+        roofline_frac: frac_mem.max(frac_flop),
+    };
+    if !out.gb_per_s.is_finite() {
+        out.gb_per_s = 0.0;
+    }
+    if !out.gflop_per_s.is_finite() {
+        out.gflop_per_s = 0.0;
+    }
+    if !out.roofline_frac.is_finite() {
+        out.roofline_frac = 0.0;
+    }
+    out
+}
+
+/// The host model reports are priced against: the plan cache's
+/// calibration when it was fitted on *this* host, else the seed — the
+/// exact resolution admission uses, so session and bench figures agree.
+pub fn model_for(plans: Option<&PlanCache>) -> HostModel {
+    plans
+        .and_then(|c| c.calibration_for_host())
+        .map(|c| c.model)
+        .unwrap_or_else(HostModel::seed)
+}
+
+/// Achieved rates for one bench case: `elems` interior elements updated
+/// per measured iteration of `workload`, in `median_s`. The per-element
+/// characterization comes from the same profile admission prices with;
+/// the compute ceiling uses the case's thread count and effective lane
+/// width. Unknown workload names (aggregate service/daemon cases pass
+/// their underlying kernel's name) get the coarse default budget.
+pub fn bench_rates(
+    workload: &str,
+    elems: f64,
+    median_s: f64,
+    threads: usize,
+    lane_width: usize,
+    plans: Option<&PlanCache>,
+) -> Achieved {
+    let (bytes_per_elem, flops_per_elem) = match crate::sim::workload::find(workload) {
+        Some(w) => per_elem_budget(w),
+        None => (16.0, 10.0),
+    };
+    let model = model_for(plans);
+    rates(
+        bytes_per_elem * elems,
+        flops_per_elem * elems,
+        median_s,
+        model.peak_bytes_per_s(),
+        model.peak_flops_per_s(threads.max(1), lane_width.max(1)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_deterministic_and_positive_for_registry_workloads() {
+        for name in ["diffusion2d", "diffusion3d", "mhd", "conv1d-r3"] {
+            let w = crate::sim::workload::find(name).unwrap();
+            let shape: Vec<usize> = match w.dims() {
+                1 => vec![4096],
+                2 => vec![64, 64],
+                _ => vec![16, 16, 16],
+            };
+            let plan = LaunchPlan::default_for(&shape, 4);
+            let model = HostModel::seed();
+            let a = PerfBudget::for_job(w, &shape, &plan, 4, &model);
+            let b = PerfBudget::for_job(w, &shape, &plan, 4, &model);
+            assert_eq!(a, b, "{name}: budget must be bit-identical across calls");
+            assert!(a.bytes_per_step > 0.0 && a.flops_per_step > 0.0, "{name}: {a:?}");
+            assert!(a.peak_bytes_per_s > 0.0 && a.peak_flops_per_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn achieved_rates_hit_the_binding_ceiling() {
+        let budget = PerfBudget {
+            bytes_per_step: 1e9,
+            flops_per_step: 1e8,
+            peak_bytes_per_s: 2e9,
+            peak_flops_per_s: 1e12,
+        };
+        // one step per second: 1 GB/s of a 2 GB/s roof → 0.5; the flop
+        // fraction (1e8/1e12) is far smaller, so memory binds
+        let a = budget.achieved(1.0);
+        assert!((a.gb_per_s - 1.0).abs() < 1e-12);
+        assert!((a.gflop_per_s - 0.1).abs() < 1e-12);
+        assert!((a.roofline_frac - 0.5).abs() < 1e-12);
+        // compute-bound mirror
+        let cb = PerfBudget { flops_per_step: 1e12, ..budget };
+        assert!((cb.achieved(1.0).roofline_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_stay_finite() {
+        let z = PerfBudget::zero();
+        for t in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let a = z.achieved(t);
+            assert_eq!((a.gb_per_s, a.gflop_per_s, a.roofline_frac), (0.0, 0.0, 0.0));
+        }
+        let b = PerfBudget {
+            bytes_per_step: 1e9,
+            flops_per_step: 1e9,
+            peak_bytes_per_s: 0.0,
+            peak_flops_per_s: 0.0,
+        };
+        let a = b.achieved(1.0);
+        assert!(a.gb_per_s.is_finite() && a.roofline_frac == 0.0);
+        let r = rates(f64::INFINITY, 1.0, 1.0, 1.0, 1.0);
+        assert!(r.gb_per_s == 0.0 || r.gb_per_s.is_finite());
+    }
+
+    #[test]
+    fn bench_rates_cover_known_and_unknown_workloads() {
+        let a = bench_rates("diffusion2d", 4096.0, 1e-3, 4, 1, None);
+        assert!(a.gb_per_s > 0.0 && a.gb_per_s.is_finite());
+        assert!(a.roofline_frac > 0.0 && a.roofline_frac.is_finite());
+        let u = bench_rates("no-such-workload", 4096.0, 1e-3, 4, 1, None);
+        assert!(u.gb_per_s > 0.0, "unknown workloads fall back to the coarse budget");
+        // wider lanes raise the compute ceiling, never the memory one
+        let narrow = bench_rates("mhd", 4096.0, 1e-3, 4, 1, None);
+        let wide = bench_rates("mhd", 4096.0, 1e-3, 4, 8, None);
+        assert!(wide.roofline_frac <= narrow.roofline_frac + 1e-12);
+    }
+
+    #[test]
+    fn model_for_falls_back_to_seed() {
+        assert_eq!(model_for(None), HostModel::seed());
+        let cache = PlanCache::new();
+        assert_eq!(model_for(Some(&cache)), HostModel::seed());
+    }
+}

@@ -11,6 +11,8 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -121,6 +123,48 @@ pub struct PlanCache {
     pub calibration: Option<Calibration>,
     /// [`host_fingerprint`] of the machine the calibration was fitted on.
     pub calibration_host: Option<String>,
+    /// Lookup outcome counters (DESIGN.md §18). Shared across clones
+    /// (the daemon core clones the loaded cache), so the `stats`
+    /// snapshot and the final report read the same totals regardless of
+    /// which copy served the lookups.
+    lookups: Arc<LookupStats>,
+}
+
+/// Cumulative plan-cache lookup outcomes. Before these existed, a miss
+/// silently fell back to `LaunchPlan::default_for`, indistinguishable
+/// from a hit in every report.
+#[derive(Debug, Default)]
+pub struct LookupStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Misses where an entry for the same (workload, shape, threads)
+    /// exists under a *different* host fingerprint — tuning exists but
+    /// was done on another machine shape (or feature set), the silent
+    /// failure mode the fingerprint key is designed to force.
+    fingerprint_mismatches: AtomicU64,
+}
+
+/// Point-in-time copy of [`LookupStats`], as reported by
+/// [`PlanCache::lookup_counts`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LookupCounts {
+    pub hits: u64,
+    pub misses: u64,
+    pub fingerprint_mismatches: u64,
+}
+
+impl LookupCounts {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses + self.fingerprint_mismatches
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("fingerprint_mismatches", Json::num(self.fingerprint_mismatches as f64)),
+        ])
+    }
 }
 
 impl PlanCache {
@@ -162,9 +206,43 @@ impl PlanCache {
 
     /// Tuned entry for this workload instance *on this host*, if any.
     /// The lookup-or-default policy lives with the consumer
-    /// (`coordinator::bench::case_plan`) — one site, not two.
+    /// (`coordinator::bench::case_plan`) — one site, not two. Every call
+    /// is counted ([`Self::lookup_counts`]): hit, plain miss, or
+    /// fingerprint mismatch (tuned on another machine shape).
     pub fn lookup(&self, workload: &str, shape: &[usize], threads: usize) -> Option<&PlanEntry> {
-        self.entries.get(&PlanEntry::key_of(workload, shape, threads, &host_fingerprint()))
+        let hit =
+            self.entries.get(&PlanEntry::key_of(workload, shape, threads, &host_fingerprint()));
+        let counter = match hit {
+            Some(_) => &self.lookups.hits,
+            None if self.has_foreign_entry(workload, shape, threads) => {
+                &self.lookups.fingerprint_mismatches
+            }
+            None => &self.lookups.misses,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        hit
+    }
+
+    /// Does any entry exist for (workload, shape, threads) under a host
+    /// fingerprint other than this machine's? Keys are
+    /// `workload|shape|tN|host`, so the scan is a bounded prefix range.
+    fn has_foreign_entry(&self, workload: &str, shape: &[usize], threads: usize) -> bool {
+        let prefix = format!("{workload}|{shape:?}|t{threads}|");
+        let fp = host_fingerprint();
+        self.entries
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .any(|(_, e)| e.host != fp)
+    }
+
+    /// Cumulative lookup outcomes since this cache (or any clone sharing
+    /// its counters) was created.
+    pub fn lookup_counts(&self) -> LookupCounts {
+        LookupCounts {
+            hits: self.lookups.hits.load(Ordering::Relaxed),
+            misses: self.lookups.misses.load(Ordering::Relaxed),
+            fingerprint_mismatches: self.lookups.fingerprint_mismatches.load(Ordering::Relaxed),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -329,6 +407,42 @@ mod tests {
         assert!(cache.lookup("diffusion2d", &[256, 256], 4).is_none());
         assert!(cache.lookup("diffusion2d", &[512, 512], 2).is_none());
         assert!(cache.lookup("mhd", &[64, 64, 64], 4).is_none());
+    }
+
+    #[test]
+    fn lookup_counts_distinguish_hits_misses_and_foreign_fingerprints() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry("diffusion2d", 4));
+        let mut foreign = entry("mhd", 4);
+        foreign.host = "plan9-vax-3cpu".into();
+        cache.insert(foreign);
+        assert_eq!(cache.lookup_counts(), LookupCounts::default());
+
+        assert!(cache.lookup("diffusion2d", &[512, 512], 4).is_some()); // hit
+        assert!(cache.lookup("diffusion2d", &[256, 256], 4).is_none()); // plain miss
+        assert!(cache.lookup("mhd", &[512, 512], 4).is_none()); // foreign-host entry
+        let c = cache.lookup_counts();
+        assert_eq!((c.hits, c.misses, c.fingerprint_mismatches), (1, 1, 1), "{c:?}");
+        assert_eq!(c.total(), 3);
+
+        // clones share the counters: the daemon core's copy and the
+        // report path must agree on totals
+        let clone = cache.clone();
+        assert!(clone.lookup("diffusion2d", &[512, 512], 4).is_some());
+        assert_eq!(cache.lookup_counts().hits, 2);
+
+        // same-prefix different-threads keys never leak into the
+        // fingerprint scan (t4 vs t42 share a textual prefix up to '|')
+        let mut tall = entry("diffusion2d", 42);
+        tall.host = "plan9-vax-3cpu".into();
+        cache.insert(tall);
+        assert!(cache.lookup("diffusion2d", &[512, 512], 4).is_some());
+        assert_eq!(cache.lookup_counts().fingerprint_mismatches, 1);
+
+        // and the JSON shape the reports embed
+        let j = c.to_json();
+        assert_eq!(j.req_u64("hits").unwrap(), 1);
+        assert_eq!(j.req_u64("fingerprint_mismatches").unwrap(), 1);
     }
 
     #[test]

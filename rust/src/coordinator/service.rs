@@ -41,10 +41,11 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::daemon::protocol::{Event, FailureKind};
-use crate::coordinator::daemon::queue::{drive, JobQueue};
+use crate::coordinator::daemon::queue::{drive_observed, JobQueue};
 use crate::coordinator::empirical;
 use crate::coordinator::faults::{FaultKind, FaultPlan};
-use crate::coordinator::plans::PlanCache;
+use crate::coordinator::obs::PerfBudget;
+use crate::coordinator::plans::{LookupCounts, PlanCache};
 use crate::coordinator::tune::PredictionCache;
 use crate::model::calibrate::HostModel;
 use crate::sim::workload::{self, NativeInstance, Workload};
@@ -52,6 +53,7 @@ use crate::stencil::plan::LaunchPlan;
 use crate::util::bench::{fmt_time, Stats};
 use crate::util::json::Json;
 use crate::util::par;
+use crate::util::telemetry::{Counters, SpanKind, Telemetry};
 
 /// Schema tag of a job file (`serve --jobs`).
 pub const JOBS_SCHEMA: &str = "stencilax-jobs/1";
@@ -284,6 +286,11 @@ pub struct Session {
     /// calibrated [`HostModel`] when the plan cache carries one for this
     /// host, else the seed model; either way > 0.
     pub predicted_cost_s: f64,
+    /// Per-step bytes/FLOP budget and machine ceilings, stamped at
+    /// admission from the same workload profile and calibrated model the
+    /// cost estimate prices with (DESIGN.md §18). A pure function of
+    /// (workload, shape, plan, model) — bit-identical across runs.
+    pub budget: PerfBudget,
     /// Admission instant — the submit→done latency clock the daemon's
     /// streaming metrics report.
     pub submitted: Instant,
@@ -351,7 +358,17 @@ pub fn admit_with(
         &model,
         predictions,
     );
-    Ok(Session { id, spec, workload: w, plan, tuned, predicted_cost_s, submitted: Instant::now() })
+    let budget = PerfBudget::for_job(w, &spec.shape, &plan, plan.threads.max(1), &model);
+    Ok(Session {
+        id,
+        spec,
+        workload: w,
+        plan,
+        tuned,
+        predicted_cost_s,
+        budget,
+        submitted: Instant::now(),
+    })
 }
 
 /// One completed session's record.
@@ -377,6 +394,26 @@ pub struct SessionResult {
     /// Submit→done latency: admission instant to completion (includes
     /// queue wait — what a daemon client actually experiences).
     pub latency_s: f64,
+    /// Busy step time the watchdog clocked: seconds actually spent
+    /// stepping on the shard, parked preemption time excluded. The
+    /// busy/wall split: `latency_s - busy_s - queue_wait_s` is park +
+    /// retry overhead.
+    pub busy_s: f64,
+    /// Seconds the session sat admitted-but-queued before a shard driver
+    /// popped it (0 when a driver was idle at submit).
+    pub queue_wait_s: f64,
+    /// Compulsory off-chip bytes moved per step (admission budget — a
+    /// pure function of workload and shape, bit-identical across runs).
+    pub bytes_per_step: f64,
+    /// Floating-point work per step (admission budget).
+    pub flops_per_step: f64,
+    /// Achieved memory throughput at the median step time, GB/s.
+    pub gb_per_s: f64,
+    /// Achieved arithmetic throughput at the median step time, GFLOP/s.
+    pub gflop_per_s: f64,
+    /// Achieved fraction of the binding roofline ceiling (memory or
+    /// compute, whichever is higher) against the calibrated host model.
+    pub roofline_frac: f64,
     /// Times this session was parked between steps so its shard could
     /// interleave cheaper queued jobs (0 under FIFO / batch serving).
     pub preemptions: usize,
@@ -394,7 +431,8 @@ impl SessionResult {
     /// One streaming line, printed as each session completes.
     pub fn describe_line(&self) -> String {
         format!(
-            "serve job {:>3} {:<12} {:?} shard {} {:>3} steps median {}/step ({:.1} Melem/s{})",
+            "serve job {:>3} {:<12} {:?} shard {} {:>3} steps median {}/step \
+             ({:.1} Melem/s, {:.1} GB/s, {:.0}% roof{})",
             self.id,
             self.workload,
             self.shape,
@@ -402,6 +440,8 @@ impl SessionResult {
             self.steps,
             fmt_time(self.stats.median_s),
             self.melem_per_s(),
+            self.gb_per_s,
+            self.roofline_frac * 100.0,
             if self.tuned { ", tuned" } else { "" },
         )
     }
@@ -425,6 +465,13 @@ impl SessionResult {
         obj.insert("melem_per_s".into(), Json::num(self.melem_per_s()));
         obj.insert("digest_bits".into(), Json::str(format!("{:#018x}", self.digest_bits)));
         obj.insert("latency_s".into(), Json::num(self.latency_s));
+        obj.insert("busy_s".into(), Json::num(self.busy_s));
+        obj.insert("queue_wait_s".into(), Json::num(self.queue_wait_s));
+        obj.insert("bytes_per_step".into(), Json::num(self.bytes_per_step));
+        obj.insert("flops_per_step".into(), Json::num(self.flops_per_step));
+        obj.insert("gb_per_s".into(), Json::num(self.gb_per_s));
+        obj.insert("gflop_per_s".into(), Json::num(self.gflop_per_s));
+        obj.insert("roofline_frac".into(), Json::num(self.roofline_frac));
         obj.insert("preemptions".into(), Json::num(self.preemptions as f64));
         obj.insert("retries".into(), Json::num(self.retries as f64));
         Json::Obj(obj)
@@ -455,6 +502,13 @@ impl SessionResult {
             },
             digest_bits,
             latency_s: j.req_f64("latency_s")?,
+            busy_s: j.req_f64("busy_s")?,
+            queue_wait_s: j.req_f64("queue_wait_s")?,
+            bytes_per_step: j.req_f64("bytes_per_step")?,
+            flops_per_step: j.req_f64("flops_per_step")?,
+            gb_per_s: j.req_f64("gb_per_s")?,
+            gflop_per_s: j.req_f64("gflop_per_s")?,
+            roofline_frac: j.req_f64("roofline_frac")?,
             preemptions: j.req_u64("preemptions")? as usize,
             retries: j.req_u64("retries")? as usize,
         })
@@ -632,6 +686,10 @@ pub struct ServiceReport {
     /// Transport failures survived while serving (always empty for the
     /// batch path, which has no transport).
     pub transport_errors: Vec<TransportError>,
+    /// Plan-cache lookup outcomes over the whole batch (hits, misses,
+    /// foreign-host fingerprint mismatches); `None` when serving ran
+    /// without a plan cache at all.
+    pub plan_lookups: Option<LookupCounts>,
 }
 
 impl ServiceReport {
@@ -655,8 +713,19 @@ impl ServiceReport {
             / 1e6
     }
 
+    /// Aggregate achieved memory throughput: total compulsory bytes
+    /// moved across every session and step, over the batch wall-clock.
+    pub fn aggregate_gb_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.results.iter().map(|r| r.bytes_per_step * r.steps as f64).sum::<f64>()
+            / self.wall_s
+            / 1e9
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::str(SERVE_SCHEMA)),
             ("shards", Json::num(self.shards as f64)),
             ("threads_per_shard", Json::num(self.threads_per_shard as f64)),
@@ -667,6 +736,7 @@ impl ServiceReport {
             ("wall_s", Json::num(self.wall_s)),
             ("jobs_per_s", Json::num(self.jobs_per_s())),
             ("aggregate_melem_per_s", Json::num(self.aggregate_melem_per_s())),
+            ("aggregate_gb_per_s", Json::num(self.aggregate_gb_per_s())),
             ("sessions", Json::arr(self.results.iter().map(|r| r.to_json()).collect())),
             ("rejected", Json::arr(self.rejected.iter().map(|r| r.to_json()).collect())),
             ("failed", Json::arr(self.failed.iter().map(|f| f.to_json()).collect())),
@@ -675,7 +745,11 @@ impl ServiceReport {
                 "transport_errors",
                 Json::arr(self.transport_errors.iter().map(|e| e.to_json()).collect()),
             ),
-        ])
+        ];
+        if let Some(counts) = &self.plan_lookups {
+            fields.push(("plan_cache", counts.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Write `serve_report.json` under `out_dir`.
@@ -723,7 +797,7 @@ pub fn fnv_bits(xs: &[f64]) -> u64 {
 /// through arithmetic bit-identical to single stepping on its own
 /// private instance, so pausing between chunks cannot change a single
 /// output bit (pinned by the scheduler parity tests).
-pub struct ActiveSession {
+pub struct ActiveSession<'t> {
     s: Session,
     inst: Box<dyn NativeInstance>,
     samples: Vec<f64>,
@@ -735,19 +809,23 @@ pub struct ActiveSession {
     /// Busy step time this attempt has consumed (parked time excluded)
     /// — what the watchdog budget clocks.
     busy_s: f64,
+    /// Queue wait the popping driver observed (stamped into the result).
+    queue_wait_s: f64,
     /// The watchdog budget, fixed at start.
     budget_s: f64,
     /// Injected fault scheduled for this attempt (first attempts only;
     /// cleared once fired).
     fault: Option<(FaultKind, usize)>,
     stall: Duration,
+    /// Span/counter sink; `None` costs nothing on the hot path.
+    tel: Option<&'t Telemetry>,
 }
 
-impl ActiveSession {
+impl<'t> ActiveSession<'t> {
     /// Build the session's native instance — on the shard that runs it,
     /// so at most `shards` (+1 parked per shard under preemption)
     /// sessions hold live buffers at once.
-    pub fn start(s: Session, shard: usize) -> ActiveSession {
+    pub fn start(s: Session, shard: usize) -> ActiveSession<'t> {
         ActiveSession::start_with(s, shard, 0, None)
     }
 
@@ -759,7 +837,21 @@ impl ActiveSession {
         shard: usize,
         attempt: usize,
         faults: Option<&FaultPlan>,
-    ) -> ActiveSession {
+    ) -> ActiveSession<'t> {
+        ActiveSession::start_observed(s, shard, attempt, faults, None)
+    }
+
+    /// [`Self::start_with`] with a telemetry sink: depth-chunk, probe,
+    /// and digest spans land on the shard's ring, busy time accrues to
+    /// the shard's busy counter. Instrumentation never touches the
+    /// arithmetic — digests are bit-identical with telemetry on or off.
+    pub fn start_observed(
+        s: Session,
+        shard: usize,
+        attempt: usize,
+        faults: Option<&FaultPlan>,
+        tel: Option<&'t Telemetry>,
+    ) -> ActiveSession<'t> {
         let inst = s.workload.native_at(&s.spec.shape).expect("admission validated supports_shape");
         let samples = Vec::with_capacity(s.spec.steps);
         let budget_s = s
@@ -780,10 +872,23 @@ impl ActiveSession {
             preemptions: 0,
             attempt,
             busy_s: 0.0,
+            queue_wait_s: 0.0,
             budget_s,
             fault,
             stall,
+            tel,
         }
+    }
+
+    /// Record the queue wait the popping driver observed (stamped into
+    /// the result and the `started` event).
+    pub fn note_queue_wait(&mut self, wait_s: f64) {
+        self.queue_wait_s = wait_s.max(0.0);
+    }
+
+    /// Queue wait recorded at pop (0 until [`Self::note_queue_wait`]).
+    pub fn queue_wait_s(&self) -> f64 {
+        self.queue_wait_s
     }
 
     /// Advance one timed depth-chunk (up to `plan.effective_depth()`
@@ -817,6 +922,7 @@ impl ActiveSession {
             _ => None,
         };
         let t0 = Instant::now();
+        let chunk0 = self.tel.map(|t| t.now_us());
         let advanced = {
             let inst = &mut self.inst;
             let plan = &self.s.plan;
@@ -836,6 +942,9 @@ impl ActiveSession {
             match unwound {
                 Ok(advanced) => advanced,
                 Err(payload) => {
+                    if let (Some(t), Some(c0)) = (self.tel, chunk0) {
+                        t.span_since(self.shard, SpanKind::Chunk, self.s.id, c0);
+                    }
                     return Err((
                         FailureKind::Panic,
                         format!("step {step}: {}", par::panic_message(&payload)),
@@ -846,6 +955,10 @@ impl ActiveSession {
         debug_assert!(advanced >= 1 && advanced <= max_steps, "run_chunk contract: {advanced}");
         let advanced = advanced.clamp(1, max_steps);
         let dt = t0.elapsed().as_secs_f64();
+        if let (Some(t), Some(c0)) = (self.tel, chunk0) {
+            t.span_since(self.shard, SpanKind::Chunk, self.s.id, c0);
+            t.add_busy(self.shard, dt);
+        }
         let last = step + advanced - 1; // 0-based index of the last step taken
         // sampled probe per chunk, phased by the last step taken so the
         // rotation matches single stepping under depth-1 plans;
@@ -853,7 +966,12 @@ impl ActiveSession {
         // the strided samples missed can never reach the digest
         let samples =
             if last + 1 >= self.s.spec.steps { usize::MAX } else { PROBE_SAMPLES };
-        if !self.inst.probe_finite(samples, last) {
+        let probe0 = self.tel.map(|t| t.now_us());
+        let finite = self.inst.probe_finite(samples, last);
+        if let (Some(t), Some(p0)) = (self.tel, probe0) {
+            t.span_since(self.shard, SpanKind::Probe, self.s.id, p0);
+        }
+        if !finite {
             return Err((
                 FailureKind::Divergence,
                 format!("non-finite value in live field after step {last}"),
@@ -920,6 +1038,13 @@ impl ActiveSession {
         if samples.len() > 1 {
             samples.remove(0);
         }
+        let stats = Stats::from_samples(samples);
+        let digest0 = self.tel.map(|t| t.now_us());
+        let digest_bits = fnv_bits(&self.inst.output());
+        if let (Some(t), Some(d0)) = (self.tel, digest0) {
+            t.span_since(self.shard, SpanKind::Digest, self.s.id, d0);
+        }
+        let achieved = self.s.budget.achieved(stats.median_s);
         SessionResult {
             id: self.s.id,
             workload: self.s.workload.name(),
@@ -929,9 +1054,16 @@ impl ActiveSession {
             plan: self.s.plan.describe(),
             tuned: self.s.tuned,
             elems_per_step: self.inst.elems(),
-            stats: Stats::from_samples(samples),
-            digest_bits: fnv_bits(&self.inst.output()),
+            stats,
+            digest_bits,
             latency_s: self.s.submitted.elapsed().as_secs_f64(),
+            busy_s: self.busy_s,
+            queue_wait_s: self.queue_wait_s,
+            bytes_per_step: self.s.budget.bytes_per_step,
+            flops_per_step: self.s.budget.flops_per_step,
+            gb_per_s: achieved.gb_per_s,
+            gflop_per_s: achieved.gflop_per_s,
+            roofline_frac: achieved.roofline_frac,
             preemptions: self.preemptions,
             retries: self.attempt,
         }
@@ -998,26 +1130,58 @@ pub fn run_loaded(
     plans: Option<&PlanCache>,
     quiet: bool,
 ) -> Result<ServiceReport> {
+    run_loaded_observed(loaded, shards, plans, quiet, None)
+}
+
+/// [`run_loaded`] with a telemetry sink: admission spans land on the
+/// control track, chunk/probe/digest spans on the shard tracks, and the
+/// admission counters accrue — the batch-mode twin of the daemon's
+/// observed serving loop, used by `stencilax serve --trace`.
+pub fn run_loaded_observed(
+    loaded: &LoadedJobs,
+    shards: usize,
+    plans: Option<&PlanCache>,
+    quiet: bool,
+    tel: Option<&Telemetry>,
+) -> Result<ServiceReport> {
     let (shards, threads_per_shard) = clamp_shards(shards, loaded.jobs.len());
     let mut rejected = loaded.rejected.clone();
     let mut sessions: Vec<Session> = Vec::with_capacity(loaded.jobs.len());
     let mut backlog_s = 0.0f64; // predicted cost already admitted ahead
     for (id, spec) in &loaded.jobs {
-        match admit(*id, spec.clone(), plans, threads_per_shard) {
+        let admit0 = tel.map(|t| t.now_us());
+        let admitted = admit(*id, spec.clone(), plans, threads_per_shard);
+        if let (Some(t), Some(a0)) = (tel, admit0) {
+            t.span_since(t.control_track(), SpanKind::Admit, *id, a0);
+        }
+        match admitted {
             Ok(s) => {
                 // batch-mode admission control: same SLO rule the daemon
                 // applies, with the backlog being everything admitted so
                 // far (the batch runs all-at-once)
                 let wait_s = backlog_s / shards as f64;
                 match deadline_violation(&s, wait_s) {
-                    Some(error) => rejected.push(Rejection { id: *id, error }),
+                    Some(error) => {
+                        if let Some(t) = tel {
+                            Counters::bump(&t.counters.rejected);
+                        }
+                        rejected.push(Rejection { id: *id, error });
+                    }
                     None => {
+                        if let Some(t) = tel {
+                            Counters::bump(&t.counters.accepted);
+                        }
                         backlog_s += s.predicted_cost_s;
                         sessions.push(s);
                     }
                 }
             }
-            Err(e) => rejected.push(Rejection { id: *id, error: format!("{e:#}") }),
+            Err(e) => {
+                if let Some(t) = tel {
+                    Counters::bump(&t.counters.rejected);
+                }
+                rejected.push(Rejection { id: *id, error: format!("{e:#}") });
+            }
         }
     }
     let queue = JobQueue::bounded(sessions.len().max(1));
@@ -1026,15 +1190,21 @@ pub fn run_loaded(
         queue.push(s).ok().expect("fresh batch queue is open and sized for the batch");
     }
     queue.close();
-    let outcome = drive(&queue, shards, &|ev| {
-        if !quiet {
-            match &ev {
-                Event::Done(r) => println!("{}", r.describe_line()),
-                Event::Failed(f) => println!("{}", f.describe_line()),
-                _ => {}
+    let outcome = drive_observed(
+        &queue,
+        shards,
+        &|ev| {
+            if !quiet {
+                match &ev {
+                    Event::Done(r) => println!("{}", r.describe_line()),
+                    Event::Failed(f) => println!("{}", f.describe_line()),
+                    _ => {}
+                }
             }
-        }
-    });
+        },
+        None,
+        tel,
+    );
     let wall_s = t0.elapsed().as_secs_f64();
     rejected.sort_by_key(|r| r.id);
     Ok(ServiceReport {
@@ -1046,6 +1216,7 @@ pub fn run_loaded(
         failed: outcome.failed,
         failure_histogram: outcome.histogram,
         transport_errors: Vec::new(),
+        plan_lookups: plans.map(|c| c.lookup_counts()),
     })
 }
 
@@ -1083,7 +1254,7 @@ pub fn bench_cases(
     smoke: bool,
     plans: Option<&PlanCache>,
 ) -> Vec<crate::coordinator::bench::BenchResult> {
-    use crate::coordinator::bench::{effective_lane_tag, BenchResult};
+    use crate::coordinator::bench::{effective_lane_tag, effective_lane_width, BenchResult};
     use crate::sim::workload::bench_sizes::{pick, DIFFUSION2D_N};
     use crate::util::bench::{black_box, Bencher};
 
@@ -1120,6 +1291,14 @@ pub fn bench_cases(
         if sessions == 1 {
             single_melem = melem;
         }
+        let roof = crate::coordinator::obs::bench_rates(
+            "diffusion2d",
+            elems,
+            stats.median_s,
+            par::num_threads(),
+            effective_lane_width(),
+            plans,
+        );
         out.push(BenchResult {
             name: format!("service-x{sessions}"),
             shape: vec![n, n],
@@ -1129,6 +1308,8 @@ pub fn bench_cases(
             lanes: effective_lane_tag(),
             depth: 1,
             tuned,
+            gb_per_s: roof.gb_per_s,
+            roofline_frac: roof.roofline_frac,
             extra: vec![
                 ("sessions".into(), Json::num(sessions as f64)),
                 ("steps_per_session".into(), Json::num(steps as f64)),

@@ -16,23 +16,30 @@
 //!   plans                       list the tuned plan cache
 //!   bench   [--smoke]           native-engine suite -> BENCH_native.json
 //!                               (runs under tuned plans when cached)
-//!   serve --jobs <file|-> [--shards N]
+//!   serve --jobs <file|-> [--shards N] [--trace PATH]
 //!                               batched stencil job service on the sharded
 //!                               worker pool -> serve_report.json
+//!                               (--trace writes a Chrome trace of the run)
 //!   daemon [--socket P|--stdio] [--shards N] [--queue-cap N] [--fifo]
-//!          [--inject-faults SPEC]
+//!          [--inject-faults SPEC] [--trace PATH] [--metrics-every SECS]
 //!                               long-lived serving daemon: admit NDJSON
 //!                               job requests while sessions run, stream
 //!                               events, report on drain/shutdown
 //!                               (cost-aware scheduling with preemption by
 //!                               default; --fifo restores arrival order;
 //!                               --inject-faults arms the deterministic
-//!                               chaos harness, DESIGN.md §15)
+//!                               chaos harness, DESIGN.md §15; --trace
+//!                               writes a Chrome trace on exit and
+//!                               --metrics-every streams live heartbeats,
+//!                               DESIGN.md §18)
 //!   submit --socket P --jobs <file|-> [--shutdown] [--raw]
 //!          [--connect-timeout SECS]
 //!                               submit a job file to a running daemon and
 //!                               stream its events (connects with bounded
 //!                               exponential backoff)
+//!   stats --socket P [--raw]    one live stats snapshot from a running
+//!                               daemon (queue depth, counters, per-shard
+//!                               busy fractions, plan-cache hit rates)
 //!   workloads                   list the registered workloads
 //!   verify                      cross-check artifacts vs the native engine
 //!   roofline                    operational-intensity summary
@@ -153,6 +160,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&cfg, &args)?,
         "daemon" => cmd_daemon(&cfg, &args)?,
         "submit" => cmd_submit(&args)?,
+        "stats" => cmd_stats(&args)?,
         "verify" => cmd_verify(&cfg)?,
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -324,10 +332,20 @@ threads/shards for the service budgets)",
         ),
         &[
             "workload", "shape", "budget", "lanes", "depth", "host", "plan", "default", "tuned",
-            "differs",
+            "GB/s", "differs",
         ],
     );
     for e in cache.iter() {
+        // effective bandwidth of the tuned rate under the workload's
+        // per-element byte budget (DESIGN.md §18)
+        let gbs = workload::find(&e.workload)
+            .map(|w| {
+                let (bytes_per_elem, _) =
+                    stencilax::coordinator::empirical::per_elem_budget(w);
+                e.tuned_melem_per_s * 1e6 * bytes_per_elem / 1e9
+            })
+            .map(|g| format!("{g:.2}"))
+            .unwrap_or_else(|| "-".into());
         t.row(vec![
             e.workload.clone(),
             format!("{:?}", e.shape),
@@ -338,6 +356,7 @@ threads/shards for the service budgets)",
             e.plan.describe(),
             format!("{:.1} Me/s", e.default_melem_per_s),
             format!("{:.1} Me/s", e.tuned_melem_per_s),
+            gbs,
             if e.differs_from_default() { "yes" } else { "no" }.to_string(),
         ]);
     }
@@ -394,8 +413,9 @@ fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
     }
     let results = stencilax::coordinator::bench::run_suite(smoke, plans.as_ref());
     let mut t = Table::new(
-        "Native engine — fused/blocked hot paths (median of N iters)",
-        &["case", "shape", "median (ms)", "Melem/s", "plan"],
+        "Native engine — fused/blocked hot paths (median of N iters; GB/s and roofline \
+share from the workload byte budgets, DESIGN.md §18)",
+        &["case", "shape", "median (ms)", "Melem/s", "GB/s", "roof", "plan"],
     );
     for r in &results {
         t.row(vec![
@@ -403,6 +423,8 @@ fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
             format!("{:?}", r.shape),
             format!("{:.3}", r.stats.median_s * 1e3),
             format!("{:.1}", r.melem_per_s()),
+            format!("{:.2}", r.gb_per_s),
+            format!("{:.0}%", r.roofline_frac * 100.0),
             if r.tuned { format!("{} (tuned)", r.plan) } else { "default".to_string() },
         ]);
     }
@@ -460,7 +482,22 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         Some(c) => println!("plan cache: {} tuned plan(s) consulted at admission", c.len()),
         None => println!("plan cache: none (run `stencilax tune --native --all` to tune)"),
     }
-    let report = service::run_loaded(&loaded, shards, plans.as_ref(), false)?;
+    let trace = args.get("trace").map(std::path::PathBuf::from);
+    let report = match &trace {
+        Some(path) => {
+            // spans need a track per *clamped* shard plus the control
+            // track; allocating at the clamp keeps the ring walk tight
+            let (clamped, _) = service::clamp_shards(shards, loaded.jobs.len());
+            let tel = stencilax::util::telemetry::Telemetry::new(clamped);
+            let report =
+                service::run_loaded_observed(&loaded, shards, plans.as_ref(), false, Some(&tel))?;
+            tel.write_chrome_trace(path)
+                .with_context(|| format!("writing trace {path:?}"))?;
+            println!("wrote trace {}", path.display());
+            report
+        }
+        None => service::run_loaded(&loaded, shards, plans.as_ref(), false)?,
+    };
     let mut t = Table::new(
         &format!(
             "Job service — {} session(s) on {} shard(s), {} thread(s) each, {} rejected",
@@ -469,7 +506,8 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
             report.threads_per_shard,
             report.rejected.len(),
         ),
-        &["id", "workload", "shape", "steps", "shard", "plan", "median/step", "Melem/s"],
+        &["id", "workload", "shape", "steps", "shard", "plan", "median/step", "Melem/s", "GB/s",
+          "roof"],
     );
     for r in &report.results {
         t.row(vec![
@@ -481,6 +519,8 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
             if r.tuned { format!("{} (tuned)", r.plan) } else { r.plan.clone() },
             format!("{:.3} ms", r.stats.median_s * 1e3),
             format!("{:.1}", r.melem_per_s()),
+            format!("{:.2}", r.gb_per_s),
+            format!("{:.0}%", r.roofline_frac * 100.0),
         ]);
     }
     println!("{}", t.render());
@@ -488,9 +528,10 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         println!("rejected job {:>3}: {}", r.id, r.error);
     }
     println!(
-        "aggregate: {:.2} jobs/s, {:.1} Melem/s over {:.3} s wall",
+        "aggregate: {:.2} jobs/s, {:.1} Melem/s, {:.2} GB/s over {:.3} s wall",
         report.jobs_per_s(),
         report.aggregate_melem_per_s(),
+        report.aggregate_gb_per_s(),
         report.wall_s,
     );
     let path = report.save(&cfg.output_dir)?;
@@ -515,12 +556,18 @@ fn cmd_daemon(cfg: &Config, args: &Args) -> Result<()> {
         Some(spec) => Some(FaultPlan::parse(spec).context("parsing --inject-faults")?),
         None => FaultPlan::from_env().transpose().context("parsing STENCILAX_FAULTS")?,
     };
+    let metrics_every_s = match args.get("metrics-every") {
+        Some(_) => Some(args.get_f64("metrics-every", 0.0)?),
+        None => None,
+    };
     let opts = DaemonOpts {
         shards: args.get_usize("shards", 2)?,
         plans: PlanCache::load_if_exists(&cfg.output_dir)?,
         queue_cap,
         policy: if args.has_flag("fifo") { Policy::Fifo } else { Policy::cost_aware() },
         faults,
+        trace: args.get("trace").map(std::path::PathBuf::from),
+        metrics_every_s,
     };
     eprintln!(
         "=== stencilax daemon: {} shard(s) requested, queue cap {}, {} scheduling, host {}, \
@@ -546,13 +593,39 @@ fn cmd_daemon(cfg: &Config, args: &Args) -> Result<()> {
     };
     let path = report.save_as(&cfg.output_dir, daemon::DAEMON_REPORT_FILE)?;
     eprintln!(
-        "daemon: served {} session(s), rejected {}, {:.2} jobs/s over {:.3} s wall",
+        "daemon: served {} session(s), rejected {}, {:.2} jobs/s, {:.2} GB/s aggregate \
+         over {:.3} s wall",
         report.results.len(),
         report.rejected.len(),
         report.jobs_per_s(),
+        report.aggregate_gb_per_s(),
         report.wall_s,
     );
+    if let Some(trace) = &opts.trace {
+        eprintln!("wrote trace {}", trace.display());
+    }
     eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Ask a running daemon for one live stats snapshot (`stencilax stats`)
+/// and print it (pretty by default, `--raw` for one compact line).
+fn cmd_stats(args: &Args) -> Result<()> {
+    use stencilax::coordinator::daemon::client;
+    let socket = args.get("socket").context("stats requires --socket <path>")?;
+    let connect_timeout = args.get_f64("connect-timeout", client::DEFAULT_CONNECT_TIMEOUT_S)?;
+    if !connect_timeout.is_finite() || connect_timeout <= 0.0 {
+        bail!("--connect-timeout must be a finite positive number of seconds");
+    }
+    let snapshot = client::fetch_stats(
+        std::path::Path::new(socket),
+        std::time::Duration::from_secs_f64(connect_timeout),
+    )?;
+    if args.has_flag("raw") {
+        println!("{}", snapshot.to_string_compact());
+    } else {
+        println!("{}", snapshot.to_string_pretty());
+    }
     Ok(())
 }
 
@@ -597,9 +670,14 @@ fn cmd_submit(args: &Args) -> Result<()> {
                     ),
                     None => println!("rejected job {id:>3}: {error}"),
                 },
-                Event::Started { id, shard } => println!("started  job {id:>3} on shard {shard}"),
+                Event::Started { id, shard, queue_wait_s } => println!(
+                    "started  job {id:>3} on shard {shard} (queued {})",
+                    stencilax::util::bench::fmt_time(*queue_wait_s),
+                ),
                 Event::Done(r) => println!("{}", r.describe_line()),
                 Event::Failed(f) => println!("{}", f.describe_line()),
+                Event::Stats(j) => println!("stats: {}", j.to_string_compact()),
+                Event::Metrics(j) => println!("metrics: {}", j.to_string_compact()),
                 Event::Report(j) => println!("final report: {}", j.to_string_compact()),
             }
         },
@@ -739,16 +817,18 @@ SUBCOMMANDS:
                              and write BENCH_native.json under --out;
                              --smoke selects CI-scale sizes, --snapshot also
                              copies the report to ./BENCH_native.json
-  serve --jobs <file|-> [--shards N]
+  serve --jobs <file|-> [--shards N] [--trace PATH]
                              batched stencil job service: admit the job
                              file ({{workload, shape, steps}} requests, plan
                              cache consulted at admission; a bad job is
                              recorded as rejected, the rest still run),
                              drain sessions onto N disjoint pool shards
                              (default 2), and write serve_report.json
-                             under --out
+                             under --out; --trace also writes a Chrome
+                             trace-event JSON of the run (Perfetto /
+                             chrome://tracing)
   daemon [--socket PATH|--stdio] [--shards N] [--queue-cap N] [--fifo]
-         [--inject-faults SPEC]
+         [--inject-faults SPEC] [--trace PATH] [--metrics-every SECS]
                              long-lived serving daemon: admit NDJSON job
                              lines ({{workload, shape, steps}}, optional
                              deadline_s / timeout_s / max_retries, or
@@ -771,7 +851,12 @@ SUBCOMMANDS:
                              chaos harness, e.g.
                              'panic@1,stall@3,nan@4,stall_ms=250' or
                              'seed=42,p=0.25,kinds=panic|stall|nan'
-                             (DESIGN.md §15)
+                             (DESIGN.md §15); --trace writes a Chrome
+                             trace-event JSON on exit (one track per
+                             shard + a control track) and
+                             --metrics-every streams unsolicited metrics
+                             heartbeats to connected clients
+                             (DESIGN.md §18)
   submit --socket PATH --jobs <file|-> [--shutdown] [--raw]
          [--connect-timeout SECS]
                              submit a job file to a running daemon and
@@ -781,6 +866,12 @@ SUBCOMMANDS:
                              final aggregate report; connection retries
                              with bounded exponential backoff for up to
                              --connect-timeout seconds, default 5)
+  stats --socket PATH [--raw] [--connect-timeout SECS]
+                             fetch one live stats snapshot from a running
+                             daemon (queue depth + cost ledger, counters,
+                             failure histogram, per-shard busy fraction
+                             and steal counters, plan-cache hit rates);
+                             pretty JSON by default, --raw for one line
   workloads                  list the workload registry (names for `tune`)
   verify                     artifacts vs native engine (Table B2 rules)
   roofline                   operational intensity vs machine balance

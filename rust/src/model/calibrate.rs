@@ -93,6 +93,24 @@ impl HostModel {
         }
     }
 
+    /// Calibrated machine peak memory bandwidth, bytes/second — the
+    /// roofline ceiling achieved GB/s figures are reported against
+    /// (DESIGN.md §18). Shared across threads, like [`Self::predict`]
+    /// prices it.
+    pub fn peak_bytes_per_s(&self) -> f64 {
+        self.bw_gibs * GIB
+    }
+
+    /// Calibrated machine peak arithmetic throughput, FLOP/second, for a
+    /// plan running `threads` threads at SIMD lane width `lane_width` —
+    /// the compute roofline ceiling, priced exactly like
+    /// [`Self::predict`]'s `t_flop` denominator (per-thread GFLOP/s
+    /// scaled by the thread count and the discounted lane boost).
+    pub fn peak_flops_per_s(&self, threads: usize, lane_width: usize) -> f64 {
+        let lane_boost = 1.0 + self.simd_eff * (lane_width.max(1) - 1) as f64;
+        self.gflops_per_thread * 1e9 * threads.max(1) as f64 * lane_boost
+    }
+
     /// Predicted sweep seconds. Bandwidth is shared across threads;
     /// arithmetic scales with the threads that can actually be busy and
     /// with the plan's SIMD lane width (discounted by [`Self::simd_eff`]);
@@ -106,9 +124,8 @@ impl HostModel {
         let bytes = c.bytes + blocks * c.halo_bytes_per_block;
         let depth = c.depth.max(1) as f64;
         let reuse = 1.0 - self.temporal_reuse * (1.0 - 1.0 / depth);
-        let t_mem = bytes * reuse / (self.bw_gibs * GIB);
-        let lane_boost = 1.0 + self.simd_eff * (c.lane_width.max(1) - 1) as f64;
-        let t_flop = c.flops / (self.gflops_per_thread * 1e9 * threads * lane_boost);
+        let t_mem = bytes * reuse / self.peak_bytes_per_s();
+        let t_flop = c.flops / self.peak_flops_per_s(threads as usize, c.lane_width);
         let waves = (blocks / threads).ceil();
         let imbalance = waves * threads / blocks;
         t_mem.max(t_flop) * imbalance + blocks * self.block_overhead_us * 1e-6
@@ -372,6 +389,30 @@ mod tests {
         // pre-temporal calibrations keep their meaning
         let hot = HostModel { temporal_reuse: 1.0, ..m };
         assert_eq!(hot.predict(&mk(1, 1e3)), d1);
+    }
+
+    #[test]
+    fn peak_figures_price_like_predict() {
+        let m = HostModel::seed();
+        assert_eq!(m.peak_bytes_per_s(), m.bw_gibs * GIB);
+        assert_eq!(m.peak_flops_per_s(4, 1), m.gflops_per_thread * 1e9 * 4.0);
+        let boost = 1.0 + m.simd_eff * 7.0;
+        assert_eq!(m.peak_flops_per_s(4, 8), m.gflops_per_thread * 1e9 * 4.0 * boost);
+        assert_eq!(m.peak_flops_per_s(0, 0), m.gflops_per_thread * 1e9, "degenerates clamp");
+        // a purely memory-bound balanced sweep runs at exactly the peak:
+        // its predicted time is traffic / peak_bytes_per_s + block latency
+        let c = SweepCost {
+            bytes: 1e9,
+            flops: 0.0,
+            blocks: 4,
+            threads: 4,
+            halo_bytes_per_block: 0.0,
+            lane_width: 1,
+            depth: 1,
+        };
+        let t = m.predict(&c);
+        let overhead = 4.0 * m.block_overhead_us * 1e-6;
+        assert!((t - (1e9 / m.peak_bytes_per_s() + overhead)).abs() < 1e-12, "{t}");
     }
 
     #[test]

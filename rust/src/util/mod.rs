@@ -10,6 +10,7 @@ pub mod json;
 pub mod par;
 pub mod prop;
 pub mod rng;
+pub mod telemetry;
 
 pub use json::Json;
 pub use rng::Rng;

@@ -37,7 +37,7 @@
 //! `STENCILAX_SHARDS` (default [`DEFAULT_SHARDS`]).
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 
 /// Number of worker threads: `STENCILAX_THREADS` or the machine parallelism.
@@ -126,6 +126,15 @@ struct Shared {
     /// caller's re-raise (and the serving layer's `failed` events) keep
     /// the original diagnostic instead of a generic "worker panicked".
     panic_msg: Mutex<Option<String>>,
+    /// Telemetry (DESIGN.md §18): dispatches on this shard, participants
+    /// summed over them, and the item split between the dispatching
+    /// caller and the stealing workers. Each participant accumulates its
+    /// item count locally and folds it in with ONE relaxed `fetch_add`
+    /// per dispatch, so the steal loop itself stays atomic-free.
+    dispatches: AtomicU64,
+    participants_total: AtomicU64,
+    caller_items: AtomicU64,
+    stolen_items: AtomicU64,
 }
 
 /// Best-effort text of a panic payload (`&str` / `String` payloads; the
@@ -187,6 +196,10 @@ impl Shard {
                 next: AtomicUsize::new(0),
                 panicked: AtomicBool::new(false),
                 panic_msg: Mutex::new(None),
+                dispatches: AtomicU64::new(0),
+                participants_total: AtomicU64::new(0),
+                caller_items: AtomicU64::new(0),
+                stolen_items: AtomicU64::new(0),
             }),
             gate: Mutex::new(()),
             max_workers: workers,
@@ -226,6 +239,9 @@ impl Shard {
             for i in 0..n {
                 f(i);
             }
+            self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
+            self.shared.participants_total.fetch_add(1, Ordering::Relaxed);
+            self.shared.caller_items.fetch_add(n as u64, Ordering::Relaxed);
             return 1;
         }
         // `want - 1 <= max_workers`, so ensure_workers returns at least
@@ -249,13 +265,18 @@ impl Shard {
             self.shared.work.notify_all();
         }
         let guard = DispatchGuard { shared: &self.shared };
+        let mut taken = 0u64;
         loop {
             let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
             if i >= n {
                 break;
             }
             f(i);
+            taken += 1;
         }
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.shared.participants_total.fetch_add(parts as u64, Ordering::Relaxed);
+        self.shared.caller_items.fetch_add(taken, Ordering::Relaxed);
         drop(guard); // waits for the workers, then clears the job
         if self.shared.panicked.load(Ordering::Relaxed) {
             let msg = self
@@ -275,6 +296,23 @@ impl Shard {
 /// [`pool`]; dedicated instances exist only in tests.
 pub struct ThreadPool {
     shards: Vec<Shard>,
+}
+
+/// Cumulative work-stealing telemetry for one pool shard (DESIGN.md §18):
+/// how often the shard dispatched, how many threads those dispatches
+/// engaged, and how the executed items split between the dispatching
+/// caller and the stealing workers — the live evidence that concurrent
+/// streams really run multi-threaded instead of collapsing to serial.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Dispatches that acquired this shard's gate (serial ones included).
+    pub dispatches: u64,
+    /// Participant threads summed over those dispatches (caller included).
+    pub participants: u64,
+    /// Items executed by dispatching callers.
+    pub caller_items: u64,
+    /// Items stolen and executed by this shard's worker threads.
+    pub stolen_items: u64,
 }
 
 impl ThreadPool {
@@ -302,6 +340,21 @@ impl ThreadPool {
     /// identically; actual workers spawn on demand up to this bound).
     pub fn workers_per_shard(&self) -> usize {
         self.shards[0].max_workers
+    }
+
+    /// Point-in-time telemetry for one shard (index modulo the shard
+    /// count): cumulative dispatches, participant threads summed over
+    /// them, and the executed-item split between dispatching callers and
+    /// stealing workers. Inline-serial fallbacks that never acquired a
+    /// shard gate are not attributed to any shard.
+    pub fn shard_stats(&self, shard: usize) -> ShardStats {
+        let sh = &self.shards[shard % self.shards.len()].shared;
+        ShardStats {
+            dispatches: sh.dispatches.load(Ordering::Relaxed),
+            participants: sh.participants_total.load(Ordering::Relaxed),
+            caller_items: sh.caller_items.load(Ordering::Relaxed),
+            stolen_items: sh.stolen_items.load(Ordering::Relaxed),
+        }
     }
 
     /// Run `f(i)` for every `i in 0..n`, work-stealing across up to
@@ -406,12 +459,17 @@ fn worker_loop(shared: &Shared, id: usize) {
                 s = wait_on(&shared.work, s);
             }
         };
-        let stole = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
-            let i = shared.next.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
+        let stole = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut taken = 0u64;
+            loop {
+                let i = shared.next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                job(i);
+                taken += 1;
             }
-            job(i);
+            shared.stolen_items.fetch_add(taken, Ordering::Relaxed);
         }));
         if let Err(payload) = stole {
             // drain the counter so sibling workers stop early, then report
@@ -774,6 +832,31 @@ mod tests {
         });
         assert_eq!(out, vec![0, 1]);
         assert_eq!(drive_shards(0, |s| s), vec![0], "degenerate count clamps to one driver");
+    }
+
+    #[test]
+    fn shard_stats_account_dispatches_and_item_split() {
+        let p = ThreadPool::new(3);
+        assert_eq!(p.shard_stats(0), ShardStats::default());
+        // parallel dispatch: every item is executed exactly once, and the
+        // caller/stolen split covers all of them
+        p.run(200, 4, &|_| {
+            std::thread::sleep(std::time::Duration::from_micros(20));
+        });
+        let s = p.shard_stats(0);
+        assert_eq!(s.dispatches, 1);
+        assert!(s.participants > 1, "{s:?}");
+        assert_eq!(s.caller_items + s.stolen_items, 200, "{s:?}");
+        assert!(s.stolen_items > 0, "sleepy items must get stolen: {s:?}");
+        // a zero-worker shard clamps every dispatch to the caller, and the
+        // serial path is attributed too
+        let serial = ThreadPool::sharded(1, 0);
+        serial.run(8, 4, &|_| {});
+        let s2 = serial.shard_stats(0);
+        assert_eq!(s2.dispatches, 1);
+        assert_eq!(s2.participants, 1);
+        assert_eq!(s2.caller_items, 8);
+        assert_eq!(s2.stolen_items, 0);
     }
 
     #[test]

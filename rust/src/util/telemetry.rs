@@ -1,0 +1,505 @@
+//! Zero-steady-state-allocation telemetry substrate (DESIGN.md §18).
+//!
+//! Two primitives, both preallocated at construction so the hot serving
+//! paths never touch the allocator (the `alloc_free.rs` pin extends to
+//! instrumented runs):
+//!
+//! - [`Counters`] — a fixed set of relaxed atomics the serving stack
+//!   bumps at admission, completion, retry, preemption, and respawn
+//!   sites, read point-in-time by the daemon's `stats` endpoint.
+//! - [`SpanRing`] — one fixed-capacity ring of monotonic-clock spans per
+//!   shard (plus a control track for admissions). A record is one
+//!   `fetch_add` on the cursor and four relaxed stores into the slot; a
+//!   sequence stamp written last (release) lets the reader discard slots
+//!   torn by concurrent wrap-around instead of emitting garbage.
+//!
+//! [`Telemetry::write_chrome_trace`] serializes the rings as Chrome
+//! trace-event JSON (`stencilax-trace/1`): one `pid 0` process, one
+//! `tid` per shard track plus a control track, `ph:"X"` duration events
+//! for on-shard work (depth-chunk run, finiteness probe, preemption
+//! park, retry backoff, digest), `ph:"b"/"e"` async pairs for
+//! queue-scoped intervals (admit, queue-wait) that overlap arbitrarily,
+//! and `ph:"i"` instants for faults, preemptions, and driver respawns —
+//! loadable in Perfetto / `chrome://tracing` as-is.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag stamped into the trace file's `otherData`.
+pub const TRACE_SCHEMA: &str = "stencilax-trace/1";
+/// Span slots per track. Power of two so the wrap modulo is a mask;
+/// 4096 spans ≈ hours of serving at per-chunk granularity before wrap.
+pub const RING_SPANS: usize = 4096;
+
+/// What one span (or instant) measured. The discriminant is packed into
+/// the ring slot, so variants must stay ≤ 255.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Admission: validate + plan lookup + cost estimate (control track).
+    Admit = 0,
+    /// Submit-to-first-dispatch wait (async: overlaps other jobs' waits).
+    QueueWait = 1,
+    /// One depth-chunk advance on a shard.
+    Chunk = 2,
+    /// Finiteness probe after a chunk.
+    Probe = 3,
+    /// Host session parked while a shorter job preempts it.
+    Park = 4,
+    /// Retry backoff sleep before a re-attempt.
+    Backoff = 5,
+    /// FNV digest over the output field.
+    Digest = 6,
+    /// Instant: a session failed (fault surfaced).
+    Fault = 7,
+    /// Instant: a running session was preempted.
+    Preempt = 8,
+    /// Instant: a shard driver respawned after a pool-level escape.
+    Respawn = 9,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 10] = [
+        SpanKind::Admit,
+        SpanKind::QueueWait,
+        SpanKind::Chunk,
+        SpanKind::Probe,
+        SpanKind::Park,
+        SpanKind::Backoff,
+        SpanKind::Digest,
+        SpanKind::Fault,
+        SpanKind::Preempt,
+        SpanKind::Respawn,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::QueueWait => "queue-wait",
+            SpanKind::Chunk => "chunk",
+            SpanKind::Probe => "probe",
+            SpanKind::Park => "park",
+            SpanKind::Backoff => "backoff",
+            SpanKind::Digest => "digest",
+            SpanKind::Fault => "fault",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Respawn => "respawn",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| *k as u8 == v)
+    }
+
+    /// Zero-duration marks rendered as `ph:"i"` instants.
+    pub fn is_instant(self) -> bool {
+        matches!(self, SpanKind::Fault | SpanKind::Preempt | SpanKind::Respawn)
+    }
+
+    /// Intervals that overlap freely (a queue holds many waiters at
+    /// once), rendered as `ph:"b"/"e"` async pairs instead of stack
+    /// events — the `ph:"X"` events on each track stay strictly nested.
+    pub fn is_async(self) -> bool {
+        matches!(self, SpanKind::Admit | SpanKind::QueueWait)
+    }
+}
+
+/// One decoded span, as read back out of a ring.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Job id the span belongs to.
+    pub job: u32,
+    /// Track the span was recorded on (shard index; `shards` = control).
+    pub track: u32,
+    /// Microseconds since the [`Telemetry`] epoch.
+    pub t0_us: u64,
+    pub t1_us: u64,
+}
+
+/// One preallocated span slot: three relaxed payload words plus a
+/// sequence stamp written last with release ordering. A reader that sees
+/// `stamp == seq + 1` for the sequence it expects knows the payload
+/// stores of exactly that record happened-before; anything else is a
+/// torn or not-yet-written slot and is skipped.
+struct Slot {
+    /// `kind | job << 8` (job ids clamp at u32::MAX >> 8 in practice).
+    meta: AtomicU64,
+    t0_us: AtomicU64,
+    t1_us: AtomicU64,
+    stamp: AtomicU64,
+}
+
+impl Slot {
+    const fn empty() -> Slot {
+        Slot {
+            meta: AtomicU64::new(0),
+            t0_us: AtomicU64::new(0),
+            t1_us: AtomicU64::new(0),
+            stamp: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity multi-producer span ring. Producers never block and
+/// never allocate; on overflow the oldest spans are overwritten (the
+/// trace keeps the most recent window, counters keep exact totals).
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    cursor: AtomicU64,
+}
+
+impl SpanRing {
+    fn new(cap: usize) -> SpanRing {
+        let cap = cap.next_power_of_two().max(2);
+        SpanRing {
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Total spans ever recorded (≥ retained when the ring has wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Record one span. Wait-free: one `fetch_add` + four stores.
+    pub fn record(&self, kind: SpanKind, job: u32, t0_us: u64, t1_us: u64) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq as usize) & (self.slots.len() - 1)];
+        slot.meta.store(kind as u64 | ((job as u64) << 8), Ordering::Relaxed);
+        slot.t0_us.store(t0_us, Ordering::Relaxed);
+        slot.t1_us.store(t1_us, Ordering::Relaxed);
+        // stamp = seq + 1 so "never written" (0) is unambiguous
+        slot.stamp.store(seq + 1, Ordering::Release);
+    }
+
+    /// Read the retained window into `out` (oldest first), skipping
+    /// slots torn by a concurrent wrap. Allocates only in `out`.
+    pub fn drain_into(&self, track: u32, out: &mut Vec<Span>) {
+        let total = self.cursor.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let first = total.saturating_sub(cap);
+        for seq in first..total {
+            let slot = &self.slots[(seq as usize) & (self.slots.len() - 1)];
+            if slot.stamp.load(Ordering::Acquire) != seq + 1 {
+                continue; // torn: overwritten (or mid-write) since we read the cursor
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let t0_us = slot.t0_us.load(Ordering::Relaxed);
+            let t1_us = slot.t1_us.load(Ordering::Relaxed);
+            if slot.stamp.load(Ordering::Acquire) != seq + 1 {
+                continue; // overwritten while we were reading the payload
+            }
+            let Some(kind) = SpanKind::from_u8((meta & 0xff) as u8) else { continue };
+            out.push(Span { kind, job: (meta >> 8) as u32, track, t0_us, t1_us });
+        }
+    }
+}
+
+/// Monotonic cumulative counters, all bumped with single relaxed
+/// `fetch_add`s from the serving hot paths.
+#[derive(Default)]
+pub struct Counters {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub retries: AtomicU64,
+    pub preemptions: AtomicU64,
+    pub respawns: AtomicU64,
+    pub faults_panic: AtomicU64,
+    pub faults_timeout: AtomicU64,
+    pub faults_divergence: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The per-process telemetry hub: one span ring per shard plus a control
+/// track, per-shard busy-time accumulators, and the counter block.
+/// Everything is preallocated in [`Telemetry::new`]; recording is
+/// allocation-free.
+pub struct Telemetry {
+    /// Monotonic epoch all span timestamps are relative to.
+    base: Instant,
+    shards: usize,
+    /// `shards + 1` rings; the last is the control (admission) track.
+    rings: Box<[SpanRing]>,
+    /// Per-shard busy time, microseconds (kernel time inside chunks).
+    busy_us: Box<[AtomicU64]>,
+    pub counters: Counters,
+}
+
+impl Telemetry {
+    pub fn new(shards: usize) -> Telemetry {
+        let shards = shards.max(1);
+        Telemetry {
+            base: Instant::now(),
+            shards,
+            rings: (0..shards + 1).map(|_| SpanRing::new(RING_SPANS)).collect(),
+            busy_us: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Track index of the admission/control ring.
+    pub fn control_track(&self) -> usize {
+        self.shards
+    }
+
+    /// Microseconds since the telemetry epoch.
+    pub fn now_us(&self) -> u64 {
+        self.base.elapsed().as_micros() as u64
+    }
+
+    fn ring(&self, track: usize) -> &SpanRing {
+        &self.rings[track.min(self.shards)]
+    }
+
+    /// Record a duration span `[t0_us, now]` on a track.
+    pub fn span_since(&self, track: usize, kind: SpanKind, job: usize, t0_us: u64) {
+        let t1 = self.now_us();
+        self.ring(track).record(kind, job as u32, t0_us.min(t1), t1);
+    }
+
+    /// Record a zero-duration instant mark on a track.
+    pub fn instant(&self, track: usize, kind: SpanKind, job: usize) {
+        let t = self.now_us();
+        self.ring(track).record(kind, job as u32, t, t);
+    }
+
+    /// Accumulate kernel busy time on a shard.
+    pub fn add_busy(&self, shard: usize, seconds: f64) {
+        if seconds > 0.0 && shard < self.busy_us.len() {
+            self.busy_us[shard].fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn busy_s(&self, shard: usize) -> f64 {
+        self.busy_us.get(shard).map_or(0.0, |b| b.load(Ordering::Relaxed) as f64 * 1e-6)
+    }
+
+    /// Seconds since the telemetry epoch (the busy-fraction denominator).
+    pub fn uptime_s(&self) -> f64 {
+        self.base.elapsed().as_secs_f64()
+    }
+
+    /// Total spans recorded across every track (wrapped ones included).
+    pub fn spans_recorded(&self) -> u64 {
+        self.rings.iter().map(|r| r.recorded()).sum()
+    }
+
+    /// Decode every track's retained window, oldest-first per track.
+    pub fn snapshot_spans(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for (i, ring) in self.rings.iter().enumerate() {
+            ring.drain_into(i as u32, &mut out);
+        }
+        out.sort_by_key(|s| (s.track, s.t0_us, s.t1_us));
+        out
+    }
+
+    /// Serialize the retained spans as Chrome trace-event JSON.
+    pub fn write_chrome_trace(&self, path: &Path) -> Result<()> {
+        let spans = self.snapshot_spans();
+        let mut events: Vec<Json> = Vec::with_capacity(spans.len() + self.rings.len());
+        for track in 0..self.rings.len() {
+            let name = if track == self.shards {
+                "control".to_string()
+            } else {
+                format!("shard {track}")
+            };
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(track as f64)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+        }
+        for s in &spans {
+            let base = |ph: &str| {
+                vec![
+                    ("name", Json::str(s.kind.name())),
+                    ("cat", Json::str("stencilax")),
+                    ("ph", Json::str(ph)),
+                    ("ts", Json::num(s.t0_us as f64)),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(s.track as f64)),
+                    ("args", Json::obj(vec![("job", Json::num(s.job as f64))])),
+                ]
+            };
+            if s.kind.is_instant() {
+                let mut ev = base("i");
+                ev.push(("s", Json::str("t")));
+                events.push(Json::obj(ev));
+            } else if s.kind.is_async() {
+                // async begin/end pair scoped by job id: overlapping
+                // waits render as separate async rows, not stack events
+                let mut b = base("b");
+                b.push(("id", Json::num(s.job as f64)));
+                events.push(Json::obj(b));
+                let mut e = base("e");
+                e.push(("id", Json::num(s.job as f64)));
+                e[3] = ("ts", Json::num(s.t1_us as f64));
+                events.push(Json::obj(e));
+            } else {
+                let mut ev = base("X");
+                ev.push(("dur", Json::num(s.t1_us.saturating_sub(s.t0_us) as f64)));
+                events.push(Json::obj(ev));
+            }
+        }
+        let doc = Json::obj(vec![
+            ("traceEvents", Json::arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("schema", Json::str(TRACE_SCHEMA)),
+                    ("shards", Json::num(self.shards as f64)),
+                ]),
+            ),
+        ]);
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        }
+        std::fs::write(path, doc.to_string_pretty())
+            .with_context(|| format!("writing trace {path:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_drains_in_order() {
+        let ring = SpanRing::new(8);
+        ring.record(SpanKind::Chunk, 1, 10, 20);
+        ring.record(SpanKind::Probe, 1, 20, 22);
+        ring.record(SpanKind::Digest, 2, 30, 31);
+        let mut out = Vec::new();
+        ring.drain_into(0, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].kind, SpanKind::Chunk);
+        assert_eq!(out[0].t0_us, 10);
+        assert_eq!(out[1].kind, SpanKind::Probe);
+        assert_eq!(out[2].job, 2);
+        assert_eq!(ring.recorded(), 3);
+    }
+
+    #[test]
+    fn ring_wrap_keeps_most_recent_window() {
+        let ring = SpanRing::new(4);
+        for i in 0..10u64 {
+            ring.record(SpanKind::Chunk, i as u32, i, i + 1);
+        }
+        let mut out = Vec::new();
+        ring.drain_into(0, &mut out);
+        assert_eq!(out.len(), 4, "retained window is the capacity");
+        assert_eq!(out[0].job, 6, "oldest retained is total - cap");
+        assert_eq!(out[3].job, 9);
+        assert_eq!(ring.recorded(), 10);
+    }
+
+    #[test]
+    fn concurrent_producers_never_corrupt_kinds() {
+        let ring = std::sync::Arc::new(SpanRing::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let r = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5000u32 {
+                    r.record(SpanKind::Chunk, t * 10_000 + i, i as u64, i as u64 + 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut out = Vec::new();
+        ring.drain_into(0, &mut out);
+        assert!(out.len() <= 64);
+        for s in &out {
+            assert_eq!(s.kind, SpanKind::Chunk);
+            assert_eq!(s.t1_us, s.t0_us + 1);
+        }
+        assert_eq!(ring.recorded(), 20_000);
+    }
+
+    #[test]
+    fn telemetry_tracks_and_busy_accounting() {
+        let tel = Telemetry::new(2);
+        assert_eq!(tel.shards(), 2);
+        assert_eq!(tel.control_track(), 2);
+        tel.add_busy(0, 0.5);
+        tel.add_busy(0, 0.25);
+        tel.add_busy(9, 1.0); // out of range: ignored, not a panic
+        assert!((tel.busy_s(0) - 0.75).abs() < 1e-6);
+        assert_eq!(tel.busy_s(1), 0.0);
+        let t0 = tel.now_us();
+        tel.span_since(1, SpanKind::Chunk, 7, t0);
+        tel.instant(0, SpanKind::Preempt, 3);
+        tel.span_since(tel.control_track(), SpanKind::Admit, 7, t0);
+        let spans = tel.snapshot_spans();
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().any(|s| s.track == 2 && s.kind == SpanKind::Admit));
+        assert_eq!(tel.spans_recorded(), 3);
+    }
+
+    #[test]
+    fn chrome_trace_is_parseable_and_schema_tagged() {
+        let tel = Telemetry::new(2);
+        let t0 = tel.now_us();
+        tel.span_since(0, SpanKind::Chunk, 1, t0);
+        tel.span_since(0, SpanKind::QueueWait, 1, t0);
+        tel.instant(1, SpanKind::Fault, 2);
+        let path = std::env::temp_dir().join("stencilax_trace_unit.json");
+        tel.write_chrome_trace(&path).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.req_arr("traceEvents").unwrap();
+        // 3 thread_name metas + 1 X + 1 async pair (b+e) + 1 instant
+        assert_eq!(events.len(), 3 + 1 + 2 + 1);
+        assert_eq!(
+            doc.req("otherData").unwrap().req_str("schema").unwrap(),
+            TRACE_SCHEMA
+        );
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.req_str("ph").unwrap()).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 3);
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 1);
+        assert_eq!(phases.iter().filter(|p| **p == "b").count(), 1);
+        assert_eq!(phases.iter().filter(|p| **p == "e").count(), 1);
+        assert_eq!(phases.iter().filter(|p| **p == "i").count(), 1);
+        for e in events {
+            assert!(e.req_f64("pid").is_ok() || e.req_u64("pid").is_ok());
+            assert!(e.get("tid").is_some() && e.get("ts").is_some() || e.req_str("ph").unwrap() == "M");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn counters_bump_relaxed() {
+        let c = Counters::default();
+        Counters::bump(&c.retries);
+        Counters::bump(&c.retries);
+        Counters::bump(&c.preemptions);
+        assert_eq!(c.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(c.preemptions.load(Ordering::Relaxed), 1);
+        assert_eq!(c.completed.load(Ordering::Relaxed), 0);
+    }
+}

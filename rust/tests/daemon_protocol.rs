@@ -62,10 +62,12 @@ fn daemon_stdio_and_batch_serve_produce_identical_digests() {
             Event::Accepted { id, .. } => {
                 assert_eq!(stage.insert(*id, 1), None, "duplicate accepted for {id}");
             }
-            Event::Started { id, shard } => {
+            Event::Started { id, shard, queue_wait_s } => {
                 assert_eq!(stage.insert(*id, 2), Some(1), "started before accepted for {id}");
                 assert!(*shard < daemon_report.shards);
+                assert!(queue_wait_s.is_finite() && *queue_wait_s >= 0.0);
             }
+            Event::Stats(_) | Event::Metrics(_) => {}
             Event::Done(r) => {
                 assert_eq!(stage.insert(r.id, 3), Some(2), "done before started for {}", r.id);
                 assert!(r.latency_s > 0.0);

@@ -1,0 +1,205 @@
+//! Telemetry-layer regressions (ISSUE 10): the Chrome trace export must
+//! be well-formed with strictly-nested duration events per track, a
+//! live daemon's `stats` snapshot must reconcile with its final report,
+//! the per-step bytes/FLOP budgets must be bit-identical across runs,
+//! and — the acceptance pin — turning telemetry on must not move a
+//! single digest bit.
+//!
+//! The ring's allocation-free pin lives in `telemetry_alloc.rs` (its
+//! counting `#[global_allocator]` needs a binary to itself).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use stencilax::coordinator::daemon::{client, server, DaemonOpts};
+use stencilax::coordinator::service::{self, JobSpec, LoadedJobs};
+use stencilax::util::json::Json;
+use stencilax::util::telemetry::{Telemetry, TRACE_SCHEMA};
+
+fn job(workload: &str, shape: &[usize], steps: usize) -> JobSpec {
+    JobSpec { workload: workload.into(), shape: shape.to_vec(), steps, ..JobSpec::default() }
+}
+
+fn loaded(jobs: Vec<JobSpec>) -> LoadedJobs {
+    LoadedJobs { jobs: jobs.into_iter().enumerate().collect(), rejected: Vec::new() }
+}
+
+/// Walk one track's `ph:"X"` events with a stack: each new span must
+/// either start after the current innermost span ends (pop) or end
+/// within it (push). Partial overlap on a track is a broken trace —
+/// Perfetto renders it as garbage.
+fn assert_strictly_nested(tid: f64, events: &[(f64, f64)]) {
+    let mut stack: Vec<f64> = Vec::new(); // end timestamps, innermost last
+    for &(ts, dur) in events {
+        let end = ts + dur;
+        while let Some(&top) = stack.last() {
+            if ts >= top {
+                stack.pop();
+            } else {
+                assert!(
+                    end <= top,
+                    "track {tid}: span [{ts}, {end}] partially overlaps enclosing end {top}"
+                );
+                break;
+            }
+        }
+        stack.push(end);
+    }
+}
+
+#[test]
+fn chrome_trace_export_is_well_formed_and_nested() {
+    let jobs = loaded(vec![
+        job("diffusion2d", &[24, 24], 3),
+        job("conv1d-r3", &[2048], 2),
+        job("diffusion1d", &[512], 3),
+        job("mhd", &[8, 8, 8], 2),
+    ]);
+    let tel = Telemetry::new(2);
+    let report = service::run_loaded_observed(&jobs, 2, None, true, Some(&tel)).unwrap();
+    assert_eq!(report.results.len(), 4);
+    assert!(tel.spans_recorded() > 0, "observed serving recorded no spans");
+
+    let path = std::env::temp_dir().join(format!("stencilax_trace_{}.json", std::process::id()));
+    tel.write_chrome_trace(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = Json::parse(&text).expect("trace must be valid JSON");
+
+    assert_eq!(doc.req("otherData").unwrap().req_str("schema").unwrap(), TRACE_SCHEMA);
+    assert_eq!(doc.req("otherData").unwrap().req_u64("shards").unwrap(), 2);
+    let events = doc.req_arr("traceEvents").unwrap();
+    assert!(!events.is_empty());
+
+    // every event is well-formed; collect "X" durations per track and
+    // check the metadata names cover shard 0, shard 1, and control
+    let mut x_by_tid: HashMap<u64, Vec<(f64, f64)>> = HashMap::new();
+    let mut names = Vec::new();
+    let mut async_begins = 0usize;
+    let mut async_ends = 0usize;
+    for ev in events {
+        let ph = ev.req_str("ph").unwrap();
+        let tid = ev.req_u64("tid").unwrap();
+        assert!(tid <= 2, "tracks are shard 0, shard 1, control=2; got {tid}");
+        match ph {
+            "M" => names.push(ev.req("args").unwrap().req_str("name").unwrap().to_string()),
+            "X" => {
+                let ts = ev.req_f64("ts").unwrap();
+                let dur = ev.req_f64("dur").unwrap();
+                assert!(ts >= 0.0 && dur >= 0.0);
+                x_by_tid.entry(tid).or_default().push((ts, dur));
+            }
+            "b" => async_begins += 1,
+            "e" => async_ends += 1,
+            "i" => {
+                assert_eq!(ev.req_str("s").unwrap(), "t");
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    names.sort();
+    assert_eq!(names, vec!["control", "shard 0", "shard 1"]);
+    assert_eq!(async_begins, async_ends, "async b/e events must pair up");
+    assert!(async_begins >= 4, "each admitted job opens an Admit async span");
+    assert!(x_by_tid.contains_key(&0) || x_by_tid.contains_key(&1), "no shard-track spans");
+    for (tid, mut spans) in x_by_tid {
+        spans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_strictly_nested(tid as f64, &spans);
+    }
+}
+
+#[test]
+fn live_daemon_stats_reconcile_with_the_final_report() {
+    let socket = std::env::temp_dir().join(format!("stencilax_tel_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&socket);
+    let server_path = socket.clone();
+    let opts = DaemonOpts { shards: 2, queue_cap: 8, ..DaemonOpts::default() };
+    let server = std::thread::spawn(move || server::serve_socket(&server_path, &opts));
+
+    // round 1: submit and wait for all terminal events, daemon stays up
+    let lines: Vec<String> = [
+        job("diffusion2d", &[16, 16], 2),
+        job("diffusion1d", &[256], 3),
+        job("no-such-workload", &[8], 1),
+    ]
+    .iter()
+    .map(|j| j.to_json().to_string_compact())
+    .collect();
+    let patience = Duration::from_secs(5);
+    let summary = client::submit_lines(&socket, &lines, false, patience, |_, _| {}).unwrap();
+    assert_eq!(summary.outcome.done.len(), 2);
+    assert_eq!(summary.outcome.rejected.len(), 1);
+
+    // live snapshot: everything above must already be visible
+    let stats = client::fetch_stats(&socket, patience).unwrap();
+    assert_eq!(stats.req_str("schema").unwrap(), "stencilax-stats/1");
+    assert_eq!(stats.req_u64("jobs_submitted").unwrap(), 3);
+    let counters = stats.req("counters").unwrap();
+    assert_eq!(counters.req_u64("accepted").unwrap(), 2);
+    assert_eq!(counters.req_u64("rejected").unwrap(), 1);
+    assert_eq!(counters.req_u64("completed").unwrap(), 2);
+    assert_eq!(counters.req_u64("failed").unwrap(), 0);
+    assert_eq!(stats.req("queue").unwrap().req_u64("depth").unwrap(), 0, "drained");
+    assert!(stats.req_f64("uptime_s").unwrap() > 0.0);
+    assert!(stats.req_u64("spans_recorded").unwrap() > 0);
+    let shard_rows = stats.req_arr("shards").unwrap();
+    assert_eq!(shard_rows.len(), 2);
+    for row in shard_rows {
+        assert!(row.req_f64("busy_s").unwrap() >= 0.0);
+        assert!(row.req_f64("busy_frac").unwrap() >= 0.0);
+    }
+
+    // round 2: shutdown; the report must agree with the live snapshot
+    let fin = client::submit_lines(&socket, &[], true, patience, |_, _| {}).unwrap();
+    let report_json = fin.outcome.report.expect("shutdown returns the final report");
+    let report = server.join().unwrap().unwrap();
+    assert_eq!(report.results.len(), 2);
+    assert_eq!(report.rejected.len(), 1);
+    assert_eq!(
+        report_json.req_arr("sessions").unwrap().len() as u64,
+        counters.req_u64("completed").unwrap(),
+        "live completed counter must match the report's session count"
+    );
+    // per-session telemetry rode the wire: budgets and achieved rates
+    for r in &report.results {
+        assert!(r.bytes_per_step > 0.0 && r.flops_per_step > 0.0);
+        assert!(r.gb_per_s.is_finite() && r.gb_per_s > 0.0);
+        assert!(r.roofline_frac.is_finite() && r.roofline_frac > 0.0);
+        assert!(r.busy_s > 0.0 && r.busy_s <= r.latency_s);
+        assert!(r.queue_wait_s >= 0.0);
+    }
+    assert!(report_json.req_f64("aggregate_gb_per_s").unwrap() > 0.0);
+}
+
+#[test]
+fn budgets_are_deterministic_and_telemetry_leaves_digests_untouched() {
+    let jobs = vec![job("diffusion2d", &[20, 20], 3), job("mhd", &[8, 8, 8], 2)];
+
+    // plain run twice: the admission-stamped budgets are pure functions
+    // of (workload, shape, plan, model) — bit-identical, not just close
+    let a = service::run_jobs(&jobs, 2, None, true).unwrap();
+    let b = service::run_jobs(&jobs, 2, None, true).unwrap();
+    for (ra, rb) in a.results.iter().zip(&b.results) {
+        assert_eq!(ra.bytes_per_step.to_bits(), rb.bytes_per_step.to_bits());
+        assert_eq!(ra.flops_per_step.to_bits(), rb.flops_per_step.to_bits());
+        assert_eq!(ra.digest_bits, rb.digest_bits);
+        // achieved rates are budget / time: positive and finite always,
+        // equal-to-the-bit only if the timer cooperates (it won't)
+        assert!(ra.gb_per_s > 0.0 && ra.gb_per_s.is_finite());
+        assert!(ra.gflop_per_s > 0.0 && ra.gflop_per_s.is_finite());
+        assert!(ra.roofline_frac > 0.0 && ra.roofline_frac.is_finite());
+    }
+
+    // observed run: every telemetry hook armed, digests must not move
+    let tel = Telemetry::new(2);
+    let c = service::run_loaded_observed(&loaded(jobs), 2, None, true, Some(&tel)).unwrap();
+    assert!(tel.spans_recorded() > 0);
+    for (ra, rc) in a.results.iter().zip(&c.results) {
+        assert_eq!(
+            ra.digest_bits, rc.digest_bits,
+            "telemetry must be observation-only: digest moved for job {}",
+            ra.id
+        );
+        assert_eq!(ra.bytes_per_step.to_bits(), rc.bytes_per_step.to_bits());
+    }
+}

@@ -1,0 +1,198 @@
+/* Structural mirror of the PR 10 telemetry layer's hot-path cost (see
+ * rust/src/util/telemetry.rs SpanRing::record and DESIGN.md §18): every
+ * instrumented chunk of stencil work pays one relaxed fetch_add on the
+ * ring cursor, three relaxed payload stores, one release stamp store,
+ * and one relaxed counter fetch_add — nothing else. This mirror runs
+ * the two serving workloads' inner loops bare and instrumented at the
+ * real chunk granularity (one span per row-block / k-slab, like the
+ * sharded pool's dispatch chunks) and reports the overhead.
+ *
+ * Measures, per workload:
+ *   - bare median step time
+ *   - instrumented median step time (ring writes + counter bumps armed)
+ *   - overhead percentage — the DESIGN.md §18 budget pins this < 1%
+ *
+ * Build/run: gcc -O3 -march=native -pthread -o /tmp/pmt tools/perf_mirror_telemetry.c -lm && /tmp/pmt
+ */
+#include <math.h>
+#include <stdatomic.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <time.h>
+
+#define R 3
+#define RING_SPANS 4096
+#define CHUNK_ROWS 64 /* rows per dispatched chunk, like par.rs chunking */
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + 1e-9 * ts.tv_nsec;
+}
+
+static uint64_t now_us(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (uint64_t)ts.tv_sec * 1000000u + (uint64_t)(ts.tv_nsec / 1000);
+}
+
+static int cmp_d(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static double median(double *xs, int n) {
+    qsort(xs, n, sizeof(double), cmp_d);
+    return n % 2 ? xs[n / 2] : 0.5 * (xs[n / 2 - 1] + xs[n / 2]);
+}
+
+/* ---- the telemetry mirror: one preallocated seqlock ring ------------- */
+
+typedef struct {
+    _Atomic uint64_t meta, t0, t1, stamp;
+} slot_t;
+
+static slot_t ring[RING_SPANS];
+static _Atomic uint64_t cursor;
+static _Atomic uint64_t counter; /* e.g. Counters::completed */
+
+/* SpanRing::record: fetch_add + three relaxed stores + release stamp */
+static inline void span_record(uint64_t kind, uint64_t job, uint64_t t0, uint64_t t1) {
+    uint64_t seq = atomic_fetch_add_explicit(&cursor, 1, memory_order_relaxed);
+    slot_t *s = &ring[seq & (RING_SPANS - 1)];
+    atomic_store_explicit(&s->meta, kind | (job << 8), memory_order_relaxed);
+    atomic_store_explicit(&s->t0, t0, memory_order_relaxed);
+    atomic_store_explicit(&s->t1, t1, memory_order_relaxed);
+    atomic_store_explicit(&s->stamp, seq + 1, memory_order_release);
+}
+
+/* ---- workload 1: diffusion2d r=3, 4096^2 ----------------------------- */
+
+static void diff2d_step(const double *src, double *dst, int n, int instrument) {
+    const int p = n + 2 * R;
+    static const double w[2 * R + 1] = {1. / 90, -3. / 20, 3. / 2, -49. / 18,
+                                        3. / 2,  -3. / 20, 1. / 90};
+    for (int i0 = R; i0 < n + R; i0 += CHUNK_ROWS) {
+        uint64_t t0 = instrument ? now_us() : 0;
+        int i1 = i0 + CHUNK_ROWS < n + R ? i0 + CHUNK_ROWS : n + R;
+        for (int i = i0; i < i1; i++) {
+            for (int j = R; j < n + R; j++) {
+                double acc = 0.0;
+                for (int k = -R; k <= R; k++) {
+                    acc += w[k + R] * src[i * p + j + k];
+                    acc += w[k + R] * src[(i + k) * p + j];
+                }
+                dst[i * p + j] = src[i * p + j] + 1e-3 * acc;
+            }
+        }
+        if (instrument) {
+            span_record(2 /* Chunk */, (uint64_t)i0, t0, now_us());
+            atomic_fetch_add_explicit(&counter, 1, memory_order_relaxed);
+        }
+    }
+}
+
+/* ---- workload 2: MHD-like 8-field fused update, 64^3 ----------------- */
+
+#define NF 8
+
+static void mhd_step(const double *src, double *dst, int n, int instrument) {
+    const int p = n + 2; /* r=1 halo per field */
+    const long fstride = (long)p * p * p;
+    for (int k0 = 1; k0 <= n; k0 += 8) { /* one span per k-slab chunk */
+        uint64_t t0 = instrument ? now_us() : 0;
+        int k1 = k0 + 8 <= n + 1 ? k0 + 8 : n + 1;
+        for (int f = 0; f < NF; f++) {
+            const double *s = src + f * fstride;
+            double *d = dst + f * fstride;
+            /* cross-field coupling term, like the fused substep */
+            const double *o = src + ((f + 1) % NF) * fstride;
+            for (int k = k0; k < k1; k++)
+                for (int i = 1; i <= n; i++)
+                    for (int j = 1; j <= n; j++) {
+                        long c = (long)k * p * p + i * p + j;
+                        double lap = s[c - 1] + s[c + 1] + s[c - p] + s[c + p] +
+                                     s[c - p * p] + s[c + p * p] - 6.0 * s[c];
+                        d[c] = s[c] + 1e-3 * lap + 1e-4 * o[c];
+                    }
+        }
+        if (instrument) {
+            span_record(2 /* Chunk */, (uint64_t)k0, t0, now_us());
+            atomic_fetch_add_explicit(&counter, 1, memory_order_relaxed);
+        }
+    }
+}
+
+typedef void (*stepper_t)(const double *, double *, int, int);
+
+#define SAMPLES 60
+
+/* Direct cost of one instrumented chunk's hooks, measured in a tight
+ * loop: two clock reads + one ring record + one counter bump. This is
+ * the per-chunk tax the serving loop actually pays, and dividing it
+ * into the step time gives a *deterministic* overhead bound — the A/B
+ * step comparison below oscillates +-2% around zero on a shared box,
+ * an order of magnitude above the effect it tries to measure. */
+static double hook_cost_s(void) {
+    const int iters = 200000;
+    for (int i = 0; i < 1000; i++) span_record(2, i, now_us(), now_us()); /* warmup */
+    double t0 = now_s();
+    for (int i = 0; i < iters; i++) {
+        uint64_t a = now_us();
+        uint64_t b = now_us();
+        span_record(2, (uint64_t)i, a, b);
+        atomic_fetch_add_explicit(&counter, 1, memory_order_relaxed);
+    }
+    return (now_s() - t0) / iters;
+}
+
+/* Interleave bare and instrumented steps A/B/A/B through one long run:
+ * thermal drift, frequency scaling, and page-cache state hit both modes
+ * identically, so the median difference isolates the hook cost. */
+static void bench(const char *name, stepper_t step, long elems, int n, int chunks,
+                  double hook_s) {
+    double *a = calloc((size_t)elems, sizeof(double));
+    double *b = calloc((size_t)elems, sizeof(double));
+    if (!a || !b) { fprintf(stderr, "alloc failed\n"); exit(1); }
+    for (long i = 0; i < elems; i++) a[i] = ((i * 31) % 13) * 0.1;
+
+    for (int s = 0; s < 4; s++) step(s % 2 ? b : a, s % 2 ? a : b, n, s % 2); /* warmup */
+    double bare_t[SAMPLES], inst_t[SAMPLES];
+    for (int s = 0; s < 2 * SAMPLES; s++) {
+        int instrument = s % 2;
+        double t0 = now_s();
+        step(s % 2 ? b : a, s % 2 ? a : b, n, instrument);
+        double dt = now_s() - t0;
+        if (instrument) inst_t[s / 2] = dt;
+        else bare_t[s / 2] = dt;
+    }
+    double bare = median(bare_t, SAMPLES), inst = median(inst_t, SAMPLES);
+
+    double ab = (inst - bare) / bare * 100.0;
+    double bound = chunks * hook_s / bare * 100.0;
+    printf("%-14s n=%-5d bare %8.3f ms  instr %8.3f ms  A/B delta %+6.3f%%  "
+           "hook bound %7.4f%%  %s\n",
+           name, n, bare * 1e3, inst * 1e3, ab, bound,
+           bound < 1.0 ? "PASS (<1%)" : "FAIL");
+    free(a);
+    free(b);
+}
+
+int main(void) {
+    printf("telemetry hot-path mirror: seqlock ring write + counter bump per chunk\n");
+    printf("ring %d slots, %d rows/chunk (2d), 8-plane k-slabs (3d)\n\n", RING_SPANS,
+           CHUNK_ROWS);
+    double hook_s = hook_cost_s();
+    printf("one chunk's hooks (2 clock reads + ring record + counter bump): %.1f ns\n\n",
+           hook_s * 1e9);
+    int n2 = 4096;
+    bench("diffusion2d", diff2d_step, (long)(n2 + 2 * R) * (n2 + 2 * R), n2,
+          (n2 + CHUNK_ROWS - 1) / CHUNK_ROWS, hook_s);
+    int n3 = 64;
+    bench("mhd-fused", mhd_step, (long)NF * (n3 + 2) * (n3 + 2) * (n3 + 2), n3,
+          (n3 + 7) / 8, hook_s);
+    printf("\nspans recorded: %llu, counter: %llu (kept live so stores aren't elided)\n",
+           (unsigned long long)atomic_load(&cursor), (unsigned long long)atomic_load(&counter));
+    return 0;
+}
